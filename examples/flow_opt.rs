@@ -1,0 +1,83 @@
+//! Flow optimization deep-dive: watch Request Flow / Change / Redirect
+//! converge (paper §V-A/§V-C, Fig. 7's x-axis) and compare the final cost
+//! against the SWARM greedy baseline and the exact optimum.
+//!
+//! ```bash
+//! cargo run --release --example flow_opt [seed]
+//! ```
+
+use std::sync::Arc;
+
+use gwtf::baselines::{CostFn, SwarmRouter};
+use gwtf::flow::decentralized::{DecentralizedFlow, FlowParams};
+use gwtf::flow::graph::random_problem;
+use gwtf::flow::mcmf::mcmf_min_cost;
+use gwtf::sim::training::Router;
+use gwtf::util::Rng;
+
+fn main() {
+    let seed: u64 =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(17);
+
+    // Table V test 1: one source, 40 relays over 8 stages, caps U(1,3).
+    let mut rng = Rng::new(seed);
+    let prob = random_problem(1, 40, 8, (1.0, 3.0), (1.0, 20.0), &mut rng);
+    println!(
+        "flow test: 1 source x {} microbatches, 40 relays, 8 stages",
+        prob.demand[0]
+    );
+
+    // GWTF: sum-cost objective (the Fig. 7 configuration).
+    let params = FlowParams { minmax_objective: false, ..FlowParams::default() };
+    let mut f = DecentralizedFlow::new(&prob, params, seed);
+    println!("\nround  complete  avg_cost/mb  moves");
+    let mut shown = 0;
+    for _ in 0..120 {
+        let s = f.step();
+        // print the interesting rounds: first 5, then every 20th
+        if s.round <= 5 || s.round % 20 == 0 || (s.moves_applied > 0 && shown < 20) {
+            println!(
+                "{:>5}  {:>8}  {:>11.2}  {:>5}",
+                s.round,
+                s.complete_flows,
+                if s.avg_cost_per_microbatch.is_finite() { s.avg_cost_per_microbatch } else { f64::NAN },
+                s.moves_applied
+            );
+            shown += 1;
+        }
+        if s.moves_applied == 0 && s.round > 20 {
+            println!("steady state at round {}", s.round);
+            break;
+        }
+    }
+    let gwtf_avg = f.total_cost() / f.complete_flows().max(1) as f64;
+
+    // SWARM greedy baseline on the same instance (capacity-aware for the
+    // abstract cost comparison — see experiments::figures::run_fig7).
+    let mut rng2 = Rng::new(seed);
+    let prob2 = random_problem(1, 40, 8, (1.0, 3.0), (1.0, 20.0), &mut rng2);
+    let cost: CostFn = Arc::new(move |i, j| prob2.cost(i, j));
+    let mut swarm = SwarmRouter::from_problem(&prob, cost, seed);
+    swarm.ignore_capacity = false;
+    let alive = vec![true; prob.cap.len()];
+    let (paths, _) = swarm.plan(&alive);
+    let swarm_avg = swarm.total_cost(&paths) / paths.len().max(1) as f64;
+
+    // Exact optimum (requires global knowledge).
+    let opt = mcmf_min_cost(&prob);
+
+    println!("\n=== final average cost per microbatch ===");
+    println!("gwtf (decentralized) : {gwtf_avg:.2}");
+    println!("swarm (greedy)       : {swarm_avg:.2}");
+    println!("optimal (global)     : {:.2}", opt.avg_cost_per_microbatch());
+    println!(
+        "gwtf is {:.0}% above optimal, {:.0}% below swarm",
+        (gwtf_avg / opt.avg_cost_per_microbatch() - 1.0) * 100.0,
+        (1.0 - gwtf_avg / swarm_avg) * 100.0
+    );
+
+    // Crash tolerance: kill a used relay and watch the flow repair itself.
+    let victim = f.established_paths()[0].relays[3];
+    let (repaired, destroyed) = f.remove_node(victim);
+    println!("\ncrashed {victim}: {repaired} flows repaired in place, {destroyed} destroyed");
+}

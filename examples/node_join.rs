@@ -1,0 +1,68 @@
+//! Node joining walkthrough (paper §V-B, Fig. 3 and Fig. 5).
+//!
+//! Shows the leader's utilization-ranked placement expanding the
+//! bottleneck stage, then runs the Fig. 5 comparison on one Table IV
+//! setting: GWTF vs highest-capacity-first vs random vs the exhaustive
+//! optimal.
+//!
+//! ```bash
+//! cargo run --release --example node_join -- [--setting 1] [--runs 5]
+//! ```
+
+use gwtf::baselines::join_eval::{compare_policies, JoinExperiment, JoinPolicyExt, JoinSetting};
+use gwtf::config::Args;
+use gwtf::util::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let si = args.usize_or("setting", 1)?;
+    let runs = args.usize_or("runs", 5)?;
+    let seed = args.u64_or("seed", 11)?;
+    let setting = if args.flag("full") {
+        JoinSetting::setting(si)
+    } else {
+        JoinSetting::setting(si).reduced()
+    };
+    println!("# node_join — Table IV setting {}", setting.name);
+
+    // --- Fig. 3-style single walkthrough ---
+    let exp = JoinExperiment::generate(&setting, seed);
+    let prob = exp.problem();
+    println!("\ninitial stage capacities (bottleneck first expands):");
+    for s in 0..prob.graph.n_stages() {
+        println!("  stage {s}: {}", prob.stage_capacity(s));
+    }
+    println!("pending candidates: {:?}", exp.pending);
+    let outcome = exp.run(JoinPolicyExt::Gwtf);
+    println!(
+        "gwtf placement: cost {:.0} -> {:.0} (improvement {:.1}%)",
+        outcome.cost_before,
+        outcome.cost_after,
+        outcome.improvement() * 100.0
+    );
+    println!("cost trace: {:?}", outcome.trace.iter().map(|c| *c as i64).collect::<Vec<_>>());
+
+    // --- Fig. 5 comparison over several seeds ---
+    println!("\n# Fig. 5 policies over {runs} runs (improvement, higher = better)");
+    let mut per: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    for r in 0..runs {
+        for (name, o) in compare_policies(&setting, seed + 31 * r as u64) {
+            per.entry(name).or_default().push(o.improvement());
+        }
+    }
+    let mut rows: Vec<(&str, Summary)> =
+        per.into_iter().map(|(n, xs)| (n, Summary::of(&xs))).collect();
+    rows.sort_by(|a, b| b.1.mean.partial_cmp(&a.1.mean).unwrap());
+    for (name, s) in &rows {
+        let bars = (s.mean * 200.0).max(0.0) as usize;
+        println!("{name:<16} {:>7.2}% ± {:>5.2}%  {}", s.mean * 100.0, s.std * 100.0, "#".repeat(bars));
+    }
+    // The paper's ordering: optimal > gwtf > capacity-first > random.
+    let names: Vec<&str> = rows.iter().map(|r| r.0).collect();
+    println!(
+        "\nordering: {} {}",
+        names.join(" > "),
+        if names.first() == Some(&"optimal") { "(matches Fig. 5)" } else { "" }
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the GWTF public API in five minutes.
+//!
+//! Builds the paper's Table II scenario (18 geo-distributed nodes, 6
+//! pipeline stages, 2 data nodes), routes microbatch flows with the
+//! decentralized optimizer, simulates a few training iterations under 10%
+//! churn, and prints the same metrics the paper reports.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gwtf::coordinator::GwtfRouter;
+use gwtf::flow::mcmf::mcmf_min_cost;
+use gwtf::flow::FlowParams;
+use gwtf::sim::scenario::{build, ScenarioConfig};
+use gwtf::sim::training::{Router, TrainingSim};
+use gwtf::util::Rng;
+
+fn main() {
+    // 1. A scenario: topology, stage assignment, capacities, churn process.
+    let cfg = ScenarioConfig::table2(/*homogeneous=*/ false, /*churn=*/ 0.1, /*seed=*/ 7);
+    let sc = build(&cfg);
+    println!(
+        "scenario: {} data nodes, {} relays, {} stages, payload {:.0} MB",
+        sc.data_nodes.len(),
+        sc.relays.len(),
+        sc.prob.graph.n_stages(),
+        sc.sim_cfg.payload_bytes / 1e6
+    );
+
+    // 2. The decentralized flow optimizer vs the global optimum.
+    let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+    let alive = vec![true; sc.topo.n()];
+    let (paths, planning_s) = router.plan(&alive);
+    let opt = mcmf_min_cost(&sc.prob);
+    println!(
+        "routed {} flows in {} protocol rounds ({planning_s:.1}s ctrl); optimal routes {}",
+        paths.len(),
+        router.last_rounds,
+        opt.flow
+    );
+    for (i, p) in paths.iter().take(2).enumerate() {
+        println!("  flow {i}: {} -> {:?} -> {}", p.source, p.relays, p.source);
+    }
+
+    // 3. Simulated training iterations under churn.
+    let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+    let mut churn = sc.churn.clone();
+    let mut rng = Rng::new(99);
+    println!("\niter  makespan_s  done  fwd_rec  bwd_rec  wasted_gpu_s");
+    for i in 0..5 {
+        let events = churn.sample_iteration();
+        let alive = churn.planning_view(&events);
+        let (paths, planning) = router.plan(&alive);
+        let m = sim.run_iteration(&sc.prob, &mut router, &events, &churn, planning, paths, &mut rng);
+        println!(
+            "{i:>4}  {:>10.1}  {:>4}  {:>7}  {:>7}  {:>12.1}",
+            m.makespan_s, m.completed, m.fwd_recoveries, m.bwd_recoveries, m.wasted_gpu_s
+        );
+    }
+
+    println!("\nnext: cargo run --release --example churn_train   (real model, real gradients)");
+}

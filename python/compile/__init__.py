@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package runs at training time; ``aot.py`` lowers the stage
+functions to HLO text once and the Rust runtime takes over.
+"""

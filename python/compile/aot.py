@@ -1,0 +1,252 @@
+"""AOT lowering: JAX stage functions -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every exported function is flattened to a positional-array signature
+(pytrees are flattened in ``jax.tree_util`` order) and lowered with
+``return_tuple=True``.  ``artifacts/manifest.json`` records, per artifact,
+the exact input/output shapes+dtypes and the parameter-leaf names in
+flattening order, which is what ``rust/src/runtime`` uses to drive
+execution.
+
+Usage (normally via ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        --family both --preset small
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import ModelConfig
+
+#: Named size presets. "small" is the CPU-scale default used by the test
+#: suite and simulator benches; "gpt2s" is the ~110M-parameter configuration
+#: for the end-to-end convergence run (Fig. 6 / EXPERIMENTS.md).
+PRESETS: Dict[str, Dict[str, Any]] = {
+    "tiny": dict(vocab_size=256, d_model=64, n_heads=4, n_layers=4, seq_len=32, microbatch=2, blocks_per_stage=2),
+    "small": dict(vocab_size=2048, d_model=256, n_heads=8, n_layers=8, seq_len=128, microbatch=4, blocks_per_stage=2),
+    "medium": dict(vocab_size=4096, d_model=512, n_heads=8, n_layers=12, seq_len=128, microbatch=4, blocks_per_stage=3),
+    "gpt2s": dict(vocab_size=8192, d_model=768, n_heads=12, n_layers=12, seq_len=128, microbatch=4, blocks_per_stage=2),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (the Rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_names(tree: Any) -> List[str]:
+    """Dot-joined key-path names of the leaves in flattening order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names = []
+    for path, _leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts))
+    return names
+
+
+def _spec(leaf) -> Dict[str, Any]:
+    return {"shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+
+
+def export_fn(
+    fn: Callable,
+    example_args: Tuple[Any, ...],
+    name: str,
+    out_dir: str,
+) -> Dict[str, Any]:
+    """Flatten ``fn``'s pytree signature, lower to HLO text, write artifact.
+
+    Returns the manifest entry (input/output specs + file name + sha256).
+    """
+    flat, treedef = jax.tree_util.tree_flatten(example_args)
+
+    def wrapped(*flat_args):
+        args = jax.tree_util.tree_unflatten(treedef, list(flat_args))
+        out = fn(*args)
+        return tuple(jax.tree_util.tree_leaves(out))
+
+    out_shapes = jax.eval_shape(wrapped, *flat)
+    lowered = jax.jit(wrapped).lower(*flat)
+    text = to_hlo_text(lowered)
+
+    # jax prunes arguments the computation never reads (e.g. the embedding
+    # table in embed_bwd); the runtime must pass only the kept ones.
+    try:
+        kept = sorted(lowered._lowering.compile_args["kept_var_idx"])
+    except (AttributeError, KeyError):
+        kept = list(range(len(flat)))
+
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    return {
+        "file": f"{name}.hlo.txt",
+        "inputs": [_spec(l) for l in flat],
+        "input_names": _leaf_names(example_args),
+        "kept_inputs": kept,
+        "outputs": [_spec(l) for l in out_shapes],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "hlo_bytes": len(text),
+    }
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def family_exports(cfg: ModelConfig) -> Dict[str, Tuple[Callable, Tuple[Any, ...]]]:
+    """All (function, example-args) pairs to lower for one model family."""
+    B, S, D, V = cfg.microbatch, cfg.seq_len, cfg.d_model, cfg.vocab_size
+    seed = _sds((), jnp.uint32)
+    tokens = _sds((B, S), jnp.int32)
+    targets = _sds((B, S), jnp.int32)
+    acts = _sds((B, S, D), jnp.float32)
+    lr = _sds((), jnp.float32)
+
+    eparams = jax.eval_shape(lambda s: model.embed_init(s, cfg), seed)
+    sparams = jax.eval_shape(lambda s: model.stage_init(s, cfg), seed)
+    hparams = jax.eval_shape(lambda s: model.head_init(s, cfg), seed)
+
+    exports: Dict[str, Tuple[Callable, Tuple[Any, ...]]] = {
+        "embed_init": (lambda s: model.embed_init(s, cfg), (seed,)),
+        "stage_init": (lambda s: model.stage_init(s, cfg), (seed,)),
+        "head_init": (lambda s: model.head_init(s, cfg), (seed,)),
+        "embed_fwd": (lambda p, t: model.embed_fwd(p, t, cfg), (eparams, tokens)),
+        "stage_fwd": (lambda p, x: model.stage_fwd(p, x, cfg), (sparams, acts)),
+        "stage_bwd": (lambda p, x, dy: model.stage_bwd(p, x, dy, cfg), (sparams, acts, acts)),
+        "head_loss": (lambda p, x, t: model.head_loss(p, x, t, cfg), (hparams, acts, targets)),
+        "head_bwd": (lambda p, x, t: model.head_bwd(p, x, t, cfg), (hparams, acts, targets)),
+        "embed_bwd": (lambda p, t, dx: model.embed_bwd(p, t, dx, cfg), (eparams, tokens, acts)),
+        "embed_update": (model.sgd_update, (eparams, eparams, lr)),
+        "stage_update": (model.sgd_update, (sparams, sparams, lr)),
+        "head_update": (model.sgd_update, (hparams, hparams, lr)),
+    }
+    return exports
+
+
+def config_fingerprint(cfg: ModelConfig, families: Sequence[str]) -> str:
+    payload = json.dumps(
+        {"cfg": dataclasses.asdict(cfg), "families": list(families), "v": 4},
+        sort_keys=True,
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def build_artifacts(
+    out_dir: str,
+    families: Sequence[str],
+    base_cfg: ModelConfig,
+    force: bool = False,
+) -> Dict[str, Any]:
+    """Lower everything; skip if the manifest fingerprint already matches."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fingerprint = config_fingerprint(base_cfg, families)
+
+    if not force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                existing = json.load(f)
+            if existing.get("fingerprint") == fingerprint and all(
+                os.path.exists(os.path.join(out_dir, e["file"]))
+                for fam in existing.get("families", {}).values()
+                for e in fam["artifacts"].values()
+            ):
+                print(f"artifacts up to date ({out_dir}); skipping")
+                return existing
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    manifest: Dict[str, Any] = {
+        "fingerprint": fingerprint,
+        "families": {},
+    }
+    for family in families:
+        cfg = dataclasses.replace(base_cfg, family=family)
+        entries = {}
+        for name, (fn, args) in family_exports(cfg).items():
+            art_name = f"{family}_{name}"
+            print(f"lowering {art_name} ...", flush=True)
+            entries[name] = export_fn(fn, args, art_name, out_dir)
+        manifest["families"][family] = {
+            "config": dataclasses.asdict(cfg),
+            "param_count": cfg.param_count(),
+            "activation_bytes": cfg.activation_bytes(),
+            "n_stages": cfg.n_stages,
+            "artifacts": entries,
+        }
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(
+        e["hlo_bytes"]
+        for fam in manifest["families"].values()
+        for e in fam["artifacts"].values()
+    )
+    print(f"wrote {manifest_path} ({total/1e6:.1f} MB of HLO text)")
+    return manifest
+
+
+def parse_config(argv=None) -> Tuple[argparse.Namespace, ModelConfig]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--family", default="both", choices=["gpt", "llama", "both"])
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--vocab-size", type=int)
+    ap.add_argument("--d-model", type=int)
+    ap.add_argument("--n-heads", type=int)
+    ap.add_argument("--n-layers", type=int)
+    ap.add_argument("--d-ff", type=int)
+    ap.add_argument("--seq-len", type=int)
+    ap.add_argument("--microbatch", type=int)
+    ap.add_argument("--blocks-per-stage", type=int)
+    ap.add_argument("--no-pallas", action="store_true", help="lower the jnp reference instead of the Pallas kernels")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    kw = dict(PRESETS[args.preset])
+    for field in ("vocab_size", "d_model", "n_heads", "n_layers", "d_ff", "seq_len", "microbatch", "blocks_per_stage"):
+        v = getattr(args, field)
+        if v is not None:
+            kw[field] = v
+    if args.no_pallas:
+        kw["use_pallas"] = False
+    return args, ModelConfig(**kw)
+
+
+def main(argv=None) -> None:
+    args, cfg = parse_config(argv)
+    families = ["gpt", "llama"] if args.family == "both" else [args.family]
+    build_artifacts(args.out_dir, families, cfg, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

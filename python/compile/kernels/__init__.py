@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (interpret=True) and their pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .attention import flash_attention  # noqa: F401
+from .fused_mlp import fused_gelu_mlp, fused_swiglu_mlp  # noqa: F401

@@ -1,0 +1,181 @@
+"""L1 Pallas kernel: fused multi-head causal attention (FlashAttention-style).
+
+TPU adaptation of the transformer hot-spot (see DESIGN.md §Hardware-Adaptation):
+Q is tiled into VMEM-resident blocks via BlockSpec, K/V are streamed in
+``block_k`` tiles, and the online-softmax running max / denominator is kept
+in fp32 registers — the TPU analogue of FlashAttention's shared-memory
+tiling (VMEM plays the scratchpad role, the MXU consumes the
+(block_q x d_head) @ (d_head x block_k) matmuls).
+
+Lowered with ``interpret=True`` so the kernel becomes plain HLO that the
+CPU PJRT client in the Rust runtime can execute.  Real-TPU performance is
+estimated from the VMEM footprint of these block shapes in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default query tile (rows of Q resident in VMEM per grid step).
+DEFAULT_BLOCK_Q = 128
+#: Default key/value tile streamed per inner-loop step.
+DEFAULT_BLOCK_K = 128
+
+
+def pick_block(seq_len: int, preferred: int) -> int:
+    """Largest divisor of ``seq_len`` that is <= ``preferred``.
+
+    Pallas BlockSpecs require the grid to tile the array exactly; padding
+    would waste MXU cycles, so we snap to a divisor instead.
+    """
+    b = min(preferred, seq_len)
+    while seq_len % b != 0:
+        b -= 1
+    return b
+
+
+def _attention_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+):
+    """One (batch, head, q-tile) grid step of online-softmax attention."""
+    q_blk = pl.program_id(2)
+    d_head = q_ref.shape[-1]
+
+    # fp32 accumulation regardless of input dtype (MXU-friendly on TPU,
+    # numerically required for the online softmax).
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale
+
+    m0 = jnp.full((block_q,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d_head), dtype=jnp.float32)
+
+    num_k_blocks = seq_len // block_k
+    if causal:
+        # K tiles strictly after this Q tile are fully masked: skip them.
+        last_q_pos = (q_blk + 1) * block_q - 1
+        k_upper = jax.lax.div(last_q_pos, block_k) + 1
+    else:
+        k_upper = num_k_blocks
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.ds(i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.ds(i * block_k, block_k), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+        s = jnp.dot(q, k.T)  # (block_q, block_k)
+        if causal:
+            q_pos = q_blk * block_q + jnp.arange(block_q)
+            k_pos = i * block_k + jnp.arange(block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        # m_new is finite for every row the causal loop visits (the diagonal
+        # element is always unmasked), so exp() below never sees inf-inf.
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, k_upper, body, (m0, l0, acc0))
+    out = acc / l[:, None]
+    o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused attention over ``(batch, heads, seq, d_head)`` tensors.
+
+    Numerically equivalent to ``ref.attention_ref`` (softmax(QK^T/sqrt(d))V
+    with optional causal mask); validated against it by
+    ``python/tests/test_attention.py``.
+    """
+    batch, heads, seq_len, d_head = q.shape
+    assert k.shape == (batch, heads, seq_len, d_head), k.shape
+    assert v.shape == (batch, heads, seq_len, d_head), v.shape
+
+    bq = pick_block(seq_len, block_q)
+    bk = pick_block(seq_len, block_k)
+    grid = (batch, heads, seq_len // bq)
+    scale = 1.0 / math.sqrt(d_head)
+
+    kernel = functools.partial(
+        _attention_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=bq,
+        block_k=bk,
+        seq_len=seq_len,
+    )
+
+    q_spec = pl.BlockSpec((1, 1, bq, d_head), lambda b, h, i: (b, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, seq_len, d_head), lambda b, h, i: (b, h, 0, 0))
+    o_spec = pl.BlockSpec((1, 1, bq, d_head), lambda b, h, i: (b, h, i, 0))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(
+    seq_len: int,
+    d_head: int,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    dtype_bytes: int = 4,
+) -> int:
+    """Estimated VMEM bytes resident per grid step (perf model, DESIGN.md §Perf).
+
+    q tile + full-seq K/V stream buffers (double-buffered block_k tiles) +
+    fp32 accumulator/stats + output tile.
+    """
+    bq = pick_block(seq_len, block_q)
+    bk = pick_block(seq_len, block_k)
+    q_tile = bq * d_head * dtype_bytes
+    kv_stream = 2 * 2 * bk * d_head * dtype_bytes  # K and V, double-buffered
+    acc = bq * d_head * 4 + 2 * bq * 4  # fp32 acc + m + l
+    o_tile = bq * d_head * dtype_bytes
+    return q_tile + kv_stream + acc + o_tile
+
+
+def mxu_utilization_estimate(seq_len: int, d_head: int, *, block_q: int = DEFAULT_BLOCK_Q) -> float:
+    """Crude MXU efficiency estimate: fraction of 128-aligned tile dims.
+
+    The MXU is a 128x128 systolic array; dims that are multiples of 128 run
+    at full occupancy, smaller dims pro-rate.
+    """
+    bq = pick_block(seq_len, block_q)
+    eff_q = min(bq, 128) / 128.0
+    eff_d = min(d_head, 128) / 128.0
+    return eff_q * eff_d

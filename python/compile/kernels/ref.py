@@ -1,0 +1,86 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; ``python/tests``
+asserts allclose between kernel and reference across shape/dtype sweeps
+(hypothesis).  These are also what L2 falls back to when a kernel is
+disabled (``use_pallas=False``), so the lowered HLO of model.py can be
+diffed kernel-vs-reference.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """softmax(Q K^T / sqrt(d)) V over (batch, heads, seq, d_head)."""
+    d_head = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / math.sqrt(d_head)
+    if causal:
+        seq = q.shape[2]
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, g: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_ref(x: jax.Array, g: jax.Array, b: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+    xn = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (xn * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_mlp_ref(
+    x: jax.Array,
+    g: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """RMSNorm + SwiGLU feed-forward; oracle for ``fused_swiglu_mlp``."""
+    xn = rmsnorm_ref(x, g, eps=eps).astype(jnp.float32)
+    h = jax.nn.silu(xn @ w_gate.astype(jnp.float32)) * (xn @ w_up.astype(jnp.float32))
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu_mlp_ref(
+    x: jax.Array,
+    g: jax.Array,
+    b: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """LayerNorm + GELU feed-forward; oracle for ``fused_gelu_mlp``."""
+    xn = layernorm_ref(x, g, b, eps=eps).astype(jnp.float32)
+    h = jax.nn.gelu(xn @ w1.astype(jnp.float32) + b1.astype(jnp.float32), approximate=True)
+    return (h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_ref(x: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding over (batch, heads, seq, d_head)."""
+    _, _, seq, d_head = x.shape
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(angles)[None, None, :, :]
+    sin = jnp.sin(angles)[None, None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

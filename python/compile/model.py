@@ -1,0 +1,403 @@
+"""L2: GPT-like and LLaMA-like transformer *stage* models in JAX.
+
+The paper trains pipeline-parallel LLMs whose stages are hosted by
+volunteer nodes.  This module defines the per-stage computations that the
+Rust coordinator executes at runtime through PJRT:
+
+- ``embed_fwd`` / ``embed_bwd``   — first stage (data node): token (+pos) embedding
+- ``stage_fwd`` / ``stage_bwd``   — relay stage: ``blocks_per_stage`` transformer blocks
+- ``head_loss`` / ``head_bwd``    — last stage (colocated with the first on the
+  data node, as in the paper): final norm + LM head + cross-entropy loss
+- ``*_init``                      — parameter initialization (seeded)
+- ``sgd_update`` / ``adam_update`` — parameter updates (gradient averaging
+  across data-parallel replicas happens in Rust)
+
+Backward passes recompute the forward internally via ``jax.vjp``
+(rematerialization), so the Rust side only ships ``(params, saved_input,
+upstream_grad)`` — exactly the activation/gradient flow the paper routes
+between nodes.
+
+The attention and feed-forward hot-spots call the L1 Pallas kernels
+(``kernels.attention``, ``kernels.fused_mlp``) through ``jax.custom_vjp``:
+the forward runs the fused kernel, the backward differentiates the jnp
+reference (numerically identical within test tolerance — see
+``python/tests``).  Everything here is lowered ONCE by ``aot.py``; Python
+never runs on the training path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.fused_mlp import fused_gelu_mlp, fused_swiglu_mlp
+from .kernels import ref
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration for one model family at one size.
+
+    The paper evaluates GPT-like and LLaMA-like models with
+    ``d_model=1024`` and 16 layers; the default here is a CPU-scale
+    reduction with the same layer structure (see DESIGN.md §Substitutions).
+    Note: the paper says ``n_heads=18``, which does not divide 1024; we
+    require ``d_model % n_heads == 0`` (DESIGN.md notes the discrepancy).
+    """
+
+    family: str = "llama"  # "gpt" | "llama"
+    vocab_size: int = 2048
+    d_model: int = 256
+    n_heads: int = 8
+    n_layers: int = 8
+    d_ff: int = 0  # 0 -> family default (4*d for gpt, 8/3*d rounded for llama)
+    seq_len: int = 128
+    microbatch: int = 4
+    blocks_per_stage: int = 2
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    use_pallas: bool = True
+    init_std: float = 0.02
+
+    def __post_init__(self):
+        assert self.family in ("gpt", "llama"), self.family
+        assert self.d_model % self.n_heads == 0, (self.d_model, self.n_heads)
+        assert self.n_layers % self.blocks_per_stage == 0, (
+            self.n_layers,
+            self.blocks_per_stage,
+        )
+        if self.d_ff == 0:
+            dff = 4 * self.d_model if self.family == "gpt" else (8 * self.d_model) // 3
+            # round up to a multiple of 32 for MXU-friendly tiles
+            dff = (dff + 31) // 32 * 32
+            object.__setattr__(self, "d_ff", dff)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_stages(self) -> int:
+        """Number of relay (block) stages; embed/head live on the data node."""
+        return self.n_layers // self.blocks_per_stage
+
+    def param_count(self) -> int:
+        """Total trainable parameters (for reporting / activation sizing)."""
+        d, v, s = self.d_model, self.vocab_size, self.seq_len
+        emb = v * d + (s * d if self.family == "gpt" else 0)
+        if self.family == "gpt":
+            blk = 4 * d * d + 2 * d * self.d_ff + self.d_ff + 5 * d
+        else:
+            blk = 4 * d * d + 3 * d * self.d_ff + 2 * d
+        head = v * d + (2 * d if self.family == "gpt" else d)
+        return emb + self.n_layers * blk + head
+
+    def activation_bytes(self) -> int:
+        """Bytes of one microbatch activation tensor shipped between stages."""
+        return self.microbatch * self.seq_len * self.d_model * 4
+
+
+# ---------------------------------------------------------------------------
+# Kernel ops wrapped in custom_vjp: Pallas forward, reference backward.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _attn_op(q, k, v):
+    return flash_attention(q, k, v, causal=True)
+
+
+def _attn_op_fwd(q, k, v):
+    return _attn_op(q, k, v), (q, k, v)
+
+
+def _attn_op_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: ref.attention_ref(a, b, c, causal=True), q, k, v)
+    return vjp(g)
+
+
+_attn_op.defvjp(_attn_op_fwd, _attn_op_bwd)
+
+
+@jax.custom_vjp
+def _swiglu_op(x, g, wg, wu, wd):
+    return fused_swiglu_mlp(x, g, wg, wu, wd)
+
+
+def _swiglu_op_fwd(x, g, wg, wu, wd):
+    return _swiglu_op(x, g, wg, wu, wd), (x, g, wg, wu, wd)
+
+
+def _swiglu_op_bwd(res, gr):
+    _, vjp = jax.vjp(lambda *a: ref.swiglu_mlp_ref(*a), *res)
+    return vjp(gr)
+
+
+_swiglu_op.defvjp(_swiglu_op_fwd, _swiglu_op_bwd)
+
+
+@jax.custom_vjp
+def _gelu_mlp_op(x, g, b, w1, b1, w2, b2):
+    return fused_gelu_mlp(x, g, b, w1, b1, w2, b2)
+
+
+def _gelu_mlp_op_fwd(x, g, b, w1, b1, w2, b2):
+    return _gelu_mlp_op(x, g, b, w1, b1, w2, b2), (x, g, b, w1, b1, w2, b2)
+
+
+def _gelu_mlp_op_bwd(res, gr):
+    _, vjp = jax.vjp(lambda *a: ref.gelu_mlp_ref(*a), *res)
+    return vjp(gr)
+
+
+_gelu_mlp_op.defvjp(_gelu_mlp_op_fwd, _gelu_mlp_op_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _attention(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Multi-head causal self-attention (with RoPE for the llama family)."""
+    q = _split_heads(x @ p["wq"], cfg.n_heads)
+    k = _split_heads(x @ p["wk"], cfg.n_heads)
+    v = _split_heads(x @ p["wv"], cfg.n_heads)
+    if cfg.family == "llama":
+        q = ref.rope_ref(q, theta=cfg.rope_theta)
+        k = ref.rope_ref(k, theta=cfg.rope_theta)
+    if cfg.use_pallas:
+        o = _attn_op(q, k, v)
+    else:
+        o = ref.attention_ref(q, k, v, causal=True)
+    return _merge_heads(o) @ p["wo"]
+
+
+def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """One pre-norm transformer block; ``p`` holds one block's params."""
+    b, s, d = x.shape
+    if cfg.family == "gpt":
+        xn = ref.layernorm_ref(x, p["ln1_g"], p["ln1_b"], eps=cfg.norm_eps)
+        h = x + _attention(p, xn, cfg)
+        flat = h.reshape(b * s, d)
+        if cfg.use_pallas:
+            m = _gelu_mlp_op(flat, p["ln2_g"], p["ln2_b"], p["w1"], p["b1"], p["w2"], p["b2"])
+        else:
+            m = ref.gelu_mlp_ref(flat, p["ln2_g"], p["ln2_b"], p["w1"], p["b1"], p["w2"], p["b2"])
+        return h + m.reshape(b, s, d)
+    else:
+        xn = ref.rmsnorm_ref(x, p["attn_norm"], eps=cfg.norm_eps)
+        h = x + _attention(p, xn, cfg)
+        flat = h.reshape(b * s, d)
+        if cfg.use_pallas:
+            m = _swiglu_op(flat, p["mlp_norm"], p["w_gate"], p["w_up"], p["w_down"])
+        else:
+            m = ref.swiglu_mlp_ref(flat, p["mlp_norm"], p["w_gate"], p["w_up"], p["w_down"])
+        return h + m.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, std):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(jnp.float32)
+
+
+def block_init(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    common = {
+        "wq": _normal(ks[0], (d, d), cfg.init_std),
+        "wk": _normal(ks[1], (d, d), cfg.init_std),
+        "wv": _normal(ks[2], (d, d), cfg.init_std),
+        "wo": _normal(ks[3], (d, d), cfg.init_std),
+    }
+    if cfg.family == "gpt":
+        return dict(
+            common,
+            ln1_g=jnp.ones((d,), jnp.float32),
+            ln1_b=jnp.zeros((d,), jnp.float32),
+            ln2_g=jnp.ones((d,), jnp.float32),
+            ln2_b=jnp.zeros((d,), jnp.float32),
+            w1=_normal(ks[4], (d, dff), cfg.init_std),
+            b1=jnp.zeros((dff,), jnp.float32),
+            w2=_normal(ks[5], (dff, d), cfg.init_std),
+            b2=jnp.zeros((d,), jnp.float32),
+        )
+    return dict(
+        common,
+        attn_norm=jnp.ones((d,), jnp.float32),
+        mlp_norm=jnp.ones((d,), jnp.float32),
+        w_gate=_normal(ks[4], (d, dff), cfg.init_std),
+        w_up=_normal(ks[5], (d, dff), cfg.init_std),
+        w_down=_normal(ks[6], (dff, d), cfg.init_std),
+    )
+
+
+def stage_init(seed: jax.Array, cfg: ModelConfig) -> Params:
+    """Stacked params for ``blocks_per_stage`` blocks (leading axis = block)."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, cfg.blocks_per_stage)
+    return jax.vmap(lambda k: block_init(k, cfg))(keys)
+
+
+def embed_init(seed: jax.Array, cfg: ModelConfig) -> Params:
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    p = {"tok_emb": _normal(k1, (cfg.vocab_size, cfg.d_model), cfg.init_std)}
+    if cfg.family == "gpt":
+        p["pos_emb"] = _normal(k2, (cfg.seq_len, cfg.d_model), cfg.init_std)
+    return p
+
+
+def head_init(seed: jax.Array, cfg: ModelConfig) -> Params:
+    key = jax.random.PRNGKey(seed)
+    d = cfg.d_model
+    p = {"w_out": _normal(key, (d, cfg.vocab_size), cfg.init_std)}
+    p["norm_g"] = jnp.ones((d,), jnp.float32)
+    if cfg.family == "gpt":
+        p["norm_b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Stage-level forward / backward (what gets AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """tokens (B, S) int32 -> activations (B, S, D) f32."""
+    x = p["tok_emb"][tokens]
+    if cfg.family == "gpt":
+        x = x + p["pos_emb"][None, : tokens.shape[1], :]
+    return x
+
+
+def stage_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Run ``blocks_per_stage`` stacked blocks via scan."""
+
+    def step(h, blk_params):
+        return block_fwd(blk_params, h, cfg), None
+
+    y, _ = jax.lax.scan(step, x, p)
+    return y
+
+
+def head_loss(p: Params, x: jax.Array, targets: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Final norm + LM head + mean cross-entropy. targets (B, S) int32."""
+    if cfg.family == "gpt":
+        xn = ref.layernorm_ref(x, p["norm_g"], p["norm_b"], eps=cfg.norm_eps)
+    else:
+        xn = ref.rmsnorm_ref(x, p["norm_g"], eps=cfg.norm_eps)
+    logits = xn @ p["w_out"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def stage_bwd(
+    p: Params, x: jax.Array, dy: jax.Array, cfg: ModelConfig
+) -> Tuple[Params, jax.Array]:
+    """(dparams, dx) — recomputes the forward (rematerialization)."""
+    _, vjp = jax.vjp(lambda pp, xx: stage_fwd(pp, xx, cfg), p, x)
+    return vjp(dy)
+
+
+def head_bwd(
+    p: Params, x: jax.Array, targets: jax.Array, cfg: ModelConfig
+) -> Tuple[Params, jax.Array, jax.Array]:
+    """(dparams, dx, loss) for the head stage (dloss = 1)."""
+    loss, vjp = jax.vjp(lambda pp, xx: head_loss(pp, xx, targets, cfg), p, x)
+    dp, dx = vjp(jnp.float32(1.0))
+    return dp, dx, loss
+
+
+def embed_bwd(p: Params, tokens: jax.Array, dx: jax.Array, cfg: ModelConfig) -> Params:
+    """dparams for the embedding stage."""
+    _, vjp = jax.vjp(lambda pp: embed_fwd(pp, tokens, cfg), p)
+    (dp,) = vjp(dx)
+    return dp
+
+
+def sgd_update(params: Params, grads: Params, lr: jax.Array) -> Params:
+    """Plain SGD — the paper's convergence claim is equivalence to SGD."""
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def adam_update(
+    params: Params,
+    m: Params,
+    v: Params,
+    grads: Params,
+    lr: jax.Array,
+    step: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Tuple[Params, Params, Params]:
+    """Adam (bias-corrected); optional optimizer for the convergence runs."""
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** stepf
+    bc2 = 1.0 - b2 ** stepf
+
+    new_p, new_m, new_v = {}, {}, {}
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    out_p, out_m, out_v = [], [], []
+    for p, mm, vv, g in zip(flat_p, flat_m, flat_v, flat_g):
+        mm = b1 * mm + (1.0 - b1) * g
+        vv = b2 * vv + (1.0 - b2) * g * g
+        out_p.append(p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps))
+        out_m.append(mm)
+        out_v.append(vv)
+    unflatten = jax.tree_util.tree_unflatten
+    return unflatten(treedef, out_p), unflatten(treedef, out_m), unflatten(treedef, out_v)
+
+
+# ---------------------------------------------------------------------------
+# Full-model composition (used by tests and by the centralized baseline of
+# the Fig. 6 convergence experiment).
+# ---------------------------------------------------------------------------
+
+
+def full_init(seed: int, cfg: ModelConfig) -> Params:
+    return {
+        "embed": embed_init(jnp.uint32(seed), cfg),
+        "stages": [stage_init(jnp.uint32(seed + 1 + i), cfg) for i in range(cfg.n_stages)],
+        "head": head_init(jnp.uint32(seed + 101), cfg),
+    }
+
+
+def full_fwd_loss(params: Params, tokens: jax.Array, targets: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = embed_fwd(params["embed"], tokens, cfg)
+    for sp in params["stages"]:
+        x = stage_fwd(sp, x, cfg)
+    return head_loss(params["head"], x, targets, cfg)
+
+
+def full_train_step(
+    params: Params, tokens: jax.Array, targets: jax.Array, lr: jax.Array, cfg: ModelConfig
+) -> Tuple[Params, jax.Array]:
+    loss, grads = jax.value_and_grad(lambda p: full_fwd_loss(p, tokens, targets, cfg))(params)
+    return sgd_update(params, grads, lr), loss

@@ -1,0 +1,133 @@
+"""L1 correctness: fused (norm + MLP) Pallas kernels vs jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_mlp import (
+    fused_gelu_mlp,
+    fused_swiglu_mlp,
+    mlp_vmem_footprint_bytes,
+)
+from compile.kernels import ref
+
+
+def _mk(key, shape, scale=0.1):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _swiglu_inputs(rows, d, f, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return (
+        _mk(jax.random.fold_in(k, 0), (rows, d), 1.0),
+        jnp.ones((d,), jnp.float32) + _mk(jax.random.fold_in(k, 1), (d,)),
+        _mk(jax.random.fold_in(k, 2), (d, f)),
+        _mk(jax.random.fold_in(k, 3), (d, f)),
+        _mk(jax.random.fold_in(k, 4), (f, d)),
+    )
+
+
+def _gelu_inputs(rows, d, f, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return (
+        _mk(jax.random.fold_in(k, 0), (rows, d), 1.0),
+        jnp.ones((d,), jnp.float32),
+        _mk(jax.random.fold_in(k, 1), (d,)),
+        _mk(jax.random.fold_in(k, 2), (d, f)),
+        _mk(jax.random.fold_in(k, 3), (f,)),
+        _mk(jax.random.fold_in(k, 4), (f, d)),
+        _mk(jax.random.fold_in(k, 5), (d,)),
+    )
+
+
+class TestSwiGLU:
+    def test_single_row_block(self):
+        args = _swiglu_inputs(16, 32, 96)
+        np.testing.assert_allclose(
+            np.asarray(fused_swiglu_mlp(*args)),
+            np.asarray(ref.swiglu_mlp_ref(*args)),
+            atol=1e-5, rtol=1e-5,
+        )
+
+    def test_multi_row_blocks(self):
+        args = _swiglu_inputs(512, 64, 160)
+        np.testing.assert_allclose(
+            np.asarray(fused_swiglu_mlp(*args)),
+            np.asarray(ref.swiglu_mlp_ref(*args)),
+            atol=1e-5, rtol=1e-5,
+        )
+
+    def test_under_jit(self):
+        args = _swiglu_inputs(128, 32, 64)
+        out = jax.jit(fused_swiglu_mlp)(*args)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.swiglu_mlp_ref(*args)), atol=1e-5, rtol=1e-5
+        )
+
+
+class TestGeluMLP:
+    def test_basic(self):
+        args = _gelu_inputs(96, 48, 192)
+        np.testing.assert_allclose(
+            np.asarray(fused_gelu_mlp(*args)),
+            np.asarray(ref.gelu_mlp_ref(*args)),
+            atol=1e-5, rtol=1e-5,
+        )
+
+    def test_row_not_multiple_of_block(self):
+        args = _gelu_inputs(100, 32, 64)  # pick_block falls back to 100
+        np.testing.assert_allclose(
+            np.asarray(fused_gelu_mlp(*args)),
+            np.asarray(ref.gelu_mlp_ref(*args)),
+            atol=1e-5, rtol=1e-5,
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([8, 32, 100, 128, 256]),
+    d=st.sampled_from([16, 32, 64]),
+    f=st.sampled_from([32, 96, 160]),
+    seed=st.integers(0, 10_000),
+)
+def test_swiglu_hypothesis_sweep(rows, d, f, seed):
+    args = _swiglu_inputs(rows, d, f, seed)
+    np.testing.assert_allclose(
+        np.asarray(fused_swiglu_mlp(*args)),
+        np.asarray(ref.swiglu_mlp_ref(*args)),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([8, 32, 100, 128, 256]),
+    d=st.sampled_from([16, 32, 64]),
+    f=st.sampled_from([32, 96, 160]),
+    seed=st.integers(0, 10_000),
+)
+def test_gelu_hypothesis_sweep(rows, d, f, seed):
+    args = _gelu_inputs(rows, d, f, seed)
+    np.testing.assert_allclose(
+        np.asarray(fused_gelu_mlp(*args)),
+        np.asarray(ref.gelu_mlp_ref(*args)),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+def test_vmem_footprint_model():
+    fp = mlp_vmem_footprint_bytes(256, 1024)
+    assert 0 < fp < 16 * 1024 * 1024
+
+
+def test_norm_refs_match_manual():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32), jnp.float32)
+    g = jnp.ones((32,))
+    b = jnp.zeros((32,))
+    ln = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(ln.mean(-1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ln.std(-1)), 1.0, atol=1e-2)
+    rn = ref.rmsnorm_ref(x, g)
+    rms = np.sqrt((np.asarray(rn) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-2)

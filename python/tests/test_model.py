@@ -1,0 +1,162 @@
+"""L2 correctness: stage fwd/bwd composition == full-model autodiff.
+
+The critical invariant for the runtime is that chaining the per-stage
+artifacts (embed_fwd -> stage_fwd* -> head_bwd -> stage_bwd* -> embed_bwd)
+produces exactly the gradients of the monolithic model.  This is what makes
+GWTF's claim "same theoretical convergence as SGD" (paper §VI Training
+Convergence) hold for our runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import ModelConfig
+
+
+CFGS = [
+    ModelConfig(family="gpt", vocab_size=64, d_model=32, n_heads=4, n_layers=4,
+                seq_len=16, microbatch=2, blocks_per_stage=2),
+    ModelConfig(family="llama", vocab_size=64, d_model=32, n_heads=4, n_layers=4,
+                seq_len=16, microbatch=2, blocks_per_stage=2),
+]
+
+
+def _data(cfg, seed=0):
+    k = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(jax.random.fold_in(k, 0), (cfg.microbatch, cfg.seq_len), 0, cfg.vocab_size)
+    tgts = jax.random.randint(jax.random.fold_in(k, 1), (cfg.microbatch, cfg.seq_len), 0, cfg.vocab_size)
+    return toks, tgts
+
+
+def _tree_allclose(a, b, atol=1e-4):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol, rtol=1e-3)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=[c.family for c in CFGS])
+class TestStageComposition:
+    def test_pipelined_equals_monolithic_loss(self, cfg):
+        params = model.full_init(0, cfg)
+        toks, tgts = _data(cfg)
+        # pipelined forward
+        x = model.embed_fwd(params["embed"], toks, cfg)
+        for sp in params["stages"]:
+            x = model.stage_fwd(sp, x, cfg)
+        loss_pipe = model.head_loss(params["head"], x, tgts, cfg)
+        loss_full = model.full_fwd_loss(params, toks, tgts, cfg)
+        np.testing.assert_allclose(float(loss_pipe), float(loss_full), atol=1e-5)
+
+    def test_pipelined_equals_monolithic_grads(self, cfg):
+        params = model.full_init(0, cfg)
+        toks, tgts = _data(cfg)
+        # monolithic grads
+        gfull = jax.grad(lambda p: model.full_fwd_loss(p, toks, tgts, cfg))(params)
+
+        # pipelined fwd with saved activations
+        acts = [model.embed_fwd(params["embed"], toks, cfg)]
+        for sp in params["stages"]:
+            acts.append(model.stage_fwd(sp, acts[-1], cfg))
+        dhead, dx, _loss = model.head_bwd(params["head"], acts[-1], tgts, cfg)
+        dstages = []
+        for i in reversed(range(len(params["stages"]))):
+            dsp, dx = model.stage_bwd(params["stages"][i], acts[i], dx, cfg)
+            dstages.insert(0, dsp)
+        dembed = model.embed_bwd(params["embed"], toks, dx, cfg)
+
+        _tree_allclose(dembed, gfull["embed"])
+        _tree_allclose(dhead, gfull["head"])
+        for got, exp in zip(dstages, gfull["stages"]):
+            _tree_allclose(got, exp)
+
+    def test_pallas_and_ref_losses_agree(self, cfg):
+        import dataclasses
+        cfg_ref = dataclasses.replace(cfg, use_pallas=False)
+        params = model.full_init(0, cfg)
+        toks, tgts = _data(cfg)
+        lp = float(model.full_fwd_loss(params, toks, tgts, cfg))
+        lr_ = float(model.full_fwd_loss(params, toks, tgts, cfg_ref))
+        np.testing.assert_allclose(lp, lr_, atol=1e-4)
+
+    def test_loss_decreases_under_sgd(self, cfg):
+        params = model.full_init(0, cfg)
+        toks, tgts = _data(cfg)
+        step = jax.jit(lambda p, t, g: model.full_train_step(p, t, g, jnp.float32(0.5), cfg))
+        l0 = float(model.full_fwd_loss(params, toks, tgts, cfg))
+        loss = None
+        for _ in range(15):
+            params, loss = step(params, toks, tgts)
+        assert float(loss) < l0
+
+    def test_init_shapes(self, cfg):
+        sp = model.stage_init(jnp.uint32(0), cfg)
+        for leaf in jax.tree_util.tree_leaves(sp):
+            assert leaf.shape[0] == cfg.blocks_per_stage
+        ep = model.embed_init(jnp.uint32(0), cfg)
+        assert ep["tok_emb"].shape == (cfg.vocab_size, cfg.d_model)
+        hp = model.head_init(jnp.uint32(0), cfg)
+        assert hp["w_out"].shape == (cfg.d_model, cfg.vocab_size)
+
+    def test_init_deterministic(self, cfg):
+        a = model.stage_init(jnp.uint32(7), cfg)
+        b = model.stage_init(jnp.uint32(7), cfg)
+        _tree_allclose(a, b, atol=0)
+
+    def test_init_seed_sensitivity(self, cfg):
+        a = model.stage_init(jnp.uint32(7), cfg)
+        b = model.stage_init(jnp.uint32(8), cfg)
+        diffs = [
+            float(jnp.max(jnp.abs(x - y)))
+            for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+        ]
+        assert max(diffs) > 0
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=[c.family for c in CFGS])
+class TestUpdates:
+    def test_sgd_update_formula(self, cfg):
+        p = model.stage_init(jnp.uint32(0), cfg)
+        g = jax.tree_util.tree_map(jnp.ones_like, p)
+        newp = model.sgd_update(p, g, jnp.float32(0.1))
+        for a, b in zip(jax.tree_util.tree_leaves(p), jax.tree_util.tree_leaves(newp)):
+            np.testing.assert_allclose(np.asarray(a - 0.1), np.asarray(b), atol=1e-6)
+
+    def test_adam_first_step_direction(self, cfg):
+        p = model.head_init(jnp.uint32(0), cfg)
+        m = jax.tree_util.tree_map(jnp.zeros_like, p)
+        v = jax.tree_util.tree_map(jnp.zeros_like, p)
+        g = jax.tree_util.tree_map(jnp.ones_like, p)
+        newp, newm, newv = model.adam_update(p, m, v, g, jnp.float32(0.001), jnp.int32(1))
+        # first Adam step with unit grads moves each weight by ~ -lr
+        for a, b in zip(jax.tree_util.tree_leaves(p), jax.tree_util.tree_leaves(newp)):
+            np.testing.assert_allclose(np.asarray(a - b), 0.001, atol=1e-5)
+
+
+def test_param_count_matches_actual():
+    for cfg in CFGS:
+        params = model.full_init(0, cfg)
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+        assert actual == cfg.param_count(), (cfg.family, actual, cfg.param_count())
+
+
+def test_activation_bytes():
+    cfg = CFGS[0]
+    assert cfg.activation_bytes() == cfg.microbatch * cfg.seq_len * cfg.d_model * 4
+
+
+def test_nstages_property():
+    assert CFGS[0].n_stages == 2
+
+
+def test_bad_config_rejected():
+    with pytest.raises(AssertionError):
+        ModelConfig(family="gpt", d_model=100, n_heads=3)
+    with pytest.raises(AssertionError):
+        ModelConfig(family="nope")
+    with pytest.raises(AssertionError):
+        ModelConfig(n_layers=7, blocks_per_stage=2)

@@ -1,0 +1,53 @@
+//! `cargo bench --bench fig_bench` — regenerates Figures 5, 6 and 7.
+//!
+//! - Fig. 5: node-addition improvement, 4 policies x 5 Table IV settings.
+//! - Fig. 7: flow tests 1–6, GWTF vs SWARM-greedy vs optimal.
+//! - Fig. 6: loss convergence (only when `make artifacts` has run; a short
+//!   run here — the full curve comes from `examples/churn_train`).
+
+use gwtf::experiments::{results_dir, run_fig5, run_fig6, run_fig7, Fig6Opts};
+
+fn main() -> anyhow::Result<()> {
+    let dir = results_dir();
+    let runs: usize =
+        std::env::var("GWTF_BENCH_RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    let t0 = std::time::Instant::now();
+    let fig5 = run_fig5(runs, 11, false)?;
+    fig5.write(&dir, "fig5")?;
+    println!("# Fig. 5 — improvement per Table IV setting (higher = better)");
+    println!("{}", gwtf::experiments::fig5_summary(&fig5));
+    println!("[fig5] {} runs in {:.1}s -> {}/fig5.csv\n", runs, t0.elapsed().as_secs_f64(), dir.display());
+
+    let t0 = std::time::Instant::now();
+    let fig7 = run_fig7(runs, 17)?;
+    fig7.write(&dir, "fig7")?;
+    // print final-cost comparison per test
+    println!("# Fig. 7 final avg cost per microbatch");
+    for t in 1..=6 {
+        let g = fig7.series[&format!("t{t}_gwtf_final")].last().unwrap().1;
+        let s = fig7.series[&format!("t{t}_swarm_final")].last().unwrap().1;
+        let o = fig7
+            .series
+            .get(&format!("t{t}_optimal_final"))
+            .map(|v| format!("{:.1}", v.last().unwrap().1))
+            .unwrap_or_else(|| "-".into());
+        println!("test {t}: gwtf {g:.1}  swarm {s:.1}  optimal {o}");
+    }
+    println!("[fig7] {} reps in {:.1}s -> {}/fig7.csv\n", runs, t0.elapsed().as_secs_f64(), dir.display());
+
+    // Fig. 6 needs artifacts; skip gracefully if they are not built.
+    match gwtf::runtime::Manifest::load(gwtf::runtime::Manifest::default_dir()) {
+        Ok(_) => {
+            let t0 = std::time::Instant::now();
+            let opts = Fig6Opts { steps: 8, microbatches_per_step: 2, ..Default::default() };
+            let (fig6, max_delta) = run_fig6(&opts)?;
+            fig6.write(&dir, "fig6_short")?;
+            println!("# Fig. 6 (short run; full curve: examples/churn_train)");
+            println!("max |loss(gwtf) - loss(centralized)| = {max_delta:.2e}");
+            println!("[fig6] {} steps in {:.1}s -> {}/fig6_short.csv", opts.steps, t0.elapsed().as_secs_f64(), dir.display());
+        }
+        Err(_) => println!("[fig6] skipped: run `make artifacts` first"),
+    }
+    Ok(())
+}

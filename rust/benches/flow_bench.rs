@@ -1,0 +1,89 @@
+//! `cargo bench --bench flow_bench` — L3 hot-path microbenchmarks for the
+//! flow optimizer (EXPERIMENTS.md §Perf).
+//!
+//! The paper argues the decentralized algorithm's control traffic is
+//! negligible next to training ("convergence ... is significantly faster
+//! than a training iteration", §V-C); these benches quantify our
+//! implementation: per-round step cost, full plan convergence, crash
+//! repair, and the exact-solver baseline.
+
+use std::time::Duration;
+
+use gwtf::flow::decentralized::{DecentralizedFlow, FlowParams};
+use gwtf::flow::graph::random_problem;
+use gwtf::flow::mcmf::mcmf_min_cost;
+use gwtf::flow::Annealer;
+use gwtf::util::bench::{bench, black_box};
+use gwtf::util::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let mut results = Vec::new();
+
+    // one protocol round on the Table V test-1 instance
+    {
+        let mut rng = Rng::new(1);
+        let prob = random_problem(1, 40, 8, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), 1);
+        results.push(bench("flow/step (40 relays, 8 stages)", budget, || {
+            black_box(f.step());
+        }));
+    }
+
+    // full plan to steady state
+    {
+        let mut rng = Rng::new(2);
+        let prob = random_problem(1, 40, 8, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        let mut seed = 0u64;
+        results.push(bench("flow/full-plan (120 rounds max)", budget, || {
+            seed += 1;
+            let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), seed);
+            black_box(f.run(120, 8));
+        }));
+    }
+
+    // crash repair on an established flow set
+    {
+        let mut rng = Rng::new(3);
+        let prob = random_problem(1, 40, 8, (2.0, 4.0), (1.0, 20.0), &mut rng);
+        let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), 3);
+        f.run(120, 8);
+        let victims: Vec<_> = f.established_paths().iter().map(|p| p.relays[3]).collect();
+        let mut i = 0;
+        results.push(bench("flow/remove_node + repair", budget, || {
+            let v = victims[i % victims.len()];
+            i += 1;
+            black_box(f.remove_node(v));
+            f.revive_node(v, 3);
+        }));
+    }
+
+    // the exact optimum (global knowledge, the paper's out-of-kilter)
+    {
+        let mut rng = Rng::new(4);
+        let prob = random_problem(1, 40, 8, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        results.push(bench("mcmf/solve (40 relays, 8 stages)", budget, || {
+            black_box(mcmf_min_cost(&prob));
+        }));
+        let mut rng = Rng::new(5);
+        let big = random_problem(4, 80, 8, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        results.push(bench("mcmf/solve (80 relays, 4 sources)", budget, || {
+            black_box(mcmf_min_cost(&big));
+        }));
+    }
+
+    // annealer acceptance (innermost loop of Change/Redirect)
+    {
+        let mut a = Annealer::paper_default();
+        let mut rng = Rng::new(6);
+        results.push(bench("anneal/accept", budget, || {
+            black_box(a.accept(1.0, 1.1, &mut rng));
+            a.temperature = 1.7;
+        }));
+    }
+
+    println!("\n# flow_bench");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,105 @@
+//! `cargo bench --bench runtime_bench` — PJRT runtime latency: compile
+//! (once) and per-call execution of the AOT stage functions, plus a full
+//! real microbatch forward+backward (EXPERIMENTS.md §Perf).
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gwtf::data::{BatchIterator, CorpusConfig, SyntheticCorpus};
+use gwtf::runtime::{BlockStage, DataNodeModel, Manifest, Runtime};
+use gwtf::util::bench::{bench, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("# runtime_bench skipped: {e}");
+            return Ok(());
+        }
+    };
+    let fam = manifest.family("llama")?.clone();
+    let cfg = fam.config.clone();
+    let rt = Arc::new(Runtime::cpu()?);
+
+    // compile every artifact once, timing the cold compiles
+    let t0 = std::time::Instant::now();
+    for entry in fam.entries.values() {
+        rt.load(entry)?;
+    }
+    let stats = rt.stats();
+    println!(
+        "# compile: {} executables in {:.2}s ({:.0} ms avg)",
+        stats.compiles,
+        t0.elapsed().as_secs_f64(),
+        1000.0 * stats.compile_s / stats.compiles.max(1) as f64
+    );
+
+    let mut results = Vec::new();
+    let budget = Duration::from_millis(1000);
+
+    let data_node = DataNodeModel::init(rt.clone(), &fam, 1)?;
+    let stage = BlockStage::init(rt.clone(), &fam, 0, 2)?;
+    let corpus = SyntheticCorpus::generate(&CorpusConfig {
+        vocab_size: cfg.vocab_size,
+        length: 1 << 14,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut batches = BatchIterator::new(corpus, cfg.microbatch, cfg.seq_len);
+    let batch = batches.next_batch();
+    let x = data_node.embed(&batch.tokens)?;
+
+    results.push(bench("runtime/embed_fwd", budget, || {
+        black_box(data_node.embed(&batch.tokens).unwrap());
+    }));
+    results.push(bench("runtime/stage_fwd (2 blocks)", budget, || {
+        black_box(stage.forward(&x).unwrap());
+    }));
+    let dy = x.clone();
+    results.push(bench("runtime/stage_bwd (remat)", budget, || {
+        black_box(stage.backward(&x, &dy).unwrap());
+    }));
+    results.push(bench("runtime/head_bwd (loss+grad)", budget, || {
+        black_box(data_node.head_backward(&x, &batch.targets).unwrap());
+    }));
+
+    // one full microbatch through all stages, fwd+bwd
+    {
+        let mut stages = Vec::new();
+        for s in 0..cfg.n_stages {
+            stages.push(BlockStage::init(rt.clone(), &fam, s, 10 + s as u32)?);
+        }
+        results.push(bench(
+            &format!("runtime/microbatch fwd+bwd ({} stages)", cfg.n_stages),
+            Duration::from_millis(2000),
+            || {
+                let mut acts = vec![data_node.embed(&batch.tokens).unwrap()];
+                for s in 0..stages.len() {
+                    let y = stages[s].forward(&acts[s]).unwrap();
+                    acts.push(y);
+                }
+                let (_, mut dy, _) =
+                    data_node.head_backward(acts.last().unwrap(), &batch.targets).unwrap();
+                for s in (0..stages.len()).rev() {
+                    let (_, dx) = stages[s].backward(&acts[s], &dy).unwrap();
+                    dy = dx;
+                }
+                black_box(dy);
+            },
+        ));
+    }
+
+    println!("\n# runtime_bench (microbatch {} x seq {} x d_model {})", cfg.microbatch, cfg.seq_len, cfg.d_model);
+    for r in &results {
+        println!("{}", r.report());
+    }
+    let s = rt.stats();
+    println!(
+        "\ntotal: {} executions, {:.1} ms avg",
+        s.executions,
+        1000.0 * s.execute_s / s.executions.max(1) as f64
+    );
+    Ok(())
+}

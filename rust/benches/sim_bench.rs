@@ -1,0 +1,98 @@
+//! `cargo bench --bench sim_bench` — end-to-end iteration simulation
+//! latency (the experiment harness's own hot path) plus router planning
+//! costs for all three systems (EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gwtf::baselines::{DtfmRouter, GaParams, SwarmRouter};
+use gwtf::coordinator::GwtfRouter;
+use gwtf::flow::FlowParams;
+use gwtf::sim::scenario::{build, ScenarioConfig};
+use gwtf::sim::training::{Router, TrainingSim};
+use gwtf::util::bench::{bench, black_box};
+use gwtf::util::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let mut results = Vec::new();
+
+    let sc = build(&ScenarioConfig::table2(false, 0.1, 7));
+
+    // one full simulated iteration (plan + events + recovery + aggregation)
+    {
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+        let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+        let mut churn = sc.churn.clone();
+        let mut rng = Rng::new(9);
+        results.push(bench("sim/iteration (gwtf, 18 nodes, 10% churn)", budget, || {
+            let ev = churn.sample_iteration();
+            let alive = churn.planning_view(&ev);
+            let (paths, planning) = router.plan(&alive);
+            black_box(sim.run_iteration(&sc.prob, &mut router, &ev, &churn, planning, paths, &mut rng));
+        }));
+    }
+
+    // router planning in isolation
+    {
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 8);
+        let alive = vec![true; sc.topo.n()];
+        results.push(bench("plan/gwtf (18 nodes, 6 stages)", budget, || {
+            black_box(router.plan(&alive));
+        }));
+    }
+    {
+        let topo = sc.topo.clone();
+        let payload = sc.sim_cfg.payload_bytes;
+        let mut router = SwarmRouter::from_problem(
+            &sc.prob,
+            Arc::new(move |i, j| topo.cost(i, j, payload)),
+            8,
+        );
+        let alive = vec![true; sc.topo.n()];
+        results.push(bench("plan/swarm greedy", budget, || {
+            black_box(router.plan(&alive));
+        }));
+    }
+    {
+        let sc6 = build(&ScenarioConfig::table6(9));
+        let topo = sc6.topo.clone();
+        let payload = sc6.sim_cfg.payload_bytes;
+        let cost: gwtf::baselines::CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
+        let mut n = 0u64;
+        results.push(bench("plan/dtfm genetic (full GA)", Duration::from_millis(1500), || {
+            n += 1;
+            let mut router = DtfmRouter::new(
+                sc6.prob.graph.clone(),
+                sc6.prob.demand.clone(),
+                cost.clone(),
+                GaParams { generations: 50, ..Default::default() },
+                n,
+            );
+            let alive = vec![true; sc6.topo.n()];
+            black_box(router.plan(&alive));
+        }));
+    }
+
+    // churn sampling + topology generation (setup costs)
+    {
+        let mut churn = sc.churn.clone();
+        results.push(bench("churn/sample_iteration", budget, || {
+            black_box(churn.sample_iteration());
+        }));
+        let mut seed = 0;
+        results.push(bench("topology/generate (18 nodes)", budget, || {
+            seed += 1;
+            let mut rng = Rng::new(seed);
+            black_box(gwtf::net::Topology::generate(
+                &gwtf::net::TopologyConfig::default(),
+                &mut rng,
+            ));
+        }));
+    }
+
+    println!("\n# sim_bench");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,42 @@
+//! `cargo bench --bench table_bench` — regenerates Tables II, III and VI.
+//!
+//! Writes `bench_results/table{2,3,6}.{md,csv}` and prints the paper-style
+//! rows.  Repetitions default to a CI-friendly count; set
+//! `GWTF_BENCH_REPS=25` (the paper's number) for the full run, or use
+//! `gwtf bench table2 --reps 25`.
+
+use gwtf::experiments::{results_dir, run_table2, run_table3, run_table6, TableOpts};
+
+fn reps() -> usize {
+    std::env::var("GWTF_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(10)
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = TableOpts { reps: reps(), iters_per_rep: 4, seed: 1, ..Default::default() };
+    let dir = results_dir();
+    println!("# table_bench: {} repetitions x {} iterations\n", opts.reps, opts.iters_per_rep);
+
+    for (name, run) in [
+        ("table2", run_table2 as fn(&TableOpts) -> anyhow::Result<gwtf::metrics::MetricsTable>),
+        ("table3", run_table3),
+        ("table6", run_table6),
+    ] {
+        let t0 = std::time::Instant::now();
+        let table = run(&opts)?;
+        table.write(&dir, name)?;
+        println!("{}", table.to_markdown());
+        println!("[{name}] regenerated in {:.1}s -> {}/{name}.md\n", t0.elapsed().as_secs_f64(), dir.display());
+    }
+
+    // Ablation: GWTF forced to SWARM-style full-restart recovery shows the
+    // value of §V-D path repair (DESIGN.md §7).
+    let ablation = TableOpts {
+        reps: (reps() / 2).max(3),
+        gwtf_restart_recovery: true,
+        ..opts.clone()
+    };
+    let t = run_table2(&ablation)?;
+    t.write(&dir, "table2_ablation_restart")?;
+    println!("[ablation: gwtf w/ restart recovery] -> {}/table2_ablation_restart.md", dir.display());
+    Ok(())
+}

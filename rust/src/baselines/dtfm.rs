@@ -1,0 +1,367 @@
+//! DT-FM baseline [Yuan et al., NeurIPS 2022]: communication-optimal
+//! GPipe arrangement computed by a centralized genetic algorithm.
+//!
+//! DT-FM assigns nodes to pipeline positions so as to minimize the
+//! *maximum* communication cost between subsequent nodes in a pipeline
+//! (the min-max objective the paper's §V-A cites), then trains with fixed
+//! GPipe pipelines — no churn handling, expensive to compute
+//! ("scales exponentially with the number of nodes", §VI Optimality).
+//!
+//! Chromosome: a permutation of the relay nodes; position `k` of pipeline
+//! `p` is gene `p * n_stages + k`.  With `P` pipelines over `S` stages the
+//! permutation is cut into `P` contiguous pipelines.  Fitness = the
+//! worst Eq. 1 edge cost across all pipelines (including the data-node
+//! boundary hops), which the GA minimizes through tournament selection,
+//! order crossover (OX1), and swap mutation.
+
+use crate::cost::NodeId;
+use crate::flow::graph::{FlowPath, StageGraph};
+use crate::sim::training::{RecoveryPolicy, Router};
+use crate::util::Rng;
+
+use super::CostFn;
+
+/// GA tunables.
+#[derive(Debug, Clone)]
+pub struct GaParams {
+    pub population: usize,
+    pub generations: usize,
+    pub tournament: usize,
+    pub crossover_p: f64,
+    pub mutation_p: f64,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        GaParams { population: 64, generations: 200, tournament: 4, crossover_p: 0.9, mutation_p: 0.2 }
+    }
+}
+
+/// The computed arrangement: `pipelines[p]` lists one relay per stage.
+#[derive(Debug, Clone)]
+pub struct Arrangement {
+    pub pipelines: Vec<Vec<NodeId>>,
+    /// min-max objective value of the arrangement.
+    pub max_edge_cost: f64,
+    /// GA generations actually run (diagnostics).
+    pub generations: usize,
+    /// Wall-clock the GA took, seconds (the paper charges this cost).
+    pub compute_s: f64,
+}
+
+/// GA-based arrangement optimizer + static GPipe router.
+pub struct DtfmRouter {
+    pub graph: StageGraph,
+    pub demand: Vec<usize>,
+    pub cost: CostFn,
+    pub params: GaParams,
+    /// data node feeding each pipeline (round-robin over data nodes).
+    assignment: Option<Arrangement>,
+    rng: Rng,
+}
+
+impl DtfmRouter {
+    pub fn new(graph: StageGraph, demand: Vec<usize>, cost: CostFn, params: GaParams, seed: u64) -> Self {
+        DtfmRouter { graph, demand, cost, params, assignment: None, rng: Rng::new(seed) }
+    }
+
+    fn n_pipelines(&self) -> usize {
+        // one GPipe pipeline per data node (paper Table VI: 3 dataholders,
+        // 15 relays over 6 stages -> "several pipelines with 4 microbatches
+        // per pipeline").
+        self.graph.data_nodes.len()
+    }
+
+    /// Decode a permutation into pipelines (cut into contiguous chunks).
+    fn decode(&self, perm: &[NodeId]) -> Vec<Vec<NodeId>> {
+        let s = self.graph.n_stages();
+        (0..self.n_pipelines()).map(|p| perm[p * s..(p + 1) * s].to_vec()).collect()
+    }
+
+    /// Min-max Eq. 1 edge cost over all pipelines for a permutation.
+    fn fitness(&self, perm: &[NodeId]) -> f64 {
+        let s = self.graph.n_stages();
+        let mut worst: f64 = 0.0;
+        for (p, d) in self.graph.data_nodes.iter().enumerate() {
+            let pipe = &perm[p * s..(p + 1) * s];
+            let mut prev = *d;
+            for &r in pipe {
+                worst = worst.max((self.cost)(prev, r));
+                prev = r;
+            }
+            worst = worst.max((self.cost)(prev, *d));
+        }
+        worst
+    }
+
+    /// A permutation is *stage-valid* if gene `p*s + k` holds a stage-`k`
+    /// node.  We encode directly per stage to keep all individuals valid:
+    /// each stage's members are permuted independently and column `k` of
+    /// every pipeline draws from stage `k`.
+    fn random_individual(&mut self, alive: &[bool]) -> Option<Vec<NodeId>> {
+        let s = self.graph.n_stages();
+        let p = self.n_pipelines();
+        let mut cols: Vec<Vec<NodeId>> = Vec::with_capacity(s);
+        for k in 0..s {
+            let mut members: Vec<NodeId> = self.graph.stages[k]
+                .iter()
+                .filter(|&&m| alive.get(m.0).copied().unwrap_or(true))
+                .copied()
+                .collect();
+            if members.len() < p {
+                return None; // not enough alive nodes for disjoint pipelines
+            }
+            self.rng.shuffle(&mut members);
+            cols.push(members);
+        }
+        let mut perm = Vec::with_capacity(p * s);
+        for pi in 0..p {
+            for col in cols.iter().take(s) {
+                perm.push(col[pi]);
+            }
+        }
+        Some(perm)
+    }
+
+    /// Column-wise swap mutation: exchange the stage-`k` relay of two pipelines.
+    fn mutate(&mut self, perm: &mut [NodeId]) {
+        let s = self.graph.n_stages();
+        let p = self.n_pipelines();
+        if p < 2 {
+            return;
+        }
+        let k = self.rng.index(s);
+        let (a, b) = (self.rng.index(p), self.rng.index(p));
+        perm.swap(a * s + k, b * s + k);
+    }
+
+    /// Column-wise crossover: child takes each stage column from one parent.
+    fn crossover(&mut self, a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+        let s = self.graph.n_stages();
+        let p = self.n_pipelines();
+        let mut child = a.to_vec();
+        for k in 0..s {
+            if self.rng.chance(0.5) {
+                // copy column k from b (columns are disjoint sets per stage,
+                // so this preserves validity)
+                for pi in 0..p {
+                    child[pi * s + k] = b[pi * s + k];
+                }
+            }
+        }
+        child
+    }
+
+    /// Run the GA; returns the best arrangement found.
+    pub fn optimize(&mut self, alive: &[bool]) -> Option<Arrangement> {
+        let t0 = std::time::Instant::now();
+        let pop_size = self.params.population;
+        let mut pop: Vec<Vec<NodeId>> = Vec::with_capacity(pop_size);
+        for _ in 0..pop_size {
+            pop.push(self.random_individual(alive)?);
+        }
+        let mut best = pop[0].clone();
+        let mut best_fit = self.fitness(&best);
+        let mut gens = 0;
+        for _ in 0..self.params.generations {
+            gens += 1;
+            // fitness cache for this generation
+            let fits: Vec<f64> = pop.iter().map(|p| self.fitness(p)).collect();
+            for (ind, &f) in pop.iter().zip(&fits) {
+                if f < best_fit {
+                    best_fit = f;
+                    best = ind.clone();
+                }
+            }
+            let tournament = |rng_self: &mut Self, fits: &[f64]| -> usize {
+                let mut bi = rng_self.rng.index(fits.len());
+                for _ in 1..rng_self.params.tournament {
+                    let c = rng_self.rng.index(fits.len());
+                    if fits[c] < fits[bi] {
+                        bi = c;
+                    }
+                }
+                bi
+            };
+            let mut next = Vec::with_capacity(pop_size);
+            // elitism: carry the champion
+            next.push(best.clone());
+            while next.len() < pop_size {
+                let a = tournament(self, &fits);
+                let b = tournament(self, &fits);
+                let mut child = if self.rng.chance(self.params.crossover_p) {
+                    let (pa, pb) = (pop[a].clone(), pop[b].clone());
+                    self.crossover(&pa, &pb)
+                } else {
+                    pop[a].clone()
+                };
+                if self.rng.chance(self.params.mutation_p) {
+                    self.mutate(&mut child);
+                }
+                next.push(child);
+            }
+            pop = next;
+        }
+        for ind in &pop {
+            let f = self.fitness(ind);
+            if f < best_fit {
+                best_fit = f;
+                best = ind.clone();
+            }
+        }
+        Some(Arrangement {
+            pipelines: self.decode(&best),
+            max_edge_cost: best_fit,
+            generations: gens,
+            compute_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+impl Router for DtfmRouter {
+    fn name(&self) -> String {
+        "dtfm".into()
+    }
+
+    fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
+        // Arrangement computed once (DT-FM ignores churn); re-planning only
+        // if the cached arrangement references dead nodes.
+        let needs_replan = match &self.assignment {
+            None => true,
+            Some(a) => a
+                .pipelines
+                .iter()
+                .flatten()
+                .any(|&n| !alive.get(n.0).copied().unwrap_or(true)),
+        };
+        let mut planning_s = 0.0;
+        if needs_replan {
+            match self.optimize(alive) {
+                Some(a) => {
+                    planning_s = a.compute_s;
+                    self.assignment = Some(a);
+                }
+                None => return (Vec::new(), 0.0),
+            }
+        }
+        let arr = self.assignment.as_ref().unwrap();
+        let mut paths = Vec::new();
+        for (p, &d) in self.graph.data_nodes.iter().enumerate() {
+            for _ in 0..self.demand[p] {
+                paths.push(FlowPath { source: d, relays: arr.pipelines[p].clone() });
+            }
+        }
+        (paths, planning_s)
+    }
+
+    fn on_crash(&mut self, _node: NodeId) {}
+
+    fn choose_replacement(
+        &mut self,
+        prev: NodeId,
+        next: NodeId,
+        _stage: usize,
+        _sink: NodeId,
+        candidates: &[NodeId],
+    ) -> Option<NodeId> {
+        candidates
+            .iter()
+            .min_by(|&&a, &&b| {
+                let ca = (self.cost)(prev, a).max((self.cost)(a, next));
+                let cb = (self.cost)(prev, b).max((self.cost)(b, next));
+                ca.partial_cmp(&cb).unwrap()
+            })
+            .copied()
+    }
+
+    fn recovery(&self) -> RecoveryPolicy {
+        // GPipe-style: a failed pipeline must recompute.
+        RecoveryPolicy::RestartPipeline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::graph::random_problem;
+    use std::sync::Arc;
+
+    fn setup(seed: u64, sources: usize, relays: usize, stages: usize) -> DtfmRouter {
+        let mut rng = Rng::new(seed);
+        let prob = random_problem(sources, relays, stages, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        let mut rng2 = Rng::new(seed);
+        let prob2 = random_problem(sources, relays, stages, (1.0, 3.0), (1.0, 20.0), &mut rng2);
+        let cost: CostFn = Arc::new(move |i, j| prob2.cost(i, j));
+        DtfmRouter::new(prob.graph.clone(), prob.demand.clone(), cost, GaParams::default(), seed)
+    }
+
+    #[test]
+    fn arrangement_is_stage_valid_and_disjoint() {
+        let mut r = setup(1, 3, 18, 6);
+        let alive = vec![true; 21];
+        let arr = r.optimize(&alive).unwrap();
+        assert_eq!(arr.pipelines.len(), 3);
+        let mut seen = std::collections::HashSet::new();
+        for pipe in &arr.pipelines {
+            assert_eq!(pipe.len(), 6);
+            for (s, &n) in pipe.iter().enumerate() {
+                assert!(r.graph.stages[s].contains(&n), "node {n} not in stage {s}");
+                assert!(seen.insert(n), "node {n} used twice");
+            }
+        }
+    }
+
+    #[test]
+    fn ga_beats_random_individual() {
+        let mut r = setup(2, 2, 16, 4);
+        let alive = vec![true; 18];
+        let random = r.random_individual(&alive).unwrap();
+        let random_fit = r.fitness(&random);
+        let arr = r.optimize(&alive).unwrap();
+        assert!(
+            arr.max_edge_cost <= random_fit + 1e-9,
+            "GA {} vs random {}",
+            arr.max_edge_cost,
+            random_fit
+        );
+    }
+
+    #[test]
+    fn plan_charges_ga_time_once() {
+        let mut r = setup(3, 2, 16, 4);
+        let alive = vec![true; 18];
+        let (paths, t1) = r.plan(&alive);
+        assert_eq!(paths.len(), 8, "2 data nodes x 4 microbatches");
+        assert!(t1 > 0.0);
+        let (_, t2) = r.plan(&alive);
+        assert_eq!(t2, 0.0, "cached arrangement re-used");
+    }
+
+    #[test]
+    fn dead_node_triggers_replan() {
+        let mut r = setup(4, 2, 16, 4);
+        let mut alive = vec![true; 18];
+        let (paths, _) = r.plan(&alive);
+        let victim = paths[0].relays[0];
+        alive[victim.0] = false;
+        let (paths2, t2) = r.plan(&alive);
+        assert!(t2 > 0.0, "replan charged");
+        for p in &paths2 {
+            assert!(!p.relays.contains(&victim));
+        }
+    }
+
+    #[test]
+    fn too_few_nodes_yields_empty_plan() {
+        let mut r = setup(5, 3, 6, 6); // 1 node/stage but 3 pipelines needed
+        let alive = vec![true; 9];
+        let (paths, _) = r.plan(&alive);
+        assert!(paths.is_empty());
+    }
+
+    #[test]
+    fn restart_recovery_policy() {
+        let r = setup(6, 1, 8, 4);
+        assert_eq!(r.recovery(), RecoveryPolicy::RestartPipeline);
+    }
+}

@@ -1,0 +1,428 @@
+//! The Fig. 5 node-addition experiment (paper §VI "Handling Joining
+//! Nodes", Table IV top).
+//!
+//! A system of 97 nodes (1 data holder + 96 relays over `S` stages) takes
+//! 20 joining candidates, one at a time.  After every addition the
+//! routing cost is re-evaluated with the exact min-cost flow solver
+//! ([`crate::flow::mcmf`], the out-of-kilter optimum), and the experiment
+//! reports the improvement `(cost_now - cost_after) / cost_now` of the
+//! whole insertion sequence.  Four placement policies are compared:
+//!
+//! - **Gwtf** — the leader's utilization-ranked placement (§V-B),
+//! - **CapacityFirst** — candidates in capacity order, stages
+//!   round-robin (no utilization view — see coordinator::join),
+//! - **Random** — uniform random stage,
+//! - **Optimal** — exhaustive: try every (candidate, stage) pair, keep the
+//!   one minimizing the resulting min-cost flow (the paper notes this
+//!   "cannot be achieved in a decentralized setting").
+//!
+//! The flow demand is pinned to the *initial* bottleneck stage capacity so
+//! the routed flow value stays constant across additions; the min-cost
+//! objective is then monotonically non-increasing and improvements are
+//! attributable to placement quality alone.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::join::{utilization_query, JoinPolicy, Leader};
+use crate::cost::NodeId;
+use crate::flow::graph::{FlowProblem, StageGraph};
+use crate::flow::mcmf::mcmf_min_cost;
+use crate::util::Rng;
+
+/// Which placement rule drives the experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinPolicyExt {
+    Gwtf,
+    CapacityFirst,
+    Random,
+    Optimal,
+}
+
+impl JoinPolicyExt {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JoinPolicyExt::Gwtf => "gwtf",
+            JoinPolicyExt::CapacityFirst => "capacity-first",
+            JoinPolicyExt::Random => "random",
+            JoinPolicyExt::Optimal => "optimal",
+        }
+    }
+}
+
+/// One Table IV (top) experiment setting.
+#[derive(Debug, Clone)]
+pub struct JoinSetting {
+    pub name: &'static str,
+    pub stages: usize,
+    pub n_relays: usize,
+    pub n_candidates: usize,
+    /// Relay/candidate capacity range (floored uniform).
+    pub cap_range: (f64, f64),
+    /// Interlayer (adjacent-stage) cost range (floored uniform).
+    pub inter_range: (f64, f64),
+    /// Intralayer extra cost range added on top of the node's max
+    /// interlayer cost φ (Table IV: φ + U(50, 100)).
+    pub intra_extra: (f64, f64),
+    /// Setting 5*: random (unequal) stage sizes.
+    pub random_stage_sizes: bool,
+}
+
+impl JoinSetting {
+    /// Table IV settings 1–5*.
+    pub fn setting(i: usize) -> JoinSetting {
+        match i {
+            1 => JoinSetting {
+                name: "1: 8 stages, cap U(1,20), inter U(1,100)",
+                stages: 8,
+                n_relays: 96,
+                n_candidates: 20,
+                cap_range: (1.0, 20.0),
+                inter_range: (1.0, 100.0),
+                intra_extra: (50.0, 100.0),
+                random_stage_sizes: false,
+            },
+            2 => JoinSetting {
+                name: "2: 8 stages, cap U(1,20), inter U(20,100)",
+                inter_range: (20.0, 100.0),
+                ..JoinSetting::setting(1)
+            },
+            3 => JoinSetting {
+                name: "3: 8 stages, cap U(1,5), inter U(1,100)",
+                cap_range: (1.0, 5.0),
+                ..JoinSetting::setting(1)
+            },
+            4 => JoinSetting {
+                name: "4: 12 stages, cap U(1,20), inter U(1,100)",
+                stages: 12,
+                ..JoinSetting::setting(1)
+            },
+            5 => JoinSetting {
+                name: "5*: 8 stages, random stage sizes",
+                random_stage_sizes: true,
+                ..JoinSetting::setting(1)
+            },
+            other => panic!("unknown join setting {other}"),
+        }
+    }
+
+    /// Reduced-size variant (4 relays/stage, 8 candidates): same structure,
+    /// tractable for the exhaustive *optimal* baseline, which is
+    /// O(candidates² · stages) min-cost-flow solves.  The full-size paper
+    /// setting is available behind `gwtf bench fig5 --full`.
+    pub fn reduced(mut self) -> JoinSetting {
+        self.n_relays = self.stages * 4;
+        self.n_candidates = 8;
+        self
+    }
+}
+
+/// Result of one run.
+#[derive(Debug, Clone)]
+pub struct JoinOutcome {
+    pub policy: JoinPolicyExt,
+    pub cost_before: f64,
+    pub cost_after: f64,
+    /// Per-addition cost trace (`n_candidates + 1` entries).
+    pub trace: Vec<f64>,
+}
+
+impl JoinOutcome {
+    /// The paper's Fig. 5 metric.
+    pub fn improvement(&self) -> f64 {
+        if self.cost_before == 0.0 {
+            0.0
+        } else {
+            (self.cost_before - self.cost_after) / self.cost_before
+        }
+    }
+}
+
+/// A mutable instance of the experiment: growable staged graph + costs.
+pub struct JoinExperiment {
+    pub setting: JoinSetting,
+    /// stage membership (relays only; node 0 is the data holder).
+    pub stages: Vec<Vec<NodeId>>,
+    pub cap: Vec<usize>,
+    /// Dense pairwise interlayer cost matrix, grown as candidates join.
+    pub costs: Vec<Vec<f64>>,
+    /// Per-node intralayer cost (φ + U(50,100); used by same-stage moves).
+    pub intra: Vec<f64>,
+    /// Candidates not yet placed: (node, capacity).
+    pub pending: Vec<(NodeId, usize)>,
+    pub demand: usize,
+    rng: Rng,
+}
+
+impl JoinExperiment {
+    /// Generate the initial system + candidate pool for a setting.
+    pub fn generate(setting: &JoinSetting, seed: u64) -> JoinExperiment {
+        let mut rng = Rng::new(seed);
+        let total = 1 + setting.n_relays + setting.n_candidates;
+        // capacities
+        let mut cap = vec![0usize; total];
+        for c in cap.iter_mut().skip(1) {
+            *c = rng.uniform(setting.cap_range.0, setting.cap_range.1).floor().max(1.0) as usize;
+        }
+        cap[0] = usize::MAX / 4; // data holder: ample
+        // dense interlayer costs (floored uniform, per directed pair)
+        let mut costs = vec![vec![0.0f64; total]; total];
+        for i in 0..total {
+            for j in 0..total {
+                if i != j {
+                    costs[i][j] =
+                        rng.uniform(setting.inter_range.0, setting.inter_range.1).floor().max(1.0);
+                }
+            }
+        }
+        // intralayer: φ (the node's max interlayer cost) + U(50,100)
+        let intra: Vec<f64> = (0..total)
+            .map(|i| {
+                let phi = costs[i].iter().cloned().fold(0.0f64, f64::max);
+                phi + rng.uniform(setting.intra_extra.0, setting.intra_extra.1).floor()
+            })
+            .collect();
+        // stage membership
+        let mut stages: Vec<Vec<NodeId>> = vec![Vec::new(); setting.stages];
+        if setting.random_stage_sizes {
+            // random sizes, at least one per stage
+            for s in 0..setting.stages {
+                stages[s].push(NodeId(1 + s));
+            }
+            for r in setting.stages..setting.n_relays {
+                let s = rng.index(setting.stages);
+                stages[s].push(NodeId(1 + r));
+            }
+        } else {
+            for r in 0..setting.n_relays {
+                stages[r % setting.stages].push(NodeId(1 + r));
+            }
+        }
+        let pending: Vec<(NodeId, usize)> = (0..setting.n_candidates)
+            .map(|c| {
+                let id = NodeId(1 + setting.n_relays + c);
+                (id, cap[id.0])
+            })
+            .collect();
+        // demand pinned to the initial bottleneck stage capacity
+        let demand = stages
+            .iter()
+            .map(|s| s.iter().map(|n| cap[n.0]).sum::<usize>())
+            .min()
+            .unwrap_or(1)
+            .max(1);
+        JoinExperiment {
+            setting: setting.clone(),
+            stages,
+            cap,
+            costs,
+            intra,
+            pending,
+            demand,
+            rng: rng.fork(0x701),
+        }
+    }
+
+    /// Snapshot the current system as a [`FlowProblem`] (placed nodes only).
+    pub fn problem(&self) -> FlowProblem {
+        let graph = StageGraph { stages: self.stages.clone(), data_nodes: vec![NodeId(0)] };
+        let costs = self.costs.clone();
+        FlowProblem {
+            graph,
+            cap: self.cap.clone(),
+            demand: vec![self.demand],
+            cost: Box::new(move |i, j| costs[i.0][j.0]),
+        }
+    }
+
+    /// Current optimal routing cost (the experiment's measuring stick).
+    pub fn current_cost(&self) -> f64 {
+        mcmf_min_cost(&self.problem()).total_cost
+    }
+
+    fn place(&mut self, node: NodeId, stage: usize) {
+        self.stages[stage].push(node);
+        self.pending.retain(|&(n, _)| n != node);
+    }
+
+    /// Run the full insertion sequence under `policy`.
+    pub fn run(mut self, policy: JoinPolicyExt) -> JoinOutcome {
+        let cost_before = self.current_cost();
+        let mut trace = vec![cost_before];
+        match policy {
+            JoinPolicyExt::Gwtf => {
+                // Nodes join *iteratively* (SVI: "Iteratively, 20 nodes are
+                // added"): each leader round sees one arrival, ranks stages
+                // by a fresh utilization snapshot (flooding query), and
+                // places the candidate in the most-utilized stage — so
+                // consecutive joins track the moving bottleneck (Fig. 3).
+                while !self.pending.is_empty() {
+                    let prob = self.problem();
+                    let sol = mcmf_min_cost(&prob);
+                    let flows = vec![sol.flow; self.setting.stages];
+                    let util = utilization_query(&prob, &flows);
+                    let mut leader = Leader::new(NodeId(0), JoinPolicy::UtilizationRanked);
+                    let &(n, c) = self
+                        .pending
+                        .iter()
+                        .max_by_key(|&&(_, c)| c)
+                        .expect("pending nonempty");
+                    leader.on_join_request(n, c);
+                    for (node, stage) in leader.place(&util, &mut self.rng) {
+                        self.place(node, stage);
+                        trace.push(self.current_cost());
+                    }
+                }
+            }
+            JoinPolicyExt::CapacityFirst => {
+                // "adding highest capacity first": candidates in capacity
+                // order, stages round-robin (no utilization view)
+                let mut i = 0;
+                while !self.pending.is_empty() {
+                    let &(node, _) = self
+                        .pending
+                        .iter()
+                        .max_by_key(|&&(_, c)| c)
+                        .expect("pending nonempty");
+                    let stage = i % self.setting.stages;
+                    i += 1;
+                    self.place(node, stage);
+                    trace.push(self.current_cost());
+                }
+            }
+            JoinPolicyExt::Random => {
+                while !self.pending.is_empty() {
+                    let pick = self.rng.index(self.pending.len());
+                    let (node, _) = self.pending[pick];
+                    let stage = self.rng.index(self.setting.stages);
+                    self.place(node, stage);
+                    trace.push(self.current_cost());
+                }
+            }
+            JoinPolicyExt::Optimal => {
+                // exhaustive: each step tries every (candidate, stage) pair
+                while !self.pending.is_empty() {
+                    let mut best: Option<(NodeId, usize, f64)> = None;
+                    let pending = self.pending.clone();
+                    for &(node, _) in &pending {
+                        for s in 0..self.setting.stages {
+                            self.stages[s].push(node);
+                            let c = self.current_cost();
+                            self.stages[s].pop();
+                            if best.map(|(_, _, bc)| c < bc).unwrap_or(true) {
+                                best = Some((node, s, c));
+                            }
+                        }
+                    }
+                    let (node, stage, cost) = best.expect("candidates remain");
+                    self.place(node, stage);
+                    trace.push(cost);
+                }
+            }
+        }
+        let cost_after = *trace.last().unwrap();
+        JoinOutcome { policy, cost_before, cost_after, trace }
+    }
+}
+
+/// Run all four policies on the same generated instance.
+pub fn compare_policies(setting: &JoinSetting, seed: u64) -> BTreeMap<&'static str, JoinOutcome> {
+    let mut out = BTreeMap::new();
+    for policy in [
+        JoinPolicyExt::Gwtf,
+        JoinPolicyExt::CapacityFirst,
+        JoinPolicyExt::Random,
+        JoinPolicyExt::Optimal,
+    ] {
+        let exp = JoinExperiment::generate(setting, seed);
+        out.insert(policy.name(), exp.run(policy));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reduced-size setting so tests stay fast.
+    fn small() -> JoinSetting {
+        JoinSetting {
+            name: "test",
+            stages: 4,
+            n_relays: 16,
+            n_candidates: 6,
+            cap_range: (1.0, 4.0),
+            inter_range: (1.0, 100.0),
+            intra_extra: (50.0, 100.0),
+            random_stage_sizes: false,
+        }
+    }
+
+    #[test]
+    fn generation_shape() {
+        let e = JoinExperiment::generate(&small(), 1);
+        assert_eq!(e.stages.len(), 4);
+        assert_eq!(e.stages.iter().map(Vec::len).sum::<usize>(), 16);
+        assert_eq!(e.pending.len(), 6);
+        assert!(e.demand >= 1);
+        // intralayer cost exceeds the node's max interlayer cost
+        for i in 1..e.costs.len() {
+            let phi = e.costs[i].iter().cloned().fold(0.0f64, f64::max);
+            assert!(e.intra[i] >= phi + 50.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn additions_never_increase_cost() {
+        for seed in [1, 2, 3] {
+            let e = JoinExperiment::generate(&small(), seed);
+            let out = e.run(JoinPolicyExt::Gwtf);
+            for w in out.trace.windows(2) {
+                assert!(w[1] <= w[0] + 1e-6, "cost increased: {} -> {}", w[0], w[1]);
+            }
+            assert!(out.improvement() >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn optimal_beats_or_matches_all() {
+        let outs = compare_policies(&small(), 7);
+        let opt = outs["optimal"].improvement();
+        for (name, o) in &outs {
+            assert!(
+                opt >= o.improvement() - 1e-9,
+                "optimal {} < {} {}",
+                opt,
+                name,
+                o.improvement()
+            );
+        }
+    }
+
+    #[test]
+    fn all_candidates_placed() {
+        for policy in [
+            JoinPolicyExt::Gwtf,
+            JoinPolicyExt::CapacityFirst,
+            JoinPolicyExt::Random,
+        ] {
+            let e = JoinExperiment::generate(&small(), 11);
+            let before: usize = e.stages.iter().map(Vec::len).sum();
+            let n_cand = e.pending.len();
+            let out = e.run(policy);
+            assert_eq!(out.trace.len(), n_cand + 1, "{policy:?}");
+            let _ = before;
+        }
+    }
+
+    #[test]
+    fn setting_constructors_match_table4() {
+        let s1 = JoinSetting::setting(1);
+        assert_eq!((s1.stages, s1.cap_range), (8, (1.0, 20.0)));
+        let s3 = JoinSetting::setting(3);
+        assert_eq!(s3.cap_range, (1.0, 5.0));
+        let s4 = JoinSetting::setting(4);
+        assert_eq!(s4.stages, 12);
+        let s5 = JoinSetting::setting(5);
+        assert!(s5.random_stage_sizes);
+    }
+}

@@ -1,0 +1,22 @@
+//! Every baseline the paper compares GWTF against.
+//!
+//! - [`swarm`] — SWARM [Ryabinin et al. 2023]: greedy stochastic wiring,
+//!   capacity-oblivious, full pipeline recomputation on backward-pass
+//!   crashes (Tables II/III, Fig. 7).
+//! - [`dtfm`] — DT-FM [Yuan et al. 2022]: centralized genetic algorithm
+//!   computing a communication-optimal GPipe arrangement (Table VI).
+//! - [`join_eval`] — the Fig. 5 node-addition experiment: GWTF's
+//!   utilization-ranked placement vs highest-capacity-first vs random vs
+//!   the exhaustive optimal (out-of-kilter per candidate × stage).
+//!
+//! The exact min-cost max-flow optimum itself lives in
+//! [`crate::flow::mcmf`] (it is shared by Fig. 5 and Fig. 7).
+
+pub mod dtfm;
+pub mod join_eval;
+pub mod swarm;
+
+pub use crate::coordinator::router::CostFn;
+pub use dtfm::{Arrangement, DtfmRouter, GaParams};
+pub use join_eval::{JoinExperiment, JoinOutcome, JoinPolicyExt, JoinSetting};
+pub use swarm::SwarmRouter;

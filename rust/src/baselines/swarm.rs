@@ -1,0 +1,254 @@
+//! SWARM baseline [Ryabinin et al., ICML 2023] as the paper models it.
+//!
+//! SWARM nodes route each microbatch independently through the stages with
+//! a *greedy stochastic wiring* rule — "sending to the next stage closest
+//! node" (paper §VI Ablation) — without accounting for node memory
+//! constraints ("SWARM assumes that all nodes have the same amount of
+//! memory", §I) and without any global cost objective.  Crash recovery:
+//! forward-pass timeouts re-send to a different next-stage peer, but a
+//! crash in the *backward* pass forces a complete pipeline recomputation
+//! (§II, §III) — the paper's key inefficiency that GWTF's path repair
+//! removes.
+
+use crate::cost::NodeId;
+use crate::flow::graph::{FlowPath, FlowProblem, StageGraph};
+use crate::sim::training::{RecoveryPolicy, Router};
+use crate::util::Rng;
+
+use super::CostFn;
+
+/// Greedy-wiring SWARM router.
+pub struct SwarmRouter {
+    pub graph: StageGraph,
+    pub cap: Vec<usize>,
+    pub demand: Vec<usize>,
+    pub cost: CostFn,
+    /// If true (SWARM's actual behaviour) capacity limits are ignored
+    /// during wiring; the simulator's per-node slots then serialize
+    /// overloaded nodes.  If false, wiring respects capacity (ablation).
+    pub ignore_capacity: bool,
+    /// Stochastic wiring: with probability `epsilon` pick a random peer
+    /// instead of the nearest (SWARM's exploration).
+    pub epsilon: f64,
+    rng: Rng,
+}
+
+impl SwarmRouter {
+    pub fn new(
+        graph: StageGraph,
+        cap: Vec<usize>,
+        demand: Vec<usize>,
+        cost: CostFn,
+        seed: u64,
+    ) -> Self {
+        SwarmRouter { graph, cap, demand, cost, ignore_capacity: true, epsilon: 0.0, rng: Rng::new(seed) }
+    }
+
+    /// Build from a flow problem sharing its cost closure through `cost`.
+    pub fn from_problem(prob: &FlowProblem, cost: CostFn, seed: u64) -> Self {
+        SwarmRouter::new(prob.graph.clone(), prob.cap.clone(), prob.demand.clone(), cost, seed)
+    }
+
+    /// Wire one microbatch greedily from `source` through all stages.
+    fn wire_one(&mut self, source: NodeId, alive: &[bool], load: &mut [usize]) -> Option<FlowPath> {
+        let mut relays = Vec::with_capacity(self.graph.n_stages());
+        let mut cur = source;
+        for s in 0..self.graph.n_stages() {
+            let members: Vec<NodeId> = self.graph.stages[s]
+                .iter()
+                .filter(|&&m| {
+                    alive.get(m.0).copied().unwrap_or(true)
+                        && (self.ignore_capacity || load[m.0] < self.cap[m.0])
+                })
+                .copied()
+                .collect();
+            if members.is_empty() {
+                return None;
+            }
+            let pick = if self.epsilon > 0.0 && self.rng.chance(self.epsilon) {
+                *self.rng.choose(&members).unwrap()
+            } else {
+                // greedy: nearest next-stage node from where we stand
+                *members
+                    .iter()
+                    .min_by(|&&a, &&b| {
+                        (self.cost)(cur, a).partial_cmp(&(self.cost)(cur, b)).unwrap()
+                    })
+                    .unwrap()
+            };
+            load[pick.0] += 1;
+            relays.push(pick);
+            cur = pick;
+        }
+        Some(FlowPath { source, relays })
+    }
+
+    /// Total Eq. 1 cost of a set of wired paths (Fig. 7 series).
+    pub fn total_cost(&self, paths: &[FlowPath]) -> f64 {
+        paths
+            .iter()
+            .map(|p| {
+                let mut c = 0.0;
+                let mut prev = p.source;
+                for &r in &p.relays {
+                    c += (self.cost)(prev, r);
+                    prev = r;
+                }
+                c + (self.cost)(prev, p.source)
+            })
+            .sum()
+    }
+}
+
+impl Router for SwarmRouter {
+    fn name(&self) -> String {
+        "swarm".into()
+    }
+
+    fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
+        let n = self.cap.len();
+        let mut load = vec![0usize; n];
+        let mut paths = Vec::new();
+        let data_nodes = self.graph.data_nodes.clone();
+        let demand = self.demand.clone();
+        for (di, d) in data_nodes.into_iter().enumerate() {
+            for _ in 0..demand[di] {
+                if let Some(p) = self.wire_one(d, alive, &mut load) {
+                    paths.push(p);
+                }
+            }
+        }
+        // SWARM wires on the fly; no separate planning phase is charged.
+        (paths, 0.0)
+    }
+
+    fn on_crash(&mut self, _node: NodeId) {}
+
+    fn choose_replacement(
+        &mut self,
+        prev: NodeId,
+        _next: NodeId,
+        _stage: usize,
+        _sink: NodeId,
+        candidates: &[NodeId],
+    ) -> Option<NodeId> {
+        // Greedy: nearest alternative from the upstream node only (SWARM
+        // does not know the downstream cost).
+        candidates
+            .iter()
+            .min_by(|&&a, &&b| (self.cost)(prev, a).partial_cmp(&(self.cost)(prev, b)).unwrap())
+            .copied()
+    }
+
+    fn recovery(&self) -> RecoveryPolicy {
+        RecoveryPolicy::RestartPipeline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::graph::random_problem;
+    use std::sync::Arc;
+
+    fn setup(seed: u64) -> (FlowProblem, SwarmRouter) {
+        let mut rng = Rng::new(seed);
+        let prob = random_problem(1, 24, 4, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        // Rebuild the same deterministic cost closure for the router.
+        let mut rng2 = Rng::new(seed);
+        let prob2 = random_problem(1, 24, 4, (1.0, 3.0), (1.0, 20.0), &mut rng2);
+        let cost: CostFn = Arc::new(move |i, j| prob2.cost(i, j));
+        let router = SwarmRouter::from_problem(&prob, cost, seed);
+        (prob, router)
+    }
+
+    #[test]
+    fn wires_all_demand() {
+        let (prob, mut r) = setup(1);
+        let alive = vec![true; prob.cap.len()];
+        let (paths, planning) = r.plan(&alive);
+        assert_eq!(paths.len(), prob.demand[0]);
+        assert_eq!(planning, 0.0);
+        for p in &paths {
+            assert_eq!(p.relays.len(), prob.graph.n_stages());
+        }
+    }
+
+    #[test]
+    fn greedy_picks_nearest_next_hop() {
+        let (prob, mut r) = setup(2);
+        let alive = vec![true; prob.cap.len()];
+        let (paths, _) = r.plan(&alive);
+        // first hop of the first path is the nearest stage-0 node to the source
+        let p = &paths[0];
+        let best = prob.graph.stages[0]
+            .iter()
+            .min_by(|&&a, &&b| {
+                (r.cost)(p.source, a).partial_cmp(&(r.cost)(p.source, b)).unwrap()
+            })
+            .copied()
+            .unwrap();
+        assert_eq!(p.relays[0], best);
+    }
+
+    #[test]
+    fn dead_nodes_avoided() {
+        let (prob, mut r) = setup(3);
+        let mut alive = vec![true; prob.cap.len()];
+        let victim = prob.graph.stages[0][0];
+        alive[victim.0] = false;
+        let (paths, _) = r.plan(&alive);
+        for p in &paths {
+            assert!(!p.relays.contains(&victim));
+        }
+    }
+
+    #[test]
+    fn recovery_is_full_restart() {
+        let (_, r) = setup(4);
+        assert_eq!(r.recovery(), RecoveryPolicy::RestartPipeline);
+    }
+
+    #[test]
+    fn ignores_capacity_by_default() {
+        // All microbatches pile onto the nearest nodes even beyond cap.
+        let (prob, mut r) = setup(5);
+        assert!(r.ignore_capacity);
+        let alive = vec![true; prob.cap.len()];
+        let (paths, _) = r.plan(&alive);
+        assert_eq!(paths.len(), prob.demand[0]);
+    }
+
+    #[test]
+    fn capacity_aware_mode_respects_caps() {
+        let (prob, mut r) = setup(6);
+        r.ignore_capacity = false;
+        let alive = vec![true; prob.cap.len()];
+        let (paths, _) = r.plan(&alive);
+        let mut usage = vec![0usize; prob.cap.len()];
+        for p in &paths {
+            for &n in &p.relays {
+                usage[n.0] += 1;
+            }
+        }
+        for (i, &u) in usage.iter().enumerate() {
+            assert!(u <= prob.cap[i]);
+        }
+    }
+
+    #[test]
+    fn replacement_nearest_to_upstream() {
+        let (prob, mut r) = setup(7);
+        let prev = prob.graph.data_nodes[0];
+        let cands = prob.graph.stages[0].clone();
+        let pick = r
+            .choose_replacement(prev, prob.graph.stages[1][0], 0, prev, &cands)
+            .unwrap();
+        let best = cands
+            .iter()
+            .min_by(|&&a, &&b| (r.cost)(prev, a).partial_cmp(&(r.cost)(prev, b)).unwrap())
+            .copied()
+            .unwrap();
+        assert_eq!(pick, best);
+    }
+}

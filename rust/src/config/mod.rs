@@ -1,0 +1,174 @@
+//! Launcher configuration: CLI flag parsing + experiment config files.
+//!
+//! The offline build has no `clap`/`serde`, so this module provides a
+//! small, well-tested substitute: [`Args`] parses `--key value` /
+//! `--flag` style options, and [`load_overrides`] merges a JSON config
+//! file (parsed with [`crate::util::json`]) under the same keys.  Every
+//! binary (`gwtf`, the examples, the bench targets) uses this so runs are
+//! reproducible from a single command line or config file.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed command line: positional arguments + `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without the binary name).
+    ///
+    /// `--key value` binds; a `--flag` followed by another `--...` (or end
+    /// of input) becomes a boolean `"true"`.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let is_flag = it.peek().map(|n| n.starts_with("--")).unwrap_or(true);
+                let val = if is_flag { "true".to_string() } else { it.next().unwrap() };
+                args.options.insert(key.to_string(), val);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process's own arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Merge options from a JSON object file; CLI options win on conflict.
+    pub fn with_config_file(mut self, path: impl AsRef<Path>) -> Result<Args> {
+        for (k, v) in load_overrides(path)? {
+            self.options.entry(k).or_insert(v);
+        }
+        Ok(self)
+    }
+}
+
+/// Flat `{"key": scalar}` JSON object -> string map.
+pub fn load_overrides(path: impl AsRef<Path>) -> Result<BTreeMap<String, String>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+    let obj = j.as_obj().ok_or_else(|| anyhow!("{path:?}: expected a JSON object"))?;
+    let mut out = BTreeMap::new();
+    for (k, v) in obj {
+        let s = match v {
+            Json::Str(s) => s.clone(),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            Json::Bool(b) => b.to_string(),
+            other => return Err(anyhow!("{path:?}: key {k} has non-scalar value {other:?}")),
+        };
+        out.insert(k.clone(), s);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = args("bench table2 --seed 7 --homogeneous --churn 0.1");
+        assert_eq!(a.positional, vec!["bench", "table2"]);
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.flag("homogeneous"));
+        assert_eq!(a.f64_or("churn", 0.0).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("run");
+        assert_eq!(a.usize_or("reps", 25).unwrap(), 25);
+        assert_eq!(a.str_or("family", "llama"), "llama");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = args("--seed abc");
+        assert!(a.usize_or("seed", 0).is_err());
+        assert!(a.f64_or("seed", 0.0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = args("--check");
+        assert!(a.flag("check"));
+    }
+
+    #[test]
+    fn config_file_merges_under_cli() {
+        let dir = std::env::temp_dir().join("gwtf_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"seed": 9, "family": "gpt", "deep": true}"#).unwrap();
+        let a = args("--seed 7").with_config_file(&p).unwrap();
+        assert_eq!(a.get("seed"), Some("7"), "CLI wins");
+        assert_eq!(a.get("family"), Some("gpt"), "file fills gaps");
+        assert!(a.flag("deep"));
+    }
+
+    #[test]
+    fn non_object_config_rejected() {
+        let dir = std::env::temp_dir().join("gwtf_config_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, "[1,2,3]").unwrap();
+        assert!(load_overrides(&p).is_err());
+    }
+}

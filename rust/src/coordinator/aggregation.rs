@@ -1,0 +1,222 @@
+//! Training/aggregation synchronization (paper §V-E).
+//!
+//! Nodes in the same stage must hold identical parameters when an
+//! iteration's microbatches are processed, so GWTF alternates training and
+//! aggregation phases: the data-node leader emits BEGIN AGGREGATION, which
+//! floods front-to-back; each stage then broadcasts/collects weights
+//! internally; once a node finished aggregating *and* sees a downstream
+//! peer finished, it sends CAN TAKE upstream (last stage sends it
+//! unconditionally).  When CAN TAKE reaches the data nodes a new iteration
+//! begins.  This module implements that state machine per node.
+
+use crate::cost::NodeId;
+
+/// Phase of a node in the §V-E cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Training,
+    /// Received BEGIN AGGREGATION; exchanging weights within the stage.
+    Aggregating,
+    /// Finished weight exchange; waiting for downstream CAN TAKE.
+    WaitingDownstream,
+    /// Sent CAN TAKE upstream; ready for the next iteration's microbatches.
+    Ready,
+}
+
+/// Per-node aggregation state machine.
+#[derive(Debug, Clone)]
+pub struct AggregationFsm {
+    pub id: NodeId,
+    /// Stage index (None for data nodes, which bracket the pipeline).
+    pub stage: Option<usize>,
+    /// Number of same-stage peers we must exchange weights with.
+    pub peers_in_stage: usize,
+    pub phase: Phase,
+    pub iteration: u64,
+    weights_received: usize,
+    downstream_ready: bool,
+    is_last_stage: bool,
+}
+
+/// Actions the FSM asks its host to perform.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Flood BEGIN AGGREGATION to known next-stage peers.
+    ForwardBegin,
+    /// Broadcast our weights to same-stage peers.
+    BroadcastWeights,
+    /// Send CAN TAKE to known previous-stage peers.
+    SendCanTake,
+    /// Start accepting microbatches for `iteration`.
+    StartIteration(u64),
+}
+
+impl AggregationFsm {
+    pub fn new(id: NodeId, stage: Option<usize>, peers_in_stage: usize, is_last_stage: bool) -> Self {
+        AggregationFsm {
+            id,
+            stage,
+            peers_in_stage,
+            phase: Phase::Training,
+            iteration: 0,
+            weights_received: 0,
+            downstream_ready: false,
+            is_last_stage,
+        }
+    }
+
+    /// BEGIN AGGREGATION received (or emitted by the leader itself).
+    pub fn on_begin_aggregation(&mut self, iteration: u64) -> Vec<Action> {
+        if self.phase != Phase::Training || iteration < self.iteration {
+            return vec![]; // duplicate flood copies are ignored
+        }
+        self.iteration = iteration;
+        self.phase = Phase::Aggregating;
+        self.weights_received = 0;
+        self.downstream_ready = false;
+        let mut acts = vec![Action::ForwardBegin, Action::BroadcastWeights];
+        if self.peers_in_stage == 0 {
+            acts.extend(self.finish_exchange());
+        }
+        acts
+    }
+
+    /// A same-stage peer's weights arrived.
+    pub fn on_weights(&mut self, iteration: u64) -> Vec<Action> {
+        if self.phase != Phase::Aggregating || iteration != self.iteration {
+            return vec![];
+        }
+        self.weights_received += 1;
+        if self.weights_received >= self.peers_in_stage {
+            self.finish_exchange()
+        } else {
+            vec![]
+        }
+    }
+
+    fn finish_exchange(&mut self) -> Vec<Action> {
+        self.phase = Phase::WaitingDownstream;
+        // "Nodes in the last stage send this without waiting."
+        if self.is_last_stage || self.downstream_ready {
+            self.send_can_take()
+        } else {
+            vec![]
+        }
+    }
+
+    /// Downstream peer's CAN TAKE arrived.
+    pub fn on_can_take(&mut self, iteration: u64) -> Vec<Action> {
+        if iteration != self.iteration {
+            return vec![];
+        }
+        self.downstream_ready = true;
+        if self.phase == Phase::WaitingDownstream {
+            self.send_can_take()
+        } else {
+            vec![]
+        }
+    }
+
+    fn send_can_take(&mut self) -> Vec<Action> {
+        self.phase = Phase::Ready;
+        vec![Action::SendCanTake, Action::StartIteration(self.iteration + 1)]
+    }
+
+    /// New iteration's first microbatch observed: back to Training.
+    pub fn on_training_start(&mut self) {
+        self.phase = Phase::Training;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn relay(peers: usize, last: bool) -> AggregationFsm {
+        AggregationFsm::new(NodeId(1), Some(0), peers, last)
+    }
+
+    #[test]
+    fn begin_triggers_flood_and_broadcast() {
+        let mut f = relay(2, false);
+        let acts = f.on_begin_aggregation(1);
+        assert!(acts.contains(&Action::ForwardBegin));
+        assert!(acts.contains(&Action::BroadcastWeights));
+        assert_eq!(f.phase, Phase::Aggregating);
+    }
+
+    #[test]
+    fn duplicate_begin_ignored() {
+        let mut f = relay(2, false);
+        f.on_begin_aggregation(1);
+        assert!(f.on_begin_aggregation(1).is_empty());
+    }
+
+    #[test]
+    fn waits_for_all_peer_weights() {
+        let mut f = relay(2, false);
+        f.on_begin_aggregation(1);
+        assert!(f.on_weights(1).is_empty());
+        let acts = f.on_weights(1);
+        // finished exchange but downstream not ready and not last stage
+        assert!(acts.is_empty());
+        assert_eq!(f.phase, Phase::WaitingDownstream);
+    }
+
+    #[test]
+    fn last_stage_sends_can_take_without_waiting() {
+        let mut f = relay(1, true);
+        f.on_begin_aggregation(3);
+        let acts = f.on_weights(3);
+        assert!(acts.contains(&Action::SendCanTake));
+        assert!(acts.contains(&Action::StartIteration(4)));
+        assert_eq!(f.phase, Phase::Ready);
+    }
+
+    #[test]
+    fn can_take_unblocks_waiting_node() {
+        let mut f = relay(1, false);
+        f.on_begin_aggregation(1);
+        f.on_weights(1);
+        assert_eq!(f.phase, Phase::WaitingDownstream);
+        let acts = f.on_can_take(1);
+        assert!(acts.contains(&Action::SendCanTake));
+        assert_eq!(f.phase, Phase::Ready);
+    }
+
+    #[test]
+    fn can_take_before_exchange_finishes_is_remembered() {
+        let mut f = relay(1, false);
+        f.on_begin_aggregation(2);
+        assert!(f.on_can_take(2).is_empty()); // arrives early
+        let acts = f.on_weights(2);
+        assert!(acts.contains(&Action::SendCanTake)); // promptly forwarded
+    }
+
+    #[test]
+    fn lone_node_in_stage_aggregates_instantly() {
+        let mut f = AggregationFsm::new(NodeId(2), Some(1), 0, true);
+        let acts = f.on_begin_aggregation(1);
+        assert!(acts.contains(&Action::SendCanTake));
+    }
+
+    #[test]
+    fn full_cycle_returns_to_training() {
+        let mut f = relay(1, true);
+        f.on_begin_aggregation(1);
+        f.on_weights(1);
+        f.on_training_start();
+        assert_eq!(f.phase, Phase::Training);
+        // next iteration works again
+        let acts = f.on_begin_aggregation(2);
+        assert!(!acts.is_empty());
+    }
+
+    #[test]
+    fn stale_iteration_messages_dropped() {
+        let mut f = relay(1, false);
+        f.on_begin_aggregation(5);
+        assert!(f.on_weights(3).is_empty());
+        assert!(f.on_can_take(4).is_empty());
+    }
+}

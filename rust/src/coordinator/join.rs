@@ -1,0 +1,225 @@
+//! Node-join procedure (paper §V-B "Inserting Joining Nodes").
+//!
+//! The elected leader ranks stages by **utilization** — flows routed
+//! through the stage divided by its total capacity — discovered through a
+//! flooding query that travels stage by stage, each node appending its
+//! (capacity, flows) pair.  Joining candidates announce their capacity;
+//! periodically the leader matches the highest-capacity candidate to the
+//! most-utilized (bottleneck) stage, the second-highest to the second, and
+//! so on — expanding the system bottleneck first (Fig. 3).
+
+use crate::cost::NodeId;
+use crate::flow::graph::FlowProblem;
+
+/// Which placement rule to use (GWTF vs the Fig. 5 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinPolicy {
+    /// GWTF: utilization-ranked stages x capacity-ranked candidates.
+    UtilizationRanked,
+    /// Baseline ("adding highest capacity first", Fig. 5): candidates in
+    /// capacity order, stages round-robin — the baseline orders *which
+    /// node* joins next but has no utilization view to target the
+    /// bottleneck stage (that view is GWTF's SV-B contribution).
+    CapacityFirst,
+    /// Baseline: uniform random placement.
+    Random,
+}
+
+/// Per-stage utilization snapshot assembled by the flooding query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageUtilization {
+    pub stage: usize,
+    pub capacity: usize,
+    pub flows: usize,
+}
+
+impl StageUtilization {
+    /// Utilized ratio (flows / capacity); saturates at capacity 0.
+    pub fn ratio(&self) -> f64 {
+        if self.capacity == 0 {
+            f64::INFINITY
+        } else {
+            self.flows as f64 / self.capacity as f64
+        }
+    }
+}
+
+/// Simulate the §V-B flooding query: walk the stages front-to-back,
+/// accumulating (capacity, flows) per stage.  `flows_through[s]` is the
+/// number of flow units currently routed through stage `s`.
+pub fn utilization_query(prob: &FlowProblem, flows_through: &[usize]) -> Vec<StageUtilization> {
+    (0..prob.graph.n_stages())
+        .map(|s| StageUtilization {
+            stage: s,
+            capacity: prob.stage_capacity(s),
+            flows: flows_through.get(s).copied().unwrap_or(0),
+        })
+        .collect()
+}
+
+/// The leader: collects join candidates, runs the placement rule.
+#[derive(Debug, Clone)]
+pub struct Leader {
+    pub id: NodeId,
+    pub policy: JoinPolicy,
+    /// (candidate, announced capacity) waiting for placement.
+    pub candidates: Vec<(NodeId, usize)>,
+}
+
+impl Leader {
+    pub fn new(id: NodeId, policy: JoinPolicy) -> Self {
+        Leader { id, policy, candidates: Vec::new() }
+    }
+
+    /// A candidate's JoinRequest arrived.
+    pub fn on_join_request(&mut self, candidate: NodeId, capacity: usize) {
+        if !self.candidates.iter().any(|&(c, _)| c == candidate) {
+            self.candidates.push((candidate, capacity));
+        }
+    }
+
+    /// Periodic placement round: assign all pending candidates to stages.
+    /// Returns (candidate, stage) assignments in placement order.
+    pub fn place(
+        &mut self,
+        utilization: &[StageUtilization],
+        rng: &mut crate::util::Rng,
+    ) -> Vec<(NodeId, usize)> {
+        if self.candidates.is_empty() || utilization.is_empty() {
+            return Vec::new();
+        }
+        let mut cands = std::mem::take(&mut self.candidates);
+        let mut out = Vec::new();
+        match self.policy {
+            JoinPolicy::UtilizationRanked => {
+                // highest capacity -> most utilized stage, 2nd -> 2nd, ...
+                // At most one candidate per stage per placement round: the
+                // leader runs *periodically* (SV-B), refreshing the
+                // utilization snapshot between rounds, so surplus
+                // candidates wait rather than landing on stale rankings.
+                cands.sort_by(|a, b| b.1.cmp(&a.1));
+                let mut stages: Vec<&StageUtilization> = utilization.iter().collect();
+                stages.sort_by(|a, b| b.ratio().partial_cmp(&a.ratio()).unwrap());
+                let round = stages.len().min(cands.len());
+                for (i, (cand, _cap)) in cands.drain(..round).enumerate() {
+                    out.push((cand, stages[i].stage));
+                }
+                self.candidates = cands; // remainder waits for the next round
+            }
+            JoinPolicy::CapacityFirst => {
+                cands.sort_by(|a, b| b.1.cmp(&a.1));
+                for (i, (cand, _cap)) in cands.iter().enumerate() {
+                    out.push((*cand, utilization[i % utilization.len()].stage));
+                }
+            }
+            JoinPolicy::Random => {
+                for (cand, _cap) in cands.iter() {
+                    out.push((*cand, rng.index(utilization.len())));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::graph::{random_problem};
+    use crate::util::Rng;
+
+    fn prob() -> FlowProblem {
+        let mut rng = Rng::new(0);
+        random_problem(1, 12, 4, (1.0, 3.0), (1.0, 20.0), &mut rng)
+    }
+
+    #[test]
+    fn utilization_ratio() {
+        let u = StageUtilization { stage: 0, capacity: 4, flows: 3 };
+        assert!((u.ratio() - 0.75).abs() < 1e-12);
+        let z = StageUtilization { stage: 0, capacity: 0, flows: 1 };
+        assert!(z.ratio().is_infinite());
+    }
+
+    #[test]
+    fn query_covers_all_stages() {
+        let p = prob();
+        let q = utilization_query(&p, &[1, 2, 3, 4]);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q[2].flows, 3);
+        assert_eq!(q[2].capacity, p.stage_capacity(2));
+    }
+
+    #[test]
+    fn utilization_ranked_pairs_best_to_worst() {
+        let mut leader = Leader::new(NodeId(0), JoinPolicy::UtilizationRanked);
+        leader.on_join_request(NodeId(100), 5);
+        leader.on_join_request(NodeId(101), 20);
+        leader.on_join_request(NodeId(102), 1);
+        let util = vec![
+            StageUtilization { stage: 0, capacity: 10, flows: 2 },  // 0.2
+            StageUtilization { stage: 1, capacity: 10, flows: 9 },  // 0.9  <- hottest
+            StageUtilization { stage: 2, capacity: 10, flows: 5 },  // 0.5
+        ];
+        let mut rng = Rng::new(0);
+        let placed = leader.place(&util, &mut rng);
+        // capacity 20 -> stage 1 (hottest), 5 -> stage 2, 1 -> stage 0
+        assert_eq!(placed, vec![(NodeId(101), 1), (NodeId(100), 2), (NodeId(102), 0)]);
+        assert!(leader.candidates.is_empty());
+    }
+
+    #[test]
+    fn duplicate_join_requests_ignored() {
+        let mut leader = Leader::new(NodeId(0), JoinPolicy::UtilizationRanked);
+        leader.on_join_request(NodeId(5), 3);
+        leader.on_join_request(NodeId(5), 3);
+        assert_eq!(leader.candidates.len(), 1);
+    }
+
+    #[test]
+    fn capacity_first_is_stage_blind_round_robin() {
+        let mut leader = Leader::new(NodeId(0), JoinPolicy::CapacityFirst);
+        leader.on_join_request(NodeId(100), 9);
+        leader.on_join_request(NodeId(101), 20);
+        let util = vec![
+            StageUtilization { stage: 0, capacity: 4, flows: 4 },
+            StageUtilization { stage: 1, capacity: 2, flows: 0 },
+        ];
+        let mut rng = Rng::new(0);
+        let placed = leader.place(&util, &mut rng);
+        // capacity order decides WHO joins first; stages cycle in order
+        assert_eq!(placed, vec![(NodeId(101), 0), (NodeId(100), 1)]);
+    }
+
+    #[test]
+    fn random_policy_places_everything() {
+        let mut leader = Leader::new(NodeId(0), JoinPolicy::Random);
+        for i in 0..10 {
+            leader.on_join_request(NodeId(100 + i), i);
+        }
+        let util = utilization_query(&prob(), &[0; 4]);
+        let mut rng = Rng::new(1);
+        let placed = leader.place(&util, &mut rng);
+        assert_eq!(placed.len(), 10);
+        for (_, s) in placed {
+            assert!(s < 4);
+        }
+    }
+
+    #[test]
+    fn fig3_bottleneck_expansion() {
+        // Paper Fig. 3: stages with capacity 2,3,4; a joining node of
+        // capacity 5 goes to stage 0 (cap 2, fully utilized), making stage 1
+        // the new bottleneck.
+        let mut leader = Leader::new(NodeId(0), JoinPolicy::UtilizationRanked);
+        leader.on_join_request(NodeId(50), 5);
+        let util = vec![
+            StageUtilization { stage: 0, capacity: 2, flows: 2 },
+            StageUtilization { stage: 1, capacity: 3, flows: 2 },
+            StageUtilization { stage: 2, capacity: 4, flows: 2 },
+        ];
+        let mut rng = Rng::new(0);
+        let placed = leader.place(&util, &mut rng);
+        assert_eq!(placed, vec![(NodeId(50), 0)]);
+    }
+}

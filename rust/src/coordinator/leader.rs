@@ -1,0 +1,75 @@
+//! Leader election among data nodes (paper §IV: "An elected leader from
+//! the data nodes periodically adds new nodes...  the leader can be
+//! elected in a robust way [Garcia-Molina 82; Raft]").
+//!
+//! We implement the bully algorithm over the data-node set: the live data
+//! node with the highest id wins; any node detecting leader failure
+//! triggers re-election.  The elected identity is published in the DHT
+//! under [`crate::net::dht::LEADER_KEY`] so joiners can find it.
+
+use crate::cost::NodeId;
+
+/// Bully election state over a fixed candidate set.
+#[derive(Debug, Clone)]
+pub struct Election {
+    pub candidates: Vec<NodeId>,
+    pub leader: Option<NodeId>,
+}
+
+impl Election {
+    pub fn new(candidates: Vec<NodeId>) -> Self {
+        Election { candidates, leader: None }
+    }
+
+    /// Run an election given current liveness; returns the winner.
+    /// Deterministic: highest-id live candidate (bully rule).
+    pub fn elect(&mut self, alive: impl Fn(NodeId) -> bool) -> Option<NodeId> {
+        self.leader = self.candidates.iter().copied().filter(|&c| alive(c)).max_by_key(|c| c.0);
+        self.leader
+    }
+
+    /// Called when the current leader is detected dead.
+    pub fn on_leader_failure(&mut self, alive: impl Fn(NodeId) -> bool) -> Option<NodeId> {
+        let old = self.leader;
+        let new = self.elect(|c| alive(c) && Some(c) != old);
+        self.leader = new;
+        new
+    }
+
+    pub fn is_leader(&self, n: NodeId) -> bool {
+        self.leader == Some(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn highest_id_wins() {
+        let mut e = Election::new(vec![NodeId(0), NodeId(3), NodeId(7)]);
+        assert_eq!(e.elect(|_| true), Some(NodeId(7)));
+        assert!(e.is_leader(NodeId(7)));
+    }
+
+    #[test]
+    fn dead_candidates_skipped() {
+        let mut e = Election::new(vec![NodeId(0), NodeId(3), NodeId(7)]);
+        assert_eq!(e.elect(|c| c.0 != 7), Some(NodeId(3)));
+    }
+
+    #[test]
+    fn reelection_after_failure() {
+        let mut e = Election::new(vec![NodeId(0), NodeId(3), NodeId(7)]);
+        e.elect(|_| true);
+        let new = e.on_leader_failure(|_| true);
+        assert_eq!(new, Some(NodeId(3)));
+    }
+
+    #[test]
+    fn no_live_candidates() {
+        let mut e = Election::new(vec![NodeId(1)]);
+        assert_eq!(e.elect(|_| false), None);
+        assert!(!e.is_leader(NodeId(1)));
+    }
+}

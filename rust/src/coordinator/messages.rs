@@ -1,0 +1,112 @@
+//! GWTF wire protocol (paper §V).
+//!
+//! Every coordination interaction in the paper maps to one variant here.
+//! The protocol-level tests drive [`crate::coordinator::node`] state
+//! machines by exchanging these messages over a simulated bus.
+
+use crate::cost::NodeId;
+
+/// Unique identifier of one microbatch flow.
+pub type FlowId = u64;
+
+/// Batch identifier (iteration-scoped).
+pub type BatchId = u64;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    // --- §V-C flow construction ---
+    /// Ask `to` to pair our capacity with its unpaired outflow towards
+    /// `sink` at the advertised `cost_to_sink`.
+    RequestFlow { flow: FlowId, sink: NodeId, cost_to_sink: f64 },
+    /// Approve a RequestFlow: the requester becomes our upstream peer.
+    ApproveFlow { flow: FlowId },
+    /// Reject, reporting our actual current cost to that sink (infinite if
+    /// we have no unpaired outflow towards it).
+    RejectFlow { flow: FlowId, actual_cost: f64 },
+    /// Broadcast (to previous stages) of our new cost to `sink`.
+    AdvertiseCost { sink: NodeId, cost_to_sink: f64 },
+
+    // --- §V-C refinement ---
+    /// Propose swapping next-stage peers for two flows to the same sink.
+    RequestChange { flow_a: FlowId, flow_b: FlowId, new_cost: f64 },
+    AcceptChange { flow_a: FlowId, flow_b: FlowId },
+    /// A spare node proposes replacing `victim` on `flow`.
+    RequestRedirect { flow: FlowId, victim: NodeId, new_cost: f64 },
+    AcceptRedirect { flow: FlowId },
+
+    // --- §V-D crash tolerance ---
+    /// Batch finished downstream; allows upstream latency estimation.
+    Complete { batch: BatchId },
+    /// No capacity / no alternate peer: upstream must redistribute.
+    Deny { batch: BatchId },
+    /// Liveness probe along a microbatch path.
+    Ping { batch: BatchId },
+    Pong { batch: BatchId },
+    /// Forward activations to a replacement node after a crash.
+    ForwardActivation { batch: BatchId, stage: usize },
+    /// Resume a backward pass from a stored gradient.
+    ResumeBackward { batch: BatchId, stage: usize },
+
+    // --- §V-E aggregation synchronization ---
+    BeginAggregation { iteration: u64 },
+    /// Stage-internal weight exchange payload marker.
+    ShareWeights { iteration: u64, stage: usize },
+    /// Downstream finished aggregating; ready for new microbatches.
+    CanTake { iteration: u64 },
+
+    // --- §V-B joining ---
+    /// Candidate announces its capacity to the leader.
+    JoinRequest { capacity: usize },
+    /// Leader assigns the candidate to a stage.
+    AssignStage { stage: usize },
+    /// Leader's flooding query for stage utilization; each stage appends
+    /// (capacity, flows) and forwards.
+    UtilizationQuery { acc: Vec<(usize, usize)> },
+    UtilizationReply { acc: Vec<(usize, usize)> },
+
+    // --- leader election (bully) ---
+    Election { candidate: NodeId },
+    Coordinator { leader: NodeId },
+}
+
+/// An addressed message in flight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub msg: Message,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_roundtrip() {
+        let e = Envelope {
+            from: NodeId(1),
+            to: NodeId(2),
+            msg: Message::RequestFlow { flow: 7, sink: NodeId(0), cost_to_sink: 3.5 },
+        };
+        assert_eq!(e.from, NodeId(1));
+        match &e.msg {
+            Message::RequestFlow { flow, sink, cost_to_sink } => {
+                assert_eq!(*flow, 7);
+                assert_eq!(*sink, NodeId(0));
+                assert!((cost_to_sink - 3.5).abs() < 1e-12);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn utilization_query_accumulates() {
+        let mut acc = vec![(10usize, 5usize)];
+        acc.push((8, 8));
+        let m = Message::UtilizationQuery { acc: acc.clone() };
+        if let Message::UtilizationQuery { acc } = m {
+            assert_eq!(acc.len(), 2);
+            assert_eq!(acc[1], (8, 8));
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The GWTF coordinator: the paper's system contribution as node logic.
+//!
+//! - [`messages`] — the full wire protocol (§V): Request Flow / Change /
+//!   Redirect, COMPLETE / DENY, ping-based path repair, BEGIN AGGREGATION
+//!   / CAN TAKE, join handshake.
+//! - [`leader`]  — bully-style leader election among the data nodes.
+//! - [`join`]    — §V-B: stage-utilization ranking (flooding query) and
+//!   capacity-ranked candidate placement.
+//! - [`aggregation`] — §V-E: training/aggregation synchronization.
+//! - [`recovery`] — §V-D: ping-sweep path repair planning.
+//! - [`node`]    — a message-driven GWTF node state machine tying the
+//!   pieces together (used by the protocol-level tests).
+//! - [`router`]  — the [`crate::sim::Router`] implementation backed by the
+//!   decentralized flow optimizer; this is what the experiment harness
+//!   plugs into the training simulator.
+
+pub mod aggregation;
+pub mod join;
+pub mod leader;
+pub mod messages;
+pub mod node;
+pub mod recovery;
+pub mod router;
+
+pub use join::{JoinPolicy, Leader};
+pub use recovery::{plan_repair, RepairPlan, Replacement};
+pub use router::GwtfRouter;

@@ -1,0 +1,261 @@
+//! Crash-recovery protocol (paper §V-D "Tolerating Crashes").
+//!
+//! Forward-pass crashes: the upstream node times out on the missing
+//! COMPLETE, re-sends its stored activation to an alternate next-stage
+//! peer (chosen by the flow rule), or DENYs upstream when none exists.
+//!
+//! Backward-pass crashes: the data node pings the nodes along the
+//! microbatch's recorded path; at the first ping failure, the last alive
+//! node forwards its stored activation to a replacement, which recomputes
+//! that stage's forward and resumes the backward pass from the stored
+//! gradient — "far cheaper than rebuilding the pipeline from scratch".
+//!
+//! This module implements the *path-level* repair planning shared by the
+//! simulator and the protocol tests: given a recorded path, the liveness
+//! view and per-node spare capacity, compute the ping sequence, the repair
+//! plan (which nodes replace which), and its cost in recomputed forwards.
+
+use crate::cost::NodeId;
+use crate::flow::graph::{FlowPath, StageGraph};
+
+/// Replacement of one crashed relay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Replacement {
+    pub stage: usize,
+    pub dead: NodeId,
+    pub replacement: NodeId,
+    /// Node holding the stored activation the replacement recomputes from
+    /// (the last alive node before the crash, or the data node).
+    pub activation_source: NodeId,
+}
+
+/// Outcome of planning a backward-pass repair.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RepairPlan {
+    /// Path intact: no crash found by the ping sweep.
+    Intact,
+    /// Repaired: the fixed path plus the individual replacements.
+    Repaired { path: FlowPath, replacements: Vec<Replacement>, pings: usize },
+    /// No spare node in some crashed stage: the microbatch must be
+    /// deferred (DENY reaches the source).
+    Unrecoverable { failed_stage: usize, pings: usize },
+}
+
+impl RepairPlan {
+    /// Number of stage forwards the plan recomputes (the repair's cost,
+    /// vs. `path.relays.len()` for a SWARM-style full restart).
+    pub fn recomputed_forwards(&self) -> usize {
+        match self {
+            RepairPlan::Repaired { replacements, .. } => replacements.len(),
+            _ => 0,
+        }
+    }
+}
+
+/// Plan a §V-D backward-pass repair.
+///
+/// `alive(n)` is the liveness oracle (a ping); `spare(n)` tells whether a
+/// candidate has a free slot; `cost(i, j)` ranks replacement candidates by
+/// `d(prev, m) + d(m, next)` exactly like the flow algorithm.
+pub fn plan_repair(
+    path: &FlowPath,
+    graph: &StageGraph,
+    alive: impl Fn(NodeId) -> bool,
+    spare: impl Fn(NodeId) -> bool,
+    cost: impl Fn(NodeId, NodeId) -> f64,
+) -> RepairPlan {
+    let mut pings = 0;
+    let mut dead_stages: Vec<usize> = Vec::new();
+    // The data node "pings the first node on the microbatch path. Nodes
+    // ping downstream peers along this path" — one sweep front to back.
+    for (s, &r) in path.relays.iter().enumerate() {
+        pings += 1;
+        if !alive(r) {
+            dead_stages.push(s);
+        }
+    }
+    if dead_stages.is_empty() {
+        return RepairPlan::Intact;
+    }
+
+    let mut new_path = path.clone();
+    let mut replacements = Vec::new();
+    for &s in &dead_stages {
+        // last alive node before the crash (walk back over other dead stages)
+        let activation_source = (0..s)
+            .rev()
+            .map(|p| new_path.relays[p])
+            .find(|&n| alive(n))
+            .unwrap_or(path.source);
+        let prev = activation_source;
+        let next = (s + 1..path.relays.len())
+            .map(|p| new_path.relays[p])
+            .find(|&n| alive(n))
+            .unwrap_or(path.source);
+        let candidates: Vec<NodeId> = graph.stages[s]
+            .iter()
+            .filter(|&&m| m != path.relays[s] && alive(m) && spare(m))
+            .copied()
+            .collect();
+        let best = candidates.iter().min_by(|&&a, &&b| {
+            let ca = cost(prev, a) + cost(a, next);
+            let cb = cost(prev, b) + cost(b, next);
+            ca.partial_cmp(&cb).unwrap()
+        });
+        match best {
+            Some(&m) => {
+                replacements.push(Replacement {
+                    stage: s,
+                    dead: new_path.relays[s],
+                    replacement: m,
+                    activation_source,
+                });
+                new_path.relays[s] = m;
+            }
+            None => return RepairPlan::Unrecoverable { failed_stage: s, pings },
+        }
+    }
+    RepairPlan::Repaired { path: new_path, replacements, pings }
+}
+
+/// Compare the §V-D repair cost against SWARM's full-restart cost for the
+/// same crash (in recomputed stage-forward units) — the quantity behind
+/// Table II's "wasted GPU time" gap.
+pub fn repair_vs_restart_cost(plan: &RepairPlan, n_stages: usize) -> (usize, usize) {
+    let repair = plan.recomputed_forwards();
+    // A restart recomputes every stage forward (and re-sends from scratch).
+    let restart = match plan {
+        RepairPlan::Intact => 0,
+        _ => n_stages,
+    };
+    (repair, restart)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// stages: {1,2}, {3,4}, {5,6}; data node 0.
+    fn graph() -> StageGraph {
+        StageGraph {
+            stages: vec![
+                vec![NodeId(1), NodeId(2)],
+                vec![NodeId(3), NodeId(4)],
+                vec![NodeId(5), NodeId(6)],
+            ],
+            data_nodes: vec![NodeId(0)],
+        }
+    }
+
+    fn path() -> FlowPath {
+        FlowPath { source: NodeId(0), relays: vec![NodeId(1), NodeId(3), NodeId(5)] }
+    }
+
+    fn unit_cost(_i: NodeId, _j: NodeId) -> f64 {
+        1.0
+    }
+
+    #[test]
+    fn intact_path_needs_nothing() {
+        let plan = plan_repair(&path(), &graph(), |_| true, |_| true, unit_cost);
+        assert_eq!(plan, RepairPlan::Intact);
+        assert_eq!(plan.recomputed_forwards(), 0);
+    }
+
+    #[test]
+    fn single_crash_repaired_in_place() {
+        let plan = plan_repair(&path(), &graph(), |n| n != NodeId(3), |_| true, unit_cost);
+        match &plan {
+            RepairPlan::Repaired { path: p, replacements, pings } => {
+                assert_eq!(p.relays, vec![NodeId(1), NodeId(4), NodeId(5)]);
+                assert_eq!(replacements.len(), 1);
+                assert_eq!(replacements[0].dead, NodeId(3));
+                assert_eq!(replacements[0].replacement, NodeId(4));
+                // activation comes from the last alive node before the crash
+                assert_eq!(replacements[0].activation_source, NodeId(1));
+                assert_eq!(*pings, 3);
+            }
+            p => panic!("expected repair, got {p:?}"),
+        }
+        assert_eq!(plan.recomputed_forwards(), 1);
+    }
+
+    #[test]
+    fn first_stage_crash_pulls_activation_from_data_node() {
+        let plan = plan_repair(&path(), &graph(), |n| n != NodeId(1), |_| true, unit_cost);
+        match plan {
+            RepairPlan::Repaired { replacements, .. } => {
+                assert_eq!(replacements[0].activation_source, NodeId(0));
+                assert_eq!(replacements[0].replacement, NodeId(2));
+            }
+            p => panic!("expected repair, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn consecutive_crashes_chain_through_survivors() {
+        // relays 3 and 5 both dead: stage-1 repair reads its activation
+        // from node 1; stage-2 repair reads from the *new* stage-1 node.
+        let dead = [NodeId(3), NodeId(5)];
+        let plan =
+            plan_repair(&path(), &graph(), |n| !dead.contains(&n), |_| true, unit_cost);
+        match plan {
+            RepairPlan::Repaired { path: p, replacements, .. } => {
+                assert_eq!(p.relays, vec![NodeId(1), NodeId(4), NodeId(6)]);
+                assert_eq!(replacements.len(), 2);
+                assert_eq!(replacements[1].activation_source, NodeId(4));
+            }
+            p => panic!("expected repair, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn whole_stage_dead_is_unrecoverable() {
+        let dead = [NodeId(3), NodeId(4)];
+        let plan =
+            plan_repair(&path(), &graph(), |n| !dead.contains(&n), |_| true, unit_cost);
+        assert!(matches!(plan, RepairPlan::Unrecoverable { failed_stage: 1, .. }));
+    }
+
+    #[test]
+    fn no_spare_capacity_is_unrecoverable() {
+        let plan = plan_repair(&path(), &graph(), |n| n != NodeId(3), |_| false, unit_cost);
+        assert!(matches!(plan, RepairPlan::Unrecoverable { failed_stage: 1, .. }));
+    }
+
+    #[test]
+    fn replacement_ranked_by_flow_rule() {
+        // make node 6 much closer than node 5's default replacement choice
+        let g = StageGraph {
+            stages: vec![
+                vec![NodeId(1)],
+                vec![NodeId(3), NodeId(4)],
+                vec![NodeId(5), NodeId(6)],
+            ],
+            data_nodes: vec![NodeId(0)],
+        };
+        let p = FlowPath { source: NodeId(0), relays: vec![NodeId(1), NodeId(3), NodeId(5)] };
+        let cost = |i: NodeId, j: NodeId| {
+            if i == NodeId(4) || j == NodeId(4) {
+                10.0 // node 4 is far from everything
+            } else {
+                1.0
+            }
+        };
+        let plan = plan_repair(&p, &g, |n| n != NodeId(3), |_| true, cost);
+        match plan {
+            RepairPlan::Repaired { replacements, .. } => {
+                // stage 1 has only node 4 as a candidate — forced pick
+                assert_eq!(replacements[0].replacement, NodeId(4));
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn repair_is_cheaper_than_restart() {
+        let plan = plan_repair(&path(), &graph(), |n| n != NodeId(3), |_| true, unit_cost);
+        let (repair, restart) = repair_vs_restart_cost(&plan, 3);
+        assert_eq!((repair, restart), (1, 3));
+    }
+}

@@ -1,0 +1,231 @@
+//! GWTF's routing policy for the training simulator.
+//!
+//! Wraps the decentralized flow optimizer (§V-A/§V-C): at iteration start
+//! it (re)builds flows over the currently-alive membership, and during the
+//! iteration it serves crash-recovery replacement queries with the same
+//! min `d(prev,m) + d(m,next)` rule the flow algorithm uses (§V-D).
+//!
+//! Planning cost: the flow algorithm exchanges only small control
+//! messages and "converges ... significantly faster than a training
+//! iteration" while running *in parallel* with training (§V-C), so only
+//! the first plan (cold start) is charged wall-time; replans after churn
+//! overlap training and cost nothing in the simulated makespan.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::cost::NodeId;
+use crate::flow::decentralized::{DecentralizedFlow, FlowParams};
+use crate::flow::graph::{FlowPath, FlowProblem, StageGraph};
+use crate::sim::training::{RecoveryPolicy, Router};
+use crate::sim::scenario::Scenario;
+
+/// Cost closure shared by router and rebuilt problems.
+pub type CostFn = Arc<dyn Fn(NodeId, NodeId) -> f64 + Send + Sync>;
+
+pub struct GwtfRouter {
+    pub graph: StageGraph,
+    pub cap: Vec<usize>,
+    pub demand: Vec<usize>,
+    pub cost: CostFn,
+    pub params: FlowParams,
+    /// Max protocol rounds per (re)plan and the control RTT charged per
+    /// round on the cold-start plan.
+    pub max_rounds: usize,
+    pub round_ctrl_s: f64,
+    seed: u64,
+    plans: u64,
+    dead: HashSet<NodeId>,
+    /// Rounds used by the most recent plan (diagnostics / Fig. 7).
+    pub last_rounds: usize,
+    pub last_cost: f64,
+}
+
+impl GwtfRouter {
+    pub fn new(
+        graph: StageGraph,
+        cap: Vec<usize>,
+        demand: Vec<usize>,
+        cost: CostFn,
+        params: FlowParams,
+        seed: u64,
+    ) -> Self {
+        GwtfRouter {
+            graph,
+            cap,
+            demand,
+            cost,
+            params,
+            max_rounds: 120,
+            round_ctrl_s: 0.05,
+            seed,
+            plans: 0,
+            dead: HashSet::new(),
+            last_rounds: 0,
+            last_cost: f64::NAN,
+        }
+    }
+
+    /// Build from a scenario (shares its Eq. 1 cost closure).
+    pub fn from_scenario(sc: &Scenario, params: FlowParams, seed: u64) -> Self {
+        let topo = sc.topo.clone();
+        let payload = sc.sim_cfg.payload_bytes;
+        let cost: CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
+        GwtfRouter::new(
+            sc.prob.graph.clone(),
+            sc.prob.cap.clone(),
+            sc.prob.demand.clone(),
+            cost,
+            params,
+            seed,
+        )
+    }
+
+    fn problem_with_liveness(&self, alive: &[bool]) -> FlowProblem {
+        let mut cap = self.cap.clone();
+        for (i, c) in cap.iter_mut().enumerate() {
+            if !alive.get(i).copied().unwrap_or(true) || self.dead.contains(&NodeId(i)) {
+                *c = 0;
+            }
+        }
+        let cost = Arc::clone(&self.cost);
+        FlowProblem {
+            graph: self.graph.clone(),
+            cap,
+            demand: self.demand.clone(),
+            cost: Box::new(move |i, j| (cost)(i, j)),
+        }
+    }
+}
+
+impl Router for GwtfRouter {
+    fn name(&self) -> String {
+        "gwtf".into()
+    }
+
+    fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
+        self.dead.clear();
+        let prob = self.problem_with_liveness(alive);
+        let mut flow = DecentralizedFlow::new(&prob, self.params.clone(), self.seed ^ self.plans);
+        let stats = flow.run(self.max_rounds, 8);
+        self.last_rounds = stats.len();
+        self.last_cost = flow.total_cost();
+        self.plans += 1;
+        // Cold-start plan is charged; later replans overlap training.
+        let planning_s = if self.plans == 1 {
+            stats.len() as f64 * self.round_ctrl_s
+        } else {
+            0.0
+        };
+        (flow.established_paths(), planning_s)
+    }
+
+    fn on_crash(&mut self, node: NodeId) {
+        self.dead.insert(node);
+    }
+
+    fn choose_replacement(
+        &mut self,
+        prev: NodeId,
+        next: NodeId,
+        _stage: usize,
+        _sink: NodeId,
+        candidates: &[NodeId],
+    ) -> Option<NodeId> {
+        candidates
+            .iter()
+            .filter(|&&m| !self.dead.contains(&m))
+            .min_by(|&&a, &&b| {
+                let ca = (self.cost)(prev, a) + (self.cost)(a, next);
+                let cb = (self.cost)(prev, b) + (self.cost)(b, next);
+                ca.partial_cmp(&cb).unwrap()
+            })
+            .copied()
+    }
+
+    fn recovery(&self) -> RecoveryPolicy {
+        RecoveryPolicy::RepairPath
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::scenario::{build, ScenarioConfig};
+
+    fn router() -> (GwtfRouter, usize) {
+        let sc = build(&ScenarioConfig::table2(true, 0.0, 5));
+        let n = sc.topo.n();
+        (GwtfRouter::from_scenario(&sc, FlowParams::default(), 5), n)
+    }
+
+    #[test]
+    fn plans_full_demand_when_everyone_alive() {
+        let (mut r, n) = router();
+        let alive = vec![true; n];
+        let (paths, planning) = r.plan(&alive);
+        assert_eq!(paths.len(), 8, "2 data nodes x 4 microbatches");
+        assert!(planning > 0.0, "cold start charged");
+        let (_paths2, planning2) = r.plan(&alive);
+        assert_eq!(planning2, 0.0, "replan overlaps training");
+    }
+
+    #[test]
+    fn dead_nodes_excluded_from_plan() {
+        let (mut r, n) = router();
+        let mut alive = vec![true; n];
+        // Kill one entire stage except one node: flows must use the survivor.
+        let stage0 = r.graph.stages[0].clone();
+        for &m in &stage0[1..] {
+            alive[m.0] = false;
+        }
+        let (paths, _) = r.plan(&alive);
+        for p in &paths {
+            assert_eq!(p.relays[0], stage0[0]);
+        }
+    }
+
+    #[test]
+    fn replacement_prefers_cheapest() {
+        let (mut r, n) = router();
+        let alive = vec![true; n];
+        r.plan(&alive);
+        let stage1 = r.graph.stages[1].clone();
+        let prev = r.graph.stages[0][0];
+        let next = r.graph.stages[2][0];
+        let pick = r.choose_replacement(prev, next, 1, r.graph.data_nodes[0], &stage1).unwrap();
+        let best = stage1
+            .iter()
+            .min_by(|&&a, &&b| {
+                let ca = (r.cost)(prev, a) + (r.cost)(a, next);
+                let cb = (r.cost)(prev, b) + (r.cost)(b, next);
+                ca.partial_cmp(&cb).unwrap()
+            })
+            .copied()
+            .unwrap();
+        assert_eq!(pick, best);
+    }
+
+    #[test]
+    fn crashed_node_never_chosen() {
+        let (mut r, n) = router();
+        let alive = vec![true; n];
+        r.plan(&alive);
+        let stage1 = r.graph.stages[1].clone();
+        r.on_crash(stage1[0]);
+        let pick = r.choose_replacement(
+            r.graph.stages[0][0],
+            r.graph.stages[2][0],
+            1,
+            r.graph.data_nodes[0],
+            &stage1,
+        );
+        assert_ne!(pick, Some(stage1[0]));
+    }
+
+    #[test]
+    fn recovery_policy_is_repair() {
+        let (r, _) = router();
+        assert_eq!(r.recovery(), RecoveryPolicy::RepairPath);
+    }
+}

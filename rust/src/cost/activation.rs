@@ -1,0 +1,68 @@
+//! Activation payload sizing per model family.
+//!
+//! The paper's Node-Crashes experiments shrink bandwidth by 32x to mimic
+//! activations 32x larger than its reduced models actually emit; we model
+//! that directly as an `inflation` factor on the payload.  GPT-like models
+//! carry a higher activation-communication overhead than LLaMA-like ones
+//! (paper §VI observes >2x faster homogeneous iterations for GPT because
+//! of this difference in the compute/comm ratio).
+
+/// Bytes shipped between consecutive stages per microbatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActivationProfile {
+    /// Microbatch size (sequences).
+    pub microbatch: usize,
+    /// Sequence length (tokens).
+    pub seq_len: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Bytes per element (4 = f32).
+    pub elem_bytes: usize,
+    /// Simulated payload inflation (the paper's "bandwidth reduced by a
+    /// factor 32, mimicking activations 32 times larger").
+    pub inflation: f64,
+}
+
+impl ActivationProfile {
+    /// The paper's LLaMA-like setting: microbatch 4, seq 512, d_model 1024.
+    pub fn paper_llama() -> Self {
+        ActivationProfile { microbatch: 4, seq_len: 512, d_model: 1024, elem_bytes: 4, inflation: 32.0 }
+    }
+
+    /// The paper's GPT-like setting (same dims, but a GPT block also ships
+    /// the residual-stream duplicate in its KV/attn caches in naive
+    /// pipelining — modelled as a 1.5x payload).
+    pub fn paper_gpt() -> Self {
+        ActivationProfile { microbatch: 4, seq_len: 512, d_model: 1024, elem_bytes: 4, inflation: 32.0 * 1.5 }
+    }
+
+    /// Payload of one forward activation (or backward gradient) transfer.
+    pub fn bytes(&self) -> f64 {
+        (self.microbatch * self.seq_len * self.d_model * self.elem_bytes) as f64 * self.inflation
+    }
+
+    /// From a runtime model config (no inflation — real tensors).
+    pub fn from_dims(microbatch: usize, seq_len: usize, d_model: usize) -> Self {
+        ActivationProfile { microbatch, seq_len, d_model, elem_bytes: 4, inflation: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_payloads() {
+        let a = ActivationProfile::paper_llama();
+        // 4 * 512 * 1024 * 4 B = 8 MiB, inflated 32x = 256 MiB
+        assert_eq!(a.bytes(), 4.0 * 512.0 * 1024.0 * 4.0 * 32.0);
+        let g = ActivationProfile::paper_gpt();
+        assert!(g.bytes() > a.bytes());
+    }
+
+    #[test]
+    fn runtime_dims_uninflated() {
+        let a = ActivationProfile::from_dims(4, 128, 256);
+        assert_eq!(a.bytes(), (4 * 128 * 256 * 4) as f64);
+    }
+}

@@ -1,0 +1,149 @@
+//! The paper's cost model (§IV, Eq. 1).
+//!
+//! The cost of exchanging one microbatch between nodes *i* and *j* is
+//!
+//! ```text
+//! d(i,j) = (c_i + c_j)/2 + (λ_ij + λ_ji)/2 + 2·size / (β_ij + β_ji)
+//! ```
+//!
+//! where `c` is per-microbatch computation time, `λ` one-way network
+//! latency, `β` link bandwidth and `size` the activation payload.  Links
+//! are asymmetric (λ_ij ≠ λ_ji in general) but each link is used once per
+//! direction per iteration (forward + backward), so the paper averages the
+//! two directions — Eq. 1 does exactly that.
+
+pub mod activation;
+
+pub use activation::ActivationProfile;
+
+/// Identifier of a node in the system. Dense indices into topology tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Per-node compute/memory profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeProfile {
+    /// Per-microbatch forward-pass computation time, seconds (the paper's `c_i`).
+    pub compute_s: f64,
+    /// Max number of microbatches resident at once (the paper's `cap_i`).
+    pub capacity: usize,
+}
+
+impl NodeProfile {
+    pub fn new(compute_s: f64, capacity: usize) -> Self {
+        NodeProfile { compute_s, capacity }
+    }
+
+    /// Backward passes cost ~2x the forward (standard for transformer training).
+    pub fn backward_s(&self) -> f64 {
+        2.0 * self.compute_s
+    }
+}
+
+/// One directed link's parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkParams {
+    /// One-way latency, seconds (the paper's `λ_ij`).
+    pub latency_s: f64,
+    /// Bandwidth, bytes/second (the paper's `β_ij`).
+    pub bandwidth_bps: f64,
+}
+
+impl LinkParams {
+    pub fn new(latency_s: f64, bandwidth_bps: f64) -> Self {
+        LinkParams { latency_s, bandwidth_bps }
+    }
+
+    /// Time to push `size` bytes one-way over this link (latency + transfer).
+    pub fn one_way_s(&self, size_bytes: f64) -> f64 {
+        self.latency_s + size_bytes / self.bandwidth_bps
+    }
+}
+
+/// Eq. 1: averaged bidirectional microbatch-exchange cost between two nodes.
+///
+/// `size_bytes` is the activation (forward) / gradient (backward) payload.
+pub fn edge_cost(
+    ci: &NodeProfile,
+    cj: &NodeProfile,
+    ij: &LinkParams,
+    ji: &LinkParams,
+    size_bytes: f64,
+) -> f64 {
+    let compute = (ci.compute_s + cj.compute_s) / 2.0;
+    let latency = (ij.latency_s + ji.latency_s) / 2.0;
+    let transfer = 2.0 * size_bytes / (ij.bandwidth_bps + ji.bandwidth_bps);
+    compute + latency + transfer
+}
+
+/// Pure-communication variant of Eq. 1 (used when compute is accounted
+/// separately by the event simulator, to avoid double counting).
+pub fn comm_cost(ij: &LinkParams, ji: &LinkParams, size_bytes: f64) -> f64 {
+    (ij.latency_s + ji.latency_s) / 2.0 + 2.0 * size_bytes / (ij.bandwidth_bps + ji.bandwidth_bps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mbps(m: f64) -> f64 {
+        m * 1e6 / 8.0 // Mb/s -> bytes/s
+    }
+
+    #[test]
+    fn eq1_matches_hand_computation() {
+        // c_i = 1s, c_j = 3s, λ = 0.1/0.3s, β = 100/300 Mb/s, size = 1 MB
+        let ci = NodeProfile::new(1.0, 4);
+        let cj = NodeProfile::new(3.0, 4);
+        let ij = LinkParams::new(0.1, mbps(100.0));
+        let ji = LinkParams::new(0.3, mbps(300.0));
+        let size = 1e6;
+        let expect = (1.0 + 3.0) / 2.0 + (0.1 + 0.3) / 2.0 + 2.0 * size / (mbps(100.0) + mbps(300.0));
+        let got = edge_cost(&ci, &cj, &ij, &ji, size);
+        assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn eq1_symmetric_in_direction() {
+        // Because both directions are averaged, d(i,j) == d(j,i).
+        let ci = NodeProfile::new(1.0, 1);
+        let cj = NodeProfile::new(2.0, 1);
+        let ij = LinkParams::new(0.05, mbps(50.0));
+        let ji = LinkParams::new(0.2, mbps(500.0));
+        let a = edge_cost(&ci, &cj, &ij, &ji, 12345.0);
+        let b = edge_cost(&cj, &ci, &ji, &ij, 12345.0);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bigger_payload_costs_more() {
+        let c = NodeProfile::new(0.0, 1);
+        let l = LinkParams::new(0.0, mbps(100.0));
+        assert!(edge_cost(&c, &c, &l, &l, 2e6) > edge_cost(&c, &c, &l, &l, 1e6));
+    }
+
+    #[test]
+    fn comm_cost_excludes_compute() {
+        let l = LinkParams::new(0.1, mbps(100.0));
+        let c = comm_cost(&l, &l, 0.0);
+        assert!((c - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_way_time() {
+        let l = LinkParams::new(0.01, 1e6);
+        assert!((l.one_way_s(5e5) - 0.51).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backward_is_double_forward() {
+        let p = NodeProfile::new(1.5, 2);
+        assert_eq!(p.backward_s(), 3.0);
+    }
+}

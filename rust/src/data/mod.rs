@@ -1,0 +1,14 @@
+//! Training data substrate.
+//!
+//! The paper's convergence experiment (Fig. 6) trains on the Wikipedia
+//! English dump; that corpus is not available offline, so we substitute a
+//! deterministic synthetic language with the statistical structure an LM
+//! actually learns from text (DESIGN.md §Substitutions): Zipf-distributed
+//! unigrams shaped by an order-2 Markov chain, so both unigram frequency
+//! and local n-gram structure are learnable signals.  Both the GWTF run
+//! and the centralized baseline read the identical token stream, which is
+//! what the Fig. 6 claim needs.
+
+pub mod corpus;
+
+pub use corpus::{BatchIterator, CorpusConfig, SyntheticCorpus, TokenBatch};

@@ -1,0 +1,28 @@
+//! Experiment harness: one module per paper table/figure.
+//!
+//! Every table AND figure in the paper's evaluation (§VI) has a
+//! regeneration entry point here, shared by the `gwtf bench` CLI and the
+//! `rust/benches/*` targets.  Results are written to `bench_results/` as
+//! Markdown + CSV and summarized on stdout.
+//!
+//! | paper | module | harness |
+//! |---|---|---|
+//! | Table II (LLaMA-like, crash-prone) | [`tables`] | `run_table2` |
+//! | Table III (GPT-like, crash-prone) | [`tables`] | `run_table3` |
+//! | Table VI (vs DT-FM optimal schedule) | [`tables`] | `run_table6` |
+//! | Fig. 5 (node addition) | [`figures`] | `run_fig5` |
+//! | Fig. 6 (loss convergence) | [`figures`] | `run_fig6` (needs artifacts) |
+//! | Fig. 7 (flow tests 1–6) | [`figures`] | `run_fig7` |
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{fig5_summary, run_fig5, run_fig6, run_fig7, Fig6Opts};
+pub use tables::{run_table2, run_table3, run_table6, TableOpts};
+
+/// Where reports land (`bench_results/` next to the manifest).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("GWTF_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("bench_results"))
+}

@@ -1,0 +1,248 @@
+//! Tables II, III and VI (paper §VI "Node Crashes" and "Optimality").
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::baselines::{DtfmRouter, GaParams, SwarmRouter};
+use crate::coordinator::GwtfRouter;
+use crate::flow::FlowParams;
+use crate::metrics::MetricsTable;
+use crate::sim::scenario::{build, Family, Scenario, ScenarioConfig};
+use crate::sim::training::{RecoveryPolicy, Router, TrainingSim};
+use crate::util::Rng;
+
+/// Harness options for the table experiments.
+#[derive(Debug, Clone)]
+pub struct TableOpts {
+    /// Independent repetitions per cell (paper: 25).
+    pub reps: usize,
+    /// Training iterations simulated per repetition (each iteration is a
+    /// metric sample; churn state evolves across them).
+    pub iters_per_rep: usize,
+    pub seed: u64,
+    /// Ablation: force GWTF to SWARM-style full-restart recovery.
+    pub gwtf_restart_recovery: bool,
+    /// Ablation: disable simulated annealing in the flow optimizer.
+    pub no_anneal: bool,
+    /// Ablation: sum-cost objective instead of min-max.
+    pub sum_objective: bool,
+}
+
+impl Default for TableOpts {
+    fn default() -> Self {
+        TableOpts {
+            reps: 25,
+            iters_per_rep: 4,
+            seed: 1,
+            gwtf_restart_recovery: false,
+            no_anneal: false,
+            sum_objective: false,
+        }
+    }
+}
+
+impl TableOpts {
+    fn flow_params(&self) -> FlowParams {
+        let mut p = FlowParams::default();
+        if self.no_anneal {
+            p.temperature = 1e-12;
+        }
+        if self.sum_objective {
+            p.minmax_objective = false;
+        }
+        p
+    }
+}
+
+/// GWTF router with an optional recovery-policy override (ablation).
+struct GwtfWithPolicy {
+    inner: GwtfRouter,
+    policy: RecoveryPolicy,
+}
+
+impl Router for GwtfWithPolicy {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+    fn plan(&mut self, alive: &[bool]) -> (Vec<crate::flow::graph::FlowPath>, f64) {
+        self.inner.plan(alive)
+    }
+    fn on_crash(&mut self, node: crate::cost::NodeId) {
+        self.inner.on_crash(node)
+    }
+    fn choose_replacement(
+        &mut self,
+        prev: crate::cost::NodeId,
+        next: crate::cost::NodeId,
+        stage: usize,
+        sink: crate::cost::NodeId,
+        candidates: &[crate::cost::NodeId],
+    ) -> Option<crate::cost::NodeId> {
+        self.inner.choose_replacement(prev, next, stage, sink, candidates)
+    }
+    fn recovery(&self) -> RecoveryPolicy {
+        self.policy
+    }
+}
+
+/// Simulate `iters` iterations of `router` on a fresh copy of `scenario`'s
+/// churn process, pushing each iteration's metrics into `push`.
+fn simulate(
+    sc: &Scenario,
+    router: &mut dyn Router,
+    iters: usize,
+    seed: u64,
+    mut push: impl FnMut(&crate::sim::IterationMetrics),
+) {
+    let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+    let mut churn = sc.churn.clone();
+    let mut rng = Rng::new(seed);
+    for _ in 0..iters {
+        let events = churn.sample_iteration();
+        // plan with the start-of-iteration view: mid-iteration crashes are
+        // in the future and must not inform routing
+        let alive = churn.planning_view(&events);
+        let (paths, planning_s) = router.plan(&alive);
+        let m = sim.run_iteration(&sc.prob, router, &events, &churn, planning_s, paths, &mut rng);
+        push(&m);
+    }
+}
+
+fn gwtf_router(sc: &Scenario, opts: &TableOpts, seed: u64) -> GwtfWithPolicy {
+    let policy = if opts.gwtf_restart_recovery {
+        RecoveryPolicy::RestartPipeline
+    } else {
+        RecoveryPolicy::RepairPath
+    };
+    GwtfWithPolicy { inner: GwtfRouter::from_scenario(sc, opts.flow_params(), seed), policy }
+}
+
+fn swarm_router(sc: &Scenario, seed: u64) -> SwarmRouter {
+    // SWARM wires to the *closest* next-stage node — network proximity
+    // only ("sending to the next stage closest node", SVI) — unlike GWTF's
+    // Eq. 1 cost, it is blind to compute heterogeneity.
+    let topo = sc.topo.clone();
+    let payload = sc.sim_cfg.payload_bytes;
+    let comm: crate::baselines::CostFn = Arc::new(move |i, j| topo.comm(i, j, payload));
+    SwarmRouter::from_problem(&sc.prob, comm, seed)
+}
+
+/// The Table II / Table III grid: {homogeneous, heterogeneous} x
+/// {0%, 10%, 20%} churn, GWTF vs SWARM.
+fn run_crash_table(family: Family, title: &str, opts: &TableOpts) -> Result<MetricsTable> {
+    let mut table = MetricsTable::new(title);
+    for &homogeneous in &[true, false] {
+        for &churn in &[0.0, 0.1, 0.2] {
+            let row = format!(
+                "{} {:.0}%",
+                if homogeneous { "homogeneous" } else { "heterogeneous" },
+                churn * 100.0
+            );
+            for rep in 0..opts.reps {
+                let seed = opts.seed + rep as u64 * 7919;
+                let mut cfg = ScenarioConfig::table2(homogeneous, churn, seed);
+                cfg.family = family;
+                let sc = build(&cfg);
+                {
+                    let mut r = gwtf_router(&sc, opts, seed ^ 0xA);
+                    let cell = table.cell(&row, "gwtf");
+                    simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, |m| cell.push(m));
+                }
+                {
+                    let mut r = swarm_router(&sc, seed ^ 0xB);
+                    let cell = table.cell(&row, "swarm");
+                    simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, |m| cell.push(m));
+                }
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Table II: LLaMA-like model under churn, GWTF vs SWARM.
+pub fn run_table2(opts: &TableOpts) -> Result<MetricsTable> {
+    run_crash_table(Family::Llama, "Table II — LLaMA-like, crash-prone devices", opts)
+}
+
+/// Table III: GPT-like model under churn, GWTF vs SWARM.
+pub fn run_table3(opts: &TableOpts) -> Result<MetricsTable> {
+    run_crash_table(Family::Gpt, "Table III — GPT-like, crash-prone devices", opts)
+}
+
+/// Table VI: GWTF vs DT-FM's communication-optimal GPipe schedule
+/// (3 data nodes, 15 relays, 6 stages, no churn).
+pub fn run_table6(opts: &TableOpts) -> Result<MetricsTable> {
+    let mut table = MetricsTable::new("Table VI — comparison against optimal schedule");
+    for rep in 0..opts.reps {
+        let seed = opts.seed + rep as u64 * 104729;
+        let cfg = ScenarioConfig::table6(seed);
+        let sc = build(&cfg);
+        {
+            let mut r = gwtf_router(&sc, opts, seed ^ 0xA);
+            let cell = table.cell("0% homogeneous", "gwtf");
+            simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, |m| cell.push(m));
+        }
+        {
+            let topo = sc.topo.clone();
+            let payload = sc.sim_cfg.payload_bytes;
+            let cost: crate::baselines::CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
+            let mut r = DtfmRouter::new(
+                sc.prob.graph.clone(),
+                sc.prob.demand.clone(),
+                cost,
+                GaParams::default(),
+                seed ^ 0xB,
+            );
+            let cell = table.cell("0% homogeneous", "dtfm");
+            simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, |m| cell.push(m));
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> TableOpts {
+        TableOpts { reps: 2, iters_per_rep: 2, seed: 5, ..Default::default() }
+    }
+
+    #[test]
+    fn table2_produces_all_cells() {
+        let t = run_table2(&fast()).unwrap();
+        assert_eq!(t.cells.len(), 12, "6 settings x 2 systems");
+        for ((row, _), acc) in &t.cells {
+            assert!(!acc.throughput.is_empty(), "{row}");
+        }
+    }
+
+    #[test]
+    fn table2_gwtf_wastes_less_gpu_under_churn() {
+        // The paper's headline: SWARM wastes more GPU time when crashes
+        // occur (full pipeline recomputation).
+        let opts = TableOpts { reps: 6, iters_per_rep: 4, seed: 11, ..Default::default() };
+        let t = run_table2(&opts).unwrap();
+        let key = |sys: &str| ("heterogeneous 20%".to_string(), sys.to_string());
+        let gwtf: f64 = t.cells[&key("gwtf")].wasted_gpu_min.iter().sum();
+        let swarm: f64 = t.cells[&key("swarm")].wasted_gpu_min.iter().sum();
+        assert!(gwtf <= swarm + 1e-9, "gwtf wasted {gwtf} vs swarm {swarm}");
+    }
+
+    #[test]
+    fn table6_has_both_systems() {
+        let opts = TableOpts { reps: 1, iters_per_rep: 1, seed: 3, ..Default::default() };
+        let t = run_table6(&opts).unwrap();
+        assert!(t.cells.contains_key(&("0% homogeneous".into(), "gwtf".into())));
+        assert!(t.cells.contains_key(&("0% homogeneous".into(), "dtfm".into())));
+    }
+
+    #[test]
+    fn ablation_flags_apply() {
+        let o = TableOpts { no_anneal: true, sum_objective: true, ..Default::default() };
+        let p = o.flow_params();
+        assert!(p.temperature < 1e-6);
+        assert!(!p.minmax_objective);
+    }
+}

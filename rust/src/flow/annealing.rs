@@ -1,0 +1,112 @@
+//! Simulated annealing acceptance rule (paper §V-C Request Redirect).
+//!
+//! "changes that increase cost may still be accepted with probability
+//! e^{(cost_current - cost_new)/T} > U(0,1), where T is temperature,
+//! reduced after each accepted change by a factor α."  The paper's
+//! evaluation uses T = 1.7 and α = 0.95 (§VI Setup).
+
+use crate::util::Rng;
+
+/// Annealing schedule state.
+#[derive(Debug, Clone)]
+pub struct Annealer {
+    pub temperature: f64,
+    pub alpha: f64,
+    /// Count of accepted uphill (cost-increasing) moves — for diagnostics.
+    pub uphill_accepted: usize,
+}
+
+impl Annealer {
+    /// Paper defaults: T = 1.7, α = 0.95.
+    pub fn paper_default() -> Self {
+        Annealer::new(1.7, 0.95)
+    }
+
+    pub fn new(temperature: f64, alpha: f64) -> Self {
+        assert!(temperature > 0.0 && (0.0..=1.0).contains(&alpha));
+        Annealer { temperature, alpha, uphill_accepted: 0 }
+    }
+
+    /// Disabled annealing (greedy; ablation baseline).
+    pub fn greedy() -> Self {
+        Annealer { temperature: 1e-12, alpha: 1.0, uphill_accepted: 0 }
+    }
+
+    /// Decide whether to accept a move from `cost_current` to `cost_new`.
+    /// Improving moves are always accepted; worsening moves follow the
+    /// Metropolis rule.  Cools on every accepted change (as in the paper).
+    pub fn accept(&mut self, cost_current: f64, cost_new: f64, rng: &mut Rng) -> bool {
+        let accepted = if cost_new <= cost_current {
+            true
+        } else {
+            let p = ((cost_current - cost_new) / self.temperature).exp();
+            let took = p > rng.f64();
+            if took {
+                self.uphill_accepted += 1;
+            }
+            took
+        };
+        if accepted {
+            self.temperature = (self.temperature * self.alpha).max(1e-12);
+        }
+        accepted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_accepts_improvement() {
+        let mut a = Annealer::paper_default();
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            assert!(a.accept(10.0, 5.0, &mut rng));
+        }
+    }
+
+    #[test]
+    fn uphill_probability_shrinks_with_gap() {
+        let mut rng = Rng::new(1);
+        let trials = 20_000;
+        let mut acc_small = 0;
+        let mut acc_big = 0;
+        for _ in 0..trials {
+            let mut a = Annealer::new(1.7, 1.0); // no cooling for a clean estimate
+            if a.accept(1.0, 1.5, &mut rng) {
+                acc_small += 1;
+            }
+            let mut a = Annealer::new(1.7, 1.0);
+            if a.accept(1.0, 6.0, &mut rng) {
+                acc_big += 1;
+            }
+        }
+        let p_small = acc_small as f64 / trials as f64;
+        let p_big = acc_big as f64 / trials as f64;
+        // theory: e^{-0.5/1.7} ≈ 0.745, e^{-5/1.7} ≈ 0.053
+        assert!((p_small - 0.745).abs() < 0.02, "{p_small}");
+        assert!((p_big - 0.053).abs() < 0.02, "{p_big}");
+        assert!(p_small > p_big);
+    }
+
+    #[test]
+    fn cools_on_accept() {
+        let mut a = Annealer::new(2.0, 0.5);
+        let mut rng = Rng::new(2);
+        a.accept(10.0, 1.0, &mut rng);
+        assert!((a.temperature - 1.0).abs() < 1e-12);
+        a.accept(10.0, 1.0, &mut rng);
+        assert!((a.temperature - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn greedy_never_takes_uphill() {
+        let mut a = Annealer::greedy();
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(!a.accept(1.0, 1.0001, &mut rng));
+        }
+        assert_eq!(a.uphill_accepted, 0);
+    }
+}

@@ -1,0 +1,701 @@
+//! GWTF's decentralized flow optimization (paper §V-A, §V-C).
+//!
+//! Flows (abstract pipelines for one microbatch each) are built *in
+//! reverse*, from the sink side: a last-stage relay first pairs with a
+//! data node (Request Flow towards the sink), advertising its cost to
+//! sink; earlier-stage relays then extend chains front-ward, each picking
+//! the successor minimizing `d(i,j) + cost_to_sink(j)` (Eq. 1); finally the
+//! data node pairs its per-iteration microbatch budget with the cheapest
+//! stage-1 chain heads, completing flows.
+//!
+//! Two local refinement moves then reduce cost while training runs:
+//!
+//! - **Request Change**: two same-stage nodes with flows to the same sink
+//!   swap their next-stage peers when that lowers the objective
+//!   (the min-max edge cost — §V-A's local relaxation of Eq. 2).
+//! - **Request Redirect**: a spare-capacity node offers to replace a more
+//!   expensive peer inside an existing flow.  To escape local minima both
+//!   moves use simulated-annealing acceptance (T = 1.7, α = 0.95).
+//!
+//! Every decision uses only knowledge a node can hold locally: its peer
+//! view (adjacent stages, from the DHT), the advertised `cost_to_sink` of
+//! those peers, and pairwise Eq. 1 costs to them.  The round loop is a
+//! synchronous rendering of the asynchronous gossip the paper describes;
+//! each round corresponds to one "iteration of the algorithm" on Fig. 7's
+//! x-axis.
+
+use std::collections::BTreeMap;
+
+use crate::cost::NodeId;
+use crate::util::Rng;
+
+use super::annealing::Annealer;
+use super::graph::{FlowPath, FlowProblem};
+
+/// Tunables (paper §VI Setup).
+#[derive(Debug, Clone)]
+pub struct FlowParams {
+    pub temperature: f64,
+    pub alpha: f64,
+    /// Enable Request Change moves.
+    pub enable_change: bool,
+    /// Enable Request Redirect moves.
+    pub enable_redirect: bool,
+    /// Objective for Change/Redirect: true = min-max edge cost (paper),
+    /// false = sum of edge costs (ablation).
+    pub minmax_objective: bool,
+}
+
+impl Default for FlowParams {
+    fn default() -> Self {
+        FlowParams {
+            temperature: 1.7,
+            alpha: 0.95,
+            enable_change: true,
+            enable_redirect: true,
+            minmax_objective: true,
+        }
+    }
+}
+
+/// One flow under construction or established: relays from `head_stage`
+/// through the last stage, plus the sink data node it returns to.
+#[derive(Debug, Clone)]
+pub struct Chain {
+    pub sink: NodeId,
+    /// Relays in stage order; `nodes[0]` is at `head_stage`.
+    pub nodes: Vec<NodeId>,
+    pub head_stage: usize,
+    /// Head is paired with the sink data node's source budget.
+    pub complete: bool,
+    /// Round at which this chain last made progress (seeded/extended).
+    /// Incomplete chains stalled past a timeout are torn down so their
+    /// capacity can be re-offered (the §V-D "excluded until they free
+    /// memory" rule applied to flow construction).
+    pub last_progress: usize,
+}
+
+/// Per-round convergence statistics (Fig. 7 series).
+#[derive(Debug, Clone, Copy)]
+pub struct RoundStats {
+    pub round: usize,
+    pub complete_flows: usize,
+    pub avg_cost_per_microbatch: f64,
+    pub max_edge_cost: f64,
+    pub moves_applied: usize,
+}
+
+/// The decentralized optimizer state.
+pub struct DecentralizedFlow<'p> {
+    pub prob: &'p FlowProblem,
+    pub params: FlowParams,
+    pub chains: Vec<Chain>,
+    /// Remaining capacity per node (node.0-indexed).
+    cap_left: Vec<usize>,
+    /// Remaining sink acceptances per data node.
+    sink_left: BTreeMap<NodeId, usize>,
+    /// Remaining source pairings per data node.
+    source_left: BTreeMap<NodeId, usize>,
+    annealer: Annealer,
+    rng: Rng,
+    round: usize,
+    /// Optional restricted peer views (NodeId -> visible peers); None =
+    /// full adjacent-stage visibility.
+    pub visibility: Option<BTreeMap<NodeId, Vec<NodeId>>>,
+    /// Nodes currently dead (crashed); they take part in nothing.
+    dead: Vec<bool>,
+}
+
+impl<'p> DecentralizedFlow<'p> {
+    pub fn new(prob: &'p FlowProblem, params: FlowParams, seed: u64) -> Self {
+        let cap_left = prob.cap.clone();
+        let mut sink_left = BTreeMap::new();
+        let mut source_left = BTreeMap::new();
+        for (di, &d) in prob.graph.data_nodes.iter().enumerate() {
+            sink_left.insert(d, prob.demand[di]);
+            source_left.insert(d, prob.demand[di]);
+        }
+        let annealer = Annealer::new(params.temperature, params.alpha);
+        DecentralizedFlow {
+            prob,
+            params,
+            chains: Vec::new(),
+            cap_left,
+            sink_left,
+            source_left,
+            annealer,
+            rng: Rng::new(seed),
+            round: 0,
+            visibility: None,
+            dead: vec![false; prob.cap.len()],
+        }
+    }
+
+    fn n_stages(&self) -> usize {
+        self.prob.graph.n_stages()
+    }
+
+    fn alive(&self, n: NodeId) -> bool {
+        !self.dead[n.0]
+    }
+
+    /// Can `viewer` see `peer`? (partial-membership restriction)
+    fn sees(&self, viewer: NodeId, peer: NodeId) -> bool {
+        match &self.visibility {
+            None => true,
+            Some(v) => v.get(&viewer).map(|ps| ps.contains(&peer)).unwrap_or(false),
+        }
+    }
+
+    /// Cost from a chain's head back to its sink (local info: each node
+    /// advertises this after a successful Request Flow).
+    pub fn cost_to_sink(&self, chain: &Chain) -> f64 {
+        let mut c = 0.0;
+        for w in chain.nodes.windows(2) {
+            c += self.prob.cost(w[0], w[1]);
+        }
+        c + self.prob.cost(*chain.nodes.last().unwrap(), chain.sink)
+    }
+
+    /// Full path cost including the data-node -> head hop.
+    fn full_cost(&self, chain: &Chain) -> f64 {
+        self.prob.cost(chain.sink, chain.nodes[0]) + self.cost_to_sink(chain)
+    }
+
+    /// One synchronous round of the protocol.  Returns stats.
+    pub fn step(&mut self) -> RoundStats {
+        self.round += 1;
+        let mut moves = 0;
+        moves += self.seed_chains();
+        moves += self.extend_chains();
+        moves += self.pair_sources();
+        moves += self.reclaim_stalled();
+        if self.params.enable_change {
+            moves += self.request_change();
+        }
+        if self.params.enable_redirect {
+            moves += self.request_redirect();
+        }
+        self.stats(moves)
+    }
+
+    /// Run until steady state (no moves for `patience` rounds) or `max_rounds`.
+    pub fn run(&mut self, max_rounds: usize, patience: usize) -> Vec<RoundStats> {
+        let mut out = Vec::new();
+        let mut idle = 0;
+        for _ in 0..max_rounds {
+            let s = self.step();
+            idle = if s.moves_applied == 0 { idle + 1 } else { 0 };
+            out.push(s);
+            if idle >= patience {
+                break;
+            }
+        }
+        out
+    }
+
+    fn stats(&self, moves: usize) -> RoundStats {
+        let complete: Vec<&Chain> = self.chains.iter().filter(|c| c.complete).collect();
+        let avg = if complete.is_empty() {
+            f64::INFINITY
+        } else {
+            complete.iter().map(|c| self.full_cost(c)).sum::<f64>() / complete.len() as f64
+        };
+        let max_edge = complete
+            .iter()
+            .map(|c| self.path_of(c).max_edge_cost(self.prob))
+            .fold(0.0f64, f64::max);
+        RoundStats {
+            round: self.round,
+            complete_flows: complete.len(),
+            avg_cost_per_microbatch: avg,
+            max_edge_cost: max_edge,
+            moves_applied: moves,
+        }
+    }
+
+    /// Stage-(S-1) relays with spare capacity request flow to a data node
+    /// (seeding a new chain at the sink side).
+    fn seed_chains(&mut self) -> usize {
+        let last = self.n_stages() - 1;
+        let mut members = self.prob.graph.stages[last].clone();
+        self.rng.shuffle(&mut members);
+        let mut moves = 0;
+        for r in members {
+            if !self.alive(r) || self.cap_left[r.0] == 0 {
+                continue;
+            }
+            // Cheapest data node with remaining sink budget this relay can see.
+            let best = self
+                .prob
+                .graph
+                .data_nodes
+                .iter()
+                .filter(|&&d| self.sink_left[&d] > 0 && self.sees(r, d))
+                .min_by(|&&a, &&b| {
+                    self.prob.cost(r, a).partial_cmp(&self.prob.cost(r, b)).unwrap()
+                })
+                .copied();
+            if let Some(d) = best {
+                *self.sink_left.get_mut(&d).unwrap() -= 1;
+                self.cap_left[r.0] -= 1;
+                let round = self.round;
+                self.chains.push(Chain {
+                    sink: d,
+                    nodes: vec![r],
+                    head_stage: last,
+                    complete: false,
+                    last_progress: round,
+                });
+                moves += 1;
+            }
+        }
+        moves
+    }
+
+    /// Relays with spare capacity extend chains whose head sits one stage
+    /// after them (Request Flow towards the head).
+    fn extend_chains(&mut self) -> usize {
+        let mut moves = 0;
+        for s in (0..self.n_stages() - 1).rev() {
+            let mut members = self.prob.graph.stages[s].clone();
+            self.rng.shuffle(&mut members);
+            for i in members {
+                if !self.alive(i) || self.cap_left[i.0] == 0 {
+                    continue;
+                }
+                // Candidate chains: head at stage s+1, not complete, head visible.
+                let mut best: Option<(usize, f64)> = None;
+                for (ci, ch) in self.chains.iter().enumerate() {
+                    if ch.complete || ch.head_stage != s + 1 {
+                        continue;
+                    }
+                    let head = ch.nodes[0];
+                    if !self.sees(i, head) {
+                        continue;
+                    }
+                    let c = self.prob.cost(i, head) + self.cost_to_sink(ch);
+                    if best.map(|(_, bc)| c < bc).unwrap_or(true) {
+                        best = Some((ci, c));
+                    }
+                }
+                if let Some((ci, _)) = best {
+                    self.chains[ci].nodes.insert(0, i);
+                    self.chains[ci].head_stage = s;
+                    self.chains[ci].last_progress = self.round;
+                    self.cap_left[i.0] -= 1;
+                    moves += 1;
+                }
+            }
+        }
+        moves
+    }
+
+    /// Data nodes pair their microbatch budget with stage-0 chain heads.
+    fn pair_sources(&mut self) -> usize {
+        let mut moves = 0;
+        let data_nodes = self.prob.graph.data_nodes.clone();
+        for d in data_nodes {
+            while self.source_left[&d] > 0 {
+                let mut best: Option<(usize, f64)> = None;
+                for (ci, ch) in self.chains.iter().enumerate() {
+                    if ch.complete || ch.head_stage != 0 || ch.sink != d {
+                        continue;
+                    }
+                    let c = self.prob.cost(d, ch.nodes[0]) + self.cost_to_sink(ch);
+                    if best.map(|(_, bc)| c < bc).unwrap_or(true) {
+                        best = Some((ci, c));
+                    }
+                }
+                match best {
+                    Some((ci, _)) => {
+                        self.chains[ci].complete = true;
+                        *self.source_left.get_mut(&d).unwrap() -= 1;
+                        moves += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        moves
+    }
+
+    /// Tear down incomplete chains that made no progress for a few rounds,
+    /// refunding their relays' capacity and the sink slot so a different
+    /// subset of relays can retry.  Without this, a chain stranded behind
+    /// an exhausted stage holds budget forever and the system under-routes
+    /// (the paper's objective is to *maximize* routed microbatches).
+    fn reclaim_stalled(&mut self) -> usize {
+        const STALL_ROUNDS: usize = 3;
+        let round = self.round;
+        let mut moves = 0;
+        let mut ci = 0;
+        while ci < self.chains.len() {
+            let ch = &self.chains[ci];
+            if !ch.complete && round.saturating_sub(ch.last_progress) >= STALL_ROUNDS {
+                for &n in &ch.nodes {
+                    self.cap_left[n.0] += 1;
+                }
+                *self.sink_left.get_mut(&ch.sink).unwrap() += 1;
+                self.chains.remove(ci);
+                moves += 1;
+            } else {
+                ci += 1;
+            }
+        }
+        moves
+    }
+
+    /// Objective used by Change/Redirect when comparing two local options.
+    fn pair_objective(&self, a: f64, b: f64) -> f64 {
+        if self.params.minmax_objective {
+            a.max(b)
+        } else {
+            a + b
+        }
+    }
+
+    /// Request Change: same-stage pairs swap successors for the same sink.
+    fn request_change(&mut self) -> usize {
+        let mut moves = 0;
+        // Consider every stage boundary: edge from position p to p+1 within
+        // chains (position 0 edge is data->head, handled by Redirect).
+        let n_chains = self.chains.len();
+        if n_chains < 2 {
+            return 0;
+        }
+        let attempts = n_chains * 2;
+        for _ in 0..attempts {
+            let a = self.rng.index(n_chains);
+            let b = self.rng.index(n_chains);
+            if a == b {
+                continue;
+            }
+            let (ca, cb) = (self.chains[a].clone(), self.chains[b].clone());
+            if ca.sink != cb.sink || !ca.complete || !cb.complete {
+                continue;
+            }
+            // pick a random boundary: edge leaving stage s
+            if ca.nodes.len() < 2 {
+                continue;
+            }
+            let pos = self.rng.index(ca.nodes.len() - 1);
+            if cb.nodes.len() != ca.nodes.len() {
+                continue;
+            }
+            let (i1, j1) = (ca.nodes[pos], ca.nodes[pos + 1]);
+            let (i2, j2) = (cb.nodes[pos], cb.nodes[pos + 1]);
+            if i1 == i2 || j1 == j2 {
+                continue;
+            }
+            // Nodes must see each other's peers to negotiate the swap.
+            if !self.sees(i1, j2) || !self.sees(i2, j1) {
+                continue;
+            }
+            let cur = self.pair_objective(self.prob.cost(i1, j1), self.prob.cost(i2, j2));
+            let new = self.pair_objective(self.prob.cost(i1, j2), self.prob.cost(i2, j1));
+            if self.annealer.accept(cur, new, &mut self.rng) && new != cur {
+                // Swap suffixes after `pos`.
+                let tail_a: Vec<NodeId> = self.chains[a].nodes.split_off(pos + 1);
+                let tail_b: Vec<NodeId> = self.chains[b].nodes.split_off(pos + 1);
+                self.chains[a].nodes.extend(tail_b);
+                self.chains[b].nodes.extend(tail_a);
+                moves += 1;
+            }
+        }
+        moves
+    }
+
+    /// Request Redirect: spare node m replaces node x inside a chain.
+    fn request_redirect(&mut self) -> usize {
+        let mut moves = 0;
+        let n_chains = self.chains.len();
+        for ci in 0..n_chains {
+            let ch = self.chains[ci].clone();
+            if !ch.complete {
+                continue;
+            }
+            for (pi, &x) in ch.nodes.iter().enumerate() {
+                let stage = ch.head_stage + pi;
+                let prev = if pi == 0 { ch.sink } else { ch.nodes[pi - 1] };
+                let next = if pi + 1 < ch.nodes.len() { ch.nodes[pi + 1] } else { ch.sink };
+                // Candidate replacements with spare capacity in the same stage.
+                let cand: Vec<NodeId> = self.prob.graph.stages[stage]
+                    .iter()
+                    .filter(|&&m| {
+                        m != x
+                            && self.alive(m)
+                            && self.cap_left[m.0] > 0
+                            && self.sees(m, prev)
+                            && self.sees(m, next)
+                    })
+                    .copied()
+                    .collect();
+                let Some(&m) = cand.iter().min_by(|&&p, &&q| {
+                    let cp = self.prob.cost(prev, p) + self.prob.cost(p, next);
+                    let cq = self.prob.cost(prev, q) + self.prob.cost(q, next);
+                    cp.partial_cmp(&cq).unwrap()
+                }) else {
+                    continue;
+                };
+                let cur = self.pair_objective(self.prob.cost(prev, x), self.prob.cost(x, next));
+                let new = self.pair_objective(self.prob.cost(prev, m), self.prob.cost(m, next));
+                if new != cur && self.annealer.accept(cur, new, &mut self.rng) {
+                    self.cap_left[m.0] -= 1;
+                    self.cap_left[x.0] += 1;
+                    self.chains[ci].nodes[pi] = m;
+                    moves += 1;
+                    break; // one redirect per chain per round
+                }
+            }
+        }
+        moves
+    }
+
+    /// A node crashed: repair flows through it (§IV "amend a broken flow").
+    /// Repair finds the last alive node before the crash and reconnects to
+    /// the first alive node after it through a spare-capacity peer; if no
+    /// peer exists, the whole chain is torn down (capacity refunded).
+    pub fn remove_node(&mut self, x: NodeId) -> (usize, usize) {
+        self.dead[x.0] = true;
+        self.cap_left[x.0] = 0;
+        let mut repaired = 0;
+        let mut destroyed = 0;
+        let mut ci = 0;
+        while ci < self.chains.len() {
+            let Some(pi) = self.chains[ci].nodes.iter().position(|&n| n == x) else {
+                ci += 1;
+                continue;
+            };
+            let ch = self.chains[ci].clone();
+            let stage = ch.head_stage + pi;
+            let prev = if pi == 0 { ch.sink } else { ch.nodes[pi - 1] };
+            let next = if pi + 1 < ch.nodes.len() { ch.nodes[pi + 1] } else { ch.sink };
+            let cand: Vec<NodeId> = self.prob.graph.stages[stage]
+                .iter()
+                .filter(|&&m| m != x && self.alive(m) && self.cap_left[m.0] > 0)
+                .copied()
+                .collect();
+            let best = cand.iter().min_by(|&&p, &&q| {
+                let cp = self.prob.cost(prev, p) + self.prob.cost(p, next);
+                let cq = self.prob.cost(prev, q) + self.prob.cost(q, next);
+                cp.partial_cmp(&cq).unwrap()
+            });
+            match best {
+                Some(&m) => {
+                    self.cap_left[m.0] -= 1;
+                    self.chains[ci].nodes[pi] = m;
+                    repaired += 1;
+                    ci += 1;
+                }
+                None => {
+                    // refund all other relays and the budgets
+                    for (qi, &n) in ch.nodes.iter().enumerate() {
+                        if qi != pi {
+                            self.cap_left[n.0] += 1;
+                        }
+                    }
+                    *self.sink_left.get_mut(&ch.sink).unwrap() += 1;
+                    if ch.complete {
+                        *self.source_left.get_mut(&ch.sink).unwrap() += 1;
+                    }
+                    self.chains.remove(ci);
+                    destroyed += 1;
+                }
+            }
+        }
+        (repaired, destroyed)
+    }
+
+    /// A node (re)joins with capacity `cap` at stage `stage` (assumes the
+    /// graph already lists it there).
+    pub fn revive_node(&mut self, n: NodeId, cap: usize) {
+        self.dead[n.0] = false;
+        self.cap_left[n.0] = cap;
+    }
+
+    fn path_of(&self, c: &Chain) -> FlowPath {
+        FlowPath { source: c.sink, relays: c.nodes.clone() }
+    }
+
+    /// Established complete flows as routing paths.
+    pub fn established_paths(&self) -> Vec<FlowPath> {
+        self.chains
+            .iter()
+            .filter(|c| c.complete && c.head_stage == 0)
+            .map(|c| self.path_of(c))
+            .collect()
+    }
+
+    /// Sum of Eq. 1 costs over complete flows (the Eq. 2 objective).
+    pub fn total_cost(&self) -> f64 {
+        self.chains.iter().filter(|c| c.complete).map(|c| self.full_cost(c)).sum()
+    }
+
+    pub fn complete_flows(&self) -> usize {
+        self.chains.iter().filter(|c| c.complete).count()
+    }
+
+    pub fn cap_left(&self, n: NodeId) -> usize {
+        self.cap_left[n.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::graph::{random_problem, validate_paths};
+    use crate::flow::mcmf::mcmf_min_cost;
+
+    fn run_default(seed: u64, sources: usize, relays: usize, stages: usize) -> (FlowProblem, Vec<RoundStats>, Vec<FlowPath>) {
+        let mut rng = Rng::new(seed);
+        let prob = random_problem(sources, relays, stages, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), seed ^ 0xF10);
+        let stats = f.run(120, 10);
+        let paths = f.established_paths();
+        (prob, stats, paths)
+    }
+
+    #[test]
+    fn builds_complete_flows() {
+        let (prob, stats, paths) = run_default(1, 1, 24, 4);
+        assert!(!paths.is_empty());
+        assert_eq!(paths.len(), prob.max_throughput().min(prob.demand[0]));
+        assert!(stats.last().unwrap().complete_flows == paths.len());
+    }
+
+    #[test]
+    fn paths_validate() {
+        for seed in 0..8 {
+            let (prob, _stats, paths) = run_default(seed, 1, 24, 4);
+            validate_paths(&paths, &prob).unwrap();
+        }
+    }
+
+    #[test]
+    fn multi_source_routes_each_commodity_home() {
+        let (prob, _stats, paths) = run_default(3, 2, 40, 8);
+        assert!(!paths.is_empty());
+        validate_paths(&paths, &prob).unwrap();
+        // every source present
+        for &d in &prob.graph.data_nodes {
+            assert!(paths.iter().any(|p| p.source == d), "no flow for {d}");
+        }
+    }
+
+    #[test]
+    fn cost_decreases_over_rounds() {
+        let (_prob, stats, _paths) = run_default(5, 1, 40, 8);
+        let first_complete = stats.iter().find(|s| s.complete_flows > 0).unwrap();
+        let last = stats.last().unwrap();
+        assert!(
+            last.avg_cost_per_microbatch <= first_complete.avg_cost_per_microbatch + 1e-9,
+            "{} -> {}",
+            first_complete.avg_cost_per_microbatch,
+            last.avg_cost_per_microbatch
+        );
+    }
+
+    #[test]
+    fn within_factor_of_optimal_single_source() {
+        // Paper Fig. 7: GWTF approaches the optimal baseline on tests 1-4.
+        let mut worse = 0;
+        for seed in 0..6 {
+            let mut rng = Rng::new(seed);
+            let prob = random_problem(1, 24, 4, (1.0, 3.0), (1.0, 20.0), &mut rng);
+            let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), seed);
+            f.run(120, 10);
+            let opt = mcmf_min_cost(&prob);
+            if opt.flow == f.complete_flows() && opt.flow > 0 {
+                let ratio = f.total_cost() / opt.total_cost;
+                assert!(ratio >= 1.0 - 1e-9, "decentralized beat the optimum?! {ratio}");
+                if ratio > 2.0 {
+                    worse += 1;
+                }
+            }
+        }
+        assert!(worse <= 1, "too many instances far from optimal");
+    }
+
+    #[test]
+    fn crash_repair_keeps_paths_valid() {
+        let mut rng = Rng::new(9);
+        let prob = random_problem(1, 24, 4, (2.0, 4.0), (1.0, 20.0), &mut rng);
+        let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), 9);
+        f.run(120, 10);
+        let before = f.complete_flows();
+        assert!(before > 0);
+        // crash one node that is actually used
+        let victim = f.established_paths()[0].relays[1];
+        let (rep, des) = f.remove_node(victim);
+        assert!(rep + des > 0);
+        let paths = f.established_paths();
+        for p in &paths {
+            assert!(!p.relays.contains(&victim));
+        }
+        validate_paths(&paths, &prob).unwrap();
+    }
+
+    #[test]
+    fn destroyed_chains_refund_capacity() {
+        // one relay per stage: crashing it destroys the chain entirely
+        let mut rng = Rng::new(11);
+        let prob = random_problem(1, 4, 4, (1.0, 2.0), (1.0, 5.0), &mut rng);
+        let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), 11);
+        f.run(60, 8);
+        let victim = prob.graph.stages[1][0];
+        let used_before: usize = prob.graph.stages[2].iter().map(|&n| prob.cap[n.0] - f.cap_left(n)).sum();
+        assert!(used_before > 0);
+        let (_rep, des) = f.remove_node(victim);
+        assert!(des > 0, "single-relay stage must destroy");
+        let used_after: usize = prob.graph.stages[2].iter().map(|&n| prob.cap[n.0] - f.cap_left(n)).sum();
+        assert!(used_after < used_before);
+    }
+
+    #[test]
+    fn greedy_vs_annealing_ablation() {
+        // Annealing should on average match or beat pure greedy refinement.
+        let mut anneal_total = 0.0;
+        let mut greedy_total = 0.0;
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed + 100);
+            let prob = random_problem(1, 32, 8, (1.0, 3.0), (5.0, 100.0), &mut rng);
+            let mut fa = DecentralizedFlow::new(&prob, FlowParams::default(), seed);
+            fa.run(120, 10);
+            let mut pg = FlowParams::default();
+            pg.temperature = 1e-12;
+            let mut fg = DecentralizedFlow::new(&prob, pg, seed);
+            fg.run(120, 10);
+            if fa.complete_flows() == fg.complete_flows() && fa.complete_flows() > 0 {
+                anneal_total += fa.total_cost();
+                greedy_total += fg.total_cost();
+            }
+        }
+        assert!(anneal_total <= greedy_total * 1.15, "annealing {anneal_total} vs greedy {greedy_total}");
+    }
+
+    #[test]
+    fn restricted_visibility_still_builds_flows() {
+        let mut rng = Rng::new(21);
+        let prob = random_problem(1, 24, 4, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        // Each node sees only half of each adjacent stage (plus data nodes).
+        let mut vis: BTreeMap<NodeId, Vec<NodeId>> = BTreeMap::new();
+        let all = prob.graph.all_nodes();
+        for &n in &all {
+            let mut seen: Vec<NodeId> = prob.graph.data_nodes.clone();
+            for s in &prob.graph.stages {
+                for (i, &m) in s.iter().enumerate() {
+                    if i % 2 == (n.0 % 2) {
+                        seen.push(m);
+                    }
+                }
+            }
+            vis.insert(n, seen);
+        }
+        let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), 21);
+        f.visibility = Some(vis);
+        f.run(120, 10);
+        assert!(f.complete_flows() > 0);
+        validate_paths(&f.established_paths(), &prob).unwrap();
+    }
+}

@@ -1,0 +1,290 @@
+//! The staged flow network shared by GWTF, SWARM and the optimal baseline.
+//!
+//! A `FlowProblem` is: data nodes (each a source *and* the sink of its own
+//! microbatches), `n_stages` relay stages, per-node capacities (`cap_i`,
+//! max concurrent microbatches) and a pairwise cost function following
+//! Eq. 1.  Costs may come from a simulated [`crate::net::Topology`] or
+//! from the abstract `U(..)`-sampled settings of Tables IV/V.
+
+use crate::cost::NodeId;
+use crate::util::Rng;
+
+/// Staged graph: which node sits in which stage.
+#[derive(Debug, Clone)]
+pub struct StageGraph {
+    /// Relay stages in pipeline order; `stages[s]` lists the member nodes.
+    pub stages: Vec<Vec<NodeId>>,
+    /// Data nodes (sources + sinks).
+    pub data_nodes: Vec<NodeId>,
+}
+
+impl StageGraph {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Stage index of a relay node (None for data nodes / unknown).
+    pub fn stage_of(&self, n: NodeId) -> Option<usize> {
+        self.stages.iter().position(|s| s.contains(&n))
+    }
+
+    pub fn is_data_node(&self, n: NodeId) -> bool {
+        self.data_nodes.contains(&n)
+    }
+
+    /// All nodes (data + relay).
+    pub fn all_nodes(&self) -> Vec<NodeId> {
+        let mut v = self.data_nodes.clone();
+        for s in &self.stages {
+            v.extend_from_slice(s);
+        }
+        v
+    }
+}
+
+/// A complete flow-routing problem instance.
+pub struct FlowProblem {
+    pub graph: StageGraph,
+    /// `cap[node.0]` = node capacity in concurrent microbatches.
+    pub cap: Vec<usize>,
+    /// Microbatches each data node pushes per iteration.
+    pub demand: Vec<usize>,
+    /// Eq. 1 edge cost between two adjacent-stage nodes.
+    pub cost: Box<dyn Fn(NodeId, NodeId) -> f64 + Send + Sync>,
+}
+
+impl std::fmt::Debug for FlowProblem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlowProblem")
+            .field("graph", &self.graph)
+            .field("cap", &self.cap)
+            .field("demand", &self.demand)
+            .finish()
+    }
+}
+
+impl FlowProblem {
+    pub fn cost(&self, i: NodeId, j: NodeId) -> f64 {
+        (self.cost)(i, j)
+    }
+
+    pub fn capacity(&self, n: NodeId) -> usize {
+        self.cap[n.0]
+    }
+
+    /// Total capacity of a stage (the paper's stage-throughput bound).
+    pub fn stage_capacity(&self, s: usize) -> usize {
+        self.graph.stages[s].iter().map(|n| self.cap[n.0]).sum()
+    }
+
+    /// Index of the bottleneck stage (minimum total capacity).
+    pub fn bottleneck_stage(&self) -> usize {
+        (0..self.graph.n_stages())
+            .min_by_key(|&s| self.stage_capacity(s))
+            .expect("no stages")
+    }
+
+    /// Max microbatches an iteration can theoretically route.
+    pub fn max_throughput(&self) -> usize {
+        let stage_min = (0..self.graph.n_stages())
+            .map(|s| self.stage_capacity(s))
+            .min()
+            .unwrap_or(0);
+        let demand: usize = self.demand.iter().sum();
+        stage_min.min(demand)
+    }
+}
+
+/// A routed flow: one microbatch path `data -> stage0 -> .. -> stageS-1 -> data`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlowPath {
+    /// Originating (and terminating) data node.
+    pub source: NodeId,
+    /// One relay per stage, in order.
+    pub relays: Vec<NodeId>,
+}
+
+impl FlowPath {
+    /// Total Eq. 1 cost of this path in `prob` (including the return hop).
+    pub fn cost(&self, prob: &FlowProblem) -> f64 {
+        let mut c = 0.0;
+        let mut prev = self.source;
+        for &r in &self.relays {
+            c += prob.cost(prev, r);
+            prev = r;
+        }
+        c + prob.cost(prev, self.source)
+    }
+
+    /// Maximum single-edge cost along the path (the min-max objective).
+    pub fn max_edge_cost(&self, prob: &FlowProblem) -> f64 {
+        let mut m: f64 = 0.0;
+        let mut prev = self.source;
+        for &r in &self.relays {
+            m = m.max(prob.cost(prev, r));
+            prev = r;
+        }
+        m.max(prob.cost(prev, self.source))
+    }
+}
+
+/// Check a set of paths respects stage structure and node capacities.
+pub fn validate_paths(paths: &[FlowPath], prob: &FlowProblem) -> Result<(), String> {
+    let n_stages = prob.graph.n_stages();
+    let mut usage = vec![0usize; prob.cap.len()];
+    let mut per_source = std::collections::BTreeMap::new();
+    for p in paths {
+        if p.relays.len() != n_stages {
+            return Err(format!("path has {} relays, expected {n_stages}", p.relays.len()));
+        }
+        if !prob.graph.is_data_node(p.source) {
+            return Err(format!("source {} is not a data node", p.source));
+        }
+        for (s, &r) in p.relays.iter().enumerate() {
+            if !prob.graph.stages[s].contains(&r) {
+                return Err(format!("relay {} not in stage {s}", r));
+            }
+            usage[r.0] += 1;
+        }
+        *per_source.entry(p.source).or_insert(0usize) += 1;
+    }
+    for (i, &u) in usage.iter().enumerate() {
+        if u > prob.cap[i] {
+            return Err(format!("node n{i} over capacity: {u} > {}", prob.cap[i]));
+        }
+    }
+    for (&src, &cnt) in &per_source {
+        let di = prob.graph.data_nodes.iter().position(|&d| d == src).unwrap();
+        if cnt > prob.demand[di] {
+            return Err(format!("data node {src} routed {cnt} > demand {}", prob.demand[di]));
+        }
+    }
+    Ok(())
+}
+
+/// Build an abstract problem from the Table IV/V experiment settings:
+/// random capacities and link costs, `sources` data nodes, `relays` relay
+/// nodes split evenly over `stages` stages.
+pub fn random_problem(
+    sources: usize,
+    relays: usize,
+    stages: usize,
+    cap_range: (f64, f64),
+    cost_range: (f64, f64),
+    rng: &mut Rng,
+) -> FlowProblem {
+    let n = sources + relays;
+    let data_nodes: Vec<NodeId> = (0..sources).map(NodeId).collect();
+    let per_stage = relays / stages;
+    assert!(per_stage > 0, "need at least one relay per stage");
+    let mut stage_vec = Vec::with_capacity(stages);
+    let mut next = sources;
+    for s in 0..stages {
+        let extra = if s < relays % stages { 1 } else { 0 };
+        let members: Vec<NodeId> = (0..per_stage + extra).map(|_| {
+            let id = NodeId(next);
+            next += 1;
+            id
+        }).collect();
+        stage_vec.push(members);
+    }
+    let mut cap = vec![0usize; n];
+    for c in cap.iter_mut().take(n) {
+        *c = rng.uniform(cap_range.0, cap_range.1).floor().max(1.0) as usize;
+    }
+    // Data nodes get ample capacity ("source-sinks were given sufficient
+    // capacity to prevent bottlenecks", §VI Ablation).
+    let mut demand = vec![0usize; sources];
+    for d in 0..sources {
+        cap[d] = relays; // effectively unbounded
+        demand[d] = 4;
+    }
+    // Dense random cost matrix (floor(U(lo,hi)) as in Table V).
+    let mut costs = vec![vec![0.0f64; n]; n];
+    for (i, row) in costs.iter_mut().enumerate() {
+        for (j, c) in row.iter_mut().enumerate() {
+            if i != j {
+                *c = rng.uniform(cost_range.0, cost_range.1).floor().max(1.0);
+            }
+        }
+    }
+    FlowProblem {
+        graph: StageGraph { stages: stage_vec, data_nodes },
+        cap,
+        demand,
+        cost: Box::new(move |i, j| costs[i.0][j.0]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> FlowProblem {
+        // 1 data node, 2 stages x 2 relays, unit demand 2.
+        let graph = StageGraph {
+            stages: vec![vec![NodeId(1), NodeId(2)], vec![NodeId(3), NodeId(4)]],
+            data_nodes: vec![NodeId(0)],
+        };
+        FlowProblem {
+            graph,
+            cap: vec![4, 1, 1, 1, 1],
+            demand: vec![2],
+            cost: Box::new(|i, j| (1 + (i.0 * 7 + j.0 * 13) % 5) as f64),
+        }
+    }
+
+    #[test]
+    fn stage_lookup() {
+        let p = tiny();
+        assert_eq!(p.graph.stage_of(NodeId(3)), Some(1));
+        assert_eq!(p.graph.stage_of(NodeId(0)), None);
+        assert!(p.graph.is_data_node(NodeId(0)));
+    }
+
+    #[test]
+    fn stage_capacity_and_bottleneck() {
+        let p = tiny();
+        assert_eq!(p.stage_capacity(0), 2);
+        assert_eq!(p.max_throughput(), 2);
+    }
+
+    #[test]
+    fn path_cost_includes_return() {
+        let p = tiny();
+        let path = FlowPath { source: NodeId(0), relays: vec![NodeId(1), NodeId(3)] };
+        let expect = p.cost(NodeId(0), NodeId(1)) + p.cost(NodeId(1), NodeId(3)) + p.cost(NodeId(3), NodeId(0));
+        assert!((path.cost(&p) - expect).abs() < 1e-12);
+        assert!(path.max_edge_cost(&p) <= path.cost(&p));
+    }
+
+    #[test]
+    fn validate_catches_capacity_violation() {
+        let p = tiny();
+        let path = FlowPath { source: NodeId(0), relays: vec![NodeId(1), NodeId(3)] };
+        assert!(validate_paths(&[path.clone()], &p).is_ok());
+        assert!(validate_paths(&[path.clone(), path.clone()], &p).is_err());
+    }
+
+    #[test]
+    fn validate_catches_wrong_stage() {
+        let p = tiny();
+        let bad = FlowPath { source: NodeId(0), relays: vec![NodeId(3), NodeId(1)] };
+        assert!(validate_paths(&[bad], &p).is_err());
+    }
+
+    #[test]
+    fn random_problem_shape() {
+        let mut rng = Rng::new(0);
+        let p = random_problem(2, 40, 8, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        assert_eq!(p.graph.data_nodes.len(), 2);
+        assert_eq!(p.graph.n_stages(), 8);
+        let total: usize = p.graph.stages.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 40);
+        for s in &p.graph.stages {
+            for &n in s {
+                assert!((1..=3).contains(&p.cap[n.0]));
+            }
+        }
+    }
+}

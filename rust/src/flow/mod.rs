@@ -1,0 +1,25 @@
+//! Flow optimization — the paper's core contribution.
+//!
+//! GWTF models the routing of microbatches through pipeline stages as a
+//! minimum-cost flow problem over a staged graph whose sources and sinks
+//! are both the data nodes (a microbatch travels from its data node through
+//! every stage and back for loss computation, §V-A).
+//!
+//! - [`graph`] — the staged flow network shared by all algorithms.
+//! - [`mcmf`]  — exact minimum-cost maximum-flow (successive shortest
+//!   paths with potentials; optimal, requires global knowledge — the
+//!   paper's out-of-kilter baseline [Fulkerson 1961]).
+//! - [`decentralized`] — GWTF's novel local-knowledge algorithm built on
+//!   Request Flow / Request Change / Request Redirect with simulated
+//!   annealing (§V-C).
+//! - [`annealing`] — the temperature schedule (T, α from §VI Setup).
+
+pub mod annealing;
+pub mod decentralized;
+pub mod graph;
+pub mod mcmf;
+
+pub use annealing::Annealer;
+pub use decentralized::{DecentralizedFlow, FlowParams, RoundStats};
+pub use graph::{FlowProblem, StageGraph};
+pub use mcmf::{mcmf_min_cost, McmfResult};

@@ -1,0 +1,30 @@
+//! GWTF — Go With The Flow: churn-tolerant decentralized training of LLMs.
+//!
+//! A reproduction of Blagoev et al., "Go With The Flow: Churn-Tolerant
+//! Decentralized Training of Large Language Models" (2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - [`flow`], [`coordinator`], [`sim`], [`net`], [`cost`] — the paper's
+//!   system contribution (decentralized min-cost flow routing, node join,
+//!   crash recovery, aggregation sync) over a simulated geo-distributed
+//!   volunteer network.
+//! - [`baselines`] — SWARM, DT-FM (genetic comm-optimal arrangement), and
+//!   the Fig. 5 join baselines the paper compares against.
+//! - [`runtime`], [`trainer`], [`data`] — the real training path: PJRT
+//!   executes the AOT-lowered JAX/Pallas stage computations from Rust.
+//! - [`config`], [`metrics`], [`util`] — launcher/config system, metric
+//!   reporters, and offline-build substitutes for rand/serde/criterion.
+#![allow(clippy::needless_range_loop)]
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod experiments;
+pub mod flow;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,305 @@
+//! `gwtf` — the launcher.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! gwtf doctor                         PJRT + artifact sanity check
+//! gwtf sim    [--system gwtf|swarm] [--heterogeneous] [--churn P] [--iters N]
+//! gwtf train  [--family llama|gpt] [--steps N] [--churn P] [--lr X]
+//! gwtf bench  <table2|table3|table6|fig5|fig6|fig7|all> [--reps N] [--full]
+//! gwtf join-demo                      Fig. 3 walkthrough
+//! ```
+//!
+//! Every run is deterministic from `--seed`.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use gwtf::baselines::SwarmRouter;
+use gwtf::config::Args;
+use gwtf::coordinator::join::{utilization_query, JoinPolicy, Leader};
+use gwtf::coordinator::GwtfRouter;
+use gwtf::cost::NodeId;
+use gwtf::experiments::{
+    results_dir, run_fig5, run_fig6, run_fig7, run_table2, run_table3, run_table6, Fig6Opts,
+    TableOpts,
+};
+use gwtf::flow::mcmf::mcmf_min_cost;
+use gwtf::flow::FlowParams;
+use gwtf::metrics::MetricsTable;
+use gwtf::runtime::Manifest;
+use gwtf::sim::scenario::{build, Family, ScenarioConfig};
+use gwtf::sim::training::{Router, TrainingSim};
+use gwtf::trainer::{ChurnTrainer, PipelineTrainer};
+use gwtf::util::Rng;
+
+const USAGE: &str = "usage: gwtf <doctor|sim|train|bench|join-demo> [options]
+  doctor                         check PJRT + artifacts
+  sim       --system gwtf|swarm  --heterogeneous --churn P --iters N --seed S
+  train     --family llama|gpt   --steps N --churn P --lr X --microbatches M
+  bench     table2|table3|table6|fig5|fig6|fig7|all  --reps N --iters N --full
+  join-demo                      Fig. 3 walkthrough";
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("doctor") => doctor(args),
+        Some("sim") => sim(args),
+        Some("train") => train(args),
+        Some("bench") => bench(args),
+        Some("join-demo") => join_demo(args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn doctor(_args: &Args) -> Result<()> {
+    println!("PJRT platform: {}", gwtf::runtime::smoke()?);
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => {
+            for (fam, f) in &m.families {
+                println!(
+                    "artifacts[{fam}]: {} fns, {} params, {} stages, d_model={}",
+                    f.entries.len(),
+                    f.config.param_count,
+                    f.config.n_stages,
+                    f.config.d_model
+                );
+            }
+        }
+        Err(e) => println!("artifacts: NOT READY ({e})"),
+    }
+    Ok(())
+}
+
+fn sim(args: &Args) -> Result<()> {
+    let system = args.str_or("system", "gwtf");
+    let homogeneous = !args.flag("heterogeneous");
+    let churn = args.f64_or("churn", 0.1)?;
+    let iters = args.usize_or("iters", 8)?;
+    let seed = args.u64_or("seed", 1)?;
+    let family =
+        if args.str_or("family", "llama") == "gpt" { Family::Gpt } else { Family::Llama };
+
+    let mut cfg = ScenarioConfig::table2(homogeneous, churn, seed);
+    cfg.family = family;
+    let sc = build(&cfg);
+    let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+    let mut churn_proc = sc.churn.clone();
+    let mut rng = Rng::new(seed ^ 0x51);
+
+    let mut router: Box<dyn Router> = match system.as_str() {
+        "gwtf" => Box::new(GwtfRouter::from_scenario(&sc, FlowParams::default(), seed)),
+        "swarm" => {
+            // comm-only cost: SWARM's greedy is blind to compute (SVI)
+            let topo = sc.topo.clone();
+            let payload = sc.sim_cfg.payload_bytes;
+            Box::new(SwarmRouter::from_problem(
+                &sc.prob,
+                Arc::new(move |i, j| topo.comm(i, j, payload)),
+                seed,
+            ))
+        }
+        other => bail!("unknown --system {other} (gwtf|swarm)"),
+    };
+
+    println!(
+        "# {} | {} | churn {:.0}% | {} iterations",
+        router.name(),
+        if homogeneous { "homogeneous" } else { "heterogeneous" },
+        churn * 100.0,
+        iters
+    );
+    println!(
+        "{:>4} {:>12} {:>6} {:>10} {:>12} {:>8} {:>8}",
+        "iter", "makespan_s", "done", "comm_s", "wasted_s", "fwd_rec", "bwd_rec"
+    );
+    for i in 0..iters {
+        let events = churn_proc.sample_iteration();
+        let alive = churn_proc.planning_view(&events);
+        let (paths, planning) = router.plan(&alive);
+        let m = sim.run_iteration(
+            &sc.prob,
+            router.as_mut(),
+            &events,
+            &churn_proc,
+            planning,
+            paths,
+            &mut rng,
+        );
+        println!(
+            "{:>4} {:>12.1} {:>6} {:>10.1} {:>12.1} {:>8} {:>8}",
+            i, m.makespan_s, m.completed, m.comm_s, m.wasted_gpu_s, m.fwd_recoveries, m.bwd_recoveries
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let family = args.str_or("family", "llama");
+    let steps = args.usize_or("steps", 20)?;
+    let churn = args.f64_or("churn", 0.0)?;
+    let lr = args.f64_or("lr", 0.1)? as f32;
+    let microbatches = args.usize_or("microbatches", 4)?;
+    let seed = args.u64_or("seed", 42)?;
+    let default_dir = Manifest::default_dir();
+    let artifacts = args.str_or("artifacts", default_dir.to_str().unwrap());
+
+    let trainer = PipelineTrainer::new(&artifacts, &family, seed, lr, microbatches)?;
+    println!(
+        "# training {family} ({} stages) for {steps} steps, churn {:.0}%",
+        trainer.n_stages(),
+        churn * 100.0
+    );
+    if churn > 0.0 {
+        let cfg = ScenarioConfig::table2(false, churn, seed);
+        let mut t = ChurnTrainer::new(trainer, &cfg);
+        println!(
+            "{:>5} {:>10} {:>14} {:>8} {:>8}",
+            "step", "loss", "sim_makespan_s", "fwd_rec", "bwd_rec"
+        );
+        for _ in 0..steps {
+            let m = t.step()?;
+            println!(
+                "{:>5} {:>10.4} {:>14.1} {:>8} {:>8}",
+                m.step, m.loss, m.sim_makespan_s, m.fwd_recoveries, m.bwd_recoveries
+            );
+        }
+    } else {
+        let mut t = trainer;
+        println!("{:>5} {:>10}", "step", "loss");
+        for _ in 0..steps {
+            let m = t.step()?;
+            println!("{:>5} {:>10.4}", m.step, m.loss);
+        }
+    }
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let target = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("bench needs a target: table2|table3|table6|fig5|fig6|fig7|all"))?
+        .clone();
+    let reps = args.usize_or("reps", 25)?;
+    let iters = args.usize_or("iters", 4)?;
+    let seed = args.u64_or("seed", 1)?;
+    let opts = TableOpts {
+        reps,
+        iters_per_rep: iters,
+        seed,
+        gwtf_restart_recovery: args.flag("recovery-restart"),
+        no_anneal: args.flag("no-anneal"),
+        sum_objective: args.flag("sum-objective"),
+    };
+    let dir = results_dir();
+    let mut ran = false;
+
+    let emit = |t: &MetricsTable, name: &str| -> Result<()> {
+        t.write(&dir, name)?;
+        println!("{}", t.to_markdown());
+        println!("-> {}/{}.md / .csv", dir.display(), name);
+        Ok(())
+    };
+
+    if target == "table2" || target == "all" {
+        emit(&run_table2(&opts)?, "table2")?;
+        ran = true;
+    }
+    if target == "table3" || target == "all" {
+        emit(&run_table3(&opts)?, "table3")?;
+        ran = true;
+    }
+    if target == "table6" || target == "all" {
+        emit(&run_table6(&opts)?, "table6")?;
+        ran = true;
+    }
+    if target == "fig5" || target == "all" {
+        let runs = args.usize_or("runs", 10)?;
+        let r = run_fig5(runs, seed, args.flag("full"))?;
+        r.write(&dir, "fig5")?;
+        println!("# Fig. 5 — improvement per Table IV setting (higher = better)");
+        println!("{}", gwtf::experiments::fig5_summary(&r));
+        println!("-> {}/fig5.csv", dir.display());
+        ran = true;
+    }
+    if target == "fig7" || target == "all" {
+        let r = run_fig7(reps.min(10), seed)?;
+        r.write(&dir, "fig7")?;
+        println!("{}", r.to_text());
+        println!("-> {}/fig7.csv", dir.display());
+        ran = true;
+    }
+    if target == "fig6" {
+        let opts6 = Fig6Opts {
+            steps: args.usize_or("steps", 20)?,
+            churn_p: args.f64_or("churn", 0.1)?,
+            family: args.str_or("family", "llama"),
+            seed,
+            ..Default::default()
+        };
+        let (r, max_delta) = run_fig6(&opts6)?;
+        r.write(&dir, "fig6")?;
+        println!("{}", r.to_text());
+        println!("max |loss(gwtf) - loss(centralized)| = {max_delta:.2e}");
+        println!("-> {}/fig6.csv", dir.display());
+        ran = true;
+    }
+    if !ran {
+        bail!("unknown bench target {target:?}");
+    }
+    Ok(())
+}
+
+fn join_demo(args: &Args) -> Result<()> {
+    // Fig. 3: a joining node of high capacity lands in the bottleneck
+    // stage, moving the bottleneck to the next-tightest stage.
+    let seed = args.u64_or("seed", 3)?;
+    let mut rng = Rng::new(seed);
+    let setting = gwtf::baselines::JoinSetting {
+        name: "fig3-demo",
+        stages: 3,
+        n_relays: 9,
+        n_candidates: 3,
+        cap_range: (1.0, 4.0),
+        inter_range: (1.0, 20.0),
+        intra_extra: (50.0, 100.0),
+        random_stage_sizes: false,
+    };
+    let exp = gwtf::baselines::JoinExperiment::generate(&setting, seed);
+    let prob = exp.problem();
+    println!("# Fig. 3 join walkthrough");
+    for s in 0..prob.graph.n_stages() {
+        println!("stage {s}: capacity {}", prob.stage_capacity(s));
+    }
+    let sol = mcmf_min_cost(&prob);
+    println!("initial: {} flows at total cost {:.1}", sol.flow, sol.total_cost);
+    let util = utilization_query(&prob, &vec![sol.flow; prob.graph.n_stages()]);
+    let mut leader = Leader::new(NodeId(0), JoinPolicy::UtilizationRanked);
+    for &(n, c) in &exp.pending {
+        println!("candidate {n} announces capacity {c}");
+        leader.on_join_request(n, c);
+    }
+    for (cand, stage) in leader.place(&util, &mut rng) {
+        println!("leader assigns {cand} -> stage {stage}");
+    }
+    let out = exp.run(gwtf::baselines::JoinPolicyExt::Gwtf);
+    println!(
+        "after insertions: cost {:.1} -> {:.1} (improvement {:.1}%)",
+        out.cost_before,
+        out.cost_after,
+        out.improvement() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,261 @@
+//! Experiment metric accumulation + report writers.
+//!
+//! Every bench target funnels its per-repetition
+//! [`crate::sim::IterationMetrics`] through a [`MetricsTable`] and emits
+//! the paper-style `mean ± std` rows as Markdown and CSV under
+//! `bench_results/` (the tables in EXPERIMENTS.md are generated this way).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::sim::IterationMetrics;
+use crate::util::Summary;
+
+/// Accumulates per-iteration samples for one (system, setting) cell.
+#[derive(Debug, Clone, Default)]
+pub struct CellAccumulator {
+    pub time_per_microbatch_min: Vec<f64>,
+    pub throughput: Vec<f64>,
+    pub comm_time_min: Vec<f64>,
+    pub wasted_gpu_min: Vec<f64>,
+    pub makespan_min: Vec<f64>,
+    pub fwd_recoveries: Vec<f64>,
+    pub bwd_recoveries: Vec<f64>,
+}
+
+impl CellAccumulator {
+    /// Record one iteration's outcome (seconds are converted to minutes —
+    /// the unit Tables II/III report).
+    pub fn push(&mut self, m: &IterationMetrics) {
+        if m.completed > 0 {
+            self.time_per_microbatch_min.push(m.time_per_microbatch_s() / 60.0);
+        }
+        self.throughput.push(m.completed as f64);
+        self.comm_time_min.push(m.comm_s / 60.0);
+        self.wasted_gpu_min.push(m.wasted_gpu_s / 60.0);
+        self.makespan_min.push(m.makespan_s / 60.0);
+        self.fwd_recoveries.push(m.fwd_recoveries as f64);
+        self.bwd_recoveries.push(m.bwd_recoveries as f64);
+    }
+
+    pub fn row(&self) -> BTreeMap<&'static str, Summary> {
+        let mut r = BTreeMap::new();
+        r.insert("time_per_microbatch_min", Summary::of(&self.time_per_microbatch_min));
+        r.insert("throughput", Summary::of(&self.throughput));
+        r.insert("comm_time_min", Summary::of(&self.comm_time_min));
+        r.insert("wasted_gpu_min", Summary::of(&self.wasted_gpu_min));
+        r.insert("makespan_min", Summary::of(&self.makespan_min));
+        r
+    }
+}
+
+/// A named grid of result cells: (row label, column label) -> samples.
+#[derive(Debug, Default)]
+pub struct MetricsTable {
+    pub title: String,
+    pub cells: BTreeMap<(String, String), CellAccumulator>,
+}
+
+impl MetricsTable {
+    pub fn new(title: impl Into<String>) -> Self {
+        MetricsTable { title: title.into(), cells: BTreeMap::new() }
+    }
+
+    pub fn cell(&mut self, row: &str, col: &str) -> &mut CellAccumulator {
+        self.cells.entry((row.to_string(), col.to_string())).or_default()
+    }
+
+    fn rows(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.cells.keys().map(|(r, _)| r.clone()).collect();
+        v.dedup();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    fn cols(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.cells.keys().map(|(_, c)| c.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Paper-style Markdown: one block per metric, systems as columns.
+    pub fn to_markdown(&self) -> String {
+        let metrics = [
+            ("time_per_microbatch_min", "Time per microbatch (min)"),
+            ("throughput", "Throughput (#microb/iteration)"),
+            ("comm_time_min", "Communication time (min)"),
+            ("wasted_gpu_min", "Wasted GPU time (min)"),
+        ];
+        let rows = self.rows();
+        let cols = self.cols();
+        let mut s = format!("## {}\n\n", self.title);
+        for (key, label) in metrics {
+            s.push_str(&format!("### {label}\n\n| setting |"));
+            for c in &cols {
+                s.push_str(&format!(" {c} |"));
+            }
+            s.push_str("\n|---|");
+            for _ in &cols {
+                s.push_str("---|");
+            }
+            s.push('\n');
+            for r in &rows {
+                s.push_str(&format!("| {r} |"));
+                for c in &cols {
+                    match self.cells.get(&(r.clone(), c.clone())) {
+                        Some(acc) => {
+                            let summ = acc.row()[key];
+                            s.push_str(&format!(" {} |", summ.pm(2)));
+                        }
+                        None => s.push_str(" - |"),
+                    }
+                }
+                s.push('\n');
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Flat CSV: one line per (row, col, metric).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("setting,system,metric,mean,std,n\n");
+        for ((r, c), acc) in &self.cells {
+            for (metric, summ) in acc.row() {
+                s.push_str(&format!("{r},{c},{metric},{:.6},{:.6},{}\n", summ.mean, summ.std, summ.n));
+            }
+        }
+        s
+    }
+
+    /// Write `<dir>/<name>.md` and `<dir>/<name>.csv`.
+    pub fn write(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let mut md = std::fs::File::create(dir.join(format!("{name}.md")))?;
+        md.write_all(self.to_markdown().as_bytes())?;
+        let mut csv = std::fs::File::create(dir.join(format!("{name}.csv")))?;
+        csv.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Simple (x, y-series) plot data writer for the figure benches
+/// (Fig. 5 improvements, Fig. 6 loss curves, Fig. 7 cost-per-round).
+#[derive(Debug, Default)]
+pub struct SeriesReport {
+    pub title: String,
+    pub x_label: String,
+    /// series name -> (x, y) points
+    pub series: BTreeMap<String, Vec<(f64, f64)>>,
+}
+
+impl SeriesReport {
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>) -> Self {
+        SeriesReport { title: title.into(), x_label: x_label.into(), series: BTreeMap::new() }
+    }
+
+    pub fn push(&mut self, series: &str, x: f64, y: f64) {
+        self.series.entry(series.to_string()).or_default().push((x, y));
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("series,{},y\n", self.x_label);
+        for (name, pts) in &self.series {
+            for (x, y) in pts {
+                s.push_str(&format!("{name},{x},{y}\n"));
+            }
+        }
+        s
+    }
+
+    /// ASCII rendering (final y per series, ranked) for terminal output.
+    pub fn to_text(&self) -> String {
+        let mut s = format!("# {}\n", self.title);
+        let finals: Vec<(String, f64)> = self
+            .series
+            .iter()
+            .filter_map(|(n, pts)| pts.last().map(|&(_, y)| (n.clone(), y)))
+            .collect();
+        let max = finals.iter().map(|&(_, y)| y.abs()).fold(1e-12, f64::max);
+        for (name, y) in finals {
+            let bars = ((y.abs() / max) * 40.0).round() as usize;
+            s.push_str(&format!("{name:<24} {y:>12.4} {}\n", "#".repeat(bars)));
+        }
+        s
+    }
+
+    pub fn write(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{name}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metric(completed: usize, makespan: f64) -> IterationMetrics {
+        IterationMetrics {
+            makespan_s: makespan,
+            completed,
+            scheduled: completed,
+            comm_s: 10.0,
+            wasted_gpu_s: 1.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn accumulates_and_summarizes() {
+        let mut t = MetricsTable::new("test");
+        t.cell("homog 0%", "gwtf").push(&metric(8, 240.0));
+        t.cell("homog 0%", "gwtf").push(&metric(8, 260.0));
+        t.cell("homog 0%", "swarm").push(&metric(7, 300.0));
+        let md = t.to_markdown();
+        assert!(md.contains("Time per microbatch"));
+        assert!(md.contains("gwtf"));
+        assert!(md.contains("swarm"));
+        let csv = t.to_csv();
+        assert!(csv.lines().count() > 5);
+        assert!(csv.contains("homog 0%,gwtf,throughput,8.0"));
+    }
+
+    #[test]
+    fn zero_completed_skips_time_metric() {
+        let mut acc = CellAccumulator::default();
+        acc.push(&metric(0, 100.0));
+        assert!(acc.time_per_microbatch_min.is_empty());
+        assert_eq!(acc.throughput, vec![0.0]);
+    }
+
+    #[test]
+    fn series_csv_and_text() {
+        let mut r = SeriesReport::new("fig", "round");
+        r.push("gwtf", 1.0, 10.0);
+        r.push("gwtf", 2.0, 8.0);
+        r.push("swarm", 1.0, 12.0);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("series,round,y"));
+        assert!(csv.contains("gwtf,2,8"));
+        let txt = r.to_text();
+        assert!(txt.contains("gwtf"));
+    }
+
+    #[test]
+    fn write_creates_files() {
+        let dir = std::env::temp_dir().join("gwtf_metrics_test");
+        let mut t = MetricsTable::new("t");
+        t.cell("a", "b").push(&metric(1, 1.0));
+        t.write(&dir, "unit").unwrap();
+        assert!(dir.join("unit.md").exists());
+        assert!(dir.join("unit.csv").exists());
+    }
+}

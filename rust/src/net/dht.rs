@@ -1,0 +1,282 @@
+//! Kademlia-style DHT for peer discovery (paper §IV / §V-B).
+//!
+//! Joining nodes discover other peers and the elected leader's identity
+//! through a distributed hash table keyed by the XOR metric
+//! (Maymounkov & Mazières).  This is the partial-membership substrate:
+//! no node ever needs a global view — a joining node bootstraps from any
+//! live contact, performs an iterative lookup towards its own id, and ends
+//! up with O(k·log n) known peers.
+
+use std::collections::BTreeMap;
+
+use crate::cost::NodeId;
+use crate::util::Rng;
+
+const BUCKET_BITS: usize = 64;
+
+/// One node's routing table: `k`-buckets by XOR-distance prefix.
+#[derive(Debug, Clone)]
+pub struct RoutingTable {
+    pub self_key: u64,
+    pub k: usize,
+    buckets: Vec<Vec<(u64, NodeId)>>,
+}
+
+impl RoutingTable {
+    pub fn new(self_key: u64, k: usize) -> Self {
+        RoutingTable { self_key, k, buckets: vec![Vec::new(); BUCKET_BITS] }
+    }
+
+    fn bucket_of(&self, key: u64) -> usize {
+        let d = self.self_key ^ key;
+        if d == 0 {
+            0
+        } else {
+            (BUCKET_BITS - 1) - d.leading_zeros() as usize
+        }
+    }
+
+    /// Insert a contact (LRU-ish: keep the first k seen, as classic Kademlia
+    /// prefers long-lived contacts).
+    pub fn insert(&mut self, key: u64, id: NodeId) {
+        if key == self.self_key {
+            return;
+        }
+        let b = self.bucket_of(key);
+        let bucket = &mut self.buckets[b];
+        if bucket.iter().any(|&(k2, _)| k2 == key) {
+            return;
+        }
+        if bucket.len() < self.k {
+            bucket.push((key, id));
+        }
+    }
+
+    pub fn remove(&mut self, key: u64) {
+        let b = self.bucket_of(key);
+        self.buckets[b].retain(|&(k2, _)| k2 != key);
+    }
+
+    /// The `count` contacts closest (XOR) to `target` that this node knows.
+    pub fn closest(&self, target: u64, count: usize) -> Vec<(u64, NodeId)> {
+        let mut all: Vec<(u64, NodeId)> =
+            self.buckets.iter().flatten().copied().collect();
+        all.sort_by_key(|&(k2, _)| k2 ^ target);
+        all.truncate(count);
+        all
+    }
+
+    pub fn contacts(&self) -> Vec<(u64, NodeId)> {
+        self.buckets.iter().flatten().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A whole-DHT simulation: per-node routing tables plus the stored records
+/// (we store the leader pointer and stage directories under well-known keys).
+#[derive(Debug, Clone)]
+pub struct Dht {
+    pub tables: BTreeMap<u64, RoutingTable>,
+    pub keys: BTreeMap<NodeId, u64>,
+    records: BTreeMap<u64, Vec<u8>>,
+    k: usize,
+}
+
+impl Dht {
+    pub fn new(k: usize) -> Self {
+        Dht { tables: BTreeMap::new(), keys: BTreeMap::new(), records: BTreeMap::new(), k }
+    }
+
+    /// Hash a NodeId onto the key ring (splitmix of the index).
+    pub fn key_for(id: NodeId) -> u64 {
+        let mut z = (id.0 as u64).wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Join the DHT: bootstrap from `contact` (None for the first node),
+    /// then iterative-lookup towards the joiner's own key, filling buckets.
+    pub fn join(&mut self, id: NodeId, contact: Option<NodeId>, _rng: &mut Rng) {
+        let key = Self::key_for(id);
+        let mut table = RoutingTable::new(key, self.k);
+        if let Some(c) = contact {
+            let ckey = self.keys[&c];
+            table.insert(ckey, c);
+            // Iterative lookup for our own key through the contact graph.
+            let found = self.iterative_lookup_from(ckey, key);
+            for (k2, nid) in found {
+                table.insert(k2, nid);
+            }
+        }
+        // Existing nodes learn about the joiner when it contacts them
+        // (Kademlia's passive table maintenance).
+        let learned: Vec<u64> = table.contacts().iter().map(|&(k2, _)| k2).collect();
+        for k2 in learned {
+            if let Some(t) = self.tables.get_mut(&k2) {
+                t.insert(key, id);
+            }
+        }
+        self.tables.insert(key, table);
+        self.keys.insert(id, key);
+    }
+
+    /// A node leaves/crashes: other tables drop it lazily on lookup failure;
+    /// here we expunge eagerly for simulation simplicity.
+    pub fn leave(&mut self, id: NodeId) {
+        if let Some(key) = self.keys.remove(&id) {
+            self.tables.remove(&key);
+            for t in self.tables.values_mut() {
+                t.remove(key);
+            }
+        }
+    }
+
+    /// Iterative lookup: α=1 walk along closest-known contacts.
+    fn iterative_lookup_from(&self, start: u64, target: u64) -> Vec<(u64, NodeId)> {
+        let mut best: Vec<(u64, NodeId)> = Vec::new();
+        let mut cursor = start;
+        let mut visited = std::collections::BTreeSet::new();
+        for _ in 0..BUCKET_BITS {
+            if !visited.insert(cursor) {
+                break;
+            }
+            let Some(t) = self.tables.get(&cursor) else { break };
+            let near = t.closest(target, self.k);
+            for &(k2, nid) in &near {
+                if !best.iter().any(|&(b, _)| b == k2) {
+                    best.push((k2, nid));
+                }
+            }
+            best.sort_by_key(|&(k2, _)| k2 ^ target);
+            best.truncate(self.k);
+            match best.first() {
+                Some(&(k2, _)) if k2 != cursor && (k2 ^ target) < (cursor ^ target) => cursor = k2,
+                _ => break,
+            }
+        }
+        best
+    }
+
+    /// Lookup the `count` live nodes closest to an arbitrary key, from the
+    /// point of view of `asking` (partial knowledge only).
+    pub fn lookup(&self, asking: NodeId, target: u64, count: usize) -> Vec<NodeId> {
+        let Some(&akey) = self.keys.get(&asking) else { return vec![] };
+        let mut out = self.iterative_lookup_from(akey, target);
+        out.truncate(count);
+        out.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// Store a record (e.g. the leader pointer) at the nodes closest to `key`.
+    pub fn put(&mut self, key: u64, value: Vec<u8>) {
+        self.records.insert(key, value);
+    }
+
+    pub fn get(&self, key: u64) -> Option<&Vec<u8>> {
+        self.records.get(&key)
+    }
+
+    /// Known peers of a node (its partial membership view).
+    pub fn peers_of(&self, id: NodeId) -> Vec<NodeId> {
+        self.keys
+            .get(&id)
+            .and_then(|k| self.tables.get(k))
+            .map(|t| t.contacts().into_iter().map(|(_, n)| n).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn contains(&self, id: NodeId) -> bool {
+        self.keys.contains_key(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+/// Well-known record key for the elected leader's identity.
+pub const LEADER_KEY: u64 = 0x1EADE2;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(n: usize) -> Dht {
+        let mut dht = Dht::new(8);
+        let mut rng = Rng::new(0);
+        dht.join(NodeId(0), None, &mut rng);
+        for i in 1..n {
+            let contact = NodeId(i % i.max(1).min(i)); // always bootstrap from node 0..i
+            dht.join(NodeId(i), Some(NodeId(contact.0 % i)), &mut rng);
+        }
+        dht
+    }
+
+    #[test]
+    fn all_nodes_join() {
+        let dht = build(32);
+        assert_eq!(dht.len(), 32);
+        for i in 0..32 {
+            assert!(dht.contains(NodeId(i)));
+        }
+    }
+
+    #[test]
+    fn partial_views_bounded() {
+        let dht = build(64);
+        for i in 0..64 {
+            let peers = dht.peers_of(NodeId(i));
+            assert!(!peers.is_empty(), "node {i} isolated");
+            // k=8 per bucket bounds the view well below global membership
+            assert!(peers.len() < 64);
+        }
+    }
+
+    #[test]
+    fn lookup_returns_close_keys() {
+        let dht = build(64);
+        let target = Dht::key_for(NodeId(40));
+        let found = dht.lookup(NodeId(3), target, 4);
+        assert!(!found.is_empty());
+    }
+
+    #[test]
+    fn leave_removes_node() {
+        let mut dht = build(16);
+        dht.leave(NodeId(5));
+        assert!(!dht.contains(NodeId(5)));
+        for i in 0..16 {
+            if i == 5 {
+                continue;
+            }
+            assert!(!dht.peers_of(NodeId(i)).contains(&NodeId(5)));
+        }
+    }
+
+    #[test]
+    fn records_roundtrip() {
+        let mut dht = build(4);
+        dht.put(LEADER_KEY, vec![7]);
+        assert_eq!(dht.get(LEADER_KEY), Some(&vec![7]));
+    }
+
+    #[test]
+    fn keys_unique() {
+        let keys: Vec<u64> = (0..100).map(|i| Dht::key_for(NodeId(i))).collect();
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len());
+    }
+}

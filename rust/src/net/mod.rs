@@ -1,0 +1,13 @@
+//! Simulated geo-distributed volunteer network.
+//!
+//! The paper's testbed hosts logical nodes on 5 GPUs and throttles the
+//! links to mimic 10 geographic locations (50–500 Mb/s between regions).
+//! We reproduce that envelope with a deterministic topology generator plus
+//! a Kademlia-style DHT for partial-membership peer discovery
+//! (DESIGN.md §Substitutions).
+
+pub mod dht;
+pub mod topology;
+
+pub use dht::Dht;
+pub use topology::{Topology, TopologyConfig};

@@ -1,0 +1,194 @@
+//! Topology generator: nodes in geographic regions, asymmetric links.
+
+use crate::cost::{comm_cost, edge_cost, LinkParams, NodeId, NodeProfile};
+use crate::util::Rng;
+
+/// Parameters of the generated network.
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    /// Number of nodes.
+    pub n_nodes: usize,
+    /// Number of geographic regions (the paper uses 10 locations).
+    pub n_regions: usize,
+    /// Inter-region bandwidth range, Mb/s (paper: 50–500 Mb/s).
+    pub inter_bw_mbps: (f64, f64),
+    /// Intra-region bandwidth range, Mb/s.
+    pub intra_bw_mbps: (f64, f64),
+    /// Inter-region one-way latency range, seconds.
+    pub inter_lat_s: (f64, f64),
+    /// Intra-region one-way latency range, seconds.
+    pub intra_lat_s: (f64, f64),
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig {
+            n_nodes: 18,
+            n_regions: 10,
+            inter_bw_mbps: (50.0, 500.0),
+            intra_bw_mbps: (700.0, 1000.0),
+            inter_lat_s: (0.020, 0.200),
+            intra_lat_s: (0.001, 0.005),
+        }
+    }
+}
+
+/// The full (simulated) network state: regions, directed links, profiles.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub region: Vec<usize>,
+    /// `links[i][j]` = params of the directed link i -> j.
+    pub links: Vec<Vec<LinkParams>>,
+    pub profiles: Vec<NodeProfile>,
+}
+
+impl Topology {
+    /// Deterministically generate a topology from a seed.
+    pub fn generate(cfg: &TopologyConfig, rng: &mut Rng) -> Topology {
+        let n = cfg.n_nodes;
+        let region: Vec<usize> = (0..n).map(|_| rng.index(cfg.n_regions.max(1))).collect();
+        let mut links = vec![vec![LinkParams::new(0.0, f64::INFINITY); n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let same = region[i] == region[j];
+                let (bw_lo, bw_hi) = if same { cfg.intra_bw_mbps } else { cfg.inter_bw_mbps };
+                let (lat_lo, lat_hi) = if same { cfg.intra_lat_s } else { cfg.inter_lat_s };
+                // Each direction sampled independently: links are asymmetric.
+                links[i][j] = LinkParams::new(
+                    rng.uniform(lat_lo, lat_hi),
+                    rng.uniform(bw_lo, bw_hi) * 1e6 / 8.0,
+                );
+            }
+        }
+        let profiles = vec![NodeProfile::new(1.0, 1); n];
+        Topology { region, links, profiles }
+    }
+
+    pub fn n(&self) -> usize {
+        self.region.len()
+    }
+
+    /// Eq. 1 cost between two nodes for a given payload.
+    pub fn cost(&self, i: NodeId, j: NodeId, size_bytes: f64) -> f64 {
+        edge_cost(
+            &self.profiles[i.0],
+            &self.profiles[j.0],
+            &self.links[i.0][j.0],
+            &self.links[j.0][i.0],
+            size_bytes,
+        )
+    }
+
+    /// Communication-only cost (compute accounted separately).
+    pub fn comm(&self, i: NodeId, j: NodeId, size_bytes: f64) -> f64 {
+        comm_cost(&self.links[i.0][j.0], &self.links[j.0][i.0], size_bytes)
+    }
+
+    /// One-way message delay i -> j for `size_bytes`.
+    pub fn delay(&self, i: NodeId, j: NodeId, size_bytes: f64) -> f64 {
+        self.links[i.0][j.0].one_way_s(size_bytes)
+    }
+
+    /// Set every node's compute profile (homogeneous case).
+    pub fn with_uniform_profiles(mut self, p: NodeProfile) -> Self {
+        for q in self.profiles.iter_mut() {
+            *q = p;
+        }
+        self
+    }
+
+    /// Assign per-node profiles.
+    pub fn set_profile(&mut self, i: NodeId, p: NodeProfile) {
+        self.profiles[i.0] = p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(seed: u64) -> Topology {
+        Topology::generate(&TopologyConfig::default(), &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = topo(5);
+        let b = topo(5);
+        assert_eq!(a.region, b.region);
+        assert_eq!(a.links[0][1], b.links[0][1]);
+    }
+
+    #[test]
+    fn intra_region_faster_than_inter() {
+        let t = topo(1);
+        let n = t.n();
+        let mut intra: Vec<f64> = vec![];
+        let mut inter: Vec<f64> = vec![];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let l = t.links[i][j].latency_s;
+                if t.region[i] == t.region[j] {
+                    intra.push(l);
+                } else {
+                    inter.push(l);
+                }
+            }
+        }
+        if !intra.is_empty() && !inter.is_empty() {
+            let ai = intra.iter().sum::<f64>() / intra.len() as f64;
+            let ae = inter.iter().sum::<f64>() / inter.len() as f64;
+            assert!(ai < ae, "intra {ai} should beat inter {ae}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_within_paper_envelope() {
+        let t = topo(2);
+        for i in 0..t.n() {
+            for j in 0..t.n() {
+                if i == j || t.region[i] == t.region[j] {
+                    continue;
+                }
+                let mbps = t.links[i][j].bandwidth_bps * 8.0 / 1e6;
+                assert!((50.0..=500.0).contains(&mbps), "{mbps}");
+            }
+        }
+    }
+
+    #[test]
+    fn asymmetric_links_exist() {
+        let t = topo(3);
+        let mut any_asym = false;
+        for i in 0..t.n() {
+            for j in (i + 1)..t.n() {
+                if (t.links[i][j].latency_s - t.links[j][i].latency_s).abs() > 1e-9 {
+                    any_asym = true;
+                }
+            }
+        }
+        assert!(any_asym);
+    }
+
+    #[test]
+    fn cost_consistent_with_eq1() {
+        let t = topo(4);
+        let (i, j) = (NodeId(0), NodeId(1));
+        let c = t.cost(i, j, 1e6);
+        let manual = edge_cost(
+            &t.profiles[0],
+            &t.profiles[1],
+            &t.links[0][1],
+            &t.links[1][0],
+            1e6,
+        );
+        assert_eq!(c, manual);
+        assert!((t.cost(i, j, 1e6) - t.cost(j, i, 1e6)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,160 @@
+//! PJRT runtime client: load HLO-text artifacts, compile once, execute.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, which sidesteps the 64-bit-id protos that jax >= 0.5
+//! emits and xla_extension 0.5.1 rejects.
+//!
+//! Executables are cached per artifact, so each stage function is compiled
+//! exactly once per process regardless of how many logical nodes execute
+//! it (the simulated volunteers all share one CPU PJRT client).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::ArtifactEntry;
+use super::tensor::HostTensor;
+
+/// Cumulative execution statistics (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_s: f64,
+    pub executions: usize,
+    pub execute_s: f64,
+}
+
+/// A compiled stage function ready to run.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub n_inputs: usize,
+    /// Which of the logical inputs the compiled program takes (jax prunes
+    /// arguments the computation never reads — see `manifest.rs`).
+    pub kept_inputs: Vec<usize>,
+    pub n_outputs: usize,
+}
+
+impl Executable {
+    /// Run with the full logical argument list; prunes to the kept inputs
+    /// and returns the flattened output leaves.
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = args.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Borrowed-argument variant: the hot path passes parameter leaves by
+    /// reference, avoiding a full parameter memcpy per stage call.
+    pub fn run_refs(&self, args: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.n_inputs {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.n_inputs,
+                args.len()
+            ));
+        }
+        // Stage through caller-owned PjRtBuffers + execute_b: the crate's
+        // literal-taking `execute` leaks its internal input buffers (they
+        // are `release()`d into the C call and never freed), which an
+        // earlier revision hit at ~7 MB per stage call.  Owned buffers are
+        // freed by Drop.
+        let client = self.exe.client();
+        let mut buffers = Vec::with_capacity(self.kept_inputs.len());
+        for &i in &self.kept_inputs {
+            buffers.push(args[i].to_buffer(client)?);
+        }
+        let out = self.exe.execute_b(&buffers)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: one tuple of output leaves.
+        let leaves = tuple.to_tuple()?;
+        let mut res = Vec::with_capacity(leaves.len());
+        for l in &leaves {
+            res.push(HostTensor::from_literal(l)?);
+        }
+        if res.len() != self.n_outputs {
+            return Err(anyhow!(
+                "{}: manifest promises {} outputs, got {}",
+                self.name,
+                self.n_outputs,
+                res.len()
+            ));
+        }
+        Ok(res)
+    }
+}
+
+/// Shared PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()), stats: Mutex::new(RuntimeStats::default()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact (cached by name).
+    pub fn load(&self, entry: &ArtifactEntry) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&entry.name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("loading HLO text {:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", entry.name))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.compiles += 1;
+            s.compile_s += dt;
+        }
+        let executable = std::sync::Arc::new(Executable {
+            name: entry.name.clone(),
+            exe,
+            n_inputs: entry.inputs.len(),
+            kept_inputs: entry.kept_inputs.clone(),
+            n_outputs: entry.outputs.len(),
+        });
+        self.cache.lock().unwrap().insert(entry.name.clone(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Load + run in one call, tracking execute time.
+    pub fn run(&self, entry: &ArtifactEntry, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = args.iter().collect();
+        self.run_refs(entry, &refs)
+    }
+
+    /// Borrowed-argument variant (see [`Executable::run_refs`]).
+    pub fn run_refs(&self, entry: &ArtifactEntry, args: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.load(entry)?;
+        let t0 = Instant::now();
+        let out = exe.run_refs(args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.execute_s += dt;
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.lock().unwrap()
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

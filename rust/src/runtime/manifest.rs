@@ -1,0 +1,254 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! The manifest records, per model family, the exact positional
+//! input/output specs of every lowered stage function (pytrees are
+//! flattened in `jax.tree_util` order on the Python side), the parameter
+//! leaf names in that order, and the model configuration the artifacts
+//! were lowered for.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::DType;
+
+/// Shape + dtype of one positional argument or result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("spec missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered function: HLO file + its flattened signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub input_names: Vec<String>,
+    /// Indices (into `inputs`) of arguments the compiled program actually
+    /// takes — jax prunes args the computation never reads.
+    pub kept_inputs: Vec<usize>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model configuration the family was lowered at (mirrors `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct FamilyConfig {
+    pub family: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub microbatch: usize,
+    pub blocks_per_stage: usize,
+    pub n_stages: usize,
+    pub param_count: usize,
+    pub activation_bytes: usize,
+}
+
+/// One family's artifacts, keyed by function name (`stage_fwd`, ...).
+#[derive(Debug, Clone)]
+pub struct FamilyArtifacts {
+    pub config: FamilyConfig,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl FamilyArtifacts {
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| anyhow!("no artifact {name:?}"))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub families: BTreeMap<String, FamilyArtifacts>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+
+        let fingerprint =
+            j.get("fingerprint").and_then(Json::as_str).unwrap_or_default().to_string();
+        let mut families = BTreeMap::new();
+        let fam_obj = j
+            .get("families")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing families"))?;
+        for (fam_name, fam) in fam_obj {
+            let cfg = fam.get("config").ok_or_else(|| anyhow!("family missing config"))?;
+            let gu = |k: &str| -> Result<usize> {
+                cfg.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config missing {k}"))
+            };
+            let config = FamilyConfig {
+                family: fam_name.clone(),
+                vocab_size: gu("vocab_size")?,
+                d_model: gu("d_model")?,
+                n_heads: gu("n_heads")?,
+                n_layers: gu("n_layers")?,
+                d_ff: gu("d_ff")?,
+                seq_len: gu("seq_len")?,
+                microbatch: gu("microbatch")?,
+                blocks_per_stage: gu("blocks_per_stage")?,
+                n_stages: fam.get("n_stages").and_then(Json::as_usize).unwrap_or(0),
+                param_count: fam.get("param_count").and_then(Json::as_usize).unwrap_or(0),
+                activation_bytes: fam.get("activation_bytes").and_then(Json::as_usize).unwrap_or(0),
+            };
+            let mut entries = BTreeMap::new();
+            let arts = fam
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("family missing artifacts"))?;
+            for (name, e) in arts {
+                let file = e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+                let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                    e.get(key)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                        .iter()
+                        .map(TensorSpec::parse)
+                        .collect()
+                };
+                let input_names = e
+                    .get("input_names")
+                    .and_then(Json::as_arr)
+                    .map(|v| {
+                        v.iter().filter_map(|s| s.as_str().map(str::to_string)).collect::<Vec<_>>()
+                    })
+                    .unwrap_or_default();
+                let inputs = parse_specs("inputs")?;
+                let kept_inputs = e
+                    .get("kept_inputs")
+                    .and_then(Json::as_arr)
+                    .map(|v| v.iter().filter_map(Json::as_usize).collect::<Vec<_>>())
+                    .unwrap_or_else(|| (0..inputs.len()).collect());
+                entries.insert(
+                    name.clone(),
+                    ArtifactEntry {
+                        name: name.clone(),
+                        file: dir.join(file),
+                        inputs,
+                        input_names,
+                        kept_inputs,
+                        outputs: parse_specs("outputs")?,
+                    },
+                );
+            }
+            families.insert(fam_name.clone(), FamilyArtifacts { config, entries });
+        }
+        Ok(Manifest { dir, fingerprint, families })
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilyArtifacts> {
+        self.families
+            .get(name)
+            .ok_or_else(|| anyhow!("family {name:?} not in manifest (have: {:?})", self.families.keys()))
+    }
+
+    /// Default artifacts directory (env `GWTF_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GWTF_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "fingerprint": "abc",
+          "families": {
+            "llama": {
+              "config": {"family": "llama", "vocab_size": 256, "d_model": 64,
+                         "n_heads": 4, "n_layers": 4, "d_ff": 192, "seq_len": 32,
+                         "microbatch": 2, "blocks_per_stage": 2, "norm_eps": 1e-5,
+                         "rope_theta": 10000.0, "use_pallas": true, "init_std": 0.02},
+              "param_count": 12345,
+              "activation_bytes": 16384,
+              "n_stages": 2,
+              "artifacts": {
+                "stage_fwd": {
+                  "file": "llama_stage_fwd.hlo.txt",
+                  "inputs": [{"shape": [2, 64, 64], "dtype": "float32"},
+                             {"shape": [2, 32, 64], "dtype": "float32"}],
+                  "input_names": ["0.attn_norm", "1"],
+                  "outputs": [{"shape": [2, 32, 64], "dtype": "float32"}],
+                  "sha256": "x", "hlo_bytes": 10
+                }
+              }
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("gwtf_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.fingerprint, "abc");
+        let fam = m.family("llama").unwrap();
+        assert_eq!(fam.config.d_model, 64);
+        assert_eq!(fam.config.n_stages, 2);
+        let e = fam.entry("stage_fwd").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![2, 64, 64]);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.input_names[0], "0.attn_norm");
+        assert!(e.file.ends_with("llama_stage_fwd.hlo.txt"));
+        assert!(m.family("gpt").is_err());
+        assert!(fam.entry("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn spec_elements() {
+        let s = TensorSpec { shape: vec![2, 3, 4], dtype: DType::F32 };
+        assert_eq!(s.elements(), 24);
+    }
+}

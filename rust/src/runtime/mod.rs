@@ -1,0 +1,27 @@
+//! PJRT runtime: load + execute the AOT-compiled stage computations.
+//!
+//! Python lowers the L2/L1 model code to HLO text once (`make artifacts`);
+//! at runtime the Rust coordinator drives *real* stage computation through
+//! this module — Python is never on the training path.
+//!
+//! - [`manifest`] — the artifact contract (`artifacts/manifest.json`).
+//! - [`tensor`]   — host tensors crossing the PJRT boundary.
+//! - [`client`]   — PJRT CPU client with a compile-once executable cache.
+//! - [`stage`]    — typed executors: relay block stages and the data-node
+//!   embed+head shard, plus gradient-averaging (the DP aggregation math).
+
+pub mod client;
+pub mod manifest;
+pub mod stage;
+pub mod tensor;
+
+pub use client::{Executable, Runtime, RuntimeStats};
+pub use manifest::{ArtifactEntry, FamilyArtifacts, FamilyConfig, Manifest, TensorSpec};
+pub use stage::{BlockStage, DataNodeModel, GradAccumulator, Leaves};
+pub use tensor::{DType, HostTensor};
+
+/// Quick connectivity check used by `gwtf doctor`.
+pub fn smoke() -> anyhow::Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}

@@ -1,0 +1,213 @@
+//! Stage executors: typed wrappers over the AOT-lowered stage functions.
+//!
+//! The pipeline decomposes exactly as in the paper (§II): the *data node*
+//! holds the embedding + head/loss stages (first and last stage colocated),
+//! and each *relay stage* holds `blocks_per_stage` transformer blocks.
+//! Every executor owns its flattened parameter leaves (in the manifest's
+//! pytree order) and drives the corresponding `*_init` / `*_fwd` / `*_bwd`
+//! / `*_update` artifacts through the shared [`super::Runtime`].
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::client::Runtime;
+use super::manifest::FamilyArtifacts;
+use super::tensor::HostTensor;
+
+/// Flattened parameter (or gradient) leaves in manifest order.
+pub type Leaves = Vec<HostTensor>;
+
+/// Accumulates gradient leaves and averages them (DP aggregation math).
+#[derive(Debug, Clone, Default)]
+pub struct GradAccumulator {
+    sum: Option<Leaves>,
+    count: usize,
+}
+
+impl GradAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, grads: Leaves) -> Result<()> {
+        match &mut self.sum {
+            None => self.sum = Some(grads),
+            Some(acc) => {
+                if acc.len() != grads.len() {
+                    return Err(anyhow!("grad leaf count mismatch: {} vs {}", acc.len(), grads.len()));
+                }
+                for (a, g) in acc.iter_mut().zip(&grads) {
+                    a.add_assign(g)?;
+                }
+            }
+        }
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Average of everything added so far; resets the accumulator.
+    pub fn take_mean(&mut self) -> Result<Leaves> {
+        let mut acc = self.sum.take().ok_or_else(|| anyhow!("no gradients accumulated"))?;
+        let k = 1.0 / self.count as f32;
+        for a in acc.iter_mut() {
+            a.scale(k)?;
+        }
+        self.count = 0;
+        Ok(acc)
+    }
+}
+
+/// One relay stage: `blocks_per_stage` transformer blocks.
+pub struct BlockStage {
+    rt: Arc<Runtime>,
+    fam: FamilyArtifacts,
+    pub params: Leaves,
+    /// Pipeline position (0-based relay stage index), for diagnostics.
+    pub index: usize,
+}
+
+impl BlockStage {
+    /// Initialize stage parameters from a seed (the `stage_init` artifact).
+    pub fn init(rt: Arc<Runtime>, fam: &FamilyArtifacts, index: usize, seed: u32) -> Result<Self> {
+        let params = rt.run(fam.entry("stage_init")?, &[HostTensor::scalar_u32(seed)])?;
+        Ok(BlockStage { rt, fam: fam.clone(), params, index })
+    }
+
+    /// Forward: activations in, activations out.
+    pub fn forward(&self, x: &HostTensor) -> Result<HostTensor> {
+        let mut args: Vec<&HostTensor> = self.params.iter().collect();
+        args.push(x);
+        let mut out = self.rt.run_refs(self.fam.entry("stage_fwd")?, &args)?;
+        out.pop().ok_or_else(|| anyhow!("stage_fwd returned nothing"))
+    }
+
+    /// Backward: (saved input, upstream grad) -> (param grads, input grad).
+    pub fn backward(&self, x: &HostTensor, dy: &HostTensor) -> Result<(Leaves, HostTensor)> {
+        let mut args: Vec<&HostTensor> = self.params.iter().collect();
+        args.push(x);
+        args.push(dy);
+        let mut out = self.rt.run_refs(self.fam.entry("stage_bwd")?, &args)?;
+        let dx = out.pop().ok_or_else(|| anyhow!("stage_bwd returned nothing"))?;
+        Ok((out, dx))
+    }
+
+    /// SGD step with (averaged) gradient leaves.
+    pub fn update(&mut self, grads: &Leaves, lr: f32) -> Result<()> {
+        let lr = HostTensor::scalar_f32(lr);
+        let mut args: Vec<&HostTensor> = self.params.iter().collect();
+        args.extend(grads.iter());
+        args.push(&lr);
+        self.params = self.rt.run_refs(self.fam.entry("stage_update")?, &args)?;
+        Ok(())
+    }
+}
+
+/// The data node's model shards: embedding (first stage) + head/loss (last
+/// stage), colocated as in the paper.
+pub struct DataNodeModel {
+    rt: Arc<Runtime>,
+    fam: FamilyArtifacts,
+    pub embed_params: Leaves,
+    pub head_params: Leaves,
+}
+
+impl DataNodeModel {
+    pub fn init(rt: Arc<Runtime>, fam: &FamilyArtifacts, seed: u32) -> Result<Self> {
+        let embed_params = rt.run(fam.entry("embed_init")?, &[HostTensor::scalar_u32(seed)])?;
+        let head_params =
+            rt.run(fam.entry("head_init")?, &[HostTensor::scalar_u32(seed ^ 0x9E37)])?;
+        Ok(DataNodeModel { rt, fam: fam.clone(), embed_params, head_params })
+    }
+
+    /// Embed a microbatch of tokens: (B, S) i32 -> (B, S, D) f32.
+    pub fn embed(&self, tokens: &HostTensor) -> Result<HostTensor> {
+        let mut args: Vec<&HostTensor> = self.embed_params.iter().collect();
+        args.push(tokens);
+        let mut out = self.rt.run_refs(self.fam.entry("embed_fwd")?, &args)?;
+        out.pop().ok_or_else(|| anyhow!("embed_fwd returned nothing"))
+    }
+
+    /// Loss only (evaluation).
+    pub fn loss(&self, x: &HostTensor, targets: &HostTensor) -> Result<f32> {
+        let mut args: Vec<&HostTensor> = self.head_params.iter().collect();
+        args.push(x);
+        args.push(targets);
+        let out = self.rt.run_refs(self.fam.entry("head_loss")?, &args)?;
+        Ok(out[0].as_f32()?[0])
+    }
+
+    /// Head backward: returns (head param grads, dx for the last relay
+    /// stage, scalar loss).
+    pub fn head_backward(
+        &self,
+        x: &HostTensor,
+        targets: &HostTensor,
+    ) -> Result<(Leaves, HostTensor, f32)> {
+        let mut args: Vec<&HostTensor> = self.head_params.iter().collect();
+        args.push(x);
+        args.push(targets);
+        let mut out = self.rt.run_refs(self.fam.entry("head_bwd")?, &args)?;
+        let loss = out.pop().ok_or_else(|| anyhow!("head_bwd returned nothing"))?;
+        let dx = out.pop().ok_or_else(|| anyhow!("head_bwd missing dx"))?;
+        Ok((out, dx, loss.as_f32()?[0]))
+    }
+
+    /// Embedding backward: gradient leaves for the embedding table.
+    pub fn embed_backward(&self, tokens: &HostTensor, dx: &HostTensor) -> Result<Leaves> {
+        let mut args: Vec<&HostTensor> = self.embed_params.iter().collect();
+        args.push(tokens);
+        args.push(dx);
+        self.rt.run_refs(self.fam.entry("embed_bwd")?, &args)
+    }
+
+    pub fn update_embed(&mut self, grads: &Leaves, lr: f32) -> Result<()> {
+        let lr = HostTensor::scalar_f32(lr);
+        let mut args: Vec<&HostTensor> = self.embed_params.iter().collect();
+        args.extend(grads.iter());
+        args.push(&lr);
+        self.embed_params = self.rt.run_refs(self.fam.entry("embed_update")?, &args)?;
+        Ok(())
+    }
+
+    pub fn update_head(&mut self, grads: &Leaves, lr: f32) -> Result<()> {
+        let lr = HostTensor::scalar_f32(lr);
+        let mut args: Vec<&HostTensor> = self.head_params.iter().collect();
+        args.extend(grads.iter());
+        args.push(&lr);
+        self.head_params = self.rt.run_refs(self.fam.entry("head_update")?, &args)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_accumulator_averages() {
+        let mut acc = GradAccumulator::new();
+        acc.add(vec![HostTensor::f32(vec![2], vec![2.0, 4.0])]).unwrap();
+        acc.add(vec![HostTensor::f32(vec![2], vec![4.0, 8.0])]).unwrap();
+        assert_eq!(acc.count(), 2);
+        let mean = acc.take_mean().unwrap();
+        assert_eq!(mean[0].as_f32().unwrap(), &[3.0, 6.0]);
+        assert_eq!(acc.count(), 0);
+        assert!(acc.take_mean().is_err());
+    }
+
+    #[test]
+    fn grad_accumulator_rejects_mismatch() {
+        let mut acc = GradAccumulator::new();
+        acc.add(vec![HostTensor::f32(vec![1], vec![1.0])]).unwrap();
+        let err = acc.add(vec![
+            HostTensor::f32(vec![1], vec![1.0]),
+            HostTensor::f32(vec![1], vec![1.0]),
+        ]);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! Host-side tensors exchanged with PJRT.
+//!
+//! The runtime moves three dtypes across the PJRT boundary (everything the
+//! AOT-lowered stage functions consume or produce): `f32` activations /
+//! gradients / params, `i32` tokens / targets, and `u32` seeds / steps.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Element type of a [`HostTensor`] (mirrors the manifest dtype strings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    /// Parse a numpy-style dtype string from `manifest.json`.
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            "uint32" | "u32" => Ok(DType::U32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U32 => "uint32",
+        }
+    }
+}
+
+/// Dense host tensor (row-major) with one of the supported dtypes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::U32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        HostTensor::U32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } | HostTensor::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+            HostTensor::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+            HostTensor::U32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected f32 tensor, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected f32 tensor, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected i32 tensor, got {:?}", other.dtype())),
+        }
+    }
+
+    /// Upload to a device buffer on `client`'s default device.
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall: the data
+    /// is copied before the call returns), so the tensor can be freed
+    /// immediately — unlike literal-based uploads, whose host->device
+    /// transfer is asynchronous.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let dims = self.shape().to_vec();
+        let buf = match self {
+            HostTensor::F32 { data, .. } => client.buffer_from_host_buffer(data, &dims, None)?,
+            HostTensor::I32 { data, .. } => client.buffer_from_host_buffer(data, &dims, None)?,
+            HostTensor::U32 { data, .. } => client.buffer_from_host_buffer(data, &dims, None)?,
+        };
+        Ok(buf)
+    }
+
+    /// Convert to an XLA literal of the right shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read back from an XLA literal (shape taken from the literal).
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        use xla::ElementType as ET;
+        match shape.ty() {
+            ET::F32 => Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            ET::S32 => Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            ET::U32 => Ok(HostTensor::U32 { shape: dims, data: lit.to_vec::<u32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Elementwise `self += other` (f32 only; used for gradient accumulation).
+    pub fn add_assign(&mut self, other: &HostTensor) -> Result<()> {
+        let b = other.as_f32()?.to_vec();
+        let a = self.as_f32_mut()?;
+        if a.len() != b.len() {
+            bail!("add_assign length mismatch: {} vs {}", a.len(), b.len());
+        }
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        Ok(())
+    }
+
+    /// Elementwise scale (f32 only; used for gradient averaging).
+    pub fn scale(&mut self, k: f32) -> Result<()> {
+        for x in self.as_f32_mut()? {
+            *x *= k;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for s in ["float32", "int32", "uint32"] {
+            assert_eq!(DType::parse(s).unwrap().as_str(), s);
+        }
+        assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn shape_and_len() {
+        let t = HostTensor::zeros_f32(vec![2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let mut a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::f32(vec![3], vec![0.5, 0.5, 0.5]);
+        a.add_assign(&b).unwrap();
+        a.scale(2.0).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let mut a = HostTensor::i32(vec![1], vec![1]);
+        let b = HostTensor::f32(vec![1], vec![1.0]);
+        assert!(a.add_assign(&b).is_err());
+        assert!(a.as_f32().is_err());
+        assert!(b.as_i32().is_err());
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        assert_eq!(HostTensor::scalar_f32(1.0).shape(), &[] as &[usize]);
+        assert_eq!(HostTensor::scalar_u32(7).len(), 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Node churn process (paper §VI Node Crashes).
+//!
+//! "Join-leave chance varies from 0% (no churn) to 10%/20% (nodes may
+//! randomly crash or rejoin each iteration)."  Each relay node flips a
+//! Bernoulli coin per iteration: an alive node crashes at a uniform random
+//! instant of the iteration; a dead node rejoins at iteration start (after
+//! re-downloading its stage weights — accounted by the coordinator).
+//! Data nodes are persistent, as in the paper.
+
+use crate::cost::NodeId;
+use crate::util::Rng;
+
+/// One iteration's churn events.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnEvents {
+    /// (node, fraction of the iteration at which it dies in [0,1)).
+    pub crashes: Vec<(NodeId, f64)>,
+    /// Nodes rejoining at the start of this iteration.
+    pub rejoins: Vec<NodeId>,
+}
+
+/// Per-iteration Bernoulli churn over the relay population.
+#[derive(Debug, Clone)]
+pub struct ChurnProcess {
+    /// Join-leave probability per node per iteration (the paper's 0/10/20%).
+    pub p: f64,
+    /// Current liveness per node id.
+    pub alive: Vec<bool>,
+    /// Relay nodes subject to churn (data nodes are persistent).
+    pub relays: Vec<NodeId>,
+    rng: Rng,
+}
+
+impl ChurnProcess {
+    pub fn new(n_nodes: usize, relays: Vec<NodeId>, p: f64, seed: u64) -> Self {
+        ChurnProcess { p, alive: vec![true; n_nodes], relays, rng: Rng::new(seed) }
+    }
+
+    pub fn is_alive(&self, n: NodeId) -> bool {
+        self.alive[n.0]
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.relays.iter().filter(|&&r| self.alive[r.0]).count()
+    }
+
+    /// Liveness as seen by the router at iteration start: nodes crashing
+    /// *during* `ev` are still up when flows are planned (the simulator
+    /// kills them mid-iteration at their sampled instant) — without this,
+    /// planners would be clairvoyant about future crashes.
+    pub fn planning_view(&self, ev: &ChurnEvents) -> Vec<bool> {
+        let mut alive = self.alive.clone();
+        for &(n, _) in &ev.crashes {
+            alive[n.0] = true;
+        }
+        alive
+    }
+
+    /// Sample one iteration of churn and apply it to the liveness state.
+    pub fn sample_iteration(&mut self) -> ChurnEvents {
+        let mut ev = ChurnEvents::default();
+        for &r in &self.relays.clone() {
+            if !self.rng.chance(self.p) {
+                continue;
+            }
+            if self.alive[r.0] {
+                // Keep at least one alive node per stage is the caller's
+                // concern (the paper assumes one node per stage survives);
+                // we crash unconditionally and let recovery handle it.
+                self.alive[r.0] = false;
+                ev.crashes.push((r, self.rng.f64()));
+            } else {
+                self.alive[r.0] = true;
+                ev.rejoins.push(r);
+            }
+        }
+        ev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn relays(n: usize) -> Vec<NodeId> {
+        (0..n).map(NodeId).collect()
+    }
+
+    #[test]
+    fn zero_churn_never_crashes() {
+        let mut c = ChurnProcess::new(10, relays(10), 0.0, 1);
+        for _ in 0..100 {
+            let ev = c.sample_iteration();
+            assert!(ev.crashes.is_empty() && ev.rejoins.is_empty());
+        }
+        assert_eq!(c.alive_count(), 10);
+    }
+
+    #[test]
+    fn crash_rate_matches_probability() {
+        let mut c = ChurnProcess::new(1000, relays(1000), 0.1, 2);
+        let ev = c.sample_iteration();
+        let flips = ev.crashes.len() + ev.rejoins.len();
+        assert!((50..=150).contains(&flips), "{flips}");
+    }
+
+    #[test]
+    fn crashed_nodes_can_rejoin() {
+        let mut c = ChurnProcess::new(50, relays(50), 0.5, 3);
+        let mut saw_rejoin = false;
+        for _ in 0..20 {
+            let ev = c.sample_iteration();
+            saw_rejoin |= !ev.rejoins.is_empty();
+            for (n, frac) in &ev.crashes {
+                assert!(!c.is_alive(*n));
+                assert!((0.0..1.0).contains(frac));
+            }
+            for n in &ev.rejoins {
+                assert!(c.is_alive(*n));
+            }
+        }
+        assert!(saw_rejoin);
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let mut a = ChurnProcess::new(20, relays(20), 0.3, 7);
+        let mut b = ChurnProcess::new(20, relays(20), 0.3, 7);
+        for _ in 0..10 {
+            let ea = a.sample_iteration();
+            let eb = b.sample_iteration();
+            assert_eq!(ea.crashes.len(), eb.crashes.len());
+            assert_eq!(ea.rejoins, eb.rejoins);
+        }
+    }
+}

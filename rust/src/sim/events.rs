@@ -1,0 +1,200 @@
+//! Deterministic virtual-time event queue.
+//!
+//! Ties are broken by insertion sequence so simulation runs are exactly
+//! reproducible regardless of float equality quirks.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Virtual timestamp in seconds.
+pub type Time = f64;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Key {
+    t: Time,
+    seq: u64,
+}
+
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap event queue over an arbitrary payload type.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<(KeyWrap, u64)>>,
+    items: std::collections::HashMap<u64, (Time, E)>,
+    seq: u64,
+    pub now: Time,
+}
+
+// BinaryHeap needs Ord; wrap Key.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct KeyWrap(Key);
+impl Eq for KeyWrap {}
+impl PartialOrd for KeyWrap {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.0.cmp(&other.0))
+    }
+}
+impl Ord for KeyWrap {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.cmp(&other.0)
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), items: Default::default(), seq: 0, now: 0.0 }
+    }
+
+    /// Schedule `ev` at absolute time `t` (must be >= now).
+    pub fn schedule(&mut self, t: Time, ev: E) {
+        debug_assert!(t >= self.now - 1e-9, "schedule into the past: {t} < {}", self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.items.insert(seq, (t, ev));
+        self.heap.push(Reverse((KeyWrap(Key { t, seq }), seq)));
+    }
+
+    /// Schedule after a delay.
+    pub fn after(&mut self, dt: Time, ev: E) {
+        self.schedule(self.now + dt, ev);
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let Reverse((_, seq)) = self.heap.pop()?;
+        let (t, ev) = self.items.remove(&seq).expect("event body");
+        self.now = t;
+        Some((t, ev))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Per-node concurrency slots: a node can hold `cap` microbatches at once.
+/// `acquire(t)` returns the earliest time >= t a slot frees up, and books it
+/// until the caller `release`s by pushing the finish time.
+#[derive(Debug, Clone)]
+pub struct Slots {
+    /// Finish times of currently-booked slots (len <= cap).
+    busy_until: Vec<Time>,
+    pub cap: usize,
+}
+
+impl Slots {
+    pub fn new(cap: usize) -> Self {
+        Slots { busy_until: Vec::new(), cap }
+    }
+
+    /// Earliest start time >= `ready` given concurrency cap: the moment the
+    /// number of still-active bookings drops below `cap`.
+    pub fn earliest_start(&self, ready: Time) -> Time {
+        let mut active: Vec<Time> =
+            self.busy_until.iter().copied().filter(|&b| b > ready + 1e-9).collect();
+        if active.len() < self.cap {
+            return ready;
+        }
+        active.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // need (active.len() - cap + 1) slots to free up
+        active[active.len() - self.cap]
+    }
+
+    /// Book a slot for [start, end). Caller must use start >= earliest_start.
+    pub fn book(&mut self, start: Time, end: Time) {
+        self.busy_until.retain(|&b| b > start + 1e-9); // drop finished bookings
+        debug_assert!(
+            self.busy_until.len() < self.cap,
+            "booking beyond capacity: {} active, cap {}",
+            self.busy_until.len(),
+            self.cap
+        );
+        self.busy_until.push(end.max(start));
+    }
+
+    pub fn in_use_at(&self, t: Time) -> usize {
+        self.busy_until.iter().filter(|&&b| b > t + 1e-9).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, ());
+        q.pop();
+        assert_eq!(q.now, 5.0);
+        q.after(1.5, ());
+        let (t, _) = q.pop().unwrap();
+        assert!((t - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slots_respect_capacity() {
+        let mut s = Slots::new(2);
+        assert_eq!(s.earliest_start(0.0), 0.0);
+        s.book(0.0, 10.0);
+        s.book(0.0, 20.0);
+        // both slots busy until 10
+        assert_eq!(s.earliest_start(0.0), 10.0);
+        s.book(10.0, 15.0);
+        assert_eq!(s.in_use_at(12.0), 2);
+        assert_eq!(s.earliest_start(12.0), 15.0);
+    }
+
+    #[test]
+    fn slots_free_after_finish() {
+        let mut s = Slots::new(1);
+        s.book(0.0, 5.0);
+        assert_eq!(s.earliest_start(6.0), 6.0);
+        s.book(6.0, 7.0);
+        assert_eq!(s.in_use_at(6.5), 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's testbed runs logical nodes on 5 throttled GPUs; we replace
+//! the wall clock with a deterministic virtual-time event simulation of
+//! the same system (DESIGN.md §Substitutions): pipelined microbatch
+//! execution with per-node concurrency slots, link delays from the
+//! topology, node churn mid-iteration, the recovery protocols, and the
+//! training/aggregation synchronization barrier.
+
+pub mod churn;
+pub mod events;
+pub mod scenario;
+pub mod training;
+
+pub use churn::ChurnProcess;
+pub use events::EventQueue;
+pub use training::{IterationMetrics, RecoveryPolicy, Router, TrainingSim, TrainingSimConfig};

@@ -1,0 +1,806 @@
+//! Virtual-time simulation of pipelined decentralized training iterations.
+//!
+//! Reproduces the paper's measurement methodology (§VI): each iteration,
+//! every data node pushes its microbatches along the routed flows; the
+//! simulator executes forward hops, loss, backward hops and the
+//! aggregation barrier with per-node concurrency slots (`cap_i`), link
+//! delays from the topology, node crashes mid-iteration, and the recovery
+//! protocols (GWTF path repair vs SWARM full-pipeline restart).
+//!
+//! Reported metrics match the paper's Table II/III rows:
+//! - *time per microbatch* — iteration makespan (slowest data node) divided
+//!   by microbatches processed,
+//! - *throughput* — microbatches completing both passes in the iteration,
+//! - *communication time* — total payload transfer seconds,
+//! - *wasted GPU time* — compute spent on work excluded from aggregation
+//!   (crashed mid-task, orphaned by a broken flow, or recomputed).
+
+use crate::cost::NodeId;
+use crate::flow::graph::{FlowPath, FlowProblem};
+use crate::net::Topology;
+use crate::util::Rng;
+
+use super::churn::{ChurnEvents, ChurnProcess};
+use super::events::{EventQueue, Slots, Time};
+
+/// Backward-pass crash recovery policy (the paper's key GWTF/SWARM split).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// GWTF: repair the broken flow in place and resume from the stored
+    /// gradient (§V-D "Crashes during the backward pass").
+    RepairPath,
+    /// SWARM: recompute the entire pipeline for the microbatch.
+    RestartPipeline,
+}
+
+/// Routing policy plugged into the simulator (GWTF, SWARM, DT-FM, ...).
+pub trait Router {
+    fn name(&self) -> String;
+
+    /// (Re)plan flows at iteration start. `alive[n]` is current liveness.
+    /// Returns the routed paths and the planning wall-time to charge.
+    fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64);
+
+    /// Notify of a mid-iteration crash so internal state can adapt.
+    fn on_crash(&mut self, node: NodeId);
+
+    /// Choose a replacement relay at `stage` for a flow `prev -> X -> next`
+    /// whose X crashed. `candidates` are alive nodes with a free slot.
+    fn choose_replacement(
+        &mut self,
+        prev: NodeId,
+        next: NodeId,
+        stage: usize,
+        sink: NodeId,
+        candidates: &[NodeId],
+    ) -> Option<NodeId>;
+
+    fn recovery(&self) -> RecoveryPolicy;
+}
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct TrainingSimConfig {
+    /// Activation/gradient payload per hop, bytes (Eq. 1 `size`).
+    pub payload_bytes: f64,
+    /// Per-stage weight payload exchanged during aggregation, bytes.
+    pub stage_param_bytes: f64,
+    /// Crash-detection timeout (missing COMPLETE), seconds.
+    pub timeout_s: f64,
+    /// Maximum pipeline restarts per microbatch before it is dropped.
+    pub max_restarts: usize,
+    /// Reference iteration length used to place mid-iteration crash
+    /// instants (updated online from the previous iteration's makespan).
+    pub initial_iter_estimate_s: f64,
+    /// Backward compute multiplier (bwd ~ 2x fwd for transformers).
+    pub bwd_factor: f64,
+    /// Aggregation cutoff: microbatches not home within
+    /// `deadline_factor x` the running iteration estimate are "excluded
+    /// from aggregation" (the paper's wasted-GPU definition) — data nodes
+    /// do not stall the update phase for stragglers.
+    pub deadline_factor: f64,
+}
+
+impl Default for TrainingSimConfig {
+    fn default() -> Self {
+        TrainingSimConfig {
+            payload_bytes: 4.0 * 512.0 * 1024.0 * 4.0 * 32.0, // paper LLaMA inflated
+            stage_param_bytes: 50e6 * 4.0,
+            timeout_s: 5.0,
+            max_restarts: 3,
+            initial_iter_estimate_s: 240.0,
+            bwd_factor: 2.0,
+            deadline_factor: 2.0,
+        }
+    }
+}
+
+/// Per-iteration outcome (one row sample for Tables II/III).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterationMetrics {
+    pub makespan_s: f64,
+    pub completed: usize,
+    pub scheduled: usize,
+    pub comm_s: f64,
+    pub wasted_gpu_s: f64,
+    pub agg_s: f64,
+    pub planning_s: f64,
+    pub fwd_recoveries: usize,
+    pub bwd_recoveries: usize,
+    pub restarts: usize,
+    pub dropped: usize,
+    /// Memory-overload DENYs (§V-D): a microbatch reached a node whose
+    /// `cap_i` concurrent-residency budget was exhausted and was rerouted
+    /// or deferred.  Capacity-oblivious routing (SWARM) pays these.
+    pub denies: usize,
+}
+
+impl IterationMetrics {
+    pub fn time_per_microbatch_s(&self) -> f64 {
+        if self.completed == 0 {
+            f64::INFINITY
+        } else {
+            self.makespan_s / self.completed as f64
+        }
+    }
+}
+
+/// Phase of a microbatch's journey.
+#[derive(Debug, Clone, Copy)]
+enum Phase {
+    /// Payload left `prev`; arriving at relay index `hop` of its path.
+    Fwd { hop: usize },
+    /// Arrived back at the data node for loss + head backward.
+    Loss,
+    /// Gradient arriving at relay index `hop` (descending).
+    Bwd { hop: usize },
+    /// Gradient arrived back at the data node (embedding backward).
+    Finish,
+}
+
+#[derive(Debug, Clone)]
+struct MicrobatchState {
+    path: FlowPath,
+    restarts: usize,
+    /// Compute seconds spent so far (wasted if the microbatch is dropped).
+    compute_spent: f64,
+    dropped: bool,
+    done_at: Option<Time>,
+    /// Relays currently holding this microbatch's forward activation
+    /// (memory residency: acquired at forward compute, released when the
+    /// backward pass clears the node — the paper's `cap_i` semantics).
+    resident: Vec<NodeId>,
+    /// Overload reroutes so far (bounded to keep DENY storms finite).
+    overload_reroutes: usize,
+    /// (stage, node) pairs that DENYed this microbatch — "excluded until
+    /// they free memory" (§V-D).
+    denied: Vec<(usize, NodeId)>,
+}
+
+impl MicrobatchState {
+    /// Free every residency this microbatch holds (drop / restart).
+    fn release_all(&mut self, inflight: &mut [usize]) {
+        for r in self.resident.drain(..) {
+            inflight[r.0] = inflight[r.0].saturating_sub(1);
+        }
+    }
+}
+
+/// The training simulator.
+pub struct TrainingSim {
+    pub topo: Topology,
+    pub cfg: TrainingSimConfig,
+    /// Virtual availability: node is usable while `alive`, dying at
+    /// `death_at` during the current iteration (f64::INFINITY otherwise).
+    death_at: Vec<Time>,
+    alive: Vec<bool>,
+    iter_estimate: f64,
+}
+
+impl TrainingSim {
+    pub fn new(topo: Topology, cfg: TrainingSimConfig) -> Self {
+        let n = topo.n();
+        let iter_estimate = cfg.initial_iter_estimate_s;
+        TrainingSim { topo, cfg, death_at: vec![f64::INFINITY; n], alive: vec![true; n], iter_estimate }
+    }
+
+    fn transfer_s(&self, from: NodeId, to: NodeId) -> f64 {
+        self.topo.delay(from, to, self.cfg.payload_bytes)
+    }
+
+    fn fwd_compute_s(&self, n: NodeId) -> f64 {
+        self.topo.profiles[n.0].compute_s
+    }
+
+    fn bwd_compute_s(&self, n: NodeId) -> f64 {
+        self.topo.profiles[n.0].compute_s * self.cfg.bwd_factor
+    }
+
+    fn is_up(&self, n: NodeId, t: Time) -> bool {
+        self.alive[n.0] && t < self.death_at[n.0]
+    }
+
+    /// Run one full training iteration.
+    ///
+    /// `paths`: routed flows (one per microbatch).  `churn`: this
+    /// iteration's crash/rejoin schedule.  `prob` gives stage structure
+    /// and capacities for recovery candidate search.
+    pub fn run_iteration(
+        &mut self,
+        prob: &FlowProblem,
+        router: &mut dyn Router,
+        churn: &ChurnEvents,
+        churn_state: &ChurnProcess,
+        planning_s: f64,
+        paths: Vec<FlowPath>,
+        _rng: &mut Rng,
+    ) -> IterationMetrics {
+        let n = self.topo.n();
+        // Liveness at iteration start (rejoins already applied by caller).
+        for i in 0..n {
+            self.alive[i] = churn_state.alive[i];
+            self.death_at[i] = f64::INFINITY;
+        }
+        // Nodes crashing mid-iteration die at frac * current estimate.
+        for &(node, frac) in &churn.crashes {
+            self.alive[node.0] = true; // alive until its death instant
+            self.death_at[node.0] = frac * self.iter_estimate;
+        }
+
+        let mut metrics = IterationMetrics { scheduled: paths.len(), planning_s, ..Default::default() };
+        let mut slots: Vec<Slots> = (0..n).map(|i| Slots::new(prob.cap[i].max(1))).collect();
+        // Memory residency per node (forward activations awaiting backward).
+        let mut inflight: Vec<usize> = vec![0; n];
+        let mut mbs: Vec<MicrobatchState> = paths
+            .into_iter()
+            .map(|p| MicrobatchState {
+                path: p,
+                restarts: 0,
+                compute_spent: 0.0,
+                dropped: false,
+                done_at: None,
+                resident: Vec::new(),
+                overload_reroutes: 0,
+                denied: Vec::new(),
+            })
+            .collect();
+
+        let mut q: EventQueue<(usize, Phase)> = EventQueue::new();
+        // Data nodes send out all their microbatches at t=0 (transfer to hop 0).
+        for (mi, mb) in mbs.iter().enumerate() {
+            let d = mb.path.source;
+            let first = mb.path.relays[0];
+            let dt = self.transfer_s(d, first);
+            metrics.comm_s += dt;
+            q.schedule(dt, (mi, Phase::Fwd { hop: 0 }));
+        }
+
+        // Stragglers past the aggregation cutoff are excluded (wasted).
+        let deadline = self.cfg.deadline_factor * self.iter_estimate;
+        while let Some((t, (mi, phase))) = q.pop() {
+            if mbs[mi].dropped {
+                continue;
+            }
+            if t > deadline && mbs[mi].done_at.is_none() {
+                mbs[mi].release_all(&mut inflight);
+                mbs[mi].dropped = true;
+                continue;
+            }
+            match phase {
+                Phase::Fwd { hop } => {
+                    self.handle_relay_compute(
+                        t, mi, hop, /*is_fwd=*/ true, prob, router, &mut slots, &mut inflight,
+                        &mut mbs, &mut q, &mut metrics,
+                    );
+                }
+                Phase::Loss => {
+                    // Loss + head backward at the data node (always alive).
+                    let d = mbs[mi].path.source;
+                    let c = self.fwd_compute_s(d) + self.bwd_compute_s(d);
+                    mbs[mi].compute_spent += c;
+                    let last = mbs[mi].path.relays.len() - 1;
+                    let nxt = mbs[mi].path.relays[last];
+                    let dt = self.transfer_s(d, nxt);
+                    metrics.comm_s += dt;
+                    q.schedule(t + c + dt, (mi, Phase::Bwd { hop: last }));
+                }
+                Phase::Bwd { hop } => {
+                    self.handle_relay_compute(
+                        t, mi, hop, /*is_fwd=*/ false, prob, router, &mut slots, &mut inflight,
+                        &mut mbs, &mut q, &mut metrics,
+                    );
+                }
+                Phase::Finish => {
+                    // Embedding backward at the data node.
+                    let d = mbs[mi].path.source;
+                    let c = self.bwd_compute_s(d);
+                    mbs[mi].compute_spent += c;
+                    mbs[mi].done_at = Some(t + c);
+                }
+            }
+        }
+
+        // Tally results.
+        let mut makespan: f64 = 0.0;
+        for mb in &mbs {
+            match mb.done_at {
+                Some(t) => {
+                    metrics.completed += 1;
+                    makespan = makespan.max(t);
+                }
+                None => {
+                    metrics.dropped += 1;
+                    metrics.wasted_gpu_s += mb.compute_spent;
+                }
+            }
+        }
+
+        // Aggregation barrier (§V-E): BEGIN AGGREGATION propagates forward,
+        // stages exchange weights internally, CAN TAKE propagates back.
+        let agg = self.aggregation_time(prob, churn_state);
+        metrics.agg_s = agg;
+        metrics.makespan_s = makespan + agg + planning_s;
+        // EMA keeps the crash-instant / deadline reference stable.  Only
+        // productive iterations update it: a zero-completion iteration has
+        // a tiny makespan, and folding that in would shrink the next
+        // deadline and wedge the system in a drop-everything spiral.
+        if metrics.completed > 0 {
+            self.iter_estimate = (0.5 * self.iter_estimate + 0.5 * metrics.makespan_s)
+                .max(self.cfg.initial_iter_estimate_s * 0.1)
+                .max(1e-6);
+        }
+        metrics
+    }
+
+    /// Relay-stage compute (fwd or bwd) with crash detection + recovery.
+    #[allow(clippy::too_many_arguments)]
+    fn handle_relay_compute(
+        &mut self,
+        t: Time,
+        mi: usize,
+        hop: usize,
+        is_fwd: bool,
+        prob: &FlowProblem,
+        router: &mut dyn Router,
+        slots: &mut [Slots],
+        inflight: &mut [usize],
+        mbs: &mut Vec<MicrobatchState>,
+        q: &mut EventQueue<(usize, Phase)>,
+        metrics: &mut IterationMetrics,
+    ) {
+        let path = mbs[mi].path.clone();
+        let node = path.relays[hop];
+        let sink = path.source;
+        let n_stages = path.relays.len();
+        let prev: NodeId = if is_fwd {
+            if hop == 0 { sink } else { path.relays[hop - 1] }
+        } else if hop + 1 < n_stages {
+            path.relays[hop + 1]
+        } else {
+            sink
+        };
+        let next: NodeId = if is_fwd {
+            if hop + 1 < n_stages { path.relays[hop + 1] } else { sink }
+        } else if hop == 0 {
+            sink
+        } else {
+            path.relays[hop - 1]
+        };
+
+        let compute = if is_fwd { self.fwd_compute_s(node) } else { self.bwd_compute_s(node) };
+
+        // Memory overload (§V-D DENY): a forward arrival at a node whose
+        // residency budget is exhausted cannot be accepted — the upstream
+        // node reroutes to a peer with spare memory or defers the batch.
+        // Capacity-aware planning (GWTF) never trips this; SWARM's
+        // capacity-oblivious wiring does.
+        if is_fwd && self.is_up(node, t) && inflight[node.0] >= prob.cap[node.0] {
+            metrics.denies += 1;
+            mbs[mi].overload_reroutes += 1;
+            mbs[mi].denied.push((hop, node));
+            if mbs[mi].overload_reroutes > 4 * n_stages {
+                mbs[mi].release_all(inflight);
+                mbs[mi].dropped = true;
+                return;
+            }
+            // The upstream node only learns a peer is full when that peer
+            // DENYs; it retries the next-best peer it knows, which may be
+            // full too ("this process can continue recursively", SV-D).
+            // It has NO global memory view, so candidates are filtered only
+            // by received DENYs, not by actual residency.
+            let denied = &mbs[mi].denied;
+            let candidates: Vec<NodeId> = prob.graph.stages[hop]
+                .iter()
+                .filter(|&&m| {
+                    m != node && self.is_up(m, t) && !denied.contains(&(hop, m))
+                })
+                .copied()
+                .collect();
+            match router.choose_replacement(prev, next, hop, sink, &candidates) {
+                Some(m) => {
+                    let dt = self.transfer_s(prev, m);
+                    metrics.comm_s += dt;
+                    let mut newpath = path.clone();
+                    newpath.relays[hop] = m;
+                    mbs[mi].path = newpath;
+                    q.schedule(t + dt, (mi, Phase::Fwd { hop }));
+                }
+                None => {
+                    // DENY propagates to the source; deferred to next iter.
+                    mbs[mi].release_all(inflight);
+                    mbs[mi].dropped = true;
+                }
+            }
+            return;
+        }
+
+        if self.is_up(node, t) {
+            let start = slots[node.0].earliest_start(t);
+            let end = start + compute;
+            let death = self.death_at[node.0];
+            if start < death && end <= death {
+                // Success: book the slot, forward the payload.
+                slots[node.0].book(start, end);
+                mbs[mi].compute_spent += compute;
+                if is_fwd {
+                    // activation stays resident until the backward clears
+                    inflight[node.0] += 1;
+                    mbs[mi].resident.push(node);
+                } else if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
+                    mbs[mi].resident.remove(pos);
+                    inflight[node.0] = inflight[node.0].saturating_sub(1);
+                }
+                let dt = self.transfer_s(node, next);
+                metrics.comm_s += dt;
+                let arrive = end + dt;
+                let next_phase = if is_fwd {
+                    if hop + 1 < n_stages { Phase::Fwd { hop: hop + 1 } } else { Phase::Loss }
+                } else if hop == 0 {
+                    Phase::Finish
+                } else {
+                    Phase::Bwd { hop: hop - 1 }
+                };
+                // If the receiver is a relay that might be dead on arrival,
+                // the crash branch below (on its own event) handles it.
+                q.schedule(arrive, (mi, next_phase));
+                return;
+            }
+            // Node dies mid-task: partial work is wasted, crash detected
+            // after the COMPLETE timeout.
+            if start < death {
+                metrics.wasted_gpu_s += death - start;
+            }
+        }
+
+        // --- crash handling ---
+        let death = self.death_at[node.0].min(t);
+        let detect = death.max(t) + self.cfg.timeout_s;
+        router.on_crash(node);
+
+        let stage = hop;
+        if is_fwd {
+            metrics.fwd_recoveries += 1;
+            // Reroute to an alive same-stage replacement with a free slot.
+            let with_memory: Vec<NodeId> = prob.graph.stages[stage]
+                .iter()
+                .filter(|&&m| {
+                    m != node
+                        && self.is_up(m, detect)
+                        && slots[m.0].in_use_at(detect) < slots[m.0].cap
+                        && inflight[m.0] < prob.cap[m.0]
+                })
+                .copied()
+                .collect();
+            // If every alive peer is memory-full right now, wait one
+            // timeout for residencies to clear (flows keep draining) and
+            // retry the best alive peer; the Fwd-arrival overload branch
+            // DENY-reroutes again if it is still full.
+            let (candidates, wait) = if with_memory.is_empty() {
+                let alive_only: Vec<NodeId> = prob.graph.stages[stage]
+                    .iter()
+                    .filter(|&&m| m != node && self.is_up(m, detect))
+                    .copied()
+                    .collect();
+                (alive_only, self.cfg.timeout_s)
+            } else {
+                (with_memory, 0.0)
+            };
+            match router.choose_replacement(prev, next, stage, sink, &candidates) {
+                Some(m) => {
+                    // prev resends its stored activation to m.
+                    let dt = self.transfer_s(prev, m);
+                    metrics.comm_s += dt;
+                    let mut newpath = path.clone();
+                    newpath.relays[hop] = m;
+                    mbs[mi].path = newpath;
+                    q.schedule(detect + wait + dt, (mi, Phase::Fwd { hop }));
+                }
+                None => {
+                    // DENY up to the source; batch deferred to next iteration.
+                    mbs[mi].release_all(inflight);
+                    mbs[mi].dropped = true;
+                }
+            }
+        } else {
+            metrics.bwd_recoveries += 1;
+            match router.recovery() {
+                RecoveryPolicy::RepairPath => {
+                    // §V-D: replacement recomputes this stage's forward from
+                    // the stored upstream activation, then the backward pass
+                    // resumes from the stored gradient.
+                    let with_memory: Vec<NodeId> = prob.graph.stages[stage]
+                        .iter()
+                        .filter(|&&m| {
+                            m != node
+                                && self.is_up(m, detect)
+                                && slots[m.0].in_use_at(detect) < slots[m.0].cap
+                                && inflight[m.0] < prob.cap[m.0]
+                        })
+                        .copied()
+                        .collect();
+                    // memory-full everywhere: wait one timeout for a
+                    // residency to clear rather than dropping the batch
+                    let (candidates, wait) = if with_memory.is_empty() {
+                        let alive_only: Vec<NodeId> = prob.graph.stages[stage]
+                            .iter()
+                            .filter(|&&m| m != node && self.is_up(m, detect))
+                            .copied()
+                            .collect();
+                        (alive_only, self.cfg.timeout_s)
+                    } else {
+                        (with_memory, 0.0)
+                    };
+                    match router.choose_replacement(prev, next, stage, sink, &candidates) {
+                        Some(m) => {
+                            // fetch activation from the fwd-side neighbour +
+                            // recompute fwd at m, then continue bwd at m.
+                            let dt_act = self.transfer_s(prev, m);
+                            let refwd = self.fwd_compute_s(m);
+                            mbs[mi].compute_spent += refwd;
+                            metrics.comm_s += dt_act;
+                            // residency moves from the dead node to m
+                            if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
+                                mbs[mi].resident.remove(pos);
+                                inflight[node.0] = inflight[node.0].saturating_sub(1);
+                            }
+                            inflight[m.0] += 1;
+                            mbs[mi].resident.push(m);
+                            let mut newpath = path.clone();
+                            newpath.relays[hop] = m;
+                            mbs[mi].path = newpath;
+                            q.schedule(detect + wait + dt_act + refwd, (mi, Phase::Bwd { hop }));
+                        }
+                        None => {
+                            mbs[mi].release_all(inflight);
+                            mbs[mi].dropped = true;
+                        }
+                    }
+                }
+                RecoveryPolicy::RestartPipeline => {
+                    // SWARM: all work on this microbatch is discarded and the
+                    // whole pipeline re-executes from the data node.
+                    metrics.restarts += 1;
+                    metrics.wasted_gpu_s += mbs[mi].compute_spent;
+                    mbs[mi].compute_spent = 0.0;
+                    mbs[mi].release_all(inflight);
+                    if mbs[mi].restarts + 1 > self.cfg.max_restarts {
+                        mbs[mi].dropped = true;
+                        return;
+                    }
+                    mbs[mi].restarts += 1;
+                    // Re-wire dead relays before restarting.
+                    let mut newpath = mbs[mi].path.clone();
+                    for (s, r) in newpath.relays.clone().into_iter().enumerate() {
+                        if !self.is_up(r, detect) {
+                            let candidates: Vec<NodeId> = prob.graph.stages[s]
+                                .iter()
+                                .filter(|&&m| m != r && self.is_up(m, detect))
+                                .copied()
+                                .collect();
+                            match router.choose_replacement(
+                                if s == 0 { sink } else { newpath.relays[s - 1] },
+                                if s + 1 < n_stages { newpath.relays[s + 1] } else { sink },
+                                s,
+                                sink,
+                                &candidates,
+                            ) {
+                                Some(m) => newpath.relays[s] = m,
+                                None => {
+                                    mbs[mi].release_all(inflight);
+                                    mbs[mi].dropped = true;
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                    mbs[mi].path = newpath;
+                    let d = mbs[mi].path.source;
+                    let first = mbs[mi].path.relays[0];
+                    let dt = self.transfer_s(d, first);
+                    metrics.comm_s += dt;
+                    q.schedule(detect + dt, (mi, Phase::Fwd { hop: 0 }));
+                }
+            }
+        }
+    }
+
+    /// §V-E training/aggregation synchronization barrier duration.
+    fn aggregation_time(&self, prob: &FlowProblem, churn: &ChurnProcess) -> f64 {
+        const CTRL_BYTES: f64 = 1024.0;
+        let mut fwd_ctrl: f64 = 0.0;
+        let mut back_ctrl: f64 = 0.0;
+        let mut exchange: f64 = 0.0;
+        let data = prob.graph.data_nodes[0];
+        let mut prev_stage: Vec<NodeId> = vec![data];
+        for s in 0..prob.graph.n_stages() {
+            let members: Vec<NodeId> = prob.graph.stages[s]
+                .iter()
+                .filter(|&&m| churn.is_alive(m))
+                .copied()
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            // BEGIN AGGREGATION flood: worst link from any previous-stage node.
+            let hop = prev_stage
+                .iter()
+                .flat_map(|&p| members.iter().map(move |&m| self.topo.delay(p, m, CTRL_BYTES)))
+                .fold(0.0f64, f64::max);
+            fwd_ctrl += hop;
+            back_ctrl += hop; // CAN TAKE travels the same boundary backwards
+            // Intra-stage weight broadcast (pairs exchange in parallel).
+            let mut worst: f64 = 0.0;
+            for &a in &members {
+                for &b in &members {
+                    if a != b {
+                        worst = worst.max(self.topo.delay(a, b, self.cfg.stage_param_bytes));
+                    }
+                }
+            }
+            exchange = exchange.max(worst);
+            prev_stage = members;
+        }
+        fwd_ctrl + exchange + back_ctrl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::NodeProfile;
+    use crate::flow::graph::StageGraph;
+    use crate::net::TopologyConfig;
+
+    /// Trivial fixed router for tests: static paths, first-candidate reroute.
+    struct FixedRouter {
+        paths: Vec<FlowPath>,
+        policy: RecoveryPolicy,
+    }
+
+    impl Router for FixedRouter {
+        fn name(&self) -> String {
+            "fixed".into()
+        }
+        fn plan(&mut self, _alive: &[bool]) -> (Vec<FlowPath>, f64) {
+            (self.paths.clone(), 0.0)
+        }
+        fn on_crash(&mut self, _node: NodeId) {}
+        fn choose_replacement(
+            &mut self,
+            _prev: NodeId,
+            _next: NodeId,
+            _stage: usize,
+            _sink: NodeId,
+            candidates: &[NodeId],
+        ) -> Option<NodeId> {
+            candidates.first().copied()
+        }
+        fn recovery(&self) -> RecoveryPolicy {
+            self.policy
+        }
+    }
+
+    fn setup() -> (Topology, FlowProblem, Vec<FlowPath>) {
+        // data node 0; stage0 {1,2}; stage1 {3,4}; 2 microbatches
+        let mut rng = Rng::new(42);
+        let mut topo = Topology::generate(
+            &TopologyConfig { n_nodes: 5, ..Default::default() },
+            &mut rng,
+        );
+        for i in 0..5 {
+            topo.set_profile(NodeId(i), NodeProfile::new(2.0, 2));
+        }
+        let graph = StageGraph {
+            stages: vec![vec![NodeId(1), NodeId(2)], vec![NodeId(3), NodeId(4)]],
+            data_nodes: vec![NodeId(0)],
+        };
+        let prob = FlowProblem {
+            graph,
+            cap: vec![4, 2, 2, 2, 2],
+            demand: vec![2],
+            cost: Box::new(|_i, _j| 1.0),
+        };
+        let paths = vec![
+            FlowPath { source: NodeId(0), relays: vec![NodeId(1), NodeId(3)] },
+            FlowPath { source: NodeId(0), relays: vec![NodeId(2), NodeId(4)] },
+        ];
+        (topo, prob, paths)
+    }
+
+    fn small_cfg() -> TrainingSimConfig {
+        TrainingSimConfig {
+            payload_bytes: 1e6,
+            stage_param_bytes: 1e6,
+            timeout_s: 1.0,
+            max_restarts: 3,
+            initial_iter_estimate_s: 30.0,
+            bwd_factor: 2.0,
+            deadline_factor: 4.0,
+        }
+    }
+
+    fn run_once(policy: RecoveryPolicy, crashes: Vec<(NodeId, f64)>) -> IterationMetrics {
+        let (topo, prob, paths) = setup();
+        let mut sim = TrainingSim::new(topo, small_cfg());
+        let mut router = FixedRouter { paths: paths.clone(), policy };
+        let churn_state = ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+        let churn = ChurnEvents { crashes, rejoins: vec![] };
+        let mut rng = Rng::new(0);
+        sim.run_iteration(&prob, &mut router, &churn, &churn_state, 0.0, paths, &mut rng)
+    }
+
+    #[test]
+    fn fault_free_completes_everything() {
+        let m = run_once(RecoveryPolicy::RepairPath, vec![]);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.dropped, 0);
+        assert_eq!(m.wasted_gpu_s, 0.0);
+        assert!(m.makespan_s > 0.0);
+        assert!(m.comm_s > 0.0);
+        assert!(m.agg_s > 0.0);
+        assert!(m.time_per_microbatch_s().is_finite());
+    }
+
+    #[test]
+    fn fwd_crash_recovers_via_reroute() {
+        // Node 1 dies immediately: microbatch 0 must reroute to node 2.
+        let m = run_once(RecoveryPolicy::RepairPath, vec![(NodeId(1), 0.0)]);
+        assert_eq!(m.completed, 2);
+        assert!(m.fwd_recoveries >= 1);
+    }
+
+    #[test]
+    fn bwd_crash_repair_cheaper_than_restart() {
+        // Node dies late (during backward pass window).
+        let frac = 0.4;
+        let repair = run_once(RecoveryPolicy::RepairPath, vec![(NodeId(3), frac)]);
+        let restart = run_once(RecoveryPolicy::RestartPipeline, vec![(NodeId(3), frac)]);
+        assert_eq!(repair.completed, 2);
+        assert_eq!(restart.completed, 2);
+        assert!(
+            repair.makespan_s <= restart.makespan_s + 1e-9,
+            "repair {} vs restart {}",
+            repair.makespan_s,
+            restart.makespan_s
+        );
+        assert!(repair.wasted_gpu_s <= restart.wasted_gpu_s + 1e-9);
+    }
+
+    #[test]
+    fn whole_stage_dead_drops_microbatch() {
+        let m = run_once(
+            RecoveryPolicy::RepairPath,
+            vec![(NodeId(1), 0.0), (NodeId(2), 0.0)],
+        );
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.dropped, 2);
+    }
+
+    #[test]
+    fn restart_counts_wasted_gpu() {
+        let m = run_once(RecoveryPolicy::RestartPipeline, vec![(NodeId(3), 0.4)]);
+        assert!(m.restarts >= 1);
+        assert!(m.wasted_gpu_s > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_once(RecoveryPolicy::RepairPath, vec![(NodeId(1), 0.3)]);
+        let b = run_once(RecoveryPolicy::RepairPath, vec![(NodeId(1), 0.3)]);
+        assert_eq!(a.completed, b.completed);
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_includes_aggregation_and_planning() {
+        let (topo, prob, paths) = setup();
+        let mut sim = TrainingSim::new(topo, small_cfg());
+        let mut router = FixedRouter { paths: paths.clone(), policy: RecoveryPolicy::RepairPath };
+        let churn_state = ChurnProcess::new(5, vec![], 0.0, 7);
+        let churn = ChurnEvents::default();
+        let mut rng = Rng::new(0);
+        let m = sim.run_iteration(&prob, &mut router, &churn, &churn_state, 3.0, paths, &mut rng);
+        assert!(m.makespan_s >= m.agg_s + 3.0);
+        assert_eq!(m.planning_s, 3.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! End-to-end training over the PJRT runtime (the Fig. 6 experiment).
+//!
+//! - [`PipelineTrainer`] — drives the real pipeline math: embed -> relay
+//!   stages -> head/loss -> backward chain -> gradient averaging -> SGD,
+//!   entirely through the AOT artifacts (Python never runs here).
+//! - [`ChurnTrainer`] — couples a `PipelineTrainer` with the decentralized
+//!   simulator: every optimizer step also executes one *simulated* GWTF
+//!   iteration (routing, churn, recovery) and charges the recomputed
+//!   stage forwards that backward-pass repairs require.  Because GWTF
+//!   always executes the full model ("the entire model is ran as in a
+//!   centralized solution", §VI Training Convergence), the loss sequence
+//!   is bit-identical to the centralized baseline — the experiment
+//!   verifies exactly that, plus the simulated iteration times.
+
+pub mod pipeline;
+
+pub use pipeline::{ChurnTrainer, PipelineTrainer, StepMetrics};

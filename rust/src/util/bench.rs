@@ -1,0 +1,116 @@
+//! Micro benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, calibrated iteration counts, and mean/p50/p99 reporting.
+//! Used by the `rust/benches/*` targets (built with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+use super::stats::{percentile, Summary};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` after warmup; report timing stats.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration: find an iteration count that takes >= ~1ms.
+    let mut batch = 1usize;
+    loop {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let el = t.elapsed();
+        if el >= Duration::from_millis(1) || batch >= 1 << 20 {
+            break;
+        }
+        batch *= 4;
+    }
+
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    let mut total_iters = 0usize;
+    while start.elapsed() < budget || samples_ns.len() < 5 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let el = t.elapsed().as_nanos() as f64 / batch as f64;
+        samples_ns.push(el);
+        total_iters += batch;
+        if samples_ns.len() >= 10_000 {
+            break;
+        }
+    }
+
+    let s = Summary::of(&samples_ns);
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: s.mean,
+        p50_ns: percentile(&samples_ns, 50.0),
+        p99_ns: percentile(&samples_ns, 99.0),
+        std_ns: s.std,
+    }
+}
+
+/// Black-box to defeat the optimizer (std::hint::black_box re-export).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_numbers() {
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with(" s"));
+    }
+}

