@@ -1,0 +1,144 @@
+//! `cargo bench --bench replan_bench` — cold re-plan vs warm-start
+//! re-plan (ISSUE 1 tentpole) across churn rates 0/10/20%, plus the
+//! single-crash headline case.  Writes `BENCH_flow_replan.json` at the
+//! repo root; the test-sized version of the same measurement runs in
+//! `rust/tests/integration.rs` on every `cargo test`.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use gwtf::coordinator::GwtfRouter;
+use gwtf::cost::NodeId;
+use gwtf::flow::FlowParams;
+use gwtf::sim::scenario::{build, ScenarioConfig};
+use gwtf::sim::training::Router;
+use gwtf::util::bench::{bench, black_box};
+
+fn main() {
+    let budget = Duration::from_millis(500);
+    let mut results = Vec::new();
+    let mut cases = String::new();
+
+    // --- single crash on an established plan ---
+    {
+        let sc = build(&ScenarioConfig::table2(true, 0.0, 31));
+        let n = sc.topo.n();
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 31);
+        let mut alive = vec![true; n];
+        let (paths, _) = router.plan(&alive);
+        let victim = paths[0].relays[1];
+        alive[victim.0] = false;
+
+        let mut cold = GwtfRouter::from_scenario(&sc, FlowParams::default(), 31);
+        cold.plan(&vec![true; n]);
+        let r_cold = bench("replan/cold (single crash)", budget, || {
+            black_box(cold.plan(&alive));
+        });
+        let cold_rounds = cold.last_rounds;
+
+        // `replan` keeps its warm state across calls, so repeated calls
+        // measure the steady-state incremental cost.
+        router.replan(&alive, &[victim]);
+        let r_warm = bench("replan/warm (single crash)", budget, || {
+            black_box(router.replan(&alive, &[victim]));
+        });
+        let warm_rounds = router.last_rounds;
+
+        writeln!(
+            cases,
+            "    {{\"case\": \"single-crash\", \"cold_rounds\": {cold_rounds}, \
+             \"warm_rounds\": {warm_rounds}, \"cold_mean_ms\": {:.3}, \
+             \"warm_mean_ms\": {:.3}}},",
+            r_cold.mean_ns / 1e6,
+            r_warm.mean_ns / 1e6,
+        )
+        .unwrap();
+        results.push(r_cold);
+        results.push(r_warm);
+    }
+
+    // --- churn sweep: fresh churn sample every call ---
+    for &rate in &[0.0, 0.1, 0.2] {
+        let sc = build(&ScenarioConfig::table2(false, rate, 77));
+        let n = sc.topo.n();
+
+        let mut cold = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+        let mut cold_churn = sc.churn.clone();
+        cold.plan(&vec![true; n]);
+        let mut cold_rounds = 0usize;
+        let mut cold_calls = 0usize;
+        let r_cold = bench(&format!("replan/cold (churn {:.0}%)", rate * 100.0), budget, || {
+            let ev = cold_churn.sample_iteration();
+            let alive = cold_churn.planning_view(&ev);
+            black_box(cold.plan(&alive));
+        });
+        // count rounds over a deterministic pass for the JSON record
+        {
+            let mut r = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+            let mut churn = sc.churn.clone();
+            r.plan(&vec![true; n]);
+            for _ in 0..6 {
+                let ev = churn.sample_iteration();
+                let alive = churn.planning_view(&ev);
+                r.plan(&alive);
+                cold_rounds += r.last_rounds;
+                cold_calls += 1;
+            }
+        }
+
+        let mut warm = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+        let mut warm_churn = sc.churn.clone();
+        let mut prev = vec![true; n];
+        warm.plan(&prev);
+        let r_warm = bench(&format!("replan/warm (churn {:.0}%)", rate * 100.0), budget, || {
+            let ev = warm_churn.sample_iteration();
+            let alive = warm_churn.planning_view(&ev);
+            let dirty: Vec<NodeId> =
+                (0..n).filter(|&i| prev[i] && !alive[i]).map(NodeId).collect();
+            black_box(warm.replan(&alive, &dirty));
+            prev = alive;
+        });
+        let mut warm_rounds = 0usize;
+        {
+            let mut r = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+            let mut churn = sc.churn.clone();
+            let mut prev = vec![true; n];
+            r.plan(&prev);
+            for _ in 0..6 {
+                let ev = churn.sample_iteration();
+                let alive = churn.planning_view(&ev);
+                let dirty: Vec<NodeId> =
+                    (0..n).filter(|&i| prev[i] && !alive[i]).map(NodeId).collect();
+                r.replan(&alive, &dirty);
+                warm_rounds += r.last_rounds;
+                prev = alive;
+            }
+        }
+
+        writeln!(
+            cases,
+            "    {{\"churn\": {rate}, \"iters\": {cold_calls}, \"cold_rounds\": {cold_rounds}, \
+             \"warm_rounds\": {warm_rounds}, \"cold_mean_ms\": {:.3}, \
+             \"warm_mean_ms\": {:.3}}},",
+            r_cold.mean_ns / 1e6,
+            r_warm.mean_ns / 1e6,
+        )
+        .unwrap();
+        results.push(r_cold);
+        results.push(r_warm);
+    }
+
+    println!("\n# replan_bench");
+    for r in &results {
+        println!("{}", r.report());
+    }
+
+    let cases = cases.trim_end().trim_end_matches(',').to_string();
+    let json = format!(
+        "{{\n  \"bench\": \"flow_replan\",\n  \"scenario\": \"table2, 18 nodes, 6 stages\",\n  \
+         \"source\": \"rust/benches/replan_bench.rs\",\n  \"cases\": [\n{cases}\n  ]\n}}\n"
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_flow_replan.json");
+    std::fs::write(path, &json).unwrap();
+    println!("\nwrote {path}");
+}

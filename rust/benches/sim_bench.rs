@@ -41,6 +41,17 @@ fn main() {
             black_box(router.plan(&alive));
         }));
     }
+    // warm-start incremental replan after one crash (steady state)
+    {
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 8);
+        let mut alive = vec![true; sc.topo.n()];
+        let (paths, _) = router.plan(&alive);
+        let victim = paths[0].relays[1];
+        alive[victim.0] = false;
+        results.push(bench("replan/gwtf warm (1 crash)", budget, || {
+            black_box(router.replan(&alive, &[victim]));
+        }));
+    }
     {
         let topo = sc.topo.clone();
         let payload = sc.sim_cfg.payload_bytes;

@@ -254,6 +254,15 @@ impl Router for DtfmRouter {
         (paths, planning_s)
     }
 
+    /// DT-FM recomputes the GA arrangement from scratch whenever its
+    /// cached pipelines reference a dead node ([`plan`](Router::plan)
+    /// already implements that cache-or-recompute logic); there is no
+    /// incremental path — the paper's point about the GA being expensive
+    /// under churn.
+    fn replan(&mut self, alive: &[bool], _dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
+        self.plan(alive)
+    }
+
     fn on_crash(&mut self, _node: NodeId) {}
 
     fn choose_replacement(

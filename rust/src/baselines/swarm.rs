@@ -122,6 +122,13 @@ impl Router for SwarmRouter {
         (paths, 0.0)
     }
 
+    /// SWARM has no incremental mode: every re-plan is a cold greedy
+    /// rewire from scratch (the baseline behavior the paper compares
+    /// GWTF's warm-start chain repair against).
+    fn replan(&mut self, alive: &[bool], _dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
+        self.plan(alive)
+    }
+
     fn on_crash(&mut self, _node: NodeId) {}
 
     fn choose_replacement(

@@ -15,7 +15,7 @@ use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::cost::NodeId;
-use crate::flow::decentralized::{DecentralizedFlow, FlowParams};
+use crate::flow::decentralized::{Chain, DecentralizedFlow, FlowParams};
 use crate::flow::graph::{FlowPath, FlowProblem, StageGraph};
 use crate::sim::training::{RecoveryPolicy, Router};
 use crate::sim::scenario::Scenario;
@@ -33,9 +33,15 @@ pub struct GwtfRouter {
     /// round on the cold-start plan.
     pub max_rounds: usize,
     pub round_ctrl_s: f64,
+    /// Round budget for a warm-start [`Router::replan`] (§V-D local
+    /// repair + refinement; far fewer rounds than a cold plan needs).
+    pub warm_max_rounds: usize,
     seed: u64,
     plans: u64,
     dead: HashSet<NodeId>,
+    /// Chains + annealer temperature of the most recent plan — the warm
+    /// state a [`Router::replan`] resumes from.
+    warm_state: Option<(Vec<Chain>, f64)>,
     /// Rounds used by the most recent plan (diagnostics / Fig. 7).
     pub last_rounds: usize,
     pub last_cost: f64,
@@ -58,9 +64,11 @@ impl GwtfRouter {
             params,
             max_rounds: 120,
             round_ctrl_s: 0.05,
+            warm_max_rounds: 40,
             seed,
             plans: 0,
             dead: HashSet::new(),
+            warm_state: None,
             last_rounds: 0,
             last_cost: f64::NAN,
         }
@@ -110,6 +118,7 @@ impl Router for GwtfRouter {
         let stats = flow.run(self.max_rounds, 8);
         self.last_rounds = stats.len();
         self.last_cost = flow.total_cost();
+        self.warm_state = Some((flow.chains.clone(), flow.temperature()));
         self.plans += 1;
         // Cold-start plan is charged; later replans overlap training.
         let planning_s = if self.plans == 1 {
@@ -118,6 +127,42 @@ impl Router for GwtfRouter {
             0.0
         };
         (flow.established_paths(), planning_s)
+    }
+
+    /// Warm-start re-plan (§V-A/§V-D): resume from the surviving chains
+    /// of the previous plan, tear down / locally repair only the flows
+    /// through dead nodes, and refine for a few rounds with the carried
+    /// (cooled) annealing temperature.  Falls back to a cold [`plan`] on
+    /// the first call.
+    fn replan(&mut self, alive: &[bool], dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
+        let Some((chains, temperature)) = self.warm_state.take() else {
+            return self.plan(alive);
+        };
+        self.dead.clear();
+        let prob = self.problem_with_liveness(alive);
+        let mut flow = DecentralizedFlow::warm_start(
+            &prob,
+            self.params.clone(),
+            self.seed ^ self.plans,
+            chains,
+            temperature,
+        );
+        // `dirty` is advisory (newly dead since the last plan); the sweep
+        // over the full liveness view also covers callers that pass an
+        // incomplete diff, and is a cheap no-op for long-dead nodes.
+        let _ = dirty;
+        for (i, &up) in alive.iter().enumerate() {
+            if !up {
+                flow.remove_node(NodeId(i));
+            }
+        }
+        let stats = flow.run(self.warm_max_rounds, 4);
+        self.last_rounds = stats.len();
+        self.last_cost = flow.total_cost();
+        self.warm_state = Some((flow.chains.clone(), flow.temperature()));
+        self.plans += 1;
+        // Re-plans run in parallel with training (§V-C): no charge.
+        (flow.established_paths(), 0.0)
     }
 
     fn on_crash(&mut self, node: NodeId) {
@@ -227,5 +272,76 @@ mod tests {
     fn recovery_policy_is_repair() {
         let (r, _) = router();
         assert_eq!(r.recovery(), RecoveryPolicy::RepairPath);
+    }
+
+    #[test]
+    fn replan_without_prior_plan_cold_starts() {
+        let (mut r, n) = router();
+        let alive = vec![true; n];
+        let (paths, planning) = r.replan(&alive, &[]);
+        assert_eq!(paths.len(), 8);
+        assert!(planning > 0.0, "first plan is the charged cold start");
+    }
+
+    #[test]
+    fn warm_replan_keeps_flows_and_avoids_dead_nodes() {
+        let (mut r, n) = router();
+        let mut alive = vec![true; n];
+        let (paths, _) = r.plan(&alive);
+        let cold_rounds = r.last_rounds;
+        assert_eq!(paths.len(), 8);
+        let victim = paths[0].relays[2];
+        alive[victim.0] = false;
+        let (warm_paths, planning) = r.replan(&alive, &[victim]);
+        assert_eq!(planning, 0.0, "replans overlap training");
+        assert_eq!(warm_paths.len(), 8, "repair keeps the routed demand");
+        for p in &warm_paths {
+            assert!(!p.relays.contains(&victim), "dead node still routed");
+        }
+        assert!(
+            r.last_rounds < cold_rounds,
+            "warm replan {} rounds vs cold {}",
+            r.last_rounds,
+            cold_rounds
+        );
+        // surviving flows should mostly be kept: at least one path from
+        // the cold plan survives verbatim
+        assert!(
+            warm_paths.iter().any(|p| paths.contains(p)),
+            "warm start must keep surviving chains"
+        );
+    }
+
+    #[test]
+    fn warm_replan_is_deterministic() {
+        let run = || {
+            let (mut r, n) = router();
+            let mut alive = vec![true; n];
+            let (paths, _) = r.plan(&alive);
+            let victim = paths[0].relays[0];
+            alive[victim.0] = false;
+            let (p1, _) = r.replan(&alive, &[victim]);
+            p1
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn repeated_warm_replans_stay_valid() {
+        let (mut r, n) = router();
+        let mut alive = vec![true; n];
+        r.plan(&alive);
+        // progressively kill one relay per stage 0..2 across replans
+        for s in 0..3 {
+            let victim = r.graph.stages[s][1];
+            alive[victim.0] = false;
+            let (paths, _) = r.replan(&alive, &[victim]);
+            for p in &paths {
+                for (stage, &relay) in p.relays.iter().enumerate() {
+                    assert!(alive[relay.0], "dead relay {relay} in stage {stage}");
+                    assert!(r.graph.stages[stage].contains(&relay));
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,141 @@
+//! Continuous-time scenarios beyond the paper's tables.
+//!
+//! Both experiments exercise event kinds the old iteration-synchronous
+//! simulator could not express (see `sim::engine`):
+//!
+//! - [`run_mid_agg_crash`] — a relay dies *inside* the §V-E aggregation
+//!   barrier; its stage re-runs the invalidated fraction of the weight
+//!   exchange among the survivors.  Columns compare a crash-free run,
+//!   a mid-aggregation crash, and the same crash under warm re-planning.
+//! - [`run_link_jitter`] — piecewise-constant link-latency jitter windows
+//!   layered over the Table II topology; columns sweep the jitter
+//!   amplitude.
+
+use anyhow::Result;
+
+use crate::coordinator::GwtfRouter;
+use crate::flow::FlowParams;
+use crate::metrics::MetricsTable;
+use crate::sim::scenario::{build, ScenarioConfig};
+use crate::sim::sources::{LinkJitterSource, MidAggCrashSource};
+
+/// Options shared by the continuous-time scenario experiments.
+#[derive(Debug, Clone)]
+pub struct ScenarioOpts {
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub seed: u64,
+}
+
+impl Default for ScenarioOpts {
+    fn default() -> Self {
+        ScenarioOpts { reps: 10, iters_per_rep: 4, seed: 1 }
+    }
+}
+
+/// Mid-aggregation crash: at iteration 1 a last-stage relay dies halfway
+/// through the aggregation barrier.
+pub fn run_mid_agg_crash(opts: &ScenarioOpts) -> Result<MetricsTable> {
+    let mut table = MetricsTable::new(
+        "Mid-aggregation crash — §V-E barrier recovery (continuous-time only)",
+    );
+    for rep in 0..opts.reps {
+        let seed = opts.seed + rep as u64 * 7919;
+        let cfg = ScenarioConfig::table2(true, 0.0, seed);
+        let sc = build(&cfg);
+        let last_stage = sc.prob.graph.n_stages() - 1;
+        let victim = sc.prob.graph.stages[last_stage][0];
+
+        // baseline: same scenario, no crash
+        {
+            let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
+            let mut engine = sc.engine(seed ^ 0x1);
+            let cell = table.cell("table2 homogeneous", "no-crash");
+            for _ in 0..opts.iters_per_rep {
+                cell.push(&engine.step(&sc.prob, &mut router));
+            }
+        }
+        // the crash, cold re-planning every iteration
+        {
+            let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
+            let mut engine = sc.engine(seed ^ 0x1);
+            engine.add_source(Box::new(MidAggCrashSource::new(1, victim, 0.5)));
+            let cell = table.cell("table2 homogeneous", "midagg-crash");
+            for _ in 0..opts.iters_per_rep {
+                cell.push(&engine.step(&sc.prob, &mut router));
+            }
+        }
+        // the crash, warm-start re-planning (GWTF keeps surviving chains)
+        {
+            let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
+            let mut engine = sc.engine(seed ^ 0x1);
+            engine.warm_replan = true;
+            engine.add_source(Box::new(MidAggCrashSource::new(1, victim, 0.5)));
+            let cell = table.cell("table2 homogeneous", "midagg-crash-warm");
+            for _ in 0..opts.iters_per_rep {
+                cell.push(&engine.step(&sc.prob, &mut router));
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Link-latency jitter sweep: 0% / 25% / 50% amplitude, fresh multiplier
+/// every 30 virtual seconds.
+pub fn run_link_jitter(opts: &ScenarioOpts) -> Result<MetricsTable> {
+    let mut table =
+        MetricsTable::new("Link-latency jitter — time-varying links (continuous-time only)");
+    for rep in 0..opts.reps {
+        let seed = opts.seed + rep as u64 * 6007;
+        let cfg = ScenarioConfig::table2(true, 0.0, seed);
+        let sc = build(&cfg);
+        for &(label, amp) in
+            &[("jitter 0%", 0.0), ("jitter 25%", 0.25), ("jitter 50%", 0.5)]
+        {
+            let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
+            let mut engine = sc.engine(seed ^ 0x1);
+            if amp > 0.0 {
+                engine.add_source(Box::new(LinkJitterSource::new(amp, 30.0, seed ^ 0x11)));
+            }
+            let cell = table.cell(label, "gwtf");
+            for _ in 0..opts.iters_per_rep {
+                cell.push(&engine.step(&sc.prob, &mut router));
+            }
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> ScenarioOpts {
+        ScenarioOpts { reps: 2, iters_per_rep: 3, seed: 7 }
+    }
+
+    #[test]
+    fn mid_agg_crash_produces_all_columns() {
+        let t = run_mid_agg_crash(&fast()).unwrap();
+        let row = "table2 homogeneous".to_string();
+        for col in ["no-crash", "midagg-crash", "midagg-crash-warm"] {
+            let acc = &t.cells[&(row.clone(), col.to_string())];
+            assert_eq!(acc.throughput.len(), 2 * 3, "{col}");
+        }
+        // the crash columns must record exactly one barrier recovery per rep
+        let crash = &t.cells[&(row.clone(), "midagg-crash".to_string())];
+        assert_eq!(crash.agg_recoveries.iter().sum::<f64>(), 2.0);
+        let clean = &t.cells[&(row, "no-crash".to_string())];
+        assert_eq!(clean.agg_recoveries.iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn jitter_sweep_produces_all_amplitudes() {
+        let t = run_link_jitter(&fast()).unwrap();
+        for row in ["jitter 0%", "jitter 25%", "jitter 50%"] {
+            let acc = &t.cells[&(row.to_string(), "gwtf".to_string())];
+            assert_eq!(acc.throughput.len(), 2 * 3, "{row}");
+            assert!(acc.makespan_min.iter().all(|m| m.is_finite()));
+        }
+    }
+}

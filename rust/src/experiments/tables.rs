@@ -8,9 +8,9 @@ use crate::baselines::{DtfmRouter, GaParams, SwarmRouter};
 use crate::coordinator::GwtfRouter;
 use crate::flow::FlowParams;
 use crate::metrics::MetricsTable;
+use crate::sim::engine::Engine;
 use crate::sim::scenario::{build, Family, Scenario, ScenarioConfig};
-use crate::sim::training::{RecoveryPolicy, Router, TrainingSim};
-use crate::util::Rng;
+use crate::sim::training::{RecoveryPolicy, Router};
 
 /// Harness options for the table experiments.
 #[derive(Debug, Clone)]
@@ -27,6 +27,11 @@ pub struct TableOpts {
     pub no_anneal: bool,
     /// Ablation: sum-cost objective instead of min-max.
     pub sum_objective: bool,
+    /// Use warm-start incremental re-planning after the first iteration
+    /// (GWTF resumes from surviving chains; the baselines' [`Router`]
+    /// default still cold-plans).  Off by default: the paper harness
+    /// re-plans from scratch every iteration.
+    pub warm_replan: bool,
 }
 
 impl Default for TableOpts {
@@ -38,6 +43,7 @@ impl Default for TableOpts {
             gwtf_restart_recovery: false,
             no_anneal: false,
             sum_objective: false,
+            warm_replan: false,
         }
     }
 }
@@ -81,30 +87,33 @@ impl Router for GwtfWithPolicy {
     ) -> Option<crate::cost::NodeId> {
         self.inner.choose_replacement(prev, next, stage, sink, candidates)
     }
+    fn replan(
+        &mut self,
+        alive: &[bool],
+        dirty: &[crate::cost::NodeId],
+    ) -> (Vec<crate::flow::graph::FlowPath>, f64) {
+        self.inner.replan(alive, dirty)
+    }
     fn recovery(&self) -> RecoveryPolicy {
         self.policy
     }
 }
 
 /// Simulate `iters` iterations of `router` on a fresh copy of `scenario`'s
-/// churn process, pushing each iteration's metrics into `push`.
+/// churn process (via the continuous-time [`Engine`]), pushing each
+/// iteration's metrics into `push`.
 fn simulate(
     sc: &Scenario,
     router: &mut dyn Router,
     iters: usize,
     seed: u64,
+    warm_replan: bool,
     mut push: impl FnMut(&crate::sim::IterationMetrics),
 ) {
-    let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
-    let mut churn = sc.churn.clone();
-    let mut rng = Rng::new(seed);
+    let mut engine = Engine::from_scenario(sc, seed);
+    engine.warm_replan = warm_replan;
     for _ in 0..iters {
-        let events = churn.sample_iteration();
-        // plan with the start-of-iteration view: mid-iteration crashes are
-        // in the future and must not inform routing
-        let alive = churn.planning_view(&events);
-        let (paths, planning_s) = router.plan(&alive);
-        let m = sim.run_iteration(&sc.prob, router, &events, &churn, planning_s, paths, &mut rng);
+        let m = engine.step(&sc.prob, router);
         push(&m);
     }
 }
@@ -147,12 +156,12 @@ fn run_crash_table(family: Family, title: &str, opts: &TableOpts) -> Result<Metr
                 {
                     let mut r = gwtf_router(&sc, opts, seed ^ 0xA);
                     let cell = table.cell(&row, "gwtf");
-                    simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, |m| cell.push(m));
+                    simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, opts.warm_replan, |m| cell.push(m));
                 }
                 {
                     let mut r = swarm_router(&sc, seed ^ 0xB);
                     let cell = table.cell(&row, "swarm");
-                    simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, |m| cell.push(m));
+                    simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, opts.warm_replan, |m| cell.push(m));
                 }
             }
         }
@@ -181,7 +190,7 @@ pub fn run_table6(opts: &TableOpts) -> Result<MetricsTable> {
         {
             let mut r = gwtf_router(&sc, opts, seed ^ 0xA);
             let cell = table.cell("0% homogeneous", "gwtf");
-            simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, |m| cell.push(m));
+            simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, opts.warm_replan, |m| cell.push(m));
         }
         {
             let topo = sc.topo.clone();
@@ -195,7 +204,7 @@ pub fn run_table6(opts: &TableOpts) -> Result<MetricsTable> {
                 seed ^ 0xB,
             );
             let cell = table.cell("0% homogeneous", "dtfm");
-            simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, |m| cell.push(m));
+            simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, opts.warm_replan, |m| cell.push(m));
         }
     }
     Ok(table)

@@ -131,6 +131,69 @@ impl<'p> DecentralizedFlow<'p> {
         }
     }
 
+    /// Warm-start construction (§V-A/§V-D): adopt the surviving chains of
+    /// a previous plan instead of rebuilding every flow from scratch.
+    /// Capacity, sink and source bookkeeping is recomputed from the
+    /// adopted chains; `temperature` continues the annealing schedule
+    /// where the previous plan left it (a converged plan re-heated to the
+    /// initial temperature would undo its own chains).
+    ///
+    /// Chains through *crashed* nodes are adopted as-is — the caller must
+    /// follow up with [`remove_node`](Self::remove_node) for every dead
+    /// node, which tears down or locally repairs exactly the affected
+    /// flows, then [`run`](Self::run) a few rounds to re-complete and
+    /// refine.  Chains that no longer fit the problem (stage shape
+    /// changed, budget exceeded) are dropped here, freeing their budget
+    /// for reconstruction.
+    pub fn warm_start(
+        prob: &'p FlowProblem,
+        params: FlowParams,
+        seed: u64,
+        chains: Vec<Chain>,
+        temperature: f64,
+    ) -> Self {
+        let mut f = DecentralizedFlow::new(prob, params, seed);
+        f.annealer.temperature = temperature.max(1e-12);
+        for mut ch in chains {
+            let shape_ok = !ch.nodes.is_empty()
+                && ch.head_stage + ch.nodes.len() == prob.graph.n_stages()
+                && prob.graph.data_nodes.contains(&ch.sink)
+                && ch
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .all(|(i, n)| prob.graph.stages[ch.head_stage + i].contains(n));
+            // Dead nodes carry cap 0 in the liveness-masked problem; they
+            // are adoptable (pending remove_node repair).  Alive nodes
+            // must still have budget left.
+            let budget_ok = shape_ok
+                && ch
+                    .nodes
+                    .iter()
+                    .all(|&n| prob.cap[n.0] == 0 || f.cap_left[n.0] > 0)
+                && f.sink_left[&ch.sink] > 0
+                && (!ch.complete || f.source_left[&ch.sink] > 0);
+            if !budget_ok {
+                continue;
+            }
+            for &n in &ch.nodes {
+                f.cap_left[n.0] = f.cap_left[n.0].saturating_sub(1);
+            }
+            *f.sink_left.get_mut(&ch.sink).unwrap() -= 1;
+            if ch.complete {
+                *f.source_left.get_mut(&ch.sink).unwrap() -= 1;
+            }
+            ch.last_progress = 0;
+            f.chains.push(ch);
+        }
+        f
+    }
+
+    /// Current annealer temperature (carried into warm restarts).
+    pub fn temperature(&self) -> f64 {
+        self.annealer.temperature
+    }
+
     fn n_stages(&self) -> usize {
         self.prob.graph.n_stages()
     }
@@ -672,6 +735,83 @@ mod tests {
             }
         }
         assert!(anneal_total <= greedy_total * 1.15, "annealing {anneal_total} vs greedy {greedy_total}");
+    }
+
+    #[test]
+    fn warm_start_adopts_chains_and_bookkeeping() {
+        let mut rng = Rng::new(31);
+        let prob = random_problem(1, 24, 4, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        let mut cold = DecentralizedFlow::new(&prob, FlowParams::default(), 31);
+        cold.run(120, 10);
+        let flows_before = cold.complete_flows();
+        assert!(flows_before > 0);
+        let chains = cold.chains.clone();
+        let temp = cold.temperature();
+
+        let warm =
+            DecentralizedFlow::warm_start(&prob, FlowParams::default(), 32, chains, temp);
+        assert_eq!(warm.complete_flows(), flows_before, "all chains adopted");
+        // bookkeeping matches the cold optimizer's
+        for s in &prob.graph.stages {
+            for &n in s {
+                assert_eq!(warm.cap_left(n), cold.cap_left(n), "cap mismatch at {n}");
+            }
+        }
+        validate_paths(&warm.established_paths(), &prob).unwrap();
+        assert!(warm.temperature() <= FlowParams::default().temperature);
+    }
+
+    #[test]
+    fn warm_start_converges_in_fewer_rounds_after_crash() {
+        let mut rng = Rng::new(33);
+        let prob = random_problem(1, 24, 4, (2.0, 4.0), (1.0, 20.0), &mut rng);
+        let mut cold = DecentralizedFlow::new(&prob, FlowParams::default(), 33);
+        let cold_rounds = cold.run(120, 8).len();
+        let flows = cold.complete_flows();
+        assert!(flows > 0);
+        let victim = cold.established_paths()[0].relays[1];
+
+        let mut warm = DecentralizedFlow::warm_start(
+            &prob,
+            FlowParams::default(),
+            34,
+            cold.chains.clone(),
+            cold.temperature(),
+        );
+        warm.remove_node(victim);
+        let warm_rounds = warm.run(120, 4).len();
+        assert_eq!(warm.complete_flows(), flows, "repair keeps the flow count");
+        validate_paths(&warm.established_paths(), &prob).unwrap();
+        for p in warm.established_paths() {
+            assert!(!p.relays.contains(&victim));
+        }
+        assert!(
+            warm_rounds < cold_rounds,
+            "warm {warm_rounds} rounds vs cold {cold_rounds}"
+        );
+    }
+
+    #[test]
+    fn warm_start_drops_misshapen_chains() {
+        let mut rng = Rng::new(35);
+        let prob = random_problem(1, 16, 4, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        let mut cold = DecentralizedFlow::new(&prob, FlowParams::default(), 35);
+        cold.run(120, 10);
+        assert!(cold.complete_flows() > 0);
+        let mut chains = cold.chains.clone();
+        // corrupt one chain: truncate its relay list (stage shape mismatch)
+        if let Some(c) = chains.iter_mut().find(|c| c.complete) {
+            c.nodes.pop();
+        }
+        let warm = DecentralizedFlow::warm_start(
+            &prob,
+            FlowParams::default(),
+            36,
+            chains,
+            cold.temperature(),
+        );
+        validate_paths(&warm.established_paths(), &prob).unwrap();
+        assert_eq!(warm.complete_flows(), cold.complete_flows() - 1);
     }
 
     #[test]

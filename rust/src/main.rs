@@ -22,23 +22,25 @@ use gwtf::coordinator::join::{utilization_query, JoinPolicy, Leader};
 use gwtf::coordinator::GwtfRouter;
 use gwtf::cost::NodeId;
 use gwtf::experiments::{
-    results_dir, run_fig5, run_fig6, run_fig7, run_table2, run_table3, run_table6, Fig6Opts,
-    TableOpts,
+    results_dir, run_fig5, run_fig6, run_fig7, run_link_jitter, run_mid_agg_crash, run_table2,
+    run_table3, run_table6, Fig6Opts, ScenarioOpts, TableOpts,
 };
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::flow::FlowParams;
 use gwtf::metrics::MetricsTable;
 use gwtf::runtime::Manifest;
 use gwtf::sim::scenario::{build, Family, ScenarioConfig};
-use gwtf::sim::training::{Router, TrainingSim};
+use gwtf::sim::training::Router;
 use gwtf::trainer::{ChurnTrainer, PipelineTrainer};
 use gwtf::util::Rng;
 
 const USAGE: &str = "usage: gwtf <doctor|sim|train|bench|join-demo> [options]
   doctor                         check PJRT + artifacts
   sim       --system gwtf|swarm  --heterogeneous --churn P --iters N --seed S
+            --warm-replan        (GWTF warm-starts re-plans from surviving chains)
   train     --family llama|gpt   --steps N --churn P --lr X --microbatches M
-  bench     table2|table3|table6|fig5|fig6|fig7|all  --reps N --iters N --full
+  bench     table2|table3|table6|fig5|fig6|fig7|midagg|jitter|all
+            --reps N --iters N --full --warm-replan
   join-demo                      Fig. 3 walkthrough";
 
 fn main() {
@@ -94,9 +96,8 @@ fn sim(args: &Args) -> Result<()> {
     let mut cfg = ScenarioConfig::table2(homogeneous, churn, seed);
     cfg.family = family;
     let sc = build(&cfg);
-    let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
-    let mut churn_proc = sc.churn.clone();
-    let mut rng = Rng::new(seed ^ 0x51);
+    let mut engine = sc.engine(seed ^ 0x51);
+    engine.warm_replan = args.flag("warm-replan");
 
     let mut router: Box<dyn Router> = match system.as_str() {
         "gwtf" => Box::new(GwtfRouter::from_scenario(&sc, FlowParams::default(), seed)),
@@ -125,18 +126,7 @@ fn sim(args: &Args) -> Result<()> {
         "iter", "makespan_s", "done", "comm_s", "wasted_s", "fwd_rec", "bwd_rec"
     );
     for i in 0..iters {
-        let events = churn_proc.sample_iteration();
-        let alive = churn_proc.planning_view(&events);
-        let (paths, planning) = router.plan(&alive);
-        let m = sim.run_iteration(
-            &sc.prob,
-            router.as_mut(),
-            &events,
-            &churn_proc,
-            planning,
-            paths,
-            &mut rng,
-        );
+        let m = engine.step(&sc.prob, router.as_mut());
         println!(
             "{:>4} {:>12.1} {:>6} {:>10.1} {:>12.1} {:>8} {:>8}",
             i, m.makespan_s, m.completed, m.comm_s, m.wasted_gpu_s, m.fwd_recoveries, m.bwd_recoveries
@@ -202,6 +192,7 @@ fn bench(args: &Args) -> Result<()> {
         gwtf_restart_recovery: args.flag("recovery-restart"),
         no_anneal: args.flag("no-anneal"),
         sum_objective: args.flag("sum-objective"),
+        warm_replan: args.flag("warm-replan"),
     };
     let dir = results_dir();
     let mut ran = false;
@@ -232,6 +223,16 @@ fn bench(args: &Args) -> Result<()> {
         println!("# Fig. 5 — improvement per Table IV setting (higher = better)");
         println!("{}", gwtf::experiments::fig5_summary(&r));
         println!("-> {}/fig5.csv", dir.display());
+        ran = true;
+    }
+    if target == "midagg" || target == "all" {
+        let sopts = ScenarioOpts { reps: reps.min(10), iters_per_rep: iters, seed };
+        emit(&run_mid_agg_crash(&sopts)?, "midagg")?;
+        ran = true;
+    }
+    if target == "jitter" || target == "all" {
+        let sopts = ScenarioOpts { reps: reps.min(10), iters_per_rep: iters, seed };
+        emit(&run_link_jitter(&sopts)?, "jitter")?;
         ran = true;
     }
     if target == "fig7" || target == "all" {

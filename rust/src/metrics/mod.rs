@@ -24,6 +24,8 @@ pub struct CellAccumulator {
     pub makespan_min: Vec<f64>,
     pub fwd_recoveries: Vec<f64>,
     pub bwd_recoveries: Vec<f64>,
+    /// §V-E barrier re-exchanges after mid-aggregation crashes.
+    pub agg_recoveries: Vec<f64>,
 }
 
 impl CellAccumulator {
@@ -39,6 +41,7 @@ impl CellAccumulator {
         self.makespan_min.push(m.makespan_s / 60.0);
         self.fwd_recoveries.push(m.fwd_recoveries as f64);
         self.bwd_recoveries.push(m.bwd_recoveries as f64);
+        self.agg_recoveries.push(m.agg_recoveries as f64);
     }
 
     pub fn row(&self) -> BTreeMap<&'static str, Summary> {
@@ -48,6 +51,7 @@ impl CellAccumulator {
         r.insert("comm_time_min", Summary::of(&self.comm_time_min));
         r.insert("wasted_gpu_min", Summary::of(&self.wasted_gpu_min));
         r.insert("makespan_min", Summary::of(&self.makespan_min));
+        r.insert("agg_recoveries", Summary::of(&self.agg_recoveries));
         r
     }
 }

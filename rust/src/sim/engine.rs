@@ -1,0 +1,499 @@
+//! Continuous-time simulation engine.
+//!
+//! The kernel owns the deterministic [`EventQueue`](super::events::EventQueue)
+//! and dispatches *world events* — churn crashes/rejoins, link-latency
+//! jitter windows, straggler slowdowns, mid-iteration node joins, and
+//! mid-aggregation crashes — at **arbitrary virtual timestamps**, not just
+//! iteration boundaries.  This is the asynchronous-gossip view of §V-A/§V-D:
+//! the system reacts to a crash *when it happens*, while the older
+//! iteration-synchronous simulator could only sample churn once per
+//! iteration.
+//!
+//! # Event-source plugin contract
+//!
+//! An [`EventSource`] contributes one [`WorldSchedule`] per iteration:
+//!
+//! - `sample(iter, horizon)` is called once at the start of iteration
+//!   `iter`; `horizon` is the engine's current iteration-length estimate
+//!   (the same reference the deadline and churn instants use).  Sources
+//!   place events at any absolute virtual time `>= 0`; times past the
+//!   iteration's actual end are simply never reached.
+//! - Sources must be **deterministic** functions of their seed and
+//!   `iter` — the whole simulator is replayable from seeds, and the
+//!   proptests assert byte-identical metrics across runs.
+//! - Sources are independent: the engine merges all schedules
+//!   ([`WorldSchedule::merge`]) and interleaves the events with the
+//!   microbatch events on one timeline (ties broken by insertion order,
+//!   world events first).
+//! - Liveness authority stays with the [`ChurnProcess`]: the engine
+//!   applies source-scheduled crashes/joins to it *after* the iteration,
+//!   so planners only ever see start-of-iteration membership (no
+//!   clairvoyance), exactly like paper churn.
+//!
+//! # Scenario mapping to paper §VI
+//!
+//! | schedule ingredient | paper experiment |
+//! |---|---|
+//! | `crashes` / `rejoins` | §VI "Node Crashes" (Tables II/III churn) |
+//! | `agg_crashes` | §V-E barrier under churn — the mid-aggregation-crash scenario (`experiments::scenarios::run_mid_agg_crash`) |
+//! | `jitter` | geo-link variability beyond the static 50–500 Mb/s envelope (`experiments::scenarios::run_link_jitter`) |
+//! | `slowdowns` | the heterogeneous-device rows, made time-varying (stragglers) |
+//! | `joins` | §V-B joining nodes, visible to recovery mid-iteration |
+
+use crate::cost::NodeId;
+use crate::flow::graph::{FlowPath, FlowProblem};
+use crate::util::Rng;
+
+use super::churn::ChurnProcess;
+use super::events::{EventQueue, Slots, Time};
+use super::handlers::{MicrobatchState, Phase};
+use super::scenario::Scenario;
+use super::training::{IterationMetrics, Router, TrainingSim};
+
+/// Piecewise-constant link-delay multiplier window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JitterWindow {
+    pub from: Time,
+    pub until: Time,
+    /// Multiplier applied to every payload-transfer delay started inside
+    /// the window (1.0 = nominal).
+    pub factor: f64,
+}
+
+/// A straggler window: `node` computes `factor`x slower in `[from, until)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slowdown {
+    pub node: NodeId,
+    pub from: Time,
+    pub until: Time,
+    pub factor: f64,
+}
+
+/// One iteration's world events, on the absolute virtual timeline.
+#[derive(Debug, Clone, Default)]
+pub struct WorldSchedule {
+    /// `(node, t)`: node dies at virtual time `t`.  Crash targets must be
+    /// alive at iteration start — [`Engine::step`] drops source crashes
+    /// aimed at already-dead nodes (membership additions go through
+    /// `joins`/`rejoins` instead).
+    pub crashes: Vec<(NodeId, Time)>,
+    /// Nodes returning to the membership.  Churn-process rejoins are
+    /// already alive before planning; rejoins emitted by an
+    /// [`EventSource`] take effect for the *next* iteration (sources are
+    /// sampled after planning, so same-iteration planner visibility is
+    /// impossible by construction — use `joins` for mid-iteration
+    /// recovery availability).
+    pub rejoins: Vec<NodeId>,
+    /// `(node, t)`: node becomes available at virtual time `t` — invisible
+    /// to the planner, but recovery can route onto it from `t` on.
+    pub joins: Vec<(NodeId, Time)>,
+    /// Link-latency jitter windows (global multiplier).
+    pub jitter: Vec<JitterWindow>,
+    /// Straggler compute-slowdown windows.
+    pub slowdowns: Vec<Slowdown>,
+    /// `(node, frac)`: node dies after `frac` of the §V-E aggregation
+    /// barrier has elapsed; its stage redoes that fraction of its weight
+    /// exchange among the survivors.
+    pub agg_crashes: Vec<(NodeId, f64)>,
+}
+
+impl WorldSchedule {
+    /// Fold another source's schedule into this one.
+    pub fn merge(&mut self, other: WorldSchedule) {
+        self.crashes.extend(other.crashes);
+        self.rejoins.extend(other.rejoins);
+        self.joins.extend(other.joins);
+        self.jitter.extend(other.jitter);
+        self.slowdowns.extend(other.slowdowns);
+        self.agg_crashes.extend(other.agg_crashes);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.rejoins.is_empty()
+            && self.joins.is_empty()
+            && self.jitter.is_empty()
+            && self.slowdowns.is_empty()
+            && self.agg_crashes.is_empty()
+    }
+}
+
+/// A pluggable generator of world events (see the module docs for the
+/// contract).  Implementations live in [`super::sources`].
+pub trait EventSource {
+    fn name(&self) -> &str;
+
+    /// Events for iteration `iter`; `horizon` is the engine's current
+    /// iteration-length estimate in virtual seconds.
+    fn sample(&mut self, iter: usize, horizon: Time) -> WorldSchedule;
+}
+
+/// World events delivered on the engine timeline.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum WorldEvent {
+    Crash(NodeId),
+    Join(NodeId),
+}
+
+/// Everything the engine dispatches: microbatch progress or world events.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Ev {
+    Micro(usize, Phase),
+    World(WorldEvent),
+}
+
+/// Multi-iteration driver: owns the simulator, the churn process (the
+/// liveness authority) and any extra event sources, and handles the
+/// cold-plan / warm-replan dispatch to the [`Router`].
+pub struct Engine {
+    pub sim: TrainingSim,
+    pub churn: ChurnProcess,
+    pub sources: Vec<Box<dyn EventSource>>,
+    /// When true, iterations after the first call [`Router::replan`] with
+    /// the diff of consecutive liveness views (GWTF warm-starts from its
+    /// surviving chains; baselines fall back to a cold plan).  Off by
+    /// default — the paper harness (Tables II/III/VI) cold-plans every
+    /// iteration.
+    pub warm_replan: bool,
+    prev_alive: Option<Vec<bool>>,
+    iter: usize,
+    rng: Rng,
+}
+
+impl Engine {
+    pub fn new(sim: TrainingSim, churn: ChurnProcess, seed: u64) -> Engine {
+        Engine {
+            sim,
+            churn,
+            sources: Vec::new(),
+            warm_replan: false,
+            prev_alive: None,
+            iter: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Build from a scenario (clones its topology, config and churn).
+    pub fn from_scenario(sc: &Scenario, seed: u64) -> Engine {
+        Engine::new(
+            TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone()),
+            sc.churn.clone(),
+            seed,
+        )
+    }
+
+    pub fn add_source(&mut self, source: Box<dyn EventSource>) {
+        self.sources.push(source);
+    }
+
+    /// Iterations run so far.
+    pub fn iterations(&self) -> usize {
+        self.iter
+    }
+
+    /// Run one training iteration: sample churn + sources, plan (or warm
+    /// re-plan) routes, execute the continuous-time schedule.
+    pub fn step(&mut self, prob: &FlowProblem, router: &mut dyn Router) -> IterationMetrics {
+        let ev = self.churn.sample_iteration();
+        // Planner view: mid-iteration crashes are in the future.
+        let alive = self.churn.planning_view(&ev);
+        let (paths, planning_s) = match &self.prev_alive {
+            Some(prev) if self.warm_replan => {
+                let dirty: Vec<NodeId> = (0..alive.len())
+                    .filter(|&i| prev.get(i).copied().unwrap_or(true) && !alive[i])
+                    .map(NodeId)
+                    .collect();
+                router.replan(&alive, &dirty)
+            }
+            _ => router.plan(&alive),
+        };
+
+        let mut sched = self.sim.schedule_from_churn(&ev);
+        let horizon = self.sim.current_iter_estimate();
+        let iter = self.iter;
+        for s in &mut self.sources {
+            let mut extra = s.sample(iter, horizon);
+            // A source may not crash a node that is already dead at
+            // iteration start: that would resurrect it for [0, t).
+            // Membership additions go through joins/rejoins.
+            extra.crashes.retain(|&(n, _)| alive.get(n.0).copied().unwrap_or(false));
+            extra.agg_crashes.retain(|&(n, _)| alive.get(n.0).copied().unwrap_or(false));
+            sched.merge(extra);
+        }
+        self.prev_alive = Some(alive);
+        self.iter += 1;
+
+        let metrics = self.sim.run_schedule(
+            prob,
+            router,
+            &sched,
+            &self.churn,
+            planning_s,
+            paths,
+            &mut self.rng,
+        );
+
+        // Source-scheduled crashes/joins/rejoins update the liveness
+        // authority *after* the iteration: the next plan sees them, this
+        // one didn't.  (Churn-process entries are already applied; these
+        // writes are idempotent for them.)
+        for &(node, _) in &sched.crashes {
+            self.churn.alive[node.0] = false;
+        }
+        for &(node, _) in &sched.agg_crashes {
+            self.churn.alive[node.0] = false;
+        }
+        for &(node, _) in &sched.joins {
+            self.churn.alive[node.0] = true;
+        }
+        for &node in &sched.rejoins {
+            self.churn.alive[node.0] = true;
+        }
+        metrics
+    }
+}
+
+impl TrainingSim {
+    /// Execute one iteration's [`WorldSchedule`]: the continuous-time
+    /// dispatch loop over the event queue.
+    ///
+    /// `churn_state` supplies start-of-iteration liveness (aggregation
+    /// membership and availability windows); `paths` are the routed flows
+    /// (one per microbatch).  With a churn-only schedule this reproduces
+    /// the pre-engine simulator byte for byte.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_schedule(
+        &mut self,
+        prob: &FlowProblem,
+        router: &mut dyn Router,
+        sched: &WorldSchedule,
+        churn_state: &ChurnProcess,
+        planning_s: f64,
+        paths: Vec<FlowPath>,
+        _rng: &mut Rng,
+    ) -> IterationMetrics {
+        let n = self.topo.n();
+        // Availability windows at iteration start (rejoins already applied
+        // by the caller via the churn process).
+        for i in 0..n {
+            self.birth_at[i] = if churn_state.alive[i] { 0.0 } else { f64::INFINITY };
+            self.death_at[i] = f64::INFINITY;
+        }
+        for &(node, t) in &sched.crashes {
+            self.birth_at[node.0] = 0.0; // alive until its death instant
+            self.death_at[node.0] = t;
+        }
+        for &(node, t) in &sched.joins {
+            if self.birth_at[node.0].is_infinite() {
+                self.birth_at[node.0] = t;
+            }
+        }
+        self.jitter = sched.jitter.clone();
+        // Sorted by start so the per-transfer factor lookup can binary
+        // search (merged sources may interleave windows).
+        self.jitter.sort_by(|a, b| a.from.total_cmp(&b.from));
+        self.slowdowns = sched.slowdowns.clone();
+
+        let mut metrics =
+            IterationMetrics { scheduled: paths.len(), planning_s, ..Default::default() };
+        let mut slots: Vec<Slots> = (0..n).map(|i| Slots::new(prob.cap[i].max(1))).collect();
+        // Memory residency per node (forward activations awaiting backward).
+        let mut inflight: Vec<usize> = vec![0; n];
+        let mut mbs: Vec<MicrobatchState> = paths.into_iter().map(MicrobatchState::new).collect();
+
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        // World events enter the timeline first: a crash at time t is
+        // delivered to the router at t (the asynchronous-gossip view),
+        // not at first detection.
+        for &(node, t) in &sched.crashes {
+            q.schedule(t.max(0.0), Ev::World(WorldEvent::Crash(node)));
+        }
+        for &(node, t) in &sched.joins {
+            q.schedule(t.max(0.0), Ev::World(WorldEvent::Join(node)));
+        }
+        // Data nodes send out all their microbatches at t=0 (transfer to hop 0).
+        for (mi, mb) in mbs.iter().enumerate() {
+            let d = mb.path.source;
+            let first = mb.path.relays[0];
+            let dt = self.transfer_s(d, first, 0.0);
+            metrics.comm_s += dt;
+            q.schedule(dt, Ev::Micro(mi, Phase::Fwd { hop: 0 }));
+        }
+
+        // Stragglers past the aggregation cutoff are excluded (wasted).
+        let deadline = self.cfg.deadline_factor * self.iter_estimate;
+        while let Some((t, ev)) = q.pop() {
+            let (mi, phase) = match ev {
+                Ev::World(WorldEvent::Crash(node)) => {
+                    router.on_crash(node);
+                    continue;
+                }
+                Ev::World(WorldEvent::Join(_)) => continue,
+                Ev::Micro(mi, phase) => (mi, phase),
+            };
+            if mbs[mi].dropped {
+                continue;
+            }
+            if t > deadline && mbs[mi].done_at.is_none() {
+                mbs[mi].release_all(&mut inflight);
+                mbs[mi].dropped = true;
+                continue;
+            }
+            match phase {
+                Phase::Fwd { hop } => {
+                    self.handle_relay_compute(
+                        t, mi, hop, /*is_fwd=*/ true, prob, router, &mut slots, &mut inflight,
+                        &mut mbs, &mut q, &mut metrics,
+                    );
+                }
+                Phase::Loss => {
+                    // Loss + head backward at the data node (always alive).
+                    let d = mbs[mi].path.source;
+                    let c = self.fwd_compute_s(d, t) + self.bwd_compute_s(d, t);
+                    mbs[mi].compute_spent += c;
+                    let last = mbs[mi].path.relays.len() - 1;
+                    let nxt = mbs[mi].path.relays[last];
+                    let dt = self.transfer_s(d, nxt, t + c);
+                    metrics.comm_s += dt;
+                    q.schedule(t + c + dt, Ev::Micro(mi, Phase::Bwd { hop: last }));
+                }
+                Phase::Bwd { hop } => {
+                    self.handle_relay_compute(
+                        t, mi, hop, /*is_fwd=*/ false, prob, router, &mut slots, &mut inflight,
+                        &mut mbs, &mut q, &mut metrics,
+                    );
+                }
+                Phase::Finish => {
+                    // Embedding backward at the data node.
+                    let d = mbs[mi].path.source;
+                    let c = self.bwd_compute_s(d, t);
+                    mbs[mi].compute_spent += c;
+                    mbs[mi].done_at = Some(t + c);
+                }
+            }
+        }
+
+        // Tally results.
+        let mut makespan: f64 = 0.0;
+        for mb in &mbs {
+            match mb.done_at {
+                Some(t) => {
+                    metrics.completed += 1;
+                    makespan = makespan.max(t);
+                }
+                None => {
+                    metrics.dropped += 1;
+                    metrics.wasted_gpu_s += mb.compute_spent;
+                }
+            }
+        }
+
+        // Aggregation barrier (§V-E), with mid-aggregation crash recovery.
+        let (agg, agg_recoveries) =
+            self.aggregation_time(prob, churn_state, &sched.agg_crashes);
+        metrics.agg_s = agg;
+        metrics.agg_recoveries = agg_recoveries;
+        metrics.makespan_s = makespan + agg + planning_s;
+        // EMA keeps the crash-instant / deadline reference stable.  Only
+        // productive iterations update it: a zero-completion iteration has
+        // a tiny makespan, and folding that in would shrink the next
+        // deadline and wedge the system in a drop-everything spiral.
+        if metrics.completed > 0 {
+            self.iter_estimate = (0.5 * self.iter_estimate + 0.5 * metrics.makespan_s)
+                .max(self.cfg.initial_iter_estimate_s * 0.1)
+                .max(1e-6);
+        }
+        metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GwtfRouter;
+    use crate::flow::FlowParams;
+    use crate::sim::scenario::{build, ScenarioConfig};
+
+    #[test]
+    fn schedule_merge_concatenates_everything() {
+        let mut a = WorldSchedule {
+            crashes: vec![(NodeId(1), 2.0)],
+            ..Default::default()
+        };
+        a.merge(WorldSchedule {
+            crashes: vec![(NodeId(2), 3.0)],
+            rejoins: vec![NodeId(4)],
+            joins: vec![(NodeId(5), 1.0)],
+            jitter: vec![JitterWindow { from: 0.0, until: 1.0, factor: 1.5 }],
+            slowdowns: vec![Slowdown { node: NodeId(3), from: 0.0, until: 9.0, factor: 2.0 }],
+            agg_crashes: vec![(NodeId(6), 0.2)],
+        });
+        assert_eq!(a.crashes.len(), 2);
+        assert_eq!(a.rejoins, vec![NodeId(4)]);
+        assert_eq!(a.joins.len(), 1);
+        assert_eq!(a.jitter.len(), 1);
+        assert_eq!(a.slowdowns.len(), 1);
+        assert_eq!(a.agg_crashes.len(), 1);
+        assert!(!a.is_empty());
+        assert!(WorldSchedule::default().is_empty());
+    }
+
+    #[test]
+    fn engine_step_matches_manual_loop_zero_churn() {
+        // The engine refactor must not move a single number for the
+        // legacy (churn-only, cold-plan) path: same seed => same metrics.
+        let sc = build(&ScenarioConfig::table2(true, 0.0, 3));
+        let mut manual_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 3);
+        let mut manual_sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+        let mut manual_churn = sc.churn.clone();
+        let mut manual_rng = Rng::new(9);
+        let mut engine_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 3);
+        let mut engine = Engine::from_scenario(&sc, 9);
+        for _ in 0..3 {
+            let ev = manual_churn.sample_iteration();
+            let alive = manual_churn.planning_view(&ev);
+            let (paths, planning) = manual_router.plan(&alive);
+            let a = manual_sim.run_iteration(
+                &sc.prob, &mut manual_router, &ev, &manual_churn, planning, paths, &mut manual_rng,
+            );
+            let b = engine.step(&sc.prob, &mut engine_router);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits());
+            assert_eq!(a.agg_s.to_bits(), b.agg_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn engine_applies_source_crashes_to_liveness_after_iteration() {
+        struct OneShotCrash {
+            victim: NodeId,
+            fired: bool,
+        }
+        impl EventSource for OneShotCrash {
+            fn name(&self) -> &str {
+                "one-shot-crash"
+            }
+            fn sample(&mut self, _iter: usize, horizon: Time) -> WorldSchedule {
+                if self.fired {
+                    return WorldSchedule::default();
+                }
+                self.fired = true;
+                WorldSchedule {
+                    crashes: vec![(self.victim, horizon * 0.1)],
+                    ..Default::default()
+                }
+            }
+        }
+        let sc = build(&ScenarioConfig::table2(true, 0.0, 5));
+        let victim = sc.relays[0];
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 5);
+        let mut engine = Engine::from_scenario(&sc, 5);
+        engine.add_source(Box::new(OneShotCrash { victim, fired: false }));
+        assert!(engine.churn.is_alive(victim));
+        let m = engine.step(&sc.prob, &mut router);
+        assert!(m.completed > 0);
+        assert!(!engine.churn.is_alive(victim), "source crash must persist");
+        assert_eq!(engine.iterations(), 1);
+    }
+}

@@ -1,7 +1,11 @@
 //! Deterministic virtual-time event queue.
 //!
 //! Ties are broken by insertion sequence so simulation runs are exactly
-//! reproducible regardless of float equality quirks.
+//! reproducible regardless of float equality quirks.  Timestamps must be
+//! finite: a NaN key would silently collapse the heap ordering (every
+//! comparison against NaN is "equal"), so [`EventQueue::schedule`]
+//! rejects non-finite times outright and the key comparator uses IEEE
+//! `total_cmp`, which cannot lie even if a NaN slipped through.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -23,10 +27,10 @@ impl PartialOrd for Key {
 }
 impl Ord for Key {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t
-            .partial_cmp(&other.t)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(self.seq.cmp(&other.seq))
+        // `total_cmp` is a total order over all f64 values (unlike
+        // `partial_cmp`, whose NaN case previously collapsed to Equal and
+        // silently broke heap ordering).
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
     }
 }
 
@@ -65,8 +69,14 @@ impl<E> EventQueue<E> {
         EventQueue { heap: BinaryHeap::new(), items: Default::default(), seq: 0, now: 0.0 }
     }
 
-    /// Schedule `ev` at absolute time `t` (must be >= now).
+    /// Schedule `ev` at absolute time `t` (must be finite and >= now).
+    ///
+    /// Panics on NaN/infinite `t`: a non-finite key is always a caller
+    /// bug (a division by zero bandwidth, an uninitialized estimate) and
+    /// silently mis-ordering the simulation would corrupt every metric
+    /// downstream.
     pub fn schedule(&mut self, t: Time, ev: E) {
+        assert!(t.is_finite(), "EventQueue::schedule: non-finite event time {t}");
         debug_assert!(t >= self.now - 1e-9, "schedule into the past: {t} < {}", self.now);
         let seq = self.seq;
         self.seq += 1;
@@ -163,6 +173,20 @@ mod tests {
         q.schedule(1.0, 3);
         let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
         assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_time_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::INFINITY, ());
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Per-event microbatch handlers for the continuous-time engine.
+//!
+//! One microbatch is a little state machine walking its routed flow:
+//! forward hops through the relay stages, loss + head backward at the
+//! data node, backward hops in reverse, embedding backward.  Each arrival
+//! is one engine event; this module holds the handler the engine
+//! dispatches for relay-stage compute — including §V-D memory-overload
+//! DENYs, forward-pass reroutes and the backward-pass repair/restart
+//! split that separates GWTF from SWARM.
+
+use crate::cost::NodeId;
+use crate::flow::graph::{FlowPath, FlowProblem};
+
+use super::engine::Ev;
+use super::events::{EventQueue, Slots, Time};
+use super::training::{IterationMetrics, RecoveryPolicy, Router, TrainingSim};
+
+/// Phase of a microbatch's journey.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Phase {
+    /// Payload left `prev`; arriving at relay index `hop` of its path.
+    Fwd { hop: usize },
+    /// Arrived back at the data node for loss + head backward.
+    Loss,
+    /// Gradient arriving at relay index `hop` (descending).
+    Bwd { hop: usize },
+    /// Gradient arrived back at the data node (embedding backward).
+    Finish,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct MicrobatchState {
+    pub path: FlowPath,
+    pub restarts: usize,
+    /// Compute seconds spent so far (wasted if the microbatch is dropped).
+    pub compute_spent: f64,
+    pub dropped: bool,
+    pub done_at: Option<Time>,
+    /// Relays currently holding this microbatch's forward activation
+    /// (memory residency: acquired at forward compute, released when the
+    /// backward pass clears the node — the paper's `cap_i` semantics).
+    pub resident: Vec<NodeId>,
+    /// Overload reroutes so far (bounded to keep DENY storms finite).
+    pub overload_reroutes: usize,
+    /// (stage, node) pairs that DENYed this microbatch — "excluded until
+    /// they free memory" (§V-D).
+    pub denied: Vec<(usize, NodeId)>,
+}
+
+impl MicrobatchState {
+    pub fn new(path: FlowPath) -> Self {
+        MicrobatchState {
+            path,
+            restarts: 0,
+            compute_spent: 0.0,
+            dropped: false,
+            done_at: None,
+            resident: Vec::new(),
+            overload_reroutes: 0,
+            denied: Vec::new(),
+        }
+    }
+
+    /// Free every residency this microbatch holds (drop / restart).
+    pub fn release_all(&mut self, inflight: &mut [usize]) {
+        for r in self.resident.drain(..) {
+            inflight[r.0] = inflight[r.0].saturating_sub(1);
+        }
+    }
+}
+
+impl TrainingSim {
+    /// Relay-stage compute (fwd or bwd) with crash detection + recovery.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn handle_relay_compute(
+        &mut self,
+        t: Time,
+        mi: usize,
+        hop: usize,
+        is_fwd: bool,
+        prob: &FlowProblem,
+        router: &mut dyn Router,
+        slots: &mut [Slots],
+        inflight: &mut [usize],
+        mbs: &mut Vec<MicrobatchState>,
+        q: &mut EventQueue<Ev>,
+        metrics: &mut IterationMetrics,
+    ) {
+        let path = mbs[mi].path.clone();
+        let node = path.relays[hop];
+        let sink = path.source;
+        let n_stages = path.relays.len();
+        let prev: NodeId = if is_fwd {
+            if hop == 0 { sink } else { path.relays[hop - 1] }
+        } else if hop + 1 < n_stages {
+            path.relays[hop + 1]
+        } else {
+            sink
+        };
+        let next: NodeId = if is_fwd {
+            if hop + 1 < n_stages { path.relays[hop + 1] } else { sink }
+        } else if hop == 0 {
+            sink
+        } else {
+            path.relays[hop - 1]
+        };
+
+        let compute =
+            if is_fwd { self.fwd_compute_s(node, t) } else { self.bwd_compute_s(node, t) };
+
+        // Memory overload (§V-D DENY): a forward arrival at a node whose
+        // residency budget is exhausted cannot be accepted — the upstream
+        // node reroutes to a peer with spare memory or defers the batch.
+        // Capacity-aware planning (GWTF) never trips this; SWARM's
+        // capacity-oblivious wiring does.
+        if is_fwd && self.is_up(node, t) && inflight[node.0] >= prob.cap[node.0] {
+            metrics.denies += 1;
+            mbs[mi].overload_reroutes += 1;
+            mbs[mi].denied.push((hop, node));
+            if mbs[mi].overload_reroutes > 4 * n_stages {
+                mbs[mi].release_all(inflight);
+                mbs[mi].dropped = true;
+                return;
+            }
+            // The upstream node only learns a peer is full when that peer
+            // DENYs; it retries the next-best peer it knows, which may be
+            // full too ("this process can continue recursively", SV-D).
+            // It has NO global memory view, so candidates are filtered only
+            // by received DENYs, not by actual residency.
+            let denied = &mbs[mi].denied;
+            let candidates: Vec<NodeId> = prob.graph.stages[hop]
+                .iter()
+                .filter(|&&m| {
+                    m != node && self.is_up(m, t) && !denied.contains(&(hop, m))
+                })
+                .copied()
+                .collect();
+            match router.choose_replacement(prev, next, hop, sink, &candidates) {
+                Some(m) => {
+                    let dt = self.transfer_s(prev, m, t);
+                    metrics.comm_s += dt;
+                    let mut newpath = path.clone();
+                    newpath.relays[hop] = m;
+                    mbs[mi].path = newpath;
+                    q.schedule(t + dt, Ev::Micro(mi, Phase::Fwd { hop }));
+                }
+                None => {
+                    // DENY propagates to the source; deferred to next iter.
+                    mbs[mi].release_all(inflight);
+                    mbs[mi].dropped = true;
+                }
+            }
+            return;
+        }
+
+        if self.is_up(node, t) {
+            let start = slots[node.0].earliest_start(t);
+            let end = start + compute;
+            let death = self.death_at[node.0];
+            if start < death && end <= death {
+                // Success: book the slot, forward the payload.
+                slots[node.0].book(start, end);
+                mbs[mi].compute_spent += compute;
+                if is_fwd {
+                    // activation stays resident until the backward clears
+                    inflight[node.0] += 1;
+                    mbs[mi].resident.push(node);
+                } else if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
+                    mbs[mi].resident.remove(pos);
+                    inflight[node.0] = inflight[node.0].saturating_sub(1);
+                }
+                let dt = self.transfer_s(node, next, end);
+                metrics.comm_s += dt;
+                let arrive = end + dt;
+                let next_phase = if is_fwd {
+                    if hop + 1 < n_stages { Phase::Fwd { hop: hop + 1 } } else { Phase::Loss }
+                } else if hop == 0 {
+                    Phase::Finish
+                } else {
+                    Phase::Bwd { hop: hop - 1 }
+                };
+                // If the receiver is a relay that might be dead on arrival,
+                // the crash branch below (on its own event) handles it.
+                q.schedule(arrive, Ev::Micro(mi, next_phase));
+                return;
+            }
+            // Node dies mid-task: partial work is wasted, crash detected
+            // after the COMPLETE timeout.
+            if start < death {
+                metrics.wasted_gpu_s += death - start;
+            }
+        }
+
+        // --- crash handling ---
+        let death = self.death_at[node.0].min(t);
+        let detect = death.max(t) + self.cfg.timeout_s;
+        router.on_crash(node);
+
+        let stage = hop;
+        if is_fwd {
+            metrics.fwd_recoveries += 1;
+            // Reroute to an alive same-stage replacement with a free slot.
+            let with_memory: Vec<NodeId> = prob.graph.stages[stage]
+                .iter()
+                .filter(|&&m| {
+                    m != node
+                        && self.is_up(m, detect)
+                        && slots[m.0].in_use_at(detect) < slots[m.0].cap
+                        && inflight[m.0] < prob.cap[m.0]
+                })
+                .copied()
+                .collect();
+            // If every alive peer is memory-full right now, wait one
+            // timeout for residencies to clear (flows keep draining) and
+            // retry the best alive peer; the Fwd-arrival overload branch
+            // DENY-reroutes again if it is still full.
+            let (candidates, wait) = if with_memory.is_empty() {
+                let alive_only: Vec<NodeId> = prob.graph.stages[stage]
+                    .iter()
+                    .filter(|&&m| m != node && self.is_up(m, detect))
+                    .copied()
+                    .collect();
+                (alive_only, self.cfg.timeout_s)
+            } else {
+                (with_memory, 0.0)
+            };
+            match router.choose_replacement(prev, next, stage, sink, &candidates) {
+                Some(m) => {
+                    // prev resends its stored activation to m.
+                    let dt = self.transfer_s(prev, m, detect + wait);
+                    metrics.comm_s += dt;
+                    let mut newpath = path.clone();
+                    newpath.relays[hop] = m;
+                    mbs[mi].path = newpath;
+                    q.schedule(detect + wait + dt, Ev::Micro(mi, Phase::Fwd { hop }));
+                }
+                None => {
+                    // DENY up to the source; batch deferred to next iteration.
+                    mbs[mi].release_all(inflight);
+                    mbs[mi].dropped = true;
+                }
+            }
+        } else {
+            metrics.bwd_recoveries += 1;
+            match router.recovery() {
+                RecoveryPolicy::RepairPath => {
+                    // §V-D: replacement recomputes this stage's forward from
+                    // the stored upstream activation, then the backward pass
+                    // resumes from the stored gradient.
+                    let with_memory: Vec<NodeId> = prob.graph.stages[stage]
+                        .iter()
+                        .filter(|&&m| {
+                            m != node
+                                && self.is_up(m, detect)
+                                && slots[m.0].in_use_at(detect) < slots[m.0].cap
+                                && inflight[m.0] < prob.cap[m.0]
+                        })
+                        .copied()
+                        .collect();
+                    // memory-full everywhere: wait one timeout for a
+                    // residency to clear rather than dropping the batch
+                    let (candidates, wait) = if with_memory.is_empty() {
+                        let alive_only: Vec<NodeId> = prob.graph.stages[stage]
+                            .iter()
+                            .filter(|&&m| m != node && self.is_up(m, detect))
+                            .copied()
+                            .collect();
+                        (alive_only, self.cfg.timeout_s)
+                    } else {
+                        (with_memory, 0.0)
+                    };
+                    match router.choose_replacement(prev, next, stage, sink, &candidates) {
+                        Some(m) => {
+                            // fetch activation from the fwd-side neighbour +
+                            // recompute fwd at m, then continue bwd at m.
+                            let dt_act = self.transfer_s(prev, m, detect + wait);
+                            let refwd = self.fwd_compute_s(m, detect + wait);
+                            mbs[mi].compute_spent += refwd;
+                            metrics.comm_s += dt_act;
+                            // residency moves from the dead node to m
+                            if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
+                                mbs[mi].resident.remove(pos);
+                                inflight[node.0] = inflight[node.0].saturating_sub(1);
+                            }
+                            inflight[m.0] += 1;
+                            mbs[mi].resident.push(m);
+                            let mut newpath = path.clone();
+                            newpath.relays[hop] = m;
+                            mbs[mi].path = newpath;
+                            q.schedule(detect + wait + dt_act + refwd, Ev::Micro(mi, Phase::Bwd { hop }));
+                        }
+                        None => {
+                            mbs[mi].release_all(inflight);
+                            mbs[mi].dropped = true;
+                        }
+                    }
+                }
+                RecoveryPolicy::RestartPipeline => {
+                    // SWARM: all work on this microbatch is discarded and the
+                    // whole pipeline re-executes from the data node.
+                    metrics.restarts += 1;
+                    metrics.wasted_gpu_s += mbs[mi].compute_spent;
+                    mbs[mi].compute_spent = 0.0;
+                    mbs[mi].release_all(inflight);
+                    if mbs[mi].restarts + 1 > self.cfg.max_restarts {
+                        mbs[mi].dropped = true;
+                        return;
+                    }
+                    mbs[mi].restarts += 1;
+                    // Re-wire dead relays before restarting.
+                    let mut newpath = mbs[mi].path.clone();
+                    for (s, r) in newpath.relays.clone().into_iter().enumerate() {
+                        if !self.is_up(r, detect) {
+                            let candidates: Vec<NodeId> = prob.graph.stages[s]
+                                .iter()
+                                .filter(|&&m| m != r && self.is_up(m, detect))
+                                .copied()
+                                .collect();
+                            match router.choose_replacement(
+                                if s == 0 { sink } else { newpath.relays[s - 1] },
+                                if s + 1 < n_stages { newpath.relays[s + 1] } else { sink },
+                                s,
+                                sink,
+                                &candidates,
+                            ) {
+                                Some(m) => newpath.relays[s] = m,
+                                None => {
+                                    mbs[mi].release_all(inflight);
+                                    mbs[mi].dropped = true;
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                    mbs[mi].path = newpath;
+                    let d = mbs[mi].path.source;
+                    let first = mbs[mi].path.relays[0];
+                    let dt = self.transfer_s(d, first, detect);
+                    metrics.comm_s += dt;
+                    q.schedule(detect + dt, Ev::Micro(mi, Phase::Fwd { hop: 0 }));
+                }
+            }
+        }
+    }
+}

@@ -1,17 +1,36 @@
 //! Discrete-event simulation substrate.
 //!
 //! The paper's testbed runs logical nodes on 5 throttled GPUs; we replace
-//! the wall clock with a deterministic virtual-time event simulation of
+//! the wall clock with a deterministic continuous-time event simulation of
 //! the same system (DESIGN.md §Substitutions): pipelined microbatch
 //! execution with per-node concurrency slots, link delays from the
-//! topology, node churn mid-iteration, the recovery protocols, and the
-//! training/aggregation synchronization barrier.
+//! topology, world events at arbitrary virtual timestamps (crashes,
+//! joins, link jitter, stragglers — see [`engine`]), the recovery
+//! protocols, and the training/aggregation synchronization barrier.
+//!
+//! Layering:
+//! - [`events`]   — the deterministic virtual-time queue and slot model.
+//! - [`engine`]   — the continuous-time kernel (dispatch loop + the
+//!   [`engine::EventSource`] plugin contract) and the multi-iteration
+//!   [`engine::Engine`] driver with cold-plan / warm-replan dispatch.
+//! - [`handlers`] — per-event microbatch handlers (§V-D recovery logic).
+//! - [`sources`]  — built-in event sources (jitter, stragglers,
+//!   mid-aggregation crashes, delayed joins).
+//! - [`churn`]    — the per-iteration Bernoulli churn process (liveness
+//!   authority).
+//! - [`training`] — the [`training::Router`] policy trait, configuration,
+//!   metrics, and the physical model.
+//! - [`scenario`] — builders for the paper's experiment setups.
 
 pub mod churn;
+pub mod engine;
 pub mod events;
+pub mod handlers;
 pub mod scenario;
+pub mod sources;
 pub mod training;
 
 pub use churn::ChurnProcess;
+pub use engine::{Engine, EventSource, JitterWindow, Slowdown, WorldSchedule};
 pub use events::EventQueue;
 pub use training::{IterationMetrics, RecoveryPolicy, Router, TrainingSim, TrainingSimConfig};

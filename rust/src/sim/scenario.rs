@@ -12,6 +12,7 @@ use crate::net::{Topology, TopologyConfig};
 use crate::util::Rng;
 
 use super::churn::ChurnProcess;
+use super::engine::Engine;
 use super::training::TrainingSimConfig;
 
 /// Model family for payload/compute shaping (Tables II vs III).
@@ -90,6 +91,15 @@ pub struct Scenario {
     pub sim_cfg: TrainingSimConfig,
     pub relays: Vec<NodeId>,
     pub data_nodes: Vec<NodeId>,
+}
+
+impl Scenario {
+    /// A continuous-time engine over this scenario (clones the topology,
+    /// simulator config and churn process; attach extra event sources via
+    /// [`Engine::add_source`]).
+    pub fn engine(&self, seed: u64) -> Engine {
+        Engine::from_scenario(self, seed)
+    }
 }
 
 /// Build the topology, stage assignment, capacities and churn process.

@@ -1,0 +1,226 @@
+//! Built-in [`EventSource`](super::engine::EventSource) implementations.
+//!
+//! Each source is a deterministic function of `(seed, iteration)` and
+//! contributes one [`WorldSchedule`] per iteration; the engine merges all
+//! sources onto a single virtual timeline.  These cover the event kinds
+//! the iteration-synchronous simulator could not express: link-latency
+//! jitter, time-varying stragglers, crashes *inside* the aggregation
+//! barrier, and nodes joining mid-iteration.
+
+use crate::cost::NodeId;
+use crate::util::Rng;
+
+use super::engine::{EventSource, JitterWindow, Slowdown, WorldSchedule};
+use super::events::Time;
+
+/// How far past the iteration estimate a source's windows must reach so
+/// straggling microbatches (deadline factor <= 4x) stay covered.
+const SPAN_FACTOR: f64 = 4.0;
+
+/// Piecewise-constant global link-latency jitter: every `window_s` of
+/// virtual time a fresh delay multiplier is drawn from
+/// `U(1 - amp, 1 + amp)` (floored at 0.1).
+pub struct LinkJitterSource {
+    pub amp: f64,
+    pub window_s: f64,
+    rng: Rng,
+}
+
+impl LinkJitterSource {
+    pub fn new(amp: f64, window_s: f64, seed: u64) -> Self {
+        assert!(amp >= 0.0, "jitter amplitude must be non-negative");
+        assert!(window_s > 0.0, "jitter window must be positive");
+        LinkJitterSource { amp, window_s, rng: Rng::new(seed) }
+    }
+}
+
+impl EventSource for LinkJitterSource {
+    fn name(&self) -> &str {
+        "link-jitter"
+    }
+
+    fn sample(&mut self, _iter: usize, horizon: Time) -> WorldSchedule {
+        if self.amp == 0.0 {
+            return WorldSchedule::default();
+        }
+        let span = horizon * SPAN_FACTOR;
+        let n_windows = ((span / self.window_s).ceil() as usize).clamp(1, 4096);
+        let mut jitter = Vec::with_capacity(n_windows);
+        for k in 0..n_windows {
+            let from = k as f64 * self.window_s;
+            jitter.push(JitterWindow {
+                from,
+                until: from + self.window_s,
+                factor: self.rng.uniform((1.0 - self.amp).max(0.1), 1.0 + self.amp),
+            });
+        }
+        WorldSchedule { jitter, ..Default::default() }
+    }
+}
+
+/// Time-varying stragglers: each iteration every relay independently
+/// becomes `U(lo, hi)`x slower for the whole iteration with probability
+/// `p` (the heterogeneous-device rows of Tables II/III, made dynamic).
+pub struct StragglerSource {
+    pub p: f64,
+    pub factor: (f64, f64),
+    relays: Vec<NodeId>,
+    rng: Rng,
+}
+
+impl StragglerSource {
+    pub fn new(p: f64, factor: (f64, f64), relays: Vec<NodeId>, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        assert!(factor.0 >= 1.0 && factor.1 >= factor.0, "slowdown factors must be >= 1");
+        StragglerSource { p, factor, relays, rng: Rng::new(seed) }
+    }
+}
+
+impl EventSource for StragglerSource {
+    fn name(&self) -> &str {
+        "stragglers"
+    }
+
+    fn sample(&mut self, _iter: usize, horizon: Time) -> WorldSchedule {
+        let mut slowdowns = Vec::new();
+        for &r in &self.relays {
+            if self.rng.chance(self.p) {
+                slowdowns.push(Slowdown {
+                    node: r,
+                    from: 0.0,
+                    until: horizon * SPAN_FACTOR,
+                    factor: self.rng.uniform(self.factor.0, self.factor.1),
+                });
+            }
+        }
+        WorldSchedule { slowdowns, ..Default::default() }
+    }
+}
+
+/// One crash *inside* the §V-E aggregation barrier: at iteration
+/// `at_iter`, `victim` dies after `frac` of the barrier has elapsed.  The
+/// old per-iteration churn model could only kill nodes during the
+/// microbatch phase; this is the scenario behind
+/// `experiments::scenarios::run_mid_agg_crash`.
+pub struct MidAggCrashSource {
+    pub at_iter: usize,
+    pub victim: NodeId,
+    pub frac: f64,
+    fired: bool,
+}
+
+impl MidAggCrashSource {
+    pub fn new(at_iter: usize, victim: NodeId, frac: f64) -> Self {
+        assert!((0.0..=1.0).contains(&frac));
+        MidAggCrashSource { at_iter, victim, frac, fired: false }
+    }
+}
+
+impl EventSource for MidAggCrashSource {
+    fn name(&self) -> &str {
+        "mid-aggregation-crash"
+    }
+
+    fn sample(&mut self, iter: usize, _horizon: Time) -> WorldSchedule {
+        if self.fired || iter != self.at_iter {
+            return WorldSchedule::default();
+        }
+        self.fired = true;
+        WorldSchedule { agg_crashes: vec![(self.victim, self.frac)], ..Default::default() }
+    }
+}
+
+/// A node joining mid-iteration (§V-B): invisible to the planner this
+/// iteration, but crash recovery can route onto it from its join instant,
+/// and it is full membership from the next iteration on.
+pub struct DelayedJoinSource {
+    pub at_iter: usize,
+    pub node: NodeId,
+    /// Join instant as a fraction of the iteration estimate.
+    pub frac: f64,
+    fired: bool,
+}
+
+impl DelayedJoinSource {
+    pub fn new(at_iter: usize, node: NodeId, frac: f64) -> Self {
+        assert!(frac >= 0.0);
+        DelayedJoinSource { at_iter, node, frac, fired: false }
+    }
+}
+
+impl EventSource for DelayedJoinSource {
+    fn name(&self) -> &str {
+        "delayed-join"
+    }
+
+    fn sample(&mut self, iter: usize, horizon: Time) -> WorldSchedule {
+        if self.fired || iter != self.at_iter {
+            return WorldSchedule::default();
+        }
+        self.fired = true;
+        WorldSchedule { joins: vec![(self.node, self.frac * horizon)], ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jitter_windows_tile_the_span() {
+        let mut s = LinkJitterSource::new(0.5, 10.0, 1);
+        let sched = s.sample(0, 100.0);
+        assert_eq!(sched.jitter.len(), 40, "4x span / 10s windows");
+        for (k, w) in sched.jitter.iter().enumerate() {
+            assert!((w.from - k as f64 * 10.0).abs() < 1e-9);
+            assert!((w.until - w.from - 10.0).abs() < 1e-9);
+            assert!((0.5..=1.5).contains(&w.factor), "{}", w.factor);
+        }
+    }
+
+    #[test]
+    fn jitter_zero_amp_is_empty() {
+        let mut s = LinkJitterSource::new(0.0, 10.0, 1);
+        assert!(s.sample(0, 100.0).is_empty());
+    }
+
+    #[test]
+    fn jitter_deterministic_per_seed() {
+        let a = LinkJitterSource::new(0.3, 5.0, 9).sample(0, 50.0);
+        let b = LinkJitterSource::new(0.3, 5.0, 9).sample(0, 50.0);
+        assert_eq!(a.jitter, b.jitter);
+    }
+
+    #[test]
+    fn stragglers_respect_probability_extremes() {
+        let relays: Vec<NodeId> = (0..10).map(NodeId).collect();
+        let mut never = StragglerSource::new(0.0, (2.0, 3.0), relays.clone(), 1);
+        assert!(never.sample(0, 100.0).slowdowns.is_empty());
+        let mut always = StragglerSource::new(1.0, (2.0, 3.0), relays, 1);
+        let sched = always.sample(0, 100.0);
+        assert_eq!(sched.slowdowns.len(), 10);
+        for s in &sched.slowdowns {
+            assert!((2.0..=3.0).contains(&s.factor));
+        }
+    }
+
+    #[test]
+    fn mid_agg_crash_fires_once_at_target_iteration() {
+        let mut s = MidAggCrashSource::new(2, NodeId(7), 0.5);
+        assert!(s.sample(0, 100.0).is_empty());
+        assert!(s.sample(1, 100.0).is_empty());
+        let fired = s.sample(2, 100.0);
+        assert_eq!(fired.agg_crashes, vec![(NodeId(7), 0.5)]);
+        assert!(s.sample(2, 100.0).is_empty(), "one-shot");
+        assert!(s.sample(3, 100.0).is_empty());
+    }
+
+    #[test]
+    fn delayed_join_places_instant_on_horizon() {
+        let mut s = DelayedJoinSource::new(1, NodeId(4), 0.25);
+        assert!(s.sample(0, 200.0).is_empty());
+        let fired = s.sample(1, 200.0);
+        assert_eq!(fired.joins, vec![(NodeId(4), 50.0)]);
+        assert!(s.sample(1, 200.0).is_empty());
+    }
+}

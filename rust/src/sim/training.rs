@@ -1,4 +1,5 @@
-//! Virtual-time simulation of pipelined decentralized training iterations.
+//! Training-simulation surface: routing policy trait, configuration,
+//! per-iteration metrics, and the [`TrainingSim`] physical model.
 //!
 //! Reproduces the paper's measurement methodology (§VI): each iteration,
 //! every data node pushes its microbatches along the routed flows; the
@@ -6,6 +7,15 @@
 //! aggregation barrier with per-node concurrency slots (`cap_i`), link
 //! delays from the topology, node crashes mid-iteration, and the recovery
 //! protocols (GWTF path repair vs SWARM full-pipeline restart).
+//!
+//! The continuous-time event kernel that executes an iteration lives in
+//! [`super::engine`] (the dispatch loop over the [`super::events`] queue)
+//! and [`super::handlers`] (the per-event microbatch handlers); this
+//! module keeps the physical model — liveness windows, link/compute
+//! timing with jitter and straggler factors, and the §V-E aggregation
+//! barrier — plus [`TrainingSim::run_iteration`], the compatibility entry
+//! point that converts one iteration's [`super::churn::ChurnEvents`] into
+//! a [`super::engine::WorldSchedule`] and runs it.
 //!
 //! Reported metrics match the paper's Table II/III rows:
 //! - *time per microbatch* — iteration makespan (slowest data node) divided
@@ -21,7 +31,8 @@ use crate::net::Topology;
 use crate::util::Rng;
 
 use super::churn::{ChurnEvents, ChurnProcess};
-use super::events::{EventQueue, Slots, Time};
+use super::engine::{JitterWindow, Slowdown, WorldSchedule};
+use super::events::Time;
 
 /// Backward-pass crash recovery policy (the paper's key GWTF/SWARM split).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,9 +48,23 @@ pub enum RecoveryPolicy {
 pub trait Router {
     fn name(&self) -> String;
 
-    /// (Re)plan flows at iteration start. `alive[n]` is current liveness.
-    /// Returns the routed paths and the planning wall-time to charge.
+    /// (Re)plan flows from scratch at iteration start. `alive[n]` is
+    /// current liveness.  Returns the routed paths and the planning
+    /// wall-time to charge.
     fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64);
+
+    /// Incrementally re-plan after membership changes.  `dirty` lists the
+    /// nodes that died since the previous plan; flows through them must
+    /// be torn down and repaired, surviving flows should be kept.
+    ///
+    /// The default cold-starts via [`Router::plan`] — that is the
+    /// SWARM/DT-FM baseline behavior.  GWTF overrides this with a warm
+    /// start from its surviving chains (§V-A Request Flow / Change /
+    /// Redirect re-run locally around the crash sites).
+    fn replan(&mut self, alive: &[bool], dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
+        let _ = dirty;
+        self.plan(alive)
+    }
 
     /// Notify of a mid-iteration crash so internal state can adapt.
     fn on_crash(&mut self, node: NodeId);
@@ -113,6 +138,10 @@ pub struct IterationMetrics {
     /// `cap_i` concurrent-residency budget was exhausted and was rerouted
     /// or deferred.  Capacity-oblivious routing (SWARM) pays these.
     pub denies: usize,
+    /// Stage-weight re-exchanges forced by crashes landing *inside* the
+    /// aggregation barrier (§V-E) — expressible only by the
+    /// continuous-time schedule (`WorldSchedule::agg_crashes`).
+    pub agg_recoveries: usize,
 }
 
 impl IterationMetrics {
@@ -125,86 +154,107 @@ impl IterationMetrics {
     }
 }
 
-/// Phase of a microbatch's journey.
-#[derive(Debug, Clone, Copy)]
-enum Phase {
-    /// Payload left `prev`; arriving at relay index `hop` of its path.
-    Fwd { hop: usize },
-    /// Arrived back at the data node for loss + head backward.
-    Loss,
-    /// Gradient arriving at relay index `hop` (descending).
-    Bwd { hop: usize },
-    /// Gradient arrived back at the data node (embedding backward).
-    Finish,
-}
-
-#[derive(Debug, Clone)]
-struct MicrobatchState {
-    path: FlowPath,
-    restarts: usize,
-    /// Compute seconds spent so far (wasted if the microbatch is dropped).
-    compute_spent: f64,
-    dropped: bool,
-    done_at: Option<Time>,
-    /// Relays currently holding this microbatch's forward activation
-    /// (memory residency: acquired at forward compute, released when the
-    /// backward pass clears the node — the paper's `cap_i` semantics).
-    resident: Vec<NodeId>,
-    /// Overload reroutes so far (bounded to keep DENY storms finite).
-    overload_reroutes: usize,
-    /// (stage, node) pairs that DENYed this microbatch — "excluded until
-    /// they free memory" (§V-D).
-    denied: Vec<(usize, NodeId)>,
-}
-
-impl MicrobatchState {
-    /// Free every residency this microbatch holds (drop / restart).
-    fn release_all(&mut self, inflight: &mut [usize]) {
-        for r in self.resident.drain(..) {
-            inflight[r.0] = inflight[r.0].saturating_sub(1);
-        }
-    }
-}
-
-/// The training simulator.
+/// The training simulator: physical model of the volunteer network over
+/// one iteration's virtual timeline.
 pub struct TrainingSim {
     pub topo: Topology,
     pub cfg: TrainingSimConfig,
-    /// Virtual availability: node is usable while `alive`, dying at
-    /// `death_at` during the current iteration (f64::INFINITY otherwise).
-    death_at: Vec<Time>,
-    alive: Vec<bool>,
-    iter_estimate: f64,
+    /// Virtual availability window per node: usable while
+    /// `birth_at <= t < death_at`.  A node alive at iteration start has
+    /// `birth_at = 0`; one joining mid-iteration gets its join instant;
+    /// a dead node keeps `birth_at = INFINITY`.
+    pub(crate) death_at: Vec<Time>,
+    pub(crate) birth_at: Vec<Time>,
+    /// Piecewise-constant link-delay multiplier windows (engine-supplied).
+    pub(crate) jitter: Vec<JitterWindow>,
+    /// Straggler windows: per-node compute multipliers (engine-supplied).
+    pub(crate) slowdowns: Vec<Slowdown>,
+    pub(crate) iter_estimate: f64,
 }
 
 impl TrainingSim {
     pub fn new(topo: Topology, cfg: TrainingSimConfig) -> Self {
         let n = topo.n();
         let iter_estimate = cfg.initial_iter_estimate_s;
-        TrainingSim { topo, cfg, death_at: vec![f64::INFINITY; n], alive: vec![true; n], iter_estimate }
+        TrainingSim {
+            topo,
+            cfg,
+            death_at: vec![f64::INFINITY; n],
+            birth_at: vec![0.0; n],
+            jitter: Vec::new(),
+            slowdowns: Vec::new(),
+            iter_estimate,
+        }
     }
 
-    fn transfer_s(&self, from: NodeId, to: NodeId) -> f64 {
-        self.topo.delay(from, to, self.cfg.payload_bytes)
+    /// The running iteration-length estimate (the crash-instant and
+    /// deadline reference; event sources use it as their horizon).
+    pub fn current_iter_estimate(&self) -> f64 {
+        self.iter_estimate
     }
 
-    fn fwd_compute_s(&self, n: NodeId) -> f64 {
-        self.topo.profiles[n.0].compute_s
-    }
-
-    fn bwd_compute_s(&self, n: NodeId) -> f64 {
-        self.topo.profiles[n.0].compute_s * self.cfg.bwd_factor
-    }
-
-    fn is_up(&self, n: NodeId, t: Time) -> bool {
-        self.alive[n.0] && t < self.death_at[n.0]
-    }
-
-    /// Run one full training iteration.
+    /// Link-delay multiplier in effect at virtual time `t`.
     ///
-    /// `paths`: routed flows (one per microbatch).  `churn`: this
-    /// iteration's crash/rejoin schedule.  `prob` gives stage structure
-    /// and capacities for recovery candidate search.
+    /// `jitter` is kept sorted by window start (see
+    /// [`run_schedule`](TrainingSim::run_schedule)) and windows are
+    /// treated as non-overlapping (the built-in sources emit contiguous
+    /// tiles): only the latest-starting window at or before `t` is
+    /// consulted, making every lookup O(log n) on this hot path.
+    fn link_factor_at(&self, t: Time) -> f64 {
+        if self.jitter.is_empty() {
+            return 1.0;
+        }
+        let idx = self.jitter.partition_point(|w| w.from <= t);
+        match idx.checked_sub(1).map(|i| &self.jitter[i]) {
+            Some(w) if t < w.until => w.factor,
+            _ => 1.0,
+        }
+    }
+
+    /// Compute multiplier for `n` at virtual time `t` (straggler windows).
+    fn compute_factor(&self, n: NodeId, t: Time) -> f64 {
+        for s in &self.slowdowns {
+            if s.node == n && t >= s.from && t < s.until {
+                return s.factor;
+            }
+        }
+        1.0
+    }
+
+    /// Payload transfer time for a hop starting at virtual time `t`.
+    pub(crate) fn transfer_s(&self, from: NodeId, to: NodeId, t: Time) -> f64 {
+        self.topo.delay(from, to, self.cfg.payload_bytes) * self.link_factor_at(t)
+    }
+
+    pub(crate) fn fwd_compute_s(&self, n: NodeId, t: Time) -> f64 {
+        self.topo.profiles[n.0].compute_s * self.compute_factor(n, t)
+    }
+
+    pub(crate) fn bwd_compute_s(&self, n: NodeId, t: Time) -> f64 {
+        self.fwd_compute_s(n, t) * self.cfg.bwd_factor
+    }
+
+    pub(crate) fn is_up(&self, n: NodeId, t: Time) -> bool {
+        t >= self.birth_at[n.0] && t < self.death_at[n.0]
+    }
+
+    /// Convert one iteration's churn sample into an absolute-time world
+    /// schedule (crash fractions are relative to the running estimate).
+    pub fn schedule_from_churn(&self, ev: &ChurnEvents) -> WorldSchedule {
+        WorldSchedule {
+            crashes: ev.crashes.iter().map(|&(n, frac)| (n, frac * self.iter_estimate)).collect(),
+            rejoins: ev.rejoins.clone(),
+            ..Default::default()
+        }
+    }
+
+    /// Run one full training iteration from a per-iteration churn sample.
+    ///
+    /// Compatibility entry point: converts `churn` into a
+    /// [`WorldSchedule`] and defers to
+    /// [`run_schedule`](TrainingSim::run_schedule) — byte-identical
+    /// behavior to the pre-engine simulator for churn-only schedules.
+    #[allow(clippy::too_many_arguments)]
     pub fn run_iteration(
         &mut self,
         prob: &FlowProblem,
@@ -213,399 +263,26 @@ impl TrainingSim {
         churn_state: &ChurnProcess,
         planning_s: f64,
         paths: Vec<FlowPath>,
-        _rng: &mut Rng,
+        rng: &mut Rng,
     ) -> IterationMetrics {
-        let n = self.topo.n();
-        // Liveness at iteration start (rejoins already applied by caller).
-        for i in 0..n {
-            self.alive[i] = churn_state.alive[i];
-            self.death_at[i] = f64::INFINITY;
-        }
-        // Nodes crashing mid-iteration die at frac * current estimate.
-        for &(node, frac) in &churn.crashes {
-            self.alive[node.0] = true; // alive until its death instant
-            self.death_at[node.0] = frac * self.iter_estimate;
-        }
-
-        let mut metrics = IterationMetrics { scheduled: paths.len(), planning_s, ..Default::default() };
-        let mut slots: Vec<Slots> = (0..n).map(|i| Slots::new(prob.cap[i].max(1))).collect();
-        // Memory residency per node (forward activations awaiting backward).
-        let mut inflight: Vec<usize> = vec![0; n];
-        let mut mbs: Vec<MicrobatchState> = paths
-            .into_iter()
-            .map(|p| MicrobatchState {
-                path: p,
-                restarts: 0,
-                compute_spent: 0.0,
-                dropped: false,
-                done_at: None,
-                resident: Vec::new(),
-                overload_reroutes: 0,
-                denied: Vec::new(),
-            })
-            .collect();
-
-        let mut q: EventQueue<(usize, Phase)> = EventQueue::new();
-        // Data nodes send out all their microbatches at t=0 (transfer to hop 0).
-        for (mi, mb) in mbs.iter().enumerate() {
-            let d = mb.path.source;
-            let first = mb.path.relays[0];
-            let dt = self.transfer_s(d, first);
-            metrics.comm_s += dt;
-            q.schedule(dt, (mi, Phase::Fwd { hop: 0 }));
-        }
-
-        // Stragglers past the aggregation cutoff are excluded (wasted).
-        let deadline = self.cfg.deadline_factor * self.iter_estimate;
-        while let Some((t, (mi, phase))) = q.pop() {
-            if mbs[mi].dropped {
-                continue;
-            }
-            if t > deadline && mbs[mi].done_at.is_none() {
-                mbs[mi].release_all(&mut inflight);
-                mbs[mi].dropped = true;
-                continue;
-            }
-            match phase {
-                Phase::Fwd { hop } => {
-                    self.handle_relay_compute(
-                        t, mi, hop, /*is_fwd=*/ true, prob, router, &mut slots, &mut inflight,
-                        &mut mbs, &mut q, &mut metrics,
-                    );
-                }
-                Phase::Loss => {
-                    // Loss + head backward at the data node (always alive).
-                    let d = mbs[mi].path.source;
-                    let c = self.fwd_compute_s(d) + self.bwd_compute_s(d);
-                    mbs[mi].compute_spent += c;
-                    let last = mbs[mi].path.relays.len() - 1;
-                    let nxt = mbs[mi].path.relays[last];
-                    let dt = self.transfer_s(d, nxt);
-                    metrics.comm_s += dt;
-                    q.schedule(t + c + dt, (mi, Phase::Bwd { hop: last }));
-                }
-                Phase::Bwd { hop } => {
-                    self.handle_relay_compute(
-                        t, mi, hop, /*is_fwd=*/ false, prob, router, &mut slots, &mut inflight,
-                        &mut mbs, &mut q, &mut metrics,
-                    );
-                }
-                Phase::Finish => {
-                    // Embedding backward at the data node.
-                    let d = mbs[mi].path.source;
-                    let c = self.bwd_compute_s(d);
-                    mbs[mi].compute_spent += c;
-                    mbs[mi].done_at = Some(t + c);
-                }
-            }
-        }
-
-        // Tally results.
-        let mut makespan: f64 = 0.0;
-        for mb in &mbs {
-            match mb.done_at {
-                Some(t) => {
-                    metrics.completed += 1;
-                    makespan = makespan.max(t);
-                }
-                None => {
-                    metrics.dropped += 1;
-                    metrics.wasted_gpu_s += mb.compute_spent;
-                }
-            }
-        }
-
-        // Aggregation barrier (§V-E): BEGIN AGGREGATION propagates forward,
-        // stages exchange weights internally, CAN TAKE propagates back.
-        let agg = self.aggregation_time(prob, churn_state);
-        metrics.agg_s = agg;
-        metrics.makespan_s = makespan + agg + planning_s;
-        // EMA keeps the crash-instant / deadline reference stable.  Only
-        // productive iterations update it: a zero-completion iteration has
-        // a tiny makespan, and folding that in would shrink the next
-        // deadline and wedge the system in a drop-everything spiral.
-        if metrics.completed > 0 {
-            self.iter_estimate = (0.5 * self.iter_estimate + 0.5 * metrics.makespan_s)
-                .max(self.cfg.initial_iter_estimate_s * 0.1)
-                .max(1e-6);
-        }
-        metrics
+        let schedule = self.schedule_from_churn(churn);
+        self.run_schedule(prob, router, &schedule, churn_state, planning_s, paths, rng)
     }
 
-    /// Relay-stage compute (fwd or bwd) with crash detection + recovery.
-    #[allow(clippy::too_many_arguments)]
-    fn handle_relay_compute(
-        &mut self,
-        t: Time,
-        mi: usize,
-        hop: usize,
-        is_fwd: bool,
+    /// §V-E training/aggregation synchronization barrier duration, plus
+    /// the recovery count for crashes landing inside the barrier.
+    ///
+    /// Base barrier: BEGIN AGGREGATION propagates forward, stages exchange
+    /// weights internally, CAN TAKE propagates back.  Each entry of
+    /// `agg_crashes` is a `(node, frac)` pair: `node` dies after `frac` of
+    /// the barrier has elapsed, so its stage re-runs the exchanged
+    /// fraction among the survivors after one detection timeout.
+    pub(crate) fn aggregation_time(
+        &self,
         prob: &FlowProblem,
-        router: &mut dyn Router,
-        slots: &mut [Slots],
-        inflight: &mut [usize],
-        mbs: &mut Vec<MicrobatchState>,
-        q: &mut EventQueue<(usize, Phase)>,
-        metrics: &mut IterationMetrics,
-    ) {
-        let path = mbs[mi].path.clone();
-        let node = path.relays[hop];
-        let sink = path.source;
-        let n_stages = path.relays.len();
-        let prev: NodeId = if is_fwd {
-            if hop == 0 { sink } else { path.relays[hop - 1] }
-        } else if hop + 1 < n_stages {
-            path.relays[hop + 1]
-        } else {
-            sink
-        };
-        let next: NodeId = if is_fwd {
-            if hop + 1 < n_stages { path.relays[hop + 1] } else { sink }
-        } else if hop == 0 {
-            sink
-        } else {
-            path.relays[hop - 1]
-        };
-
-        let compute = if is_fwd { self.fwd_compute_s(node) } else { self.bwd_compute_s(node) };
-
-        // Memory overload (§V-D DENY): a forward arrival at a node whose
-        // residency budget is exhausted cannot be accepted — the upstream
-        // node reroutes to a peer with spare memory or defers the batch.
-        // Capacity-aware planning (GWTF) never trips this; SWARM's
-        // capacity-oblivious wiring does.
-        if is_fwd && self.is_up(node, t) && inflight[node.0] >= prob.cap[node.0] {
-            metrics.denies += 1;
-            mbs[mi].overload_reroutes += 1;
-            mbs[mi].denied.push((hop, node));
-            if mbs[mi].overload_reroutes > 4 * n_stages {
-                mbs[mi].release_all(inflight);
-                mbs[mi].dropped = true;
-                return;
-            }
-            // The upstream node only learns a peer is full when that peer
-            // DENYs; it retries the next-best peer it knows, which may be
-            // full too ("this process can continue recursively", SV-D).
-            // It has NO global memory view, so candidates are filtered only
-            // by received DENYs, not by actual residency.
-            let denied = &mbs[mi].denied;
-            let candidates: Vec<NodeId> = prob.graph.stages[hop]
-                .iter()
-                .filter(|&&m| {
-                    m != node && self.is_up(m, t) && !denied.contains(&(hop, m))
-                })
-                .copied()
-                .collect();
-            match router.choose_replacement(prev, next, hop, sink, &candidates) {
-                Some(m) => {
-                    let dt = self.transfer_s(prev, m);
-                    metrics.comm_s += dt;
-                    let mut newpath = path.clone();
-                    newpath.relays[hop] = m;
-                    mbs[mi].path = newpath;
-                    q.schedule(t + dt, (mi, Phase::Fwd { hop }));
-                }
-                None => {
-                    // DENY propagates to the source; deferred to next iter.
-                    mbs[mi].release_all(inflight);
-                    mbs[mi].dropped = true;
-                }
-            }
-            return;
-        }
-
-        if self.is_up(node, t) {
-            let start = slots[node.0].earliest_start(t);
-            let end = start + compute;
-            let death = self.death_at[node.0];
-            if start < death && end <= death {
-                // Success: book the slot, forward the payload.
-                slots[node.0].book(start, end);
-                mbs[mi].compute_spent += compute;
-                if is_fwd {
-                    // activation stays resident until the backward clears
-                    inflight[node.0] += 1;
-                    mbs[mi].resident.push(node);
-                } else if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
-                    mbs[mi].resident.remove(pos);
-                    inflight[node.0] = inflight[node.0].saturating_sub(1);
-                }
-                let dt = self.transfer_s(node, next);
-                metrics.comm_s += dt;
-                let arrive = end + dt;
-                let next_phase = if is_fwd {
-                    if hop + 1 < n_stages { Phase::Fwd { hop: hop + 1 } } else { Phase::Loss }
-                } else if hop == 0 {
-                    Phase::Finish
-                } else {
-                    Phase::Bwd { hop: hop - 1 }
-                };
-                // If the receiver is a relay that might be dead on arrival,
-                // the crash branch below (on its own event) handles it.
-                q.schedule(arrive, (mi, next_phase));
-                return;
-            }
-            // Node dies mid-task: partial work is wasted, crash detected
-            // after the COMPLETE timeout.
-            if start < death {
-                metrics.wasted_gpu_s += death - start;
-            }
-        }
-
-        // --- crash handling ---
-        let death = self.death_at[node.0].min(t);
-        let detect = death.max(t) + self.cfg.timeout_s;
-        router.on_crash(node);
-
-        let stage = hop;
-        if is_fwd {
-            metrics.fwd_recoveries += 1;
-            // Reroute to an alive same-stage replacement with a free slot.
-            let with_memory: Vec<NodeId> = prob.graph.stages[stage]
-                .iter()
-                .filter(|&&m| {
-                    m != node
-                        && self.is_up(m, detect)
-                        && slots[m.0].in_use_at(detect) < slots[m.0].cap
-                        && inflight[m.0] < prob.cap[m.0]
-                })
-                .copied()
-                .collect();
-            // If every alive peer is memory-full right now, wait one
-            // timeout for residencies to clear (flows keep draining) and
-            // retry the best alive peer; the Fwd-arrival overload branch
-            // DENY-reroutes again if it is still full.
-            let (candidates, wait) = if with_memory.is_empty() {
-                let alive_only: Vec<NodeId> = prob.graph.stages[stage]
-                    .iter()
-                    .filter(|&&m| m != node && self.is_up(m, detect))
-                    .copied()
-                    .collect();
-                (alive_only, self.cfg.timeout_s)
-            } else {
-                (with_memory, 0.0)
-            };
-            match router.choose_replacement(prev, next, stage, sink, &candidates) {
-                Some(m) => {
-                    // prev resends its stored activation to m.
-                    let dt = self.transfer_s(prev, m);
-                    metrics.comm_s += dt;
-                    let mut newpath = path.clone();
-                    newpath.relays[hop] = m;
-                    mbs[mi].path = newpath;
-                    q.schedule(detect + wait + dt, (mi, Phase::Fwd { hop }));
-                }
-                None => {
-                    // DENY up to the source; batch deferred to next iteration.
-                    mbs[mi].release_all(inflight);
-                    mbs[mi].dropped = true;
-                }
-            }
-        } else {
-            metrics.bwd_recoveries += 1;
-            match router.recovery() {
-                RecoveryPolicy::RepairPath => {
-                    // §V-D: replacement recomputes this stage's forward from
-                    // the stored upstream activation, then the backward pass
-                    // resumes from the stored gradient.
-                    let with_memory: Vec<NodeId> = prob.graph.stages[stage]
-                        .iter()
-                        .filter(|&&m| {
-                            m != node
-                                && self.is_up(m, detect)
-                                && slots[m.0].in_use_at(detect) < slots[m.0].cap
-                                && inflight[m.0] < prob.cap[m.0]
-                        })
-                        .copied()
-                        .collect();
-                    // memory-full everywhere: wait one timeout for a
-                    // residency to clear rather than dropping the batch
-                    let (candidates, wait) = if with_memory.is_empty() {
-                        let alive_only: Vec<NodeId> = prob.graph.stages[stage]
-                            .iter()
-                            .filter(|&&m| m != node && self.is_up(m, detect))
-                            .copied()
-                            .collect();
-                        (alive_only, self.cfg.timeout_s)
-                    } else {
-                        (with_memory, 0.0)
-                    };
-                    match router.choose_replacement(prev, next, stage, sink, &candidates) {
-                        Some(m) => {
-                            // fetch activation from the fwd-side neighbour +
-                            // recompute fwd at m, then continue bwd at m.
-                            let dt_act = self.transfer_s(prev, m);
-                            let refwd = self.fwd_compute_s(m);
-                            mbs[mi].compute_spent += refwd;
-                            metrics.comm_s += dt_act;
-                            // residency moves from the dead node to m
-                            if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
-                                mbs[mi].resident.remove(pos);
-                                inflight[node.0] = inflight[node.0].saturating_sub(1);
-                            }
-                            inflight[m.0] += 1;
-                            mbs[mi].resident.push(m);
-                            let mut newpath = path.clone();
-                            newpath.relays[hop] = m;
-                            mbs[mi].path = newpath;
-                            q.schedule(detect + wait + dt_act + refwd, (mi, Phase::Bwd { hop }));
-                        }
-                        None => {
-                            mbs[mi].release_all(inflight);
-                            mbs[mi].dropped = true;
-                        }
-                    }
-                }
-                RecoveryPolicy::RestartPipeline => {
-                    // SWARM: all work on this microbatch is discarded and the
-                    // whole pipeline re-executes from the data node.
-                    metrics.restarts += 1;
-                    metrics.wasted_gpu_s += mbs[mi].compute_spent;
-                    mbs[mi].compute_spent = 0.0;
-                    mbs[mi].release_all(inflight);
-                    if mbs[mi].restarts + 1 > self.cfg.max_restarts {
-                        mbs[mi].dropped = true;
-                        return;
-                    }
-                    mbs[mi].restarts += 1;
-                    // Re-wire dead relays before restarting.
-                    let mut newpath = mbs[mi].path.clone();
-                    for (s, r) in newpath.relays.clone().into_iter().enumerate() {
-                        if !self.is_up(r, detect) {
-                            let candidates: Vec<NodeId> = prob.graph.stages[s]
-                                .iter()
-                                .filter(|&&m| m != r && self.is_up(m, detect))
-                                .copied()
-                                .collect();
-                            match router.choose_replacement(
-                                if s == 0 { sink } else { newpath.relays[s - 1] },
-                                if s + 1 < n_stages { newpath.relays[s + 1] } else { sink },
-                                s,
-                                sink,
-                                &candidates,
-                            ) {
-                                Some(m) => newpath.relays[s] = m,
-                                None => {
-                                    mbs[mi].release_all(inflight);
-                                    mbs[mi].dropped = true;
-                                    return;
-                                }
-                            }
-                        }
-                    }
-                    mbs[mi].path = newpath;
-                    let d = mbs[mi].path.source;
-                    let first = mbs[mi].path.relays[0];
-                    let dt = self.transfer_s(d, first);
-                    metrics.comm_s += dt;
-                    q.schedule(detect + dt, (mi, Phase::Fwd { hop: 0 }));
-                }
-            }
-        }
-    }
-
-    /// §V-E training/aggregation synchronization barrier duration.
-    fn aggregation_time(&self, prob: &FlowProblem, churn: &ChurnProcess) -> f64 {
+        churn: &ChurnProcess,
+        agg_crashes: &[(NodeId, f64)],
+    ) -> (f64, usize) {
         const CTRL_BYTES: f64 = 1024.0;
         let mut fwd_ctrl: f64 = 0.0;
         let mut back_ctrl: f64 = 0.0;
@@ -640,7 +317,38 @@ impl TrainingSim {
             exchange = exchange.max(worst);
             prev_stage = members;
         }
-        fwd_ctrl + exchange + back_ctrl
+        let base = fwd_ctrl + exchange + back_ctrl;
+        if agg_crashes.is_empty() {
+            return (base, 0);
+        }
+        // Mid-aggregation crashes: the victim's stage detects the failure
+        // (one COMPLETE timeout) and redoes the fraction of its weight
+        // exchange the crash invalidated, now among the survivors.
+        let mut extra = 0.0;
+        let mut recoveries = 0usize;
+        for &(node, frac) in agg_crashes {
+            if !churn.is_alive(node) {
+                continue; // already out of the barrier membership
+            }
+            let Some(stage) = prob.graph.stage_of(node) else { continue };
+            let survivors: Vec<NodeId> = prob.graph.stages[stage]
+                .iter()
+                .filter(|&&m| m != node && churn.is_alive(m))
+                .copied()
+                .collect();
+            let mut worst: f64 = 0.0;
+            for &a in &survivors {
+                for &b in &survivors {
+                    if a != b {
+                        worst =
+                            worst.max(self.topo.delay(a, b, self.cfg.stage_param_bytes));
+                    }
+                }
+            }
+            extra += self.cfg.timeout_s + frac.clamp(0.0, 1.0) * worst;
+            recoveries += 1;
+        }
+        (base + extra, recoveries)
     }
 }
 
@@ -650,11 +358,20 @@ mod tests {
     use crate::cost::NodeProfile;
     use crate::flow::graph::StageGraph;
     use crate::net::TopologyConfig;
+    use crate::sim::engine::{JitterWindow, Slowdown, WorldSchedule};
 
     /// Trivial fixed router for tests: static paths, first-candidate reroute.
     struct FixedRouter {
         paths: Vec<FlowPath>,
         policy: RecoveryPolicy,
+        plans: usize,
+        replans: usize,
+    }
+
+    impl FixedRouter {
+        fn new(paths: Vec<FlowPath>, policy: RecoveryPolicy) -> Self {
+            FixedRouter { paths, policy, plans: 0, replans: 0 }
+        }
     }
 
     impl Router for FixedRouter {
@@ -662,6 +379,7 @@ mod tests {
             "fixed".into()
         }
         fn plan(&mut self, _alive: &[bool]) -> (Vec<FlowPath>, f64) {
+            self.plans += 1;
             (self.paths.clone(), 0.0)
         }
         fn on_crash(&mut self, _node: NodeId) {}
@@ -722,11 +440,20 @@ mod tests {
     fn run_once(policy: RecoveryPolicy, crashes: Vec<(NodeId, f64)>) -> IterationMetrics {
         let (topo, prob, paths) = setup();
         let mut sim = TrainingSim::new(topo, small_cfg());
-        let mut router = FixedRouter { paths: paths.clone(), policy };
+        let mut router = FixedRouter::new(paths.clone(), policy);
         let churn_state = ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
         let churn = ChurnEvents { crashes, rejoins: vec![] };
         let mut rng = Rng::new(0);
         sim.run_iteration(&prob, &mut router, &churn, &churn_state, 0.0, paths, &mut rng)
+    }
+
+    fn run_schedule_once(sched: &WorldSchedule) -> IterationMetrics {
+        let (topo, prob, paths) = setup();
+        let mut sim = TrainingSim::new(topo, small_cfg());
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+        let churn_state = ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+        let mut rng = Rng::new(0);
+        sim.run_schedule(&prob, &mut router, sched, &churn_state, 0.0, paths, &mut rng)
     }
 
     #[test]
@@ -795,12 +522,122 @@ mod tests {
     fn makespan_includes_aggregation_and_planning() {
         let (topo, prob, paths) = setup();
         let mut sim = TrainingSim::new(topo, small_cfg());
-        let mut router = FixedRouter { paths: paths.clone(), policy: RecoveryPolicy::RepairPath };
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
         let churn_state = ChurnProcess::new(5, vec![], 0.0, 7);
         let churn = ChurnEvents::default();
         let mut rng = Rng::new(0);
         let m = sim.run_iteration(&prob, &mut router, &churn, &churn_state, 3.0, paths, &mut rng);
         assert!(m.makespan_s >= m.agg_s + 3.0);
         assert_eq!(m.planning_s, 3.0);
+    }
+
+    #[test]
+    fn replan_default_falls_back_to_cold_plan() {
+        let (_, _, paths) = setup();
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+        let alive = vec![true; 5];
+        let (p, _) = router.replan(&alive, &[NodeId(3)]);
+        assert_eq!(p, paths);
+        assert_eq!(router.plans, 1, "trait default must delegate to plan()");
+        assert_eq!(router.replans, 0);
+    }
+
+    #[test]
+    fn schedule_from_churn_scales_by_estimate() {
+        let (topo, _, _) = setup();
+        let sim = TrainingSim::new(topo, small_cfg());
+        let ev = ChurnEvents {
+            crashes: vec![(NodeId(1), 0.5)],
+            rejoins: vec![NodeId(2)],
+        };
+        let s = sim.schedule_from_churn(&ev);
+        assert_eq!(s.crashes, vec![(NodeId(1), 0.5 * 30.0)]);
+        assert_eq!(s.rejoins, vec![NodeId(2)]);
+        assert!(s.jitter.is_empty() && s.slowdowns.is_empty() && s.agg_crashes.is_empty());
+    }
+
+    #[test]
+    fn link_jitter_stretches_makespan() {
+        let base = run_schedule_once(&WorldSchedule::default());
+        let jittered = run_schedule_once(&WorldSchedule {
+            jitter: vec![JitterWindow { from: 0.0, until: 1e6, factor: 3.0 }],
+            ..Default::default()
+        });
+        assert_eq!(jittered.completed, base.completed);
+        assert!(
+            jittered.comm_s > base.comm_s * 2.0,
+            "3x link jitter must inflate comm time: {} vs {}",
+            jittered.comm_s,
+            base.comm_s
+        );
+        assert!(jittered.makespan_s > base.makespan_s);
+    }
+
+    #[test]
+    fn straggler_slowdown_stretches_makespan() {
+        let base = run_schedule_once(&WorldSchedule::default());
+        let slowed = run_schedule_once(&WorldSchedule {
+            slowdowns: vec![Slowdown { node: NodeId(3), from: 0.0, until: 1e6, factor: 5.0 }],
+            ..Default::default()
+        });
+        assert_eq!(slowed.completed, base.completed);
+        assert!(
+            slowed.makespan_s > base.makespan_s,
+            "5x straggler must slow the iteration: {} vs {}",
+            slowed.makespan_s,
+            base.makespan_s
+        );
+    }
+
+    #[test]
+    fn mid_aggregation_crash_charges_barrier_recovery() {
+        let base = run_schedule_once(&WorldSchedule::default());
+        assert_eq!(base.agg_recoveries, 0);
+        let crashed = run_schedule_once(&WorldSchedule {
+            agg_crashes: vec![(NodeId(3), 0.5)],
+            ..Default::default()
+        });
+        assert_eq!(crashed.agg_recoveries, 1);
+        assert!(
+            crashed.agg_s > base.agg_s,
+            "mid-aggregation crash must lengthen the barrier: {} vs {}",
+            crashed.agg_s,
+            base.agg_s
+        );
+        // the microbatch phase itself is untouched
+        assert_eq!(crashed.completed, base.completed);
+        assert_eq!(crashed.wasted_gpu_s, base.wasted_gpu_s);
+    }
+
+    #[test]
+    fn mid_iteration_join_provides_recovery_candidate() {
+        // Stage 1 = {3, 4}; node 4 starts dead, node 3 crashes at t=0.
+        // Without the join the microbatches through stage 1 are stuck; a
+        // mid-iteration join of node 4 (continuous-time only) lets the
+        // forward recovery pick it up once it is born.
+        let (topo, prob, paths) = setup();
+        let mut sim = TrainingSim::new(topo, small_cfg());
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+        let mut churn_state =
+            ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+        churn_state.alive[4] = false;
+        let mut rng = Rng::new(0);
+
+        let stuck = WorldSchedule { crashes: vec![(NodeId(3), 0.0)], ..Default::default() };
+        let m_stuck = sim.run_schedule(
+            &prob, &mut router, &stuck, &churn_state, 0.0, paths.clone(), &mut rng,
+        );
+        assert_eq!(m_stuck.completed, 0, "no stage-1 node available");
+
+        let rejoined = WorldSchedule {
+            crashes: vec![(NodeId(3), 0.0)],
+            joins: vec![(NodeId(4), 1.0)],
+            ..Default::default()
+        };
+        let m_joined = sim.run_schedule(
+            &prob, &mut router, &rejoined, &churn_state, 0.0, paths, &mut rng,
+        );
+        assert_eq!(m_joined.completed, 2, "joiner must absorb the rerouted flows");
+        assert!(m_joined.fwd_recoveries >= 1);
     }
 }

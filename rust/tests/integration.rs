@@ -11,9 +11,9 @@ use gwtf::flow::decentralized::{DecentralizedFlow, FlowParams};
 use gwtf::flow::graph::validate_paths;
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::metrics::MetricsTable;
+use gwtf::sim::engine::Engine;
 use gwtf::sim::scenario::{build, ScenarioConfig};
-use gwtf::sim::training::{Router, TrainingSim};
-use gwtf::util::Rng;
+use gwtf::sim::training::Router;
 
 fn run_system(
     sc: &gwtf::sim::scenario::Scenario,
@@ -21,17 +21,19 @@ fn run_system(
     iters: usize,
     seed: u64,
 ) -> Vec<gwtf::sim::IterationMetrics> {
-    let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
-    let mut churn = sc.churn.clone();
-    let mut rng = Rng::new(seed);
-    let mut out = Vec::new();
-    for _ in 0..iters {
-        let ev = churn.sample_iteration();
-        let alive = churn.planning_view(&ev);
-        let (paths, planning) = router.plan(&alive);
-        out.push(sim.run_iteration(&sc.prob, router, &ev, &churn, planning, paths, &mut rng));
-    }
-    out
+    run_engine(sc, router, iters, seed, false)
+}
+
+fn run_engine(
+    sc: &gwtf::sim::scenario::Scenario,
+    router: &mut dyn Router,
+    iters: usize,
+    seed: u64,
+    warm_replan: bool,
+) -> Vec<gwtf::sim::IterationMetrics> {
+    let mut engine = Engine::from_scenario(sc, seed);
+    engine.warm_replan = warm_replan;
+    (0..iters).map(|_| engine.step(&sc.prob, router)).collect()
 }
 
 #[test]
@@ -108,6 +110,13 @@ fn repair_policy_beats_restart_policy_under_churn() {
             c: &[gwtf::cost::NodeId],
         ) -> Option<gwtf::cost::NodeId> {
             self.0.choose_replacement(prev, next, stage, sink, c)
+        }
+        fn replan(
+            &mut self,
+            alive: &[bool],
+            dirty: &[gwtf::cost::NodeId],
+        ) -> (Vec<gwtf::flow::graph::FlowPath>, f64) {
+            self.0.replan(alive, dirty)
         }
         fn recovery(&self) -> gwtf::sim::RecoveryPolicy {
             gwtf::sim::RecoveryPolicy::RestartPipeline
@@ -218,6 +227,168 @@ fn metrics_table_roundtrip_files() {
     assert!(md.contains("homog 10%"));
     let csv = std::fs::read_to_string(dir.join("it.csv")).unwrap();
     assert!(csv.contains("throughput"));
+}
+
+#[test]
+fn warm_replan_engine_survives_churn_and_is_deterministic() {
+    let run = || {
+        let sc = build(&ScenarioConfig::table2(false, 0.2, 19));
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 19);
+        run_engine(&sc, &mut router, 6, 19, /*warm_replan=*/ true)
+            .iter()
+            .map(|m| (m.completed, m.makespan_s.to_bits(), m.comm_s.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    let a = run();
+    assert!(a.iter().any(|&(completed, _, _)| completed > 0));
+    assert_eq!(a, run(), "warm-replan engine must be deterministic from seeds");
+}
+
+#[test]
+fn continuous_time_scenarios_run_from_experiments() {
+    use gwtf::experiments::{run_link_jitter, run_mid_agg_crash, ScenarioOpts};
+    let opts = ScenarioOpts { reps: 1, iters_per_rep: 3, seed: 23 };
+
+    let midagg = run_mid_agg_crash(&opts).unwrap();
+    let row = "table2 homogeneous".to_string();
+    let crash = &midagg.cells[&(row.clone(), "midagg-crash".to_string())];
+    assert_eq!(crash.agg_recoveries.iter().sum::<f64>(), 1.0, "one barrier recovery");
+    let clean = &midagg.cells[&(row, "no-crash".to_string())];
+    assert_eq!(clean.agg_recoveries.iter().sum::<f64>(), 0.0);
+    // The two runs are identical up to the crash iteration (index 1);
+    // that iteration pays the barrier re-exchange on top.
+    assert_eq!(crash.makespan_min[0].to_bits(), clean.makespan_min[0].to_bits());
+    assert!(
+        crash.makespan_min[1] > clean.makespan_min[1],
+        "crash iteration {} vs clean {}",
+        crash.makespan_min[1],
+        clean.makespan_min[1]
+    );
+
+    let jitter = run_link_jitter(&opts).unwrap();
+    let mk = |row: &str| -> f64 {
+        jitter.cells[&(row.to_string(), "gwtf".to_string())].makespan_min.iter().sum()
+    };
+    assert!(
+        (mk("jitter 50%") - mk("jitter 0%")).abs() > 1e-9,
+        "jitter windows must perturb the timeline"
+    );
+    for row in ["jitter 0%", "jitter 25%", "jitter 50%"] {
+        let acc = &jitter.cells[&(row.to_string(), "gwtf".to_string())];
+        assert!(acc.throughput.iter().sum::<f64>() > 0.0, "{row}");
+    }
+}
+
+/// The ISSUE-1 replan bench, test-sized: cold re-plan vs warm-start
+/// re-plan across churn rates, plus the single-crash headline case.
+/// Records measured rounds + wall time to BENCH_flow_replan.json at the
+/// repo root (the full version is `cargo bench --bench replan_bench`).
+#[test]
+fn warm_replan_beats_cold_and_records_bench_json() {
+    use gwtf::cost::NodeId;
+    use std::fmt::Write as _;
+    use std::time::Instant;
+
+    let mut cases = String::new();
+
+    // --- headline: a single crash on an established plan ---
+    let sc = build(&ScenarioConfig::table2(true, 0.0, 31));
+    let n = sc.topo.n();
+    let mut cold = GwtfRouter::from_scenario(&sc, FlowParams::default(), 31);
+    let mut warm = GwtfRouter::from_scenario(&sc, FlowParams::default(), 31);
+    let mut alive = vec![true; n];
+    let (paths, _) = cold.plan(&alive);
+    warm.plan(&alive);
+    let victim = paths[0].relays[1];
+    alive[victim.0] = false;
+
+    let t0 = Instant::now();
+    let (cold_paths, _) = cold.plan(&alive);
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cold_rounds = cold.last_rounds;
+
+    let t0 = Instant::now();
+    let (warm_paths, _) = warm.replan(&alive, &[victim]);
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let warm_rounds = warm.last_rounds;
+
+    assert_eq!(warm_paths.len(), cold_paths.len(), "same routed demand");
+    validate_paths(&warm_paths, &sc.prob).unwrap();
+    for p in &warm_paths {
+        assert!(!p.relays.contains(&victim));
+    }
+    assert!(
+        warm_rounds < cold_rounds,
+        "single crash: warm {warm_rounds} rounds vs cold {cold_rounds}"
+    );
+    writeln!(
+        cases,
+        "    {{\"case\": \"single-crash\", \"cold_rounds\": {cold_rounds}, \
+         \"warm_rounds\": {warm_rounds}, \"cold_ms\": {cold_ms:.3}, \
+         \"warm_ms\": {warm_ms:.3}}},"
+    )
+    .unwrap();
+
+    // --- churn-rate sweep: 0% / 10% / 20%, summed over iterations ---
+    for &rate in &[0.0, 0.1, 0.2] {
+        let sc = build(&ScenarioConfig::table2(false, rate, 77));
+        let n = sc.topo.n();
+        let mut cold = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+        let mut warm = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+        let mut churn = sc.churn.clone();
+        let mut prev = vec![true; n];
+        cold.plan(&prev);
+        warm.plan(&prev);
+        let (mut cold_rounds, mut warm_rounds) = (0usize, 0usize);
+        let (mut cold_ms, mut warm_ms) = (0.0f64, 0.0f64);
+        let iters = 6;
+        for _ in 0..iters {
+            let ev = churn.sample_iteration();
+            let alive = churn.planning_view(&ev);
+            let dirty: Vec<NodeId> = (0..n)
+                .filter(|&i| prev[i] && !alive[i])
+                .map(NodeId)
+                .collect();
+
+            let t0 = Instant::now();
+            cold.plan(&alive);
+            cold_ms += t0.elapsed().as_secs_f64() * 1e3;
+            cold_rounds += cold.last_rounds;
+
+            let t0 = Instant::now();
+            let (wp, _) = warm.replan(&alive, &dirty);
+            warm_ms += t0.elapsed().as_secs_f64() * 1e3;
+            warm_rounds += warm.last_rounds;
+
+            validate_paths(&wp, &sc.prob).unwrap();
+            for p in &wp {
+                for &r in &p.relays {
+                    assert!(alive[r.0], "dead relay {r} routed at churn {rate}");
+                }
+            }
+            prev = alive;
+        }
+        assert!(
+            warm_rounds <= cold_rounds,
+            "churn {rate}: warm {warm_rounds} rounds vs cold {cold_rounds}"
+        );
+        writeln!(
+            cases,
+            "    {{\"churn\": {rate}, \"iters\": {iters}, \"cold_rounds\": {cold_rounds}, \
+             \"warm_rounds\": {warm_rounds}, \"cold_ms\": {cold_ms:.3}, \
+             \"warm_ms\": {warm_ms:.3}}},"
+        )
+        .unwrap();
+    }
+
+    let cases = cases.trim_end().trim_end_matches(',').to_string();
+    let json = format!(
+        "{{\n  \"bench\": \"flow_replan\",\n  \"scenario\": \"table2, 18 nodes, 6 stages\",\n  \
+         \"source\": \"rust/tests/integration.rs (test-sized; full: cargo bench --bench replan_bench)\",\n  \
+         \"cases\": [\n{cases}\n  ]\n}}\n"
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_flow_replan.json");
+    std::fs::write(path, json).unwrap();
 }
 
 #[test]

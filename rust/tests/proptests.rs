@@ -97,6 +97,116 @@ fn prop_crash_repair_preserves_validity_and_capacity() {
 }
 
 #[test]
+fn prop_roundstats_bitwise_deterministic() {
+    // Same seed => byte-identical RoundStats traces across runs (the
+    // engine's determinism guarantee at the flow-optimizer layer).
+    forall_res("roundstats-deterministic", 20, arb_problem, |(prob, seed)| {
+        let run = |s: u64| {
+            let mut f = DecentralizedFlow::new(prob, FlowParams::default(), s);
+            f.run(60, 6)
+        };
+        let (a, b) = (run(*seed), run(*seed));
+        if a.len() != b.len() {
+            return Err(format!("round counts differ: {} vs {}", a.len(), b.len()));
+        }
+        for (x, y) in a.iter().zip(&b) {
+            if x.round != y.round
+                || x.complete_flows != y.complete_flows
+                || x.moves_applied != y.moves_applied
+                || x.avg_cost_per_microbatch.to_bits() != y.avg_cost_per_microbatch.to_bits()
+                || x.max_edge_cost.to_bits() != y.max_edge_cost.to_bits()
+            {
+                return Err(format!("round {} diverged: {x:?} vs {y:?}", x.round));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_metrics_bitwise_deterministic() {
+    // Same seed => byte-identical IterationMetrics from the
+    // continuous-time engine, warm re-planning included.
+    use gwtf::coordinator::GwtfRouter;
+    use gwtf::sim::engine::Engine;
+    use gwtf::sim::scenario::{build, ScenarioConfig};
+    forall_res(
+        "engine-deterministic",
+        6,
+        |r| (r.index(3) as f64 * 0.1, r.next_u64()),
+        |&(churn_p, seed)| {
+            let run = || {
+                let sc = build(&ScenarioConfig::table2(false, churn_p, seed));
+                let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed);
+                let mut engine = Engine::from_scenario(&sc, seed ^ 1);
+                engine.warm_replan = true;
+                (0..3)
+                    .map(|_| engine.step(&sc.prob, &mut router))
+                    .map(|m| {
+                        (
+                            m.completed,
+                            m.dropped,
+                            m.fwd_recoveries,
+                            m.bwd_recoveries,
+                            m.makespan_s.to_bits(),
+                            m.comm_s.to_bits(),
+                            m.wasted_gpu_s.to_bits(),
+                            m.agg_s.to_bits(),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            };
+            let (a, b) = (run(), run());
+            if a != b {
+                return Err(format!("engine metrics diverged:\n{a:?}\nvs\n{b:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_warm_replan_flows_valid() {
+    // Warm-start re-planning after crashes must only emit valid flows:
+    // stage-correct, within capacity, and never through a dead node.
+    forall_res("warm-replan-valid", 25, arb_problem, |(prob, seed)| {
+        let mut cold = DecentralizedFlow::new(prob, FlowParams::default(), *seed);
+        cold.run(80, 6);
+        if cold.complete_flows() == 0 {
+            return Ok(());
+        }
+        let chains = cold.chains.clone();
+        let temp = cold.temperature();
+        // kill ~20% of the relays
+        let mut rng = Rng::new(*seed ^ 0xAB);
+        let victims: Vec<NodeId> = prob
+            .graph
+            .stages
+            .iter()
+            .flatten()
+            .filter(|_| rng.chance(0.2))
+            .copied()
+            .collect();
+        let mut warm =
+            DecentralizedFlow::warm_start(prob, FlowParams::default(), *seed ^ 2, chains, temp);
+        for &v in &victims {
+            warm.remove_node(v);
+        }
+        warm.run(40, 4);
+        let paths = warm.established_paths();
+        validate_paths(&paths, prob).map_err(|e| format!("invalid after warm replan: {e}"))?;
+        for p in &paths {
+            for r in &p.relays {
+                if victims.contains(r) {
+                    return Err(format!("dead node {r} still routed"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_mcmf_flow_conservation() {
     // every decomposed path visits each stage exactly once, source == sink
     forall_res("mcmf-paths", 30, arb_problem, |(prob, _)| {

@@ -1,0 +1,200 @@
+//! Offline stand-in for the `anyhow` crate: the API subset this repository
+//! uses (`Result`, `Error`, `anyhow!`, `bail!`, `Context`), implemented
+//! without any external dependency so the workspace builds with no
+//! network access.  Matches `anyhow`'s observable behavior where it
+//! matters here:
+//!
+//! - `Error` converts `From` any `std::error::Error + Send + Sync`
+//!   (capturing the source chain),
+//! - `.context(..)` / `.with_context(..)` wrap `Result` and `Option`,
+//! - `{e}` prints the outermost message, `{e:#}` the full `a: b: c`
+//!   chain, `{e:?}` the message plus a `Caused by:` listing.
+//!
+//! Swap back to the real crate by replacing the path dependency in
+//! `rust/Cargo.toml` — no source changes needed.
+
+use std::fmt;
+
+/// Dynamic error with a chain of context messages.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap with an outer context message (the inner error becomes the
+    /// source).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        let mut first = true;
+        while let Some(e) = cur {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes this blanket conversion
+// coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs: Vec<String> = Vec::new();
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut tail: Option<Box<Error>> = None;
+        for m in msgs.into_iter().rev() {
+            tail = Some(Box::new(Error { msg: m, source: tail }));
+        }
+        Error { msg: e.to_string(), source: tail }
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: gone");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 3);
+        assert_eq!(format!("{e}"), "bad value 3");
+        fn f() -> Result<()> {
+            bail!("nope {}", "x");
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope x");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e: Error = Error::from(io_err()).context("layer1").context("layer2");
+        let d = format!("{e:?}");
+        assert!(d.contains("layer2"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("gone"));
+    }
+}

@@ -1,0 +1,228 @@
+//! Stub of the `xla` crate (xla_extension PJRT bindings).
+//!
+//! The runtime layer (`gwtf::runtime`, `gwtf::trainer`) compiles against
+//! this API surface on machines without the PJRT shared library; every
+//! entry point that would touch PJRT returns [`Error`] at runtime, and the
+//! PJRT-backed tests/benches skip when the artifact manifest is missing
+//! (see `rust/tests/runtime_integration.rs`).  To run real training, swap
+//! the path dependency in `rust/Cargo.toml` for the actual bindings — the
+//! signatures below mirror them.
+#![allow(dead_code)]
+
+use std::fmt;
+use std::path::Path;
+
+/// PJRT-unavailable error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime unavailable: built against the offline xla stub \
+         (rust/vendor/xla); swap in the real bindings to execute artifacts"
+            .to_string(),
+    ))
+}
+
+/// Element types crossing the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Host-native scalar types accepted by literals and buffers.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+impl NativeType for u64 {
+    const TY: ElementType = ElementType::U64;
+}
+
+/// Shape of a dense array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host-side literal (stub: shape-only, no payload).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: ArrayShape,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { shape: ArrayShape { dims: vec![data.len() as i64], ty: T::TY } }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let _ = dims;
+        unavailable()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let _ = computation;
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let _ = (data, dims, device);
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn execute_b(&self, args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = args;
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        unavailable()
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        let _ = proto;
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_carries_shape_type() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert_eq!(l.shape.dims, vec![2]);
+        assert_eq!(l.shape.ty, ElementType::F32);
+        assert!(l.to_tuple().is_err());
+    }
+}
