@@ -17,8 +17,8 @@ use std::sync::Arc;
 use crate::cost::NodeId;
 use crate::flow::decentralized::{Chain, DecentralizedFlow, FlowParams};
 use crate::flow::graph::{FlowPath, FlowProblem, StageGraph};
-use crate::sim::training::{RecoveryPolicy, Router};
 use crate::sim::scenario::Scenario;
+use crate::sim::training::{RecoveryPolicy, Router};
 
 /// Cost closure shared by router and rebuilt problems.
 pub type CostFn = Arc<dyn Fn(NodeId, NodeId) -> f64 + Send + Sync>;
@@ -163,6 +163,10 @@ impl Router for GwtfRouter {
         self.plans += 1;
         // Re-plans run in parallel with training (§V-C): no charge.
         (flow.established_paths(), 0.0)
+    }
+
+    fn last_plan_rounds(&self) -> usize {
+        self.last_rounds
     }
 
     fn on_crash(&mut self, node: NodeId) {

@@ -1,6 +1,6 @@
 //! Continuous-time scenarios beyond the paper's tables.
 //!
-//! Both experiments exercise event kinds the old iteration-synchronous
+//! These experiments exercise event kinds the old iteration-synchronous
 //! simulator could not express (see `sim::engine`):
 //!
 //! - [`run_mid_agg_crash`] — a relay dies *inside* the §V-E aggregation
@@ -10,14 +10,25 @@
 //! - [`run_link_jitter`] — piecewise-constant link-latency jitter windows
 //!   layered over the Table II topology; columns sweep the jitter
 //!   amplitude.
+//! - [`run_poisson_churn`] — the §VI churn grid re-run under the
+//!   continuous-clock Poisson churn model (`sim::churn`): crash/rejoin
+//!   arrivals land mid-iteration from exponential clocks instead of
+//!   synchronized Bernoulli flips.  GWTF runs with warm re-planning, so
+//!   every arbitrary-timestamp crash exercises `Router::on_crash`
+//!   mid-pipeline and the next iteration's warm `Router::replan` repair;
+//!   SWARM and DT-FM are the baselines.
 
 use anyhow::Result;
 
+use crate::baselines::GaParams;
 use crate::coordinator::GwtfRouter;
 use crate::flow::FlowParams;
 use crate::metrics::MetricsTable;
 use crate::sim::scenario::{build, ScenarioConfig};
 use crate::sim::sources::{LinkJitterSource, MidAggCrashSource};
+use crate::sim::ChurnModel;
+
+use super::tables::{dtfm_router, swarm_router};
 
 /// Options shared by the continuous-time scenario experiments.
 #[derive(Debug, Clone)]
@@ -106,6 +117,61 @@ pub fn run_link_jitter(opts: &ScenarioOpts) -> Result<MetricsTable> {
     Ok(table)
 }
 
+/// Continuous-clock Poisson churn: the paper's 10%/20% join-leave grid
+/// with crash/rejoin arrivals sampled from rate-equivalent exponential
+/// clocks, GWTF (warm re-planning) vs SWARM vs DT-FM.
+pub fn run_poisson_churn(opts: &ScenarioOpts) -> Result<MetricsTable> {
+    let mut table = MetricsTable::new(
+        "Poisson churn — continuous-clock crash/rejoin arrivals (rate-equivalent to §VI churn)",
+    );
+    for rep in 0..opts.reps {
+        let seed = opts.seed + rep as u64 * 104651;
+        for &(row, p) in &[("poisson 10%", 0.1), ("poisson 20%", 0.2)] {
+            let mut cfg = ScenarioConfig::table2(true, p, seed);
+            cfg.churn_model = ChurnModel::Poisson;
+            let sc = build(&cfg);
+            // GWTF with warm re-plans: crashes at arbitrary timestamps hit
+            // Router::on_crash mid-pipeline; the next iteration's warm
+            // replan resumes the surviving chains around them.
+            {
+                let mut router =
+                    GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
+                let mut engine = sc.engine(seed ^ 0x1);
+                engine.warm_replan = true;
+                let cell = table.cell(row, "gwtf");
+                for _ in 0..opts.iters_per_rep {
+                    cell.push(&engine.step(&sc.prob, &mut router));
+                }
+            }
+            // SWARM: comm-only greedy wiring, full-pipeline restarts.
+            {
+                let mut router = swarm_router(&sc, seed ^ 0xB);
+                let mut engine = sc.engine(seed ^ 0x1);
+                let cell = table.cell(row, "swarm");
+                for _ in 0..opts.iters_per_rep {
+                    cell.push(&engine.step(&sc.prob, &mut router));
+                }
+            }
+            // DT-FM: static GA arrangement, recomputed from scratch when a
+            // pipeline node dies (its plan cache sees the churned
+            // membership each iteration).
+            {
+                let mut router = dtfm_router(
+                    &sc,
+                    GaParams { generations: 60, ..Default::default() },
+                    seed ^ 0xC,
+                );
+                let mut engine = sc.engine(seed ^ 0x1);
+                let cell = table.cell(row, "dtfm");
+                for _ in 0..opts.iters_per_rep {
+                    cell.push(&engine.step(&sc.prob, &mut router));
+                }
+            }
+        }
+    }
+    Ok(table)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +193,25 @@ mod tests {
         assert_eq!(crash.agg_recoveries.iter().sum::<f64>(), 2.0);
         let clean = &t.cells[&(row, "no-crash".to_string())];
         assert_eq!(clean.agg_recoveries.iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn poisson_churn_produces_all_cells() {
+        let t = run_poisson_churn(&fast()).unwrap();
+        assert_eq!(t.cells.len(), 6, "2 rates x 3 systems");
+        for row in ["poisson 10%", "poisson 20%"] {
+            for col in ["gwtf", "swarm", "dtfm"] {
+                let acc = &t.cells[&(row.to_string(), col.to_string())];
+                assert_eq!(acc.throughput.len(), 2 * 3, "{row}/{col}");
+                assert!(acc.makespan_min.iter().all(|m| m.is_finite()), "{row}/{col}");
+            }
+        }
+        // GWTF warm-replans must be recorded in the new diagnostics column.
+        let gwtf = &t.cells[&("poisson 20%".to_string(), "gwtf".to_string())];
+        assert!(
+            gwtf.replan_rounds.iter().sum::<f64>() > 0.0,
+            "gwtf plans/replans must report protocol rounds"
+        );
     }
 
     #[test]

@@ -94,6 +94,9 @@ impl Router for GwtfWithPolicy {
     ) -> (Vec<crate::flow::graph::FlowPath>, f64) {
         self.inner.replan(alive, dirty)
     }
+    fn last_plan_rounds(&self) -> usize {
+        self.inner.last_plan_rounds()
+    }
     fn recovery(&self) -> RecoveryPolicy {
         self.policy
     }
@@ -127,14 +130,24 @@ fn gwtf_router(sc: &Scenario, opts: &TableOpts, seed: u64) -> GwtfWithPolicy {
     GwtfWithPolicy { inner: GwtfRouter::from_scenario(sc, opts.flow_params(), seed), policy }
 }
 
-fn swarm_router(sc: &Scenario, seed: u64) -> SwarmRouter {
-    // SWARM wires to the *closest* next-stage node — network proximity
-    // only ("sending to the next stage closest node", SVI) — unlike GWTF's
-    // Eq. 1 cost, it is blind to compute heterogeneity.
+/// SWARM baseline wired from a scenario; shared with the continuous-time
+/// scenario experiments.  SWARM wires to the *closest* next-stage node —
+/// network proximity only ("sending to the next stage closest node",
+/// SVI) — unlike GWTF's Eq. 1 cost, it is blind to compute heterogeneity.
+pub(crate) fn swarm_router(sc: &Scenario, seed: u64) -> SwarmRouter {
     let topo = sc.topo.clone();
     let payload = sc.sim_cfg.payload_bytes;
     let comm: crate::baselines::CostFn = Arc::new(move |i, j| topo.comm(i, j, payload));
     SwarmRouter::from_problem(&sc.prob, comm, seed)
+}
+
+/// DT-FM baseline wired from a scenario (full Eq. 1 cost closure); shared
+/// with the continuous-time scenario experiments.
+pub(crate) fn dtfm_router(sc: &Scenario, params: GaParams, seed: u64) -> DtfmRouter {
+    let topo = sc.topo.clone();
+    let payload = sc.sim_cfg.payload_bytes;
+    let cost: crate::baselines::CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
+    DtfmRouter::new(sc.prob.graph.clone(), sc.prob.demand.clone(), cost, params, seed)
 }
 
 /// The Table II / Table III grid: {homogeneous, heterogeneous} x
@@ -193,16 +206,7 @@ pub fn run_table6(opts: &TableOpts) -> Result<MetricsTable> {
             simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, opts.warm_replan, |m| cell.push(m));
         }
         {
-            let topo = sc.topo.clone();
-            let payload = sc.sim_cfg.payload_bytes;
-            let cost: crate::baselines::CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
-            let mut r = DtfmRouter::new(
-                sc.prob.graph.clone(),
-                sc.prob.demand.clone(),
-                cost,
-                GaParams::default(),
-                seed ^ 0xB,
-            );
+            let mut r = dtfm_router(&sc, GaParams::default(), seed ^ 0xB);
             let cell = table.cell("0% homogeneous", "dtfm");
             simulate(&sc, &mut r, opts.iters_per_rep, seed ^ 0x1, opts.warm_replan, |m| cell.push(m));
         }

@@ -6,7 +6,8 @@
 //! gwtf doctor                         PJRT + artifact sanity check
 //! gwtf sim    [--system gwtf|swarm] [--heterogeneous] [--churn P] [--iters N]
 //! gwtf train  [--family llama|gpt] [--steps N] [--churn P] [--lr X]
-//! gwtf bench  <table2|table3|table6|fig5|fig6|fig7|all> [--reps N] [--full]
+//! gwtf bench  <table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|all>
+//!             [--reps N] [--full]
 //! gwtf join-demo                      Fig. 3 walkthrough
 //! ```
 //!
@@ -22,8 +23,8 @@ use gwtf::coordinator::join::{utilization_query, JoinPolicy, Leader};
 use gwtf::coordinator::GwtfRouter;
 use gwtf::cost::NodeId;
 use gwtf::experiments::{
-    results_dir, run_fig5, run_fig6, run_fig7, run_link_jitter, run_mid_agg_crash, run_table2,
-    run_table3, run_table6, Fig6Opts, ScenarioOpts, TableOpts,
+    results_dir, run_fig5, run_fig6, run_fig7, run_link_jitter, run_mid_agg_crash,
+    run_poisson_churn, run_table2, run_table3, run_table6, Fig6Opts, ScenarioOpts, TableOpts,
 };
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::flow::FlowParams;
@@ -39,7 +40,7 @@ const USAGE: &str = "usage: gwtf <doctor|sim|train|bench|join-demo> [options]
   sim       --system gwtf|swarm  --heterogeneous --churn P --iters N --seed S
             --warm-replan        (GWTF warm-starts re-plans from surviving chains)
   train     --family llama|gpt   --steps N --churn P --lr X --microbatches M
-  bench     table2|table3|table6|fig5|fig6|fig7|midagg|jitter|all
+  bench     table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|all
             --reps N --iters N --full --warm-replan
   join-demo                      Fig. 3 walkthrough";
 
@@ -233,6 +234,11 @@ fn bench(args: &Args) -> Result<()> {
     if target == "jitter" || target == "all" {
         let sopts = ScenarioOpts { reps: reps.min(10), iters_per_rep: iters, seed };
         emit(&run_link_jitter(&sopts)?, "jitter")?;
+        ran = true;
+    }
+    if target == "poissonchurn" || target == "all" {
+        let sopts = ScenarioOpts { reps: reps.min(10), iters_per_rep: iters, seed };
+        emit(&run_poisson_churn(&sopts)?, "poissonchurn")?;
         ran = true;
     }
     if target == "fig7" || target == "all" {

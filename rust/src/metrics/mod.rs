@@ -26,6 +26,9 @@ pub struct CellAccumulator {
     pub bwd_recoveries: Vec<f64>,
     /// §V-E barrier re-exchanges after mid-aggregation crashes.
     pub agg_recoveries: Vec<f64>,
+    /// Flow-protocol rounds per iteration's (re)plan (warm-replan
+    /// diagnostics; 0 for routers without a round-based protocol).
+    pub replan_rounds: Vec<f64>,
 }
 
 impl CellAccumulator {
@@ -42,6 +45,7 @@ impl CellAccumulator {
         self.fwd_recoveries.push(m.fwd_recoveries as f64);
         self.bwd_recoveries.push(m.bwd_recoveries as f64);
         self.agg_recoveries.push(m.agg_recoveries as f64);
+        self.replan_rounds.push(m.replan_rounds as f64);
     }
 
     pub fn row(&self) -> BTreeMap<&'static str, Summary> {
@@ -52,6 +56,7 @@ impl CellAccumulator {
         r.insert("wasted_gpu_min", Summary::of(&self.wasted_gpu_min));
         r.insert("makespan_min", Summary::of(&self.makespan_min));
         r.insert("agg_recoveries", Summary::of(&self.agg_recoveries));
+        r.insert("replan_rounds", Summary::of(&self.replan_rounds));
         r
     }
 }
@@ -94,6 +99,8 @@ impl MetricsTable {
             ("throughput", "Throughput (#microb/iteration)"),
             ("comm_time_min", "Communication time (min)"),
             ("wasted_gpu_min", "Wasted GPU time (min)"),
+            ("agg_recoveries", "Aggregation-barrier recoveries (#/iteration)"),
+            ("replan_rounds", "Flow re-plan rounds (#/iteration)"),
         ];
         let rows = self.rows();
         let cols = self.cols();
@@ -230,6 +237,27 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.lines().count() > 5);
         assert!(csv.contains("homog 0%,gwtf,throughput,8.0"));
+    }
+
+    #[test]
+    fn markdown_and_csv_carry_recovery_and_replan_columns() {
+        // ROADMAP item: agg_recoveries and warm-replan round counts must
+        // show up in the Markdown report, not just the CSV.
+        let mut t = MetricsTable::new("cols");
+        let m = IterationMetrics {
+            agg_recoveries: 2,
+            replan_rounds: 7,
+            ..metric(4, 100.0)
+        };
+        t.cell("poisson 10%", "gwtf").push(&m);
+        let md = t.to_markdown();
+        assert!(md.contains("Aggregation-barrier recoveries"), "{md}");
+        assert!(md.contains("Flow re-plan rounds"), "{md}");
+        assert!(md.contains("2.00 ± 0.00"), "{md}");
+        assert!(md.contains("7.00 ± 0.00"), "{md}");
+        let csv = t.to_csv();
+        assert!(csv.contains("poisson 10%,gwtf,agg_recoveries,2.0"), "{csv}");
+        assert!(csv.contains("poisson 10%,gwtf,replan_rounds,7.0"), "{csv}");
     }
 
     #[test]

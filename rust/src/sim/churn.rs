@@ -1,16 +1,54 @@
-//! Node churn process (paper §VI Node Crashes).
+//! Node churn models (paper §VI Node Crashes) and the liveness authority.
 //!
 //! "Join-leave chance varies from 0% (no churn) to 10%/20% (nodes may
-//! randomly crash or rejoin each iteration)."  Each relay node flips a
-//! Bernoulli coin per iteration: an alive node crashes at a uniform random
-//! instant of the iteration; a dead node rejoins at iteration start (after
-//! re-downloading its stage weights — accounted by the coordinator).
-//! Data nodes are persistent, as in the paper.
+//! randomly crash or rejoin each iteration)."  Two models implement that
+//! stress, selected by [`ChurnModel`]:
+//!
+//! - [`ChurnModel::Bernoulli`] — the paper's literal reading and the
+//!   legacy default: each relay flips a coin per iteration; an alive node
+//!   crashes at a uniform random instant of the iteration, a dead node
+//!   rejoins at iteration start.  Kept bit-for-bit identical to the
+//!   pre-engine simulator (the parity tests in `sim::engine` and
+//!   `rust/tests/churn_stats.rs` assert it).
+//! - [`ChurnModel::Poisson`] — the continuous-clock refinement: each
+//!   relay's crash/rejoin transitions arrive from exponential
+//!   inter-arrival clocks ([`super::churn_process::PoissonChurn`]) whose
+//!   residuals carry across iteration boundaries.  Rate mapping: a legacy
+//!   join-leave chance `p` becomes a hazard of `p` expected transitions
+//!   per relay-iteration, so the 0%/10%/20% configs keep their expected
+//!   churn per iteration (see the `churn_process` module docs for the
+//!   induced per-iteration transition and net-flip probabilities).
+//!   Crashes land
+//!   mid-iteration; rejoins surface as planner-invisible mid-iteration
+//!   `joins` that recovery can route onto immediately and that become
+//!   full membership the next iteration.
+//!
+//! Either way, [`ChurnProcess`] is the *liveness authority*: it owns the
+//! `alive` vector the planner, the aggregation barrier and the recovery
+//! paths consult.  It feeds the engine through the standard
+//! [`EventSource`] contract — churn is just another world-event source on
+//! the continuous timeline (see `Engine::step` for why it is sampled
+//! before planning).  Data nodes are persistent, as in the paper.
 
 use crate::cost::NodeId;
 use crate::util::Rng;
 
-/// One iteration's churn events.
+use super::churn_process::PoissonChurn;
+use super::engine::{EventSource, WorldSchedule};
+use super::events::Time;
+
+/// Which churn model drives crash/rejoin sampling (module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChurnModel {
+    /// Per-iteration Bernoulli coin (legacy, bit-for-bit stable).
+    #[default]
+    Bernoulli,
+    /// Continuous-clock exponential inter-arrival process.
+    Poisson,
+}
+
+/// One iteration's churn events in the legacy fraction-based form
+/// (Bernoulli only; the engine path speaks [`WorldSchedule`] instead).
 #[derive(Debug, Clone, Default)]
 pub struct ChurnEvents {
     /// (node, fraction of the iteration at which it dies in [0,1)).
@@ -19,21 +57,45 @@ pub struct ChurnEvents {
     pub rejoins: Vec<NodeId>,
 }
 
-/// Per-iteration Bernoulli churn over the relay population.
+/// Churn sampling + liveness authority over the relay population.
 #[derive(Debug, Clone)]
 pub struct ChurnProcess {
-    /// Join-leave probability per node per iteration (the paper's 0/10/20%).
+    /// Join-leave probability per node per iteration (the paper's 0/10/20%);
+    /// under [`ChurnModel::Poisson`] the equivalent per-iteration hazard.
     pub p: f64,
+    /// Sampling model (rate-equivalent; module docs).
+    pub model: ChurnModel,
     /// Current liveness per node id.
     pub alive: Vec<bool>,
     /// Relay nodes subject to churn (data nodes are persistent).
     pub relays: Vec<NodeId>,
     rng: Rng,
+    /// Continuous-clock state (Poisson model only).
+    poisson: Option<PoissonChurn>,
 }
 
 impl ChurnProcess {
+    /// Legacy constructor: Bernoulli model.
     pub fn new(n_nodes: usize, relays: Vec<NodeId>, p: f64, seed: u64) -> Self {
-        ChurnProcess { p, alive: vec![true; n_nodes], relays, rng: Rng::new(seed) }
+        Self::with_model(ChurnModel::Bernoulli, n_nodes, relays, p, seed)
+    }
+
+    pub fn with_model(
+        model: ChurnModel,
+        n_nodes: usize,
+        relays: Vec<NodeId>,
+        p: f64,
+        seed: u64,
+    ) -> Self {
+        let poisson = match model {
+            ChurnModel::Bernoulli => None,
+            ChurnModel::Poisson => Some(PoissonChurn::new(
+                relays.clone(),
+                PoissonChurn::rate_for_chance(p),
+                seed ^ 0x5019_55C1,
+            )),
+        };
+        ChurnProcess { p, model, alive: vec![true; n_nodes], relays, rng: Rng::new(seed), poisson }
     }
 
     pub fn is_alive(&self, n: NodeId) -> bool {
@@ -44,20 +106,42 @@ impl ChurnProcess {
         self.relays.iter().filter(|&&r| self.alive[r.0]).count()
     }
 
-    /// Liveness as seen by the router at iteration start: nodes crashing
-    /// *during* `ev` are still up when flows are planned (the simulator
-    /// kills them mid-iteration at their sampled instant) — without this,
-    /// planners would be clairvoyant about future crashes.
-    pub fn planning_view(&self, ev: &ChurnEvents) -> Vec<bool> {
+    /// The planner-clairvoyance rule shared by both planning views:
+    /// nodes crashing *during* the iteration are still up when flows are
+    /// planned (the simulator kills them mid-iteration at their sampled
+    /// instant) — without this, planners would foresee future crashes.
+    fn view_resurrecting(&self, crashing: impl Iterator<Item = NodeId>) -> Vec<bool> {
         let mut alive = self.alive.clone();
-        for &(n, _) in &ev.crashes {
+        for n in crashing {
             alive[n.0] = true;
         }
         alive
     }
 
-    /// Sample one iteration of churn and apply it to the liveness state.
+    /// Liveness as seen by the router at iteration start (legacy
+    /// [`ChurnEvents`] form).
+    pub fn planning_view(&self, ev: &ChurnEvents) -> Vec<bool> {
+        self.view_resurrecting(ev.crashes.iter().map(|&(n, _)| n))
+    }
+
+    /// [`ChurnProcess::planning_view`] over an engine [`WorldSchedule`]:
+    /// crash targets die mid-iteration so the planner still sees them up;
+    /// mid-iteration `joins` stay invisible until the next iteration.
+    pub fn planning_view_for(&self, sched: &WorldSchedule) -> Vec<bool> {
+        self.view_resurrecting(sched.crashes.iter().map(|&(n, _)| n))
+    }
+
+    /// Sample one iteration of Bernoulli churn and apply it to the
+    /// liveness state.  Legacy fraction-based entry point, kept for the
+    /// pre-engine `TrainingSim::run_iteration` path, the benches and the
+    /// bit-for-bit parity tests; the engine consumes the same draws
+    /// through [`EventSource::sample`].
     pub fn sample_iteration(&mut self) -> ChurnEvents {
+        assert!(
+            self.model == ChurnModel::Bernoulli,
+            "sample_iteration is the legacy Bernoulli API; \
+             the Poisson model only speaks EventSource::sample"
+        );
         let mut ev = ChurnEvents::default();
         for &r in &self.relays.clone() {
             if !self.rng.chance(self.p) {
@@ -75,6 +159,78 @@ impl ChurnProcess {
             }
         }
         ev
+    }
+
+    /// Poisson-model sampling: advance the continuous clocks one
+    /// iteration and collapse each relay's transitions to the engine's
+    /// one-liveness-window-per-iteration representation.  The net state
+    /// change is decided by transition parity; the *first* transition
+    /// supplies the instant.  An even transition count (a within-iteration
+    /// blip: crash-and-rejoin or rejoin-and-crash) is invisible at
+    /// iteration granularity and is dropped — the raw stream stays exact
+    /// (`churn_process` statistical tests), only the window projection
+    /// coarsens.
+    fn sample_poisson(&mut self, horizon: Time) -> WorldSchedule {
+        let process = self.poisson.as_mut().expect("poisson model state");
+        // Other event sources may have killed or revived relays since the
+        // last sample (the engine applies their crashes/joins to the
+        // authority post-iteration); adopt the authoritative state so the
+        // next transition of an externally-killed relay is a rejoin.
+        process.sync_liveness(&self.alive);
+        let transitions = process.advance_iteration();
+        let mut sched = WorldSchedule::default();
+        // Transitions arrive grouped per relay (advance_iteration visits
+        // relays in order), so one pass over runs suffices.
+        let mut i = 0;
+        while i < transitions.len() {
+            let node = transitions[i].node;
+            let first = transitions[i];
+            let mut j = i;
+            while j < transitions.len() && transitions[j].node == node {
+                j += 1;
+            }
+            if (j - i) % 2 == 1 {
+                if first.crash {
+                    debug_assert!(self.alive[node.0], "crash transition on a dead node");
+                    self.alive[node.0] = false;
+                    sched.crashes.push((node, first.at * horizon));
+                } else {
+                    // Mid-iteration rejoin: recovery may route onto it from
+                    // its instant; the engine promotes it to full membership
+                    // after the iteration (planner-invisible now).
+                    debug_assert!(!self.alive[node.0], "rejoin transition on an alive node");
+                    sched.joins.push((node, first.at * horizon));
+                }
+            }
+            i = j;
+        }
+        sched
+    }
+}
+
+impl EventSource for ChurnProcess {
+    fn name(&self) -> &str {
+        match self.model {
+            ChurnModel::Bernoulli => "bernoulli-churn",
+            ChurnModel::Poisson => "poisson-churn",
+        }
+    }
+
+    /// One iteration of churn as a [`WorldSchedule`], instants on the
+    /// absolute virtual timeline (`horizon` is the iteration-length
+    /// reference, exactly as for every other source).
+    fn sample(&mut self, _iter: usize, horizon: Time) -> WorldSchedule {
+        match self.model {
+            ChurnModel::Bernoulli => {
+                let ev = self.sample_iteration();
+                WorldSchedule {
+                    crashes: ev.crashes.into_iter().map(|(n, frac)| (n, frac * horizon)).collect(),
+                    rejoins: ev.rejoins,
+                    ..Default::default()
+                }
+            }
+            ChurnModel::Poisson => self.sample_poisson(horizon),
+        }
     }
 }
 
@@ -132,5 +288,110 @@ mod tests {
             assert_eq!(ea.crashes.len(), eb.crashes.len());
             assert_eq!(ea.rejoins, eb.rejoins);
         }
+    }
+
+    #[test]
+    fn bernoulli_event_source_scales_fractions_by_horizon() {
+        // The EventSource view must consume the exact same RNG draws as
+        // the legacy sample_iteration and place each crash at
+        // frac * horizon.
+        let horizon = 240.0;
+        let mut legacy = ChurnProcess::new(30, relays(30), 0.4, 12);
+        let mut source = ChurnProcess::new(30, relays(30), 0.4, 12);
+        for iter in 0..8 {
+            let ev = legacy.sample_iteration();
+            let sched = EventSource::sample(&mut source, iter, horizon);
+            assert_eq!(sched.rejoins, ev.rejoins);
+            assert_eq!(sched.crashes.len(), ev.crashes.len());
+            for (&(n, t), &(m, frac)) in sched.crashes.iter().zip(&ev.crashes) {
+                assert_eq!(n, m);
+                assert_eq!(t.to_bits(), (frac * horizon).to_bits());
+            }
+            assert_eq!(legacy.alive, source.alive);
+            assert!(sched.joins.is_empty() && sched.agg_crashes.is_empty());
+        }
+    }
+
+    #[test]
+    fn poisson_schedule_respects_liveness_windows() {
+        let mut c = ChurnProcess::with_model(ChurnModel::Poisson, 12, relays(12), 0.8, 5);
+        let horizon = 100.0;
+        let mut saw_crash = false;
+        let mut saw_join = false;
+        for iter in 0..60 {
+            let before = c.alive.clone();
+            let sched = EventSource::sample(&mut c, iter, horizon);
+            assert!(sched.rejoins.is_empty(), "poisson rejoins are timestamped joins");
+            for &(n, t) in &sched.crashes {
+                saw_crash = true;
+                assert!(before[n.0], "crash must target a node alive at iteration start");
+                assert!(!c.alive[n.0], "authority updated at sample time");
+                assert!(t.is_finite() && (0.0..horizon).contains(&t), "{t}");
+            }
+            for &(n, t) in &sched.joins {
+                saw_join = true;
+                assert!(!before[n.0], "join must target a node dead at iteration start");
+                assert!(!c.alive[n.0], "joins apply only after the iteration");
+                assert!(t.is_finite() && (0.0..horizon).contains(&t), "{t}");
+            }
+            // What the engine does after the iteration.
+            for &(n, _) in &sched.joins {
+                c.alive[n.0] = true;
+            }
+        }
+        assert!(saw_crash, "rate 0.8 over 12x60 node-iterations must crash someone");
+        assert!(saw_join, "…and someone must come back");
+    }
+
+    #[test]
+    fn poisson_planning_view_resurrects_crash_targets_only() {
+        let mut c = ChurnProcess::with_model(ChurnModel::Poisson, 8, relays(8), 1.2, 9);
+        for iter in 0..40 {
+            let sched = EventSource::sample(&mut c, iter, 50.0);
+            let view = c.planning_view_for(&sched);
+            for &(n, _) in &sched.crashes {
+                assert!(view[n.0], "planner must still see the crashing node as up");
+            }
+            for &(n, _) in &sched.joins {
+                assert!(!view[n.0], "mid-iteration joiners stay planner-invisible");
+            }
+            for &(n, _) in &sched.joins {
+                c.alive[n.0] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_reconciles_with_externally_applied_liveness() {
+        // The engine's plugin contract lets other sources kill or revive
+        // relays behind the churn model's back (their crashes/joins are
+        // applied to the authority post-iteration).  The Poisson clocks
+        // must adopt that state at the next sample: no crash of an
+        // already-dead node, no join of an alive one, ever.
+        let mut c = ChurnProcess::with_model(ChurnModel::Poisson, 6, relays(6), 1.5, 21);
+        for iter in 0..40 {
+            // External world event: flip one node out from under the model,
+            // exactly like a source-scheduled crash/join would.
+            let victim = iter % 6;
+            c.alive[victim] = !c.alive[victim];
+            let before = c.alive.clone();
+            let sched = EventSource::sample(&mut c, iter, 10.0);
+            for &(n, _) in &sched.crashes {
+                assert!(before[n.0], "crash on externally-dead node {n}");
+            }
+            for &(n, _) in &sched.joins {
+                assert!(!before[n.0], "join on externally-alive node {n}");
+            }
+            for &(n, _) in &sched.joins {
+                c.alive[n.0] = true;
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "legacy Bernoulli API")]
+    fn poisson_rejects_legacy_sample_iteration() {
+        let mut c = ChurnProcess::with_model(ChurnModel::Poisson, 4, relays(4), 0.1, 1);
+        let _ = c.sample_iteration();
     }
 }

@@ -1,0 +1,228 @@
+//! Continuous-clock Poisson churn sampler (paper §VI "Node Crashes",
+//! continuous-time refinement).
+//!
+//! The legacy model in [`super::churn`] flips a Bernoulli coin per relay
+//! per iteration — every liveness change is synchronized to an iteration
+//! boundary.  This module samples each relay's crash/rejoin *transitions*
+//! from a memoryless hazard instead: inter-arrival times are exponential
+//! with a constant rate, so arrivals land at arbitrary instants of the
+//! continuous virtual clock and residual waiting times carry across
+//! iteration boundaries.  That is the arrival structure robustness
+//! studies of decentralized training assume (see PAPERS.md: Lu et al.,
+//! FusionLLM), and it is what PR 1's engine was built to dispatch.
+//!
+//! # Rate-equivalence mapping
+//!
+//! A legacy join-leave chance `p` flips each relay with probability `p`
+//! per iteration regardless of its current state, i.e. an expected `p`
+//! transitions per relay-iteration.  An always-on hazard `rate` produces
+//! exactly `rate` expected transitions per relay-iteration (the
+//! transition stream of one relay is a Poisson process: the hazard does
+//! not depend on whether the relay is currently alive or dead).  So the
+//! paper's 0%/10%/20% configs map to `rate = p` per iteration
+//! ([`PoissonChurn::rate_for_chance`]); the models agree on expected
+//! churn per iteration.  The Poisson model then sees at least one
+//! transition in an iteration with probability `1 - exp(-p)` and a *net*
+//! state flip (odd transition count) with probability
+//! `(1 - exp(-2p)) / 2` — both slightly below `p`, because multiple
+//! transitions per iteration are possible and an even count cancels out.
+//!
+//! The raw transition stream ([`PoissonChurn::advance_iteration`]) is
+//! exact — `rust/tests/churn_stats.rs` validates it with seeded KS and
+//! chi-square checks against the configured exponential law.  The
+//! engine-facing collapse to one liveness window per iteration lives in
+//! [`super::churn::ChurnProcess`].
+
+use crate::cost::NodeId;
+use crate::util::Rng;
+
+/// One crash/rejoin transition of the continuous-clock process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transition {
+    pub node: NodeId,
+    /// Instant inside the iteration, as a fraction in `[0, 1)`.
+    pub at: f64,
+    /// `true` = alive → dead (crash); `false` = dead → alive (rejoin).
+    pub crash: bool,
+}
+
+/// Per-relay exponential crash/rejoin clocks, advanced one iteration at a
+/// time.  Deterministic from its seed; clock residuals carry across
+/// iteration boundaries so the process is genuinely continuous.
+#[derive(Debug, Clone)]
+pub struct PoissonChurn {
+    /// Transition hazard per relay, in expected events per iteration.
+    pub rate: f64,
+    relays: Vec<NodeId>,
+    /// True process liveness per relay (indexed like `relays`).
+    alive: Vec<bool>,
+    /// Residual time to each relay's next transition, iteration units.
+    next_in: Vec<f64>,
+    rng: Rng,
+}
+
+/// Draw an exponential inter-arrival time (iteration units).  Floored at
+/// a subnormal-safe epsilon so per-relay arrival times are strictly
+/// increasing even on the astronomically unlikely zero draw.
+fn sample_exp(rng: &mut Rng, rate: f64) -> f64 {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    // f64() is in [0, 1): 1 - u is in (0, 1], so ln is finite.
+    (-(1.0 - rng.f64()).ln() / rate).max(1e-12)
+}
+
+impl PoissonChurn {
+    /// Hazard equivalent to a legacy per-iteration join-leave chance `p`
+    /// (expected-transitions-per-iteration equivalence; module docs).
+    pub fn rate_for_chance(p: f64) -> f64 {
+        p
+    }
+
+    pub fn new(relays: Vec<NodeId>, rate: f64, seed: u64) -> Self {
+        assert!(rate >= 0.0 && rate.is_finite(), "churn rate must be finite and >= 0, got {rate}");
+        let mut rng = Rng::new(seed);
+        let n = relays.len();
+        let next_in = (0..n).map(|_| sample_exp(&mut rng, rate)).collect();
+        PoissonChurn { rate, relays, alive: vec![true; n], next_in, rng }
+    }
+
+    /// True process liveness of relay index `i` (for invariant tests; the
+    /// engine's liveness authority is [`super::churn::ChurnProcess`]).
+    pub fn relay_alive(&self, i: usize) -> bool {
+        self.alive[i]
+    }
+
+    pub fn relays(&self) -> &[NodeId] {
+        &self.relays
+    }
+
+    /// Reconcile the process's internal liveness with the authority's
+    /// `alive` view (indexed by node id) before sampling an iteration.
+    ///
+    /// Other event sources may kill or revive relays behind the model's
+    /// back (the engine applies their crashes/joins to the authority
+    /// after each iteration); the exponential clocks are memoryless, so
+    /// adopting the externally-imposed state and keeping each residual
+    /// unchanged is exactly the conditional law of the process — the next
+    /// transition of an externally-killed relay simply becomes a rejoin.
+    pub fn sync_liveness(&mut self, alive: &[bool]) {
+        for (i, &node) in self.relays.iter().enumerate() {
+            if let Some(&up) = alive.get(node.0) {
+                self.alive[i] = up;
+            }
+        }
+    }
+
+    /// Advance every relay's clock by one iteration and return the
+    /// transitions that fired, with `at` fractions in `[0, 1)`.  Relays
+    /// are visited in order and each relay's transitions are emitted in
+    /// time order, so the stream is deterministic for a fixed seed.
+    pub fn advance_iteration(&mut self) -> Vec<Transition> {
+        let mut out = Vec::new();
+        for i in 0..self.relays.len() {
+            let node = self.relays[i];
+            let mut elapsed = 0.0;
+            // Fire every transition that lands inside this iteration.
+            while elapsed + self.next_in[i] < 1.0 {
+                elapsed += self.next_in[i];
+                self.alive[i] = !self.alive[i];
+                out.push(Transition { node, at: elapsed, crash: !self.alive[i] });
+                self.next_in[i] = sample_exp(&mut self.rng, self.rate);
+            }
+            // Carry the residual across the boundary (INFINITY for rate 0
+            // stays INFINITY).  The loop exits on fl(elapsed + next_in)
+            // >= 1.0, which in floating point does not quite imply
+            // next_in >= 1.0 - elapsed; floor the carried residual like
+            // the zero-draw case so `at` can never go negative.
+            self.next_in[i] = (self.next_in[i] - (1.0 - elapsed)).max(1e-12);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn relays(n: usize) -> Vec<NodeId> {
+        (0..n).map(NodeId).collect()
+    }
+
+    #[test]
+    fn zero_rate_never_fires() {
+        let mut pc = PoissonChurn::new(relays(8), 0.0, 1);
+        for _ in 0..50 {
+            assert!(pc.advance_iteration().is_empty());
+        }
+        assert!((0..8).all(|i| pc.relay_alive(i)));
+    }
+
+    #[test]
+    fn transitions_alternate_starting_with_a_crash() {
+        let mut pc = PoissonChurn::new(relays(4), 2.0, 7);
+        let mut expect_crash = vec![true; 4];
+        let mut fired = 0;
+        for _ in 0..30 {
+            for tr in pc.advance_iteration() {
+                assert_eq!(tr.crash, expect_crash[tr.node.0], "{tr:?}");
+                expect_crash[tr.node.0] = !expect_crash[tr.node.0];
+                fired += 1;
+            }
+        }
+        assert!(fired > 100, "rate 2.0 over 4x30 node-iterations fired only {fired}");
+    }
+
+    #[test]
+    fn fractions_in_unit_interval_and_increasing_per_relay() {
+        let mut pc = PoissonChurn::new(relays(6), 1.5, 11);
+        let mut last = vec![-1.0f64; 6];
+        for iter in 0..40 {
+            for tr in pc.advance_iteration() {
+                assert!((0.0..1.0).contains(&tr.at), "{}", tr.at);
+                let t = iter as f64 + tr.at;
+                assert!(t > last[tr.node.0], "arrivals must strictly increase");
+                last[tr.node.0] = t;
+            }
+        }
+    }
+
+    #[test]
+    fn residuals_carry_across_iterations() {
+        // The first arrival's absolute time must equal the first
+        // exponential draw exactly (up to boundary-subtraction rounding),
+        // however many iteration boundaries it crosses — the clock
+        // carries its residual, it does not reset each iteration.
+        let rate = 0.05;
+        let mut want_rng = Rng::new(3);
+        let want = -(1.0 - want_rng.f64()).ln() / rate;
+        let mut pc = PoissonChurn::new(relays(1), rate, 3);
+        let mut first = None;
+        for iter in 0..2000 {
+            if let Some(tr) = pc.advance_iteration().first() {
+                first = Some(iter as f64 + tr.at);
+                break;
+            }
+        }
+        let got = first.expect("rate 0.05 over 2000 iterations must fire");
+        assert!(
+            (got - want).abs() < 1e-6 * want.max(1.0),
+            "first arrival {got} vs single draw {want}"
+        );
+    }
+
+    #[test]
+    fn deterministic_stream_for_fixed_seed() {
+        let mut a = PoissonChurn::new(relays(5), 0.7, 99);
+        let mut b = PoissonChurn::new(relays(5), 0.7, 99);
+        for _ in 0..50 {
+            let (ea, eb) = (a.advance_iteration(), b.advance_iteration());
+            assert_eq!(ea.len(), eb.len());
+            for (x, y) in ea.iter().zip(&eb) {
+                assert_eq!(x.node, y.node);
+                assert_eq!(x.crash, y.crash);
+                assert_eq!(x.at.to_bits(), y.at.to_bits());
+            }
+        }
+    }
+}

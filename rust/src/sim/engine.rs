@@ -25,6 +25,14 @@
 //!   ([`WorldSchedule::merge`]) and interleaves the events with the
 //!   microbatch events on one timeline (ties broken by insertion order,
 //!   world events first).
+//! - Churn itself is an event source: [`ChurnProcess`] implements
+//!   [`EventSource`] (Bernoulli or continuous-clock Poisson, see
+//!   [`super::churn`]) and its crashes/rejoins/joins flow through the
+//!   same [`WorldSchedule`] merge and event queue as everything else.
+//!   It is sampled *before* planning — it is the liveness authority, so
+//!   its planner-visible membership (Bernoulli rejoins) must land first —
+//!   while extra sources are sampled after planning and can never be
+//!   planner-visible in their own iteration.
 //! - Liveness authority stays with the [`ChurnProcess`]: the engine
 //!   applies source-scheduled crashes/joins to it *after* the iteration,
 //!   so planners only ever see start-of-iteration membership (no
@@ -194,9 +202,17 @@ impl Engine {
     /// Run one training iteration: sample churn + sources, plan (or warm
     /// re-plan) routes, execute the continuous-time schedule.
     pub fn step(&mut self, prob: &FlowProblem, router: &mut dyn Router) -> IterationMetrics {
-        let ev = self.churn.sample_iteration();
+        let horizon = self.sim.current_iter_estimate();
+        let iter = self.iter;
+        // The churn model speaks the same EventSource contract as every
+        // other world-event generator; it is sampled first and held in a
+        // dedicated slot because it is the liveness *authority*: its
+        // planner-visible membership changes (Bernoulli rejoins) must
+        // land before routes are planned, and its crashes leave the
+        // aggregation barrier's membership for this iteration.
+        let mut sched = self.churn.sample(iter, horizon);
         // Planner view: mid-iteration crashes are in the future.
-        let alive = self.churn.planning_view(&ev);
+        let alive = self.churn.planning_view_for(&sched);
         let (paths, planning_s) = match &self.prev_alive {
             Some(prev) if self.warm_replan => {
                 let dirty: Vec<NodeId> = (0..alive.len())
@@ -207,10 +223,8 @@ impl Engine {
             }
             _ => router.plan(&alive),
         };
+        let plan_rounds = router.last_plan_rounds();
 
-        let mut sched = self.sim.schedule_from_churn(&ev);
-        let horizon = self.sim.current_iter_estimate();
-        let iter = self.iter;
         for s in &mut self.sources {
             let mut extra = s.sample(iter, horizon);
             // A source may not crash a node that is already dead at
@@ -223,7 +237,7 @@ impl Engine {
         self.prev_alive = Some(alive);
         self.iter += 1;
 
-        let metrics = self.sim.run_schedule(
+        let mut metrics = self.sim.run_schedule(
             prob,
             router,
             &sched,
@@ -232,6 +246,7 @@ impl Engine {
             paths,
             &mut self.rng,
         );
+        metrics.replan_rounds = plan_rounds;
 
         // Source-scheduled crashes/joins/rejoins update the liveness
         // authority *after* the iteration: the next plan sees them, this
@@ -461,6 +476,39 @@ mod tests {
             assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
             assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits());
             assert_eq!(a.agg_s.to_bits(), b.agg_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn engine_step_matches_manual_loop_under_bernoulli_churn() {
+        // ChurnModel::Bernoulli parity (ISSUE 2 acceptance): with churn as
+        // an EventSource, the engine must reproduce the legacy
+        // sample_iteration + run_iteration loop bit for bit — crashes,
+        // rejoins and all — at the paper's 20% join-leave chance.
+        let sc = build(&ScenarioConfig::table2(false, 0.2, 41));
+        let mut manual_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 41);
+        let mut manual_sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+        let mut manual_churn = sc.churn.clone();
+        let mut manual_rng = Rng::new(13);
+        let mut engine_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 41);
+        let mut engine = Engine::from_scenario(&sc, 13);
+        for _ in 0..5 {
+            let ev = manual_churn.sample_iteration();
+            let alive = manual_churn.planning_view(&ev);
+            let (paths, planning) = manual_router.plan(&alive);
+            let a = manual_sim.run_iteration(
+                &sc.prob, &mut manual_router, &ev, &manual_churn, planning, paths, &mut manual_rng,
+            );
+            let b = engine.step(&sc.prob, &mut engine_router);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.fwd_recoveries, b.fwd_recoveries);
+            assert_eq!(a.bwd_recoveries, b.bwd_recoveries);
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits());
+            assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits());
+            assert_eq!(a.agg_s.to_bits(), b.agg_s.to_bits());
+            assert_eq!(manual_churn.alive, engine.churn.alive, "liveness authorities agree");
         }
     }
 

@@ -16,13 +16,18 @@
 //! - [`handlers`] — per-event microbatch handlers (§V-D recovery logic).
 //! - [`sources`]  — built-in event sources (jitter, stragglers,
 //!   mid-aggregation crashes, delayed joins).
-//! - [`churn`]    — the per-iteration Bernoulli churn process (liveness
-//!   authority).
+//! - [`churn`]    — the churn models (per-iteration Bernoulli and
+//!   continuous-clock Poisson) and the liveness authority; churn feeds
+//!   the engine through the same [`engine::EventSource`] contract as
+//!   every other source.
+//! - [`churn_process`] — the exact exponential inter-arrival sampler
+//!   behind [`churn::ChurnModel::Poisson`].
 //! - [`training`] — the [`training::Router`] policy trait, configuration,
 //!   metrics, and the physical model.
 //! - [`scenario`] — builders for the paper's experiment setups.
 
 pub mod churn;
+pub mod churn_process;
 pub mod engine;
 pub mod events;
 pub mod handlers;
@@ -30,7 +35,8 @@ pub mod scenario;
 pub mod sources;
 pub mod training;
 
-pub use churn::ChurnProcess;
+pub use churn::{ChurnModel, ChurnProcess};
+pub use churn_process::PoissonChurn;
 pub use engine::{Engine, EventSource, JitterWindow, Slowdown, WorldSchedule};
 pub use events::EventQueue;
 pub use training::{IterationMetrics, RecoveryPolicy, Router, TrainingSim, TrainingSimConfig};

@@ -11,7 +11,7 @@ use crate::flow::graph::{FlowProblem, StageGraph};
 use crate::net::{Topology, TopologyConfig};
 use crate::util::Rng;
 
-use super::churn::ChurnProcess;
+use super::churn::{ChurnModel, ChurnProcess};
 use super::engine::Engine;
 use super::training::TrainingSimConfig;
 
@@ -34,6 +34,10 @@ pub struct ScenarioConfig {
     pub homogeneous: bool,
     /// Join-leave probability per relay per iteration.
     pub churn_p: f64,
+    /// Churn sampling model: per-iteration Bernoulli coin (the paper's
+    /// literal setup, bit-for-bit stable) or the rate-equivalent
+    /// continuous-clock Poisson process (see `sim::churn`).
+    pub churn_model: ChurnModel,
     /// Base forward compute per microbatch at a relay stage, seconds.
     pub base_compute_s: f64,
     pub seed: u64,
@@ -50,6 +54,7 @@ impl ScenarioConfig {
             microbatches_per_data: 4,
             homogeneous,
             churn_p,
+            churn_model: ChurnModel::Bernoulli,
             base_compute_s: 8.0,
             seed,
         }
@@ -76,6 +81,7 @@ impl ScenarioConfig {
             microbatches_per_data: 4,
             homogeneous: true,
             churn_p: 0.0,
+            churn_model: ChurnModel::Bernoulli,
             base_compute_s: 8.0,
             seed,
         }
@@ -156,7 +162,13 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
         cost: Box::new(move |i, j| topo_for_cost.cost(i, j, payload)),
     };
 
-    let churn = ChurnProcess::new(n, relays.clone(), cfg.churn_p, rng.fork(0xC0).next_u64());
+    let churn = ChurnProcess::with_model(
+        cfg.churn_model,
+        n,
+        relays.clone(),
+        cfg.churn_p,
+        rng.fork(0xC0).next_u64(),
+    );
 
     let sim_cfg = TrainingSimConfig {
         payload_bytes: payload,
@@ -216,6 +228,20 @@ mod tests {
         // 18 relays over 6 stages: 3 per stage (three disjoint pipelines)
         let sizes: Vec<usize> = s.prob.graph.stages.iter().map(|v| v.len()).collect();
         assert!(sizes.iter().all(|&n| n == 3));
+    }
+
+    #[test]
+    fn churn_model_knob_reaches_the_process() {
+        let bern = build(&ScenarioConfig::table2(true, 0.1, 6));
+        assert_eq!(bern.churn.model, ChurnModel::Bernoulli);
+        let mut cfg = ScenarioConfig::table2(true, 0.1, 6);
+        cfg.churn_model = ChurnModel::Poisson;
+        let pois = build(&cfg);
+        assert_eq!(pois.churn.model, ChurnModel::Poisson);
+        // Same seed, same topology/problem either way: the knob only
+        // changes churn sampling.
+        assert_eq!(bern.prob.cap, pois.prob.cap);
+        assert_eq!(bern.topo.region, pois.topo.region);
     }
 
     #[test]

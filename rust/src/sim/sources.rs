@@ -5,7 +5,11 @@
 //! sources onto a single virtual timeline.  These cover the event kinds
 //! the iteration-synchronous simulator could not express: link-latency
 //! jitter, time-varying stragglers, crashes *inside* the aggregation
-//! barrier, and nodes joining mid-iteration.
+//! barrier, and nodes joining mid-iteration.  Churn itself goes through
+//! the same contract: [`crate::sim::ChurnProcess`] implements
+//! [`EventSource`] (Bernoulli or continuous-clock Poisson) and holds the
+//! engine's dedicated liveness-authority slot rather than living in the
+//! extra-sources list.
 
 use crate::cost::NodeId;
 use crate::util::Rng;

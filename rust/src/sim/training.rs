@@ -66,6 +66,14 @@ pub trait Router {
         self.plan(alive)
     }
 
+    /// Protocol rounds consumed by the most recent [`Router::plan`] /
+    /// [`Router::replan`] call, for the warm-replan diagnostics column in
+    /// the experiment tables.  Routers without a round-based protocol
+    /// (SWARM's greedy wiring, DT-FM's GA) report 0.
+    fn last_plan_rounds(&self) -> usize {
+        0
+    }
+
     /// Notify of a mid-iteration crash so internal state can adapt.
     fn on_crash(&mut self, node: NodeId);
 
@@ -142,6 +150,10 @@ pub struct IterationMetrics {
     /// aggregation barrier (§V-E) — expressible only by the
     /// continuous-time schedule (`WorldSchedule::agg_crashes`).
     pub agg_recoveries: usize,
+    /// Flow-protocol rounds the iteration's (re)plan took
+    /// ([`Router::last_plan_rounds`]); warm re-plans resume surviving
+    /// chains and should need far fewer rounds than a cold plan.
+    pub replan_rounds: usize,
 }
 
 impl IterationMetrics {

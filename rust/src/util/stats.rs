@@ -43,6 +43,44 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// One-sample Kolmogorov–Smirnov statistic of `xs` against a continuous
+/// CDF: `D = sup_x |F_empirical(x) - cdf(x)|`.  Used by the churn-process
+/// statistical tests; compare against `c(alpha) / sqrt(n)` (e.g. 1.63 at
+/// alpha = 0.01).
+pub fn ks_statistic(xs: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let n = v.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in v.iter().enumerate() {
+        let f = cdf(x);
+        // Sup over both sides of the empirical step at x.
+        d = d.max((f - i as f64 / n).abs()).max(((i + 1) as f64 / n - f).abs());
+    }
+    d
+}
+
+/// Pearson chi-square statistic of `xs` over `k` equal-probability bins
+/// of the hypothesized continuous `cdf` (degrees of freedom `k - 1`).
+pub fn chi_square_edf(xs: &[f64], cdf: impl Fn(f64) -> f64, k: usize) -> f64 {
+    assert!(k >= 2, "need at least two bins");
+    assert!(!xs.is_empty());
+    let mut counts = vec![0usize; k];
+    for &x in xs {
+        let u = cdf(x).clamp(0.0, 1.0 - 1e-12);
+        counts[(u * k as f64) as usize] += 1;
+    }
+    let expected = xs.len() as f64 / k as f64;
+    counts
+        .iter()
+        .map(|&o| {
+            let d = o as f64 - expected;
+            d * d / expected
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,6 +104,29 @@ mod tests {
     fn pm_format() {
         let s = Summary::of(&[1.0, 1.0]);
         assert_eq!(s.pm(2), "1.00 ± 0.00");
+    }
+
+    #[test]
+    fn ks_accepts_true_distribution_and_rejects_wrong_one() {
+        // 10k uniforms against the uniform CDF: D should sit near
+        // 0.87/sqrt(n) ~ 0.009; against a clearly wrong CDF it explodes.
+        let mut rng = crate::util::Rng::new(29);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.f64()).collect();
+        let d_true = ks_statistic(&xs, |x| x.clamp(0.0, 1.0));
+        assert!(d_true < 0.025, "{d_true}");
+        let d_wrong = ks_statistic(&xs, |x| (x * x).clamp(0.0, 1.0));
+        assert!(d_wrong > 0.1, "{d_wrong}");
+    }
+
+    #[test]
+    fn chi_square_accepts_true_distribution_and_rejects_wrong_one() {
+        let mut rng = crate::util::Rng::new(31);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.f64()).collect();
+        // df = 19: mean 19, std ~6.2; 60 is a ~6.6 sigma acceptance bound.
+        let chi_true = chi_square_edf(&xs, |x| x.clamp(0.0, 1.0), 20);
+        assert!(chi_true < 60.0, "{chi_true}");
+        let chi_wrong = chi_square_edf(&xs, |x| (x * x).clamp(0.0, 1.0), 20);
+        assert!(chi_wrong > 500.0, "{chi_wrong}");
     }
 
     #[test]

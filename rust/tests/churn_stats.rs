@@ -1,0 +1,145 @@
+//! Statistical validation of the continuous-clock Poisson churn process
+//! (ISSUE 2): seeded KS and chi-square checks of the raw inter-arrival
+//! stream against its configured exponential law, rate equivalence with
+//! the legacy Bernoulli model, and engine-level behaviour under Poisson
+//! churn.  Sample sizes (>= 10k arrivals) are RNG-only work, cheap in
+//! both debug and the CI release-test profile.
+//!
+//! All thresholds are deliberately generous multiples of the relevant
+//! sampling noise (5-9 sigma) so the fixed seeds cannot flake, while
+//! still failing hard for a wrong distribution or a wrong rate mapping
+//! (e.g. `-ln(1-p)` instead of `p` misses the rate bound).
+
+use gwtf::coordinator::GwtfRouter;
+use gwtf::cost::NodeId;
+use gwtf::flow::FlowParams;
+use gwtf::sim::churn_process::PoissonChurn;
+use gwtf::sim::scenario::{build, ScenarioConfig};
+use gwtf::sim::{ChurnModel, ChurnProcess};
+use gwtf::util::stats::{chi_square_edf, ks_statistic};
+
+/// Absolute arrival times (iteration units) of one relay's transition
+/// stream over `iters` iterations.
+fn arrival_times(rate: f64, seed: u64, iters: usize) -> Vec<f64> {
+    let mut pc = PoissonChurn::new(vec![NodeId(0)], rate, seed);
+    let mut times = Vec::new();
+    for iter in 0..iters {
+        for tr in pc.advance_iteration() {
+            times.push(iter as f64 + tr.at);
+        }
+    }
+    times
+}
+
+#[test]
+fn poisson_interarrivals_pass_ks_against_configured_rate() {
+    let rate = 0.8;
+    let times = arrival_times(rate, 0xC0FFEE, 15_000);
+    assert!(times.len() >= 10_000, "need >= 10k arrivals, got {}", times.len());
+    let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+    let cdf = |x: f64| 1.0 - (-rate * x).exp();
+    let d = ks_statistic(&gaps, cdf);
+    // E[D] ~ 0.87/sqrt(n) ~ 0.008 here; 0.02 rejects at far beyond the
+    // 0.1% level yet catches a 10% rate error (D ~ 0.037) or any wrong
+    // distribution family outright.
+    assert!(d < 0.02, "KS statistic {d} too large for Exp({rate}) with n = {}", gaps.len());
+}
+
+#[test]
+fn poisson_interarrivals_pass_chi_square_against_configured_rate() {
+    let rate = 0.8;
+    let times = arrival_times(rate, 0xBEEF, 15_000);
+    assert!(times.len() >= 10_000, "need >= 10k arrivals, got {}", times.len());
+    let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+    let cdf = |x: f64| 1.0 - (-rate * x).exp();
+    // 20 equal-probability bins, df = 19: mean 19, std ~6.2.
+    let chi = chi_square_edf(&gaps, cdf, 20);
+    assert!(chi < 60.0, "chi-square {chi} over 20 bins (df = 19) for Exp({rate})");
+}
+
+#[test]
+fn poisson_rate_matches_legacy_chance_mapping() {
+    // rate_for_chance must reproduce the legacy configs' expected churn:
+    // p expected transitions per relay-iteration.
+    for &(p, seed) in &[(0.1, 42u64), (0.2, 43u64)] {
+        let relays: Vec<NodeId> = (0..16).map(NodeId).collect();
+        let mut pc = PoissonChurn::new(relays, PoissonChurn::rate_for_chance(p), seed);
+        let iters = 4000;
+        let mut count = 0usize;
+        for _ in 0..iters {
+            count += pc.advance_iteration().len();
+        }
+        let per_node_iter = count as f64 / (16.0 * iters as f64);
+        // ~9 sigma of Poisson counting noise; -ln(1-0.2) = 0.223 (the
+        // wrong hazard mapping) overshoots this bound.
+        assert!(
+            (per_node_iter - p).abs() < 0.08 * p,
+            "Poisson churn rate {per_node_iter:.4} vs configured {p}"
+        );
+    }
+}
+
+#[test]
+fn bernoulli_and_poisson_agree_on_expected_churn_per_iteration() {
+    let p = 0.15;
+    let n = 16usize;
+    let iters = 4000;
+
+    let relays: Vec<NodeId> = (0..n).map(NodeId).collect();
+    let mut bern = ChurnProcess::new(n, relays.clone(), p, 7);
+    let mut bern_flips = 0usize;
+    for _ in 0..iters {
+        let ev = bern.sample_iteration();
+        bern_flips += ev.crashes.len() + ev.rejoins.len();
+    }
+
+    let mut pois = PoissonChurn::new(relays, PoissonChurn::rate_for_chance(p), 7);
+    let mut pois_flips = 0usize;
+    for _ in 0..iters {
+        pois_flips += pois.advance_iteration().len();
+    }
+
+    let expected = p * n as f64 * iters as f64;
+    for (name, flips) in [("bernoulli", bern_flips), ("poisson", pois_flips)] {
+        assert!(
+            (flips as f64 - expected).abs() < 0.08 * expected,
+            "{name}: {flips} transitions vs expected {expected}"
+        );
+    }
+}
+
+#[test]
+fn poisson_engine_run_is_deterministic_and_sees_mid_iteration_churn() {
+    let run = || {
+        let mut cfg = ScenarioConfig::table2(true, 0.5, 23);
+        cfg.churn_model = ChurnModel::Poisson;
+        let sc = build(&cfg);
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 23);
+        let mut engine = sc.engine(23 ^ 0x1);
+        engine.warm_replan = true;
+        let mut trace = Vec::new();
+        let mut min_alive = sc.relays.len();
+        for _ in 0..8 {
+            let m = engine.step(&sc.prob, &mut router);
+            min_alive = min_alive.min(engine.churn.alive_count());
+            trace.push((
+                m.completed,
+                m.dropped,
+                m.makespan_s.to_bits(),
+                m.comm_s.to_bits(),
+                m.wasted_gpu_s.to_bits(),
+            ));
+        }
+        (trace, min_alive)
+    };
+    let (trace_a, min_alive) = run();
+    let (trace_b, _) = run();
+    assert_eq!(trace_a, trace_b, "Poisson churn must be deterministic from seeds");
+    // Hazard 0.5 over 16 relays x 8 iterations: ~64 expected transitions;
+    // the membership cannot have stayed full throughout.
+    assert!(min_alive < 16, "continuous-clock churn never took a relay down");
+    assert!(
+        trace_a.iter().any(|&(completed, ..)| completed > 0),
+        "some iterations must still complete work"
+    );
+}

@@ -1,0 +1,109 @@
+//! Golden-trace regression tests for the continuous-time scenarios.
+//!
+//! The `midagg` and `jitter` experiments are re-run with fixed, test-sized
+//! options and their per-iteration metric traces are diffed bit-for-bit
+//! against committed JSON fixtures under `rust/tests/fixtures/` — the same
+//! guard-rail role PR 1's manual-loop parity assert played for the engine
+//! extraction, but end-to-end through scenario building, routing and the
+//! metrics accumulators.
+//!
+//! If a fixture is missing (first run on a fresh machine), the test
+//! captures the current trace, writes the fixture and passes with a
+//! notice — commit the generated file to arm the guard.  To intentionally
+//! re-baseline after a behaviour change, delete the fixture (or run with
+//! `GWTF_UPDATE_GOLDEN=1`) and re-run `cargo test`.
+//!
+//! Floats are stored as hex `f64::to_bits` strings so the comparison is
+//! exact and immune to JSON number round-tripping.  Caveat: the traces
+//! flow through libm transcendentals (`exp`/`ln`/`cos`/`powf` in the
+//! annealer, RNG normals and corpus shaping), which are not bit-identical
+//! across libm implementations — fixtures are therefore *per-platform*
+//! baselines.  Capture them on the canonical Linux/glibc CI environment;
+//! on a different libm (e.g. macOS), regenerate locally with
+//! `GWTF_UPDATE_GOLDEN=1` rather than committing.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use gwtf::experiments::{run_link_jitter, run_mid_agg_crash, ScenarioOpts};
+use gwtf::metrics::MetricsTable;
+use gwtf::util::json::Json;
+
+fn opts() -> ScenarioOpts {
+    ScenarioOpts { reps: 2, iters_per_rep: 3, seed: 7 }
+}
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures"))
+        .join(format!("{name}.json"))
+}
+
+fn bits_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Str(format!("{:016x}", x.to_bits()))).collect())
+}
+
+fn num_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+/// Serialize the per-iteration trace of every cell (deterministic order:
+/// the table's BTreeMap).
+fn trace_json(t: &MetricsTable) -> Json {
+    let mut cells = BTreeMap::new();
+    for ((row, col), acc) in &t.cells {
+        let mut obj = BTreeMap::new();
+        obj.insert("throughput".to_string(), num_arr(&acc.throughput));
+        obj.insert("agg_recoveries".to_string(), num_arr(&acc.agg_recoveries));
+        obj.insert("makespan_min_bits".to_string(), bits_arr(&acc.makespan_min));
+        obj.insert("comm_time_min_bits".to_string(), bits_arr(&acc.comm_time_min));
+        obj.insert("wasted_gpu_min_bits".to_string(), bits_arr(&acc.wasted_gpu_min));
+        cells.insert(format!("{row} | {col}"), Json::Obj(obj));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("cells".to_string(), Json::Obj(cells));
+    Json::Obj(root)
+}
+
+fn check_golden(name: &str, t: &MetricsTable) {
+    let got = trace_json(t);
+    let path = fixture_path(name);
+    let update = std::env::var("GWTF_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{got}\n")).unwrap();
+        // A CI runner starts from a fresh checkout, so an uncommitted
+        // fixture means the guard is NOT armed there — shout about it
+        // (the authoring container for this test had no toolchain, so the
+        // initial capture has to happen on a checkout that can commit).
+        let where_ = if std::env::var("GITHUB_ACTIONS").is_ok() {
+            "WARNING: this is a CI runner — the capture is discarded with the \
+             checkout and the guard stays unarmed until the fixture is committed"
+        } else {
+            "commit it if this platform is the canonical Linux baseline"
+        };
+        eprintln!(
+            "golden fixture {} {} — {where_}",
+            path.display(),
+            if update { "re-baselined (GWTF_UPDATE_GOLDEN)" } else { "did not exist; captured" }
+        );
+        return;
+    }
+    let raw = std::fs::read_to_string(&path).unwrap();
+    let want = Json::parse(raw.trim()).unwrap_or_else(|e| panic!("fixture {name}: {e}"));
+    assert_eq!(
+        got, want,
+        "golden trace '{name}' diverged from {}; if the change is intentional, \
+         delete the fixture and re-run to re-baseline",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_midagg_trace_is_stable() {
+    check_golden("midagg_trace", &run_mid_agg_crash(&opts()).unwrap());
+}
+
+#[test]
+fn golden_jitter_trace_is_stable() {
+    check_golden("jitter_trace", &run_link_jitter(&opts()).unwrap());
+}

@@ -313,6 +313,118 @@ fn prop_churn_process_liveness_consistent() {
 }
 
 #[test]
+fn prop_poisson_arrivals_increasing_finite_alternating() {
+    // Continuous-clock churn invariants: per-relay arrival times are
+    // strictly increasing, finite, non-NaN, with fractions in [0, 1), and
+    // transitions alternate crash/rejoin starting from alive.
+    use gwtf::sim::churn_process::PoissonChurn;
+    forall_res(
+        "poisson-arrivals",
+        30,
+        |r| (1 + r.index(12), 0.05 + r.f64() * 1.5, r.next_u64()),
+        |&(n, rate, seed)| {
+            let relays: Vec<NodeId> = (0..n).map(NodeId).collect();
+            let mut pc = PoissonChurn::new(relays, rate, seed);
+            let mut last = vec![f64::NEG_INFINITY; n];
+            let mut expect_crash = vec![true; n];
+            for iter in 0..40 {
+                for tr in pc.advance_iteration() {
+                    let i = tr.node.0;
+                    if tr.at.is_nan() || !tr.at.is_finite() {
+                        return Err(format!("non-finite arrival fraction {}", tr.at));
+                    }
+                    if !(0.0..1.0).contains(&tr.at) {
+                        return Err(format!("fraction {} outside [0,1)", tr.at));
+                    }
+                    let t = iter as f64 + tr.at;
+                    if t <= last[i] {
+                        return Err(format!("arrivals not strictly increasing: {t} <= {}", last[i]));
+                    }
+                    last[i] = t;
+                    if tr.crash != expect_crash[i] {
+                        return Err(format!(
+                            "liveness alternation violated at {t}: expected crash={}",
+                            expect_crash[i]
+                        ));
+                    }
+                    expect_crash[i] = !expect_crash[i];
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_poisson_schedule_respects_node_liveness() {
+    // Through the engine-facing EventSource view: no crash of an
+    // already-dead node, no rejoin/join of an alive one.
+    use gwtf::sim::{ChurnModel, ChurnProcess, EventSource};
+    forall_res(
+        "poisson-liveness",
+        30,
+        |r| (2 + r.index(14), 0.1 + r.f64() * 1.2, r.next_u64()),
+        |&(n, p, seed)| {
+            let relays: Vec<NodeId> = (0..n).map(NodeId).collect();
+            let mut c = ChurnProcess::with_model(ChurnModel::Poisson, n, relays, p, seed);
+            for iter in 0..30 {
+                let before = c.alive.clone();
+                let sched = EventSource::sample(&mut c, iter, 120.0);
+                if !sched.rejoins.is_empty() {
+                    return Err("poisson churn must emit timestamped joins, not rejoins".into());
+                }
+                for &(node, t) in &sched.crashes {
+                    if !before[node.0] {
+                        return Err(format!("{node} crashed but was already dead"));
+                    }
+                    if !t.is_finite() || !(0.0..120.0).contains(&t) {
+                        return Err(format!("bad crash time {t}"));
+                    }
+                }
+                for &(node, t) in &sched.joins {
+                    if before[node.0] {
+                        return Err(format!("{node} joined but was already alive"));
+                    }
+                    if !t.is_finite() || !(0.0..120.0).contains(&t) {
+                        return Err(format!("bad join time {t}"));
+                    }
+                    c.alive[node.0] = true; // what the engine does post-iteration
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_poisson_stream_bitwise_deterministic() {
+    use gwtf::sim::churn_process::PoissonChurn;
+    forall_res(
+        "poisson-deterministic",
+        20,
+        |r| (1 + r.index(10), 0.05 + r.f64(), r.next_u64()),
+        |&(n, rate, seed)| {
+            let relays: Vec<NodeId> = (0..n).map(NodeId).collect();
+            let mut a = PoissonChurn::new(relays.clone(), rate, seed);
+            let mut b = PoissonChurn::new(relays, rate, seed);
+            for iter in 0..25 {
+                let (ea, eb) = (a.advance_iteration(), b.advance_iteration());
+                if ea.len() != eb.len() {
+                    return Err(format!("iteration {iter}: {} vs {} events", ea.len(), eb.len()));
+                }
+                for (x, y) in ea.iter().zip(&eb) {
+                    if x.node != y.node || x.crash != y.crash || x.at.to_bits() != y.at.to_bits()
+                    {
+                        return Err(format!("iteration {iter} diverged: {x:?} vs {y:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_leader_placement_total_and_in_range() {
     use gwtf::coordinator::join::{JoinPolicy, Leader, StageUtilization};
     forall_res("placement-total", 50, |r| {
