@@ -1,0 +1,31 @@
+//! `cargo bench --bench scale_bench` — the full-size scale sweep
+//! (ISSUE 3 tentpole): 100 and 200 relays across 10 regions under 20%
+//! Poisson churn, gossip-overlay GWTF (warm re-plans over bounded
+//! neighbor views) vs SWARM vs DT-FM.  Writes the `full` profile of
+//! `BENCH_scale.json` at the repo root; the test-sized version of the
+//! same measurement runs in `rust/tests/scale_guard.rs` on every
+//! `cargo test` and gates planner-round regressions in CI.
+
+use gwtf::experiments::{run_scale, scale_json_path, update_scale_json, ScaleOpts};
+
+fn main() {
+    let opts = ScaleOpts::default();
+    let (table, report) = run_scale(&opts).expect("scale sweep");
+    println!("{}", table.to_markdown());
+    for c in &report.cases {
+        println!(
+            "{:>5} relays {:<6} plans {:>3}  rounds {:>5} (cold {:>4})  wall {:>9.1} ms  \
+             completed {:>6}",
+            c.relays,
+            c.system,
+            c.plan_calls,
+            c.plan_rounds_total,
+            c.cold_rounds,
+            c.plan_wall_ms,
+            c.throughput_total,
+        );
+    }
+    let path = scale_json_path();
+    update_scale_json(&path, "full", &report).expect("write BENCH_scale.json");
+    println!("\nwrote {}", path.display());
+}

@@ -10,6 +10,15 @@
 //! iteration" while running *in parallel* with training (§V-C), so only
 //! the first plan (cold start) is charged wall-time; replans after churn
 //! overlap training and cost nothing in the simulated makespan.
+//!
+//! With a gossip overlay attached ([`GwtfRouter::attach_overlay`] /
+//! `ScenarioConfig::overlay_fanout`), every (re)plan first reconciles
+//! the overlay with the start-of-iteration liveness and then hands the
+//! per-node neighbor lists to the flow optimizer
+//! ([`DecentralizedFlow::set_neighbors`]): candidates come only from
+//! bounded views, crash events evict DHT contacts immediately, and
+//! engine gossip ticks ([`Router::on_gossip`]) drive the SWIM failure
+//! detector between plans.
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -17,6 +26,9 @@ use std::sync::Arc;
 use crate::cost::NodeId;
 use crate::flow::decentralized::{Chain, DecentralizedFlow, FlowParams};
 use crate::flow::graph::{FlowPath, FlowProblem, StageGraph};
+use crate::net::gossip::GossipConfig;
+use crate::net::overlay::Overlay;
+use crate::sim::events::Time;
 use crate::sim::scenario::Scenario;
 use crate::sim::training::{RecoveryPolicy, Router};
 
@@ -45,6 +57,11 @@ pub struct GwtfRouter {
     /// Rounds used by the most recent plan (diagnostics / Fig. 7).
     pub last_rounds: usize,
     pub last_cost: f64,
+    /// Optional gossip-overlay substrate (partial-view planning).
+    overlay: Option<Overlay>,
+    /// Liveness at the most recent (re)plan — the ground truth gossip
+    /// probes run against (refined by `dead` as crashes land).
+    last_alive: Vec<bool>,
 }
 
 impl GwtfRouter {
@@ -71,22 +88,60 @@ impl GwtfRouter {
             warm_state: None,
             last_rounds: 0,
             last_cost: f64::NAN,
+            overlay: None,
+            last_alive: Vec::new(),
         }
     }
 
-    /// Build from a scenario (shares its Eq. 1 cost closure).
+    /// Build from a scenario (shares its Eq. 1 cost closure).  Scenarios
+    /// with `overlay_fanout` set get a gossip overlay attached, seeded
+    /// from the scenario seed so every router over the same scenario
+    /// bootstraps identical views.
     pub fn from_scenario(sc: &Scenario, params: FlowParams, seed: u64) -> Self {
         let topo = sc.topo.clone();
         let payload = sc.sim_cfg.payload_bytes;
         let cost: CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
-        GwtfRouter::new(
+        let mut router = GwtfRouter::new(
             sc.prob.graph.clone(),
             sc.prob.cap.clone(),
             sc.prob.demand.clone(),
             cost,
             params,
             seed,
-        )
+        );
+        if let Some(fanout) = sc.cfg.overlay_fanout {
+            router.attach_overlay(Overlay::build(
+                &sc.prob.graph,
+                sc.topo.n(),
+                GossipConfig { fanout, ..Default::default() },
+                sc.cfg.seed ^ 0x0E12_1AB5,
+            ));
+        }
+        router
+    }
+
+    /// Attach a gossip overlay: from now on every (re)plan is
+    /// neighbor-scoped and gossip ticks drive its failure detector.
+    pub fn attach_overlay(&mut self, overlay: Overlay) {
+        self.overlay = Some(overlay);
+    }
+
+    /// The attached overlay, if any (diagnostics / tests).
+    pub fn overlay(&self) -> Option<&Overlay> {
+        self.overlay.as_ref()
+    }
+
+    /// Reconcile the overlay with `alive` and return the planner's
+    /// neighbor map (None without an overlay = global visibility).
+    fn reconciled_neighbors(
+        &mut self,
+        alive: &[bool],
+    ) -> Option<std::collections::BTreeMap<NodeId, Vec<NodeId>>> {
+        self.last_alive = alive.to_vec();
+        self.overlay.as_mut().map(|ov| {
+            ov.reconcile(alive);
+            ov.neighbor_map()
+        })
     }
 
     fn problem_with_liveness(&self, alive: &[bool]) -> FlowProblem {
@@ -113,8 +168,12 @@ impl Router for GwtfRouter {
 
     fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
         self.dead.clear();
+        let neighbors = self.reconciled_neighbors(alive);
         let prob = self.problem_with_liveness(alive);
         let mut flow = DecentralizedFlow::new(&prob, self.params.clone(), self.seed ^ self.plans);
+        if let Some(map) = neighbors {
+            flow.set_neighbors(map);
+        }
         let stats = flow.run(self.max_rounds, 8);
         self.last_rounds = stats.len();
         self.last_cost = flow.total_cost();
@@ -139,6 +198,9 @@ impl Router for GwtfRouter {
             return self.plan(alive);
         };
         self.dead.clear();
+        // Views are reconciled before the warm start so crash repair and
+        // refinement below already negotiate over the post-churn overlay.
+        let neighbors = self.reconciled_neighbors(alive);
         let prob = self.problem_with_liveness(alive);
         let mut flow = DecentralizedFlow::warm_start(
             &prob,
@@ -147,10 +209,21 @@ impl Router for GwtfRouter {
             chains,
             temperature,
         );
+        if let Some(map) = neighbors {
+            flow.set_neighbors(map);
+        }
         // `dirty` is advisory (newly dead since the last plan); the sweep
         // over the full liveness view also covers callers that pass an
         // incomplete diff, and is a cheap no-op for long-dead nodes.
+        // All dead nodes are marked before any repair so a stand-in's
+        // visibility check exempts every dead flow neighbour, whatever
+        // the removal order.
         let _ = dirty;
+        for (i, &up) in alive.iter().enumerate() {
+            if !up {
+                flow.mark_dead(NodeId(i));
+            }
+        }
         for (i, &up) in alive.iter().enumerate() {
             if !up {
                 flow.remove_node(NodeId(i));
@@ -171,6 +244,27 @@ impl Router for GwtfRouter {
 
     fn on_crash(&mut self, node: NodeId) {
         self.dead.insert(node);
+        // Crash events expunge the victim from DHT buckets immediately
+        // (stale-contact fix); view eviction waits for the detector.
+        if let Some(ov) = self.overlay.as_mut() {
+            ov.on_crash(node);
+        }
+    }
+
+    fn on_gossip(&mut self, _t: Time) {
+        let Some(ov) = self.overlay.as_mut() else { return };
+        if self.last_alive.is_empty() {
+            return;
+        }
+        // Probe ground truth: start-of-iteration liveness minus the
+        // crashes the router has learned of since.
+        let mut truth = self.last_alive.clone();
+        for d in &self.dead {
+            if let Some(t) = truth.get_mut(d.0) {
+                *t = false;
+            }
+        }
+        ov.gossip_round(&truth);
     }
 
     fn choose_replacement(
@@ -181,9 +275,24 @@ impl Router for GwtfRouter {
         _sink: NodeId,
         candidates: &[NodeId],
     ) -> Option<NodeId> {
+        // §V-D: the repair is initiated by the peer holding the stored
+        // activation/gradient (`prev`); with an overlay it can only offer
+        // the job to replacements inside its own bounded view.  A
+        // candidate the overlay does not know yet is a mid-iteration
+        // joiner (views refresh at reconcile): its §V-B join
+        // announcement is what made it a candidate at all, so it is
+        // exempt — vetoing it would disable joiner recovery and break
+        // k >= n-1 parity under Poisson churn.
         candidates
             .iter()
-            .filter(|&&m| !self.dead.contains(&m))
+            .filter(|&&m| {
+                !self.dead.contains(&m)
+                    && self
+                        .overlay
+                        .as_ref()
+                        .map(|ov| ov.sees(prev, m) || !ov.knows(m))
+                        .unwrap_or(true)
+            })
             .min_by(|&&a, &&b| {
                 let ca = (self.cost)(prev, a) + (self.cost)(a, next);
                 let cb = (self.cost)(prev, b) + (self.cost)(b, next);
@@ -314,6 +423,45 @@ mod tests {
             warm_paths.iter().any(|p| paths.contains(p)),
             "warm start must keep surviving chains"
         );
+    }
+
+    #[test]
+    fn overlay_scenario_router_plans_and_gossips() {
+        // A scale-style scenario attaches the overlay automatically; the
+        // neighbor-scoped plan must still route the full demand, and
+        // gossip rounds must advance the detector without disturbing it.
+        let sc = build(&ScenarioConfig::scale(48, 0.0, 17));
+        let mut r = GwtfRouter::from_scenario(&sc, FlowParams::default(), 17);
+        assert!(r.overlay().is_some(), "overlay_fanout must attach the overlay");
+        let alive = vec![true; sc.topo.n()];
+        let (paths, _) = r.plan(&alive);
+        assert_eq!(paths.len(), 16, "2 data nodes x 8 microbatches");
+        let rounds_before = r.overlay().unwrap().rounds;
+        r.on_gossip(1.0);
+        r.on_gossip(2.0);
+        assert_eq!(r.overlay().unwrap().rounds, rounds_before + 2);
+        let (paths2, _) = r.replan(&alive, &[]);
+        assert_eq!(paths2.len(), 16);
+    }
+
+    #[test]
+    fn overlay_replan_evicts_crashed_relay_from_dht() {
+        let sc = build(&ScenarioConfig::scale(48, 0.0, 23));
+        let mut r = GwtfRouter::from_scenario(&sc, FlowParams::default(), 23);
+        let mut alive = vec![true; sc.topo.n()];
+        let (paths, _) = r.plan(&alive);
+        let victim = paths[0].relays[1];
+        r.on_crash(victim);
+        assert!(
+            !r.overlay().unwrap().dht.contains(victim),
+            "crash event must expunge the victim's DHT key immediately"
+        );
+        alive[victim.0] = false;
+        let (warm, _) = r.replan(&alive, &[victim]);
+        for p in &warm {
+            assert!(!p.relays.contains(&victim));
+        }
+        assert!(r.overlay().unwrap().views_of(victim).is_none());
     }
 
     #[test]

@@ -16,15 +16,19 @@
 //!
 //! Beyond the paper, [`scenarios`] holds continuous-time experiments the
 //! old per-iteration churn model could not express (mid-aggregation
-//! crashes, link-latency jitter, continuous-clock Poisson churn) —
-//! `gwtf bench midagg|jitter|poissonchurn`.
+//! crashes, link-latency jitter, continuous-clock Poisson churn, and the
+//! gossip-overlay scale sweep at 100+ relays) —
+//! `gwtf bench midagg|jitter|poissonchurn|scale`.
 
 pub mod figures;
 pub mod scenarios;
 pub mod tables;
 
 pub use figures::{fig5_summary, run_fig5, run_fig6, run_fig7, Fig6Opts};
-pub use scenarios::{run_link_jitter, run_mid_agg_crash, run_poisson_churn, ScenarioOpts};
+pub use scenarios::{
+    read_scale_profile, run_link_jitter, run_mid_agg_crash, run_poisson_churn, run_scale,
+    scale_json_path, update_scale_json, ScaleOpts, ScaleReport, ScenarioOpts,
+};
 pub use tables::{run_table2, run_table3, run_table6, TableOpts};
 
 /// Where reports land (`bench_results/` next to the manifest).

@@ -17,16 +17,30 @@
 //!   every arbitrary-timestamp crash exercises `Router::on_crash`
 //!   mid-pipeline and the next iteration's warm `Router::replan` repair;
 //!   SWARM and DT-FM are the baselines.
+//! - [`run_scale`] — Table II's shape at 100/200 relays under 20%
+//!   Poisson churn with the gossip overlay attached (GWTF plans over
+//!   bounded neighbor views, O(chains·k) per round) vs SWARM and DT-FM.
+//!   Besides the usual metrics table it measures planner wall time and
+//!   protocol rounds per (re)plan; `gwtf bench scale` and the
+//!   `rust/tests/scale_guard.rs` regression gate write those numbers to
+//!   `BENCH_scale.json` at the repo root.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
 
 use crate::baselines::GaParams;
 use crate::coordinator::GwtfRouter;
+use crate::cost::NodeId;
 use crate::flow::FlowParams;
 use crate::metrics::MetricsTable;
-use crate::sim::scenario::{build, ScenarioConfig};
+use crate::sim::scenario::{build, ScenarioConfig, DEFAULT_OVERLAY_FANOUT};
 use crate::sim::sources::{LinkJitterSource, MidAggCrashSource};
+use crate::sim::training::{RecoveryPolicy, Router};
 use crate::sim::ChurnModel;
+use crate::util::json::Json;
 
 use super::tables::{dtfm_router, swarm_router};
 
@@ -172,6 +186,336 @@ pub fn run_poisson_churn(opts: &ScenarioOpts) -> Result<MetricsTable> {
     Ok(table)
 }
 
+/// Options for the 100+ relay scale scenario.
+#[derive(Debug, Clone)]
+pub struct ScaleOpts {
+    /// Relay counts to sweep (the paper's Table II stops at 16).
+    pub sizes: Vec<usize>,
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub seed: u64,
+    /// Poisson join-leave hazard per relay-iteration.
+    pub churn_p: f64,
+    /// GA budget for the DT-FM baseline (its cost is what the paper
+    /// criticizes; keep it affordable at 200 relays).
+    pub dtfm_generations: usize,
+}
+
+impl Default for ScaleOpts {
+    fn default() -> Self {
+        ScaleOpts {
+            sizes: vec![100, 200],
+            reps: 3,
+            iters_per_rep: 4,
+            seed: 1,
+            churn_p: 0.2,
+            dtfm_generations: 30,
+        }
+    }
+}
+
+/// Planner-cost instrumentation for one (relay count, system) cell of the
+/// scale sweep, summed over reps and iterations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScaleCase {
+    pub relays: usize,
+    pub system: String,
+    /// `Router::plan`/`replan` invocations measured.
+    pub plan_calls: usize,
+    /// Protocol rounds across all (re)plans (deterministic per seed —
+    /// the quantity the CI regression gate compares).
+    pub plan_rounds_total: usize,
+    /// Rounds of each rep's first, cold plan (convergence rounds),
+    /// summed over reps.
+    pub cold_rounds: usize,
+    /// Wall-clock spent inside (re)plans, milliseconds (machine-
+    /// dependent; informational).
+    pub plan_wall_ms: f64,
+    /// Microbatches completed across all measured iterations.
+    pub throughput_total: f64,
+}
+
+/// The `BENCH_scale.json` payload for one profile (test-sized or full).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScaleReport {
+    pub fanout: usize,
+    pub churn_p: f64,
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub cases: Vec<ScaleCase>,
+}
+
+impl ScaleReport {
+    pub fn case(&self, relays: usize, system: &str) -> Option<&ScaleCase> {
+        self.cases.iter().find(|c| c.relays == relays && c.system == system)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let case_json = |c: &ScaleCase| {
+            let mut o = BTreeMap::new();
+            o.insert("relays".into(), Json::Num(c.relays as f64));
+            o.insert("system".into(), Json::Str(c.system.clone()));
+            o.insert("plan_calls".into(), Json::Num(c.plan_calls as f64));
+            o.insert("plan_rounds_total".into(), Json::Num(c.plan_rounds_total as f64));
+            o.insert("cold_rounds".into(), Json::Num(c.cold_rounds as f64));
+            o.insert("plan_wall_ms".into(), Json::Num((c.plan_wall_ms * 1e3).round() / 1e3));
+            o.insert("throughput_total".into(), Json::Num(c.throughput_total));
+            Json::Obj(o)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("fanout".into(), Json::Num(self.fanout as f64));
+        root.insert("churn_p".into(), Json::Num(self.churn_p));
+        root.insert("reps".into(), Json::Num(self.reps as f64));
+        root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
+        root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Option<ScaleReport> {
+        let num = |o: &Json, k: &str| o.get(k).and_then(Json::as_f64);
+        let cases = match j.get("cases")? {
+            Json::Arr(v) => v
+                .iter()
+                .map(|c| {
+                    Some(ScaleCase {
+                        relays: num(c, "relays")? as usize,
+                        system: c.get("system")?.as_str()?.to_string(),
+                        plan_calls: num(c, "plan_calls")? as usize,
+                        plan_rounds_total: num(c, "plan_rounds_total")? as usize,
+                        cold_rounds: num(c, "cold_rounds")? as usize,
+                        plan_wall_ms: num(c, "plan_wall_ms")?,
+                        throughput_total: num(c, "throughput_total")?,
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?,
+            _ => return None,
+        };
+        Some(ScaleReport {
+            fanout: num(j, "fanout")? as usize,
+            churn_p: num(j, "churn_p")?,
+            reps: num(j, "reps")? as usize,
+            iters_per_rep: num(j, "iters_per_rep")? as usize,
+            cases,
+        })
+    }
+}
+
+/// Canonical location of `BENCH_scale.json`, shared by the CLI bench,
+/// `cargo bench --bench scale_bench` and the regression gate so they can
+/// never write one file and read another.  Defaults to the repo root of
+/// the build tree (right for every in-tree cargo invocation — the gate
+/// compares against the *committed* file there); a relocated/installed
+/// `gwtf` binary should set `GWTF_SCALE_JSON` to a writable path.
+pub fn scale_json_path() -> std::path::PathBuf {
+    std::env::var("GWTF_SCALE_JSON").map(std::path::PathBuf::from).unwrap_or_else(|_| {
+        std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scale.json"))
+    })
+}
+
+/// Read one profile (`"test_sized"` / `"full"`) from `BENCH_scale.json`.
+/// `None` when the file, the profile, or a parseable report is absent —
+/// the guard's capture mode.
+pub fn read_scale_profile(path: &Path, profile: &str) -> Option<ScaleReport> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(text.trim()).ok()?;
+    ScaleReport::from_json(j.get(profile)?)
+}
+
+/// Write one profile into `BENCH_scale.json`, preserving the other
+/// profile.  A present-but-corrupt file is an error, not a reset — a
+/// silent rewrite would null the committed baseline and disarm the CI
+/// regression gate without anyone noticing.
+pub fn update_scale_json(path: &Path, profile: &str, report: &ScaleReport) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Err(_) => BTreeMap::new(), // no file yet: fresh capture
+        Ok(text) => match Json::parse(text.trim()) {
+            Ok(Json::Obj(o)) => o,
+            _ => bail!(
+                "{} exists but is not a JSON object; refusing to overwrite \
+                 (fix or delete it to re-capture)",
+                path.display()
+            ),
+        },
+    };
+    root.insert("bench".into(), Json::Str("scale".into()));
+    root.insert(
+        "source".into(),
+        Json::Str("rust/src/experiments/scenarios.rs::run_scale".into()),
+    );
+    root.entry("test_sized".to_string()).or_insert(Json::Null);
+    root.entry("full".to_string()).or_insert(Json::Null);
+    root.insert(profile.to_string(), report.to_json());
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+/// Wall-time + protocol-round instrumentation around any [`Router`].
+struct TimedRouter<R: Router> {
+    inner: R,
+    wall_ms: f64,
+    calls: usize,
+    rounds_total: usize,
+    cold_rounds: usize,
+}
+
+impl<R: Router> TimedRouter<R> {
+    fn new(inner: R) -> Self {
+        TimedRouter { inner, wall_ms: 0.0, calls: 0, rounds_total: 0, cold_rounds: 0 }
+    }
+
+    fn record(&mut self, t0: Instant) {
+        self.wall_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.calls += 1;
+        let rounds = self.inner.last_plan_rounds();
+        self.rounds_total += rounds;
+        if self.calls == 1 {
+            self.cold_rounds = rounds;
+        }
+    }
+}
+
+impl<R: Router> Router for TimedRouter<R> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+    fn plan(&mut self, alive: &[bool]) -> (Vec<crate::flow::graph::FlowPath>, f64) {
+        let t0 = Instant::now();
+        let out = self.inner.plan(alive);
+        self.record(t0);
+        out
+    }
+    fn replan(
+        &mut self,
+        alive: &[bool],
+        dirty: &[NodeId],
+    ) -> (Vec<crate::flow::graph::FlowPath>, f64) {
+        let t0 = Instant::now();
+        let out = self.inner.replan(alive, dirty);
+        self.record(t0);
+        out
+    }
+    fn last_plan_rounds(&self) -> usize {
+        self.inner.last_plan_rounds()
+    }
+    fn on_crash(&mut self, node: NodeId) {
+        self.inner.on_crash(node)
+    }
+    fn on_gossip(&mut self, t: crate::sim::events::Time) {
+        self.inner.on_gossip(t)
+    }
+    fn choose_replacement(
+        &mut self,
+        prev: NodeId,
+        next: NodeId,
+        stage: usize,
+        sink: NodeId,
+        candidates: &[NodeId],
+    ) -> Option<NodeId> {
+        self.inner.choose_replacement(prev, next, stage, sink, candidates)
+    }
+    fn recovery(&self) -> RecoveryPolicy {
+        self.inner.recovery()
+    }
+}
+
+/// The 100+ relay scale sweep: GWTF plans over the gossip overlay's
+/// bounded neighbor views (warm re-plans, O(chains·k) rounds) against
+/// SWARM and DT-FM, all under continuous-clock Poisson churn.  Returns
+/// the usual metrics table plus the planner-cost report that lands in
+/// `BENCH_scale.json`.
+pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
+    let mut table = MetricsTable::new(
+        "Scale — 100+ relays, gossip-overlay GWTF vs SWARM vs DT-FM under Poisson churn",
+    );
+    let mut cases: BTreeMap<(usize, String), ScaleCase> = BTreeMap::new();
+
+    /// One (scenario, system) measurement: drive the engine, accumulate
+    /// the metrics cell and fold the planner instrumentation into the
+    /// per-(relays, system) case.
+    struct ScaleRun<'a> {
+        table: &'a mut MetricsTable,
+        cases: &'a mut BTreeMap<(usize, String), ScaleCase>,
+        sc: &'a crate::sim::scenario::Scenario,
+        relays: usize,
+        engine_seed: u64,
+        iters: usize,
+    }
+
+    impl ScaleRun<'_> {
+        fn measure<R: Router>(&mut self, system: &str, warm_replan: bool, inner: R) {
+            let mut router = TimedRouter::new(inner);
+            let mut engine = self.sc.engine(self.engine_seed);
+            engine.warm_replan = warm_replan;
+            let mut throughput = 0.0;
+            let cell = self.table.cell(&format!("scale {}", self.relays), system);
+            for _ in 0..self.iters {
+                let m = engine.step(&self.sc.prob, &mut router);
+                throughput += m.completed as f64;
+                cell.push(&m);
+            }
+            let c = self
+                .cases
+                .entry((self.relays, system.to_string()))
+                .or_insert_with(|| ScaleCase {
+                    relays: self.relays,
+                    system: system.to_string(),
+                    ..Default::default()
+                });
+            c.plan_wall_ms += router.wall_ms;
+            c.plan_calls += router.calls;
+            c.plan_rounds_total += router.rounds_total;
+            c.cold_rounds += router.cold_rounds;
+            c.throughput_total += throughput;
+        }
+    }
+
+    for &relays in &opts.sizes {
+        for rep in 0..opts.reps {
+            let seed = opts.seed + rep as u64 * 8369;
+            let cfg = ScenarioConfig::scale(relays, opts.churn_p, seed);
+            let sc = build(&cfg);
+            let mut run = ScaleRun {
+                table: &mut table,
+                cases: &mut cases,
+                sc: &sc,
+                relays,
+                engine_seed: seed ^ 0x1,
+                iters: opts.iters_per_rep,
+            };
+            // GWTF: overlay-scoped planning + warm re-plans; engine gossip
+            // ticks drive the failure detector between plans.
+            run.measure(
+                "gwtf",
+                true,
+                GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA),
+            );
+            // SWARM: greedy comm-only wiring, global view.
+            run.measure("swarm", false, swarm_router(&sc, seed ^ 0xB));
+            // DT-FM: centralized GA, recomputed whenever churn breaks a
+            // pipeline — the cost the overlay exists to avoid.
+            run.measure(
+                "dtfm",
+                false,
+                dtfm_router(
+                    &sc,
+                    GaParams { generations: opts.dtfm_generations, ..Default::default() },
+                    seed ^ 0xC,
+                ),
+            );
+        }
+    }
+
+    let report = ScaleReport {
+        fanout: DEFAULT_OVERLAY_FANOUT,
+        churn_p: opts.churn_p,
+        reps: opts.reps,
+        iters_per_rep: opts.iters_per_rep,
+        cases: cases.into_values().collect(),
+    };
+    Ok((table, report))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +556,64 @@ mod tests {
             gwtf.replan_rounds.iter().sum::<f64>() > 0.0,
             "gwtf plans/replans must report protocol rounds"
         );
+    }
+
+    #[test]
+    fn scale_sweep_produces_cells_and_planner_report() {
+        let opts = ScaleOpts {
+            sizes: vec![60],
+            reps: 1,
+            iters_per_rep: 2,
+            seed: 5,
+            churn_p: 0.2,
+            dtfm_generations: 8,
+        };
+        let (t, report) = run_scale(&opts).unwrap();
+        assert_eq!(t.cells.len(), 3, "1 size x 3 systems");
+        for col in ["gwtf", "swarm", "dtfm"] {
+            let acc = &t.cells[&("scale 60".to_string(), col.to_string())];
+            assert_eq!(acc.throughput.len(), 2, "{col}");
+        }
+        let gwtf = report.case(60, "gwtf").expect("gwtf case");
+        assert_eq!(gwtf.plan_calls, 2, "one (re)plan per iteration");
+        assert!(gwtf.plan_rounds_total > 0, "protocol rounds recorded");
+        assert!(gwtf.cold_rounds > 0 && gwtf.cold_rounds <= gwtf.plan_rounds_total);
+        assert!(gwtf.throughput_total > 0.0, "overlay planning must route work");
+        assert!(report.case(60, "swarm").is_some() && report.case(60, "dtfm").is_some());
+    }
+
+    #[test]
+    fn scale_report_json_roundtrip_and_profile_update() {
+        let report = ScaleReport {
+            fanout: 8,
+            churn_p: 0.2,
+            reps: 1,
+            iters_per_rep: 2,
+            cases: vec![ScaleCase {
+                relays: 100,
+                system: "gwtf".into(),
+                plan_calls: 2,
+                plan_rounds_total: 57,
+                cold_rounds: 41,
+                plan_wall_ms: 12.5,
+                throughput_total: 30.0,
+            }],
+        };
+        let back = ScaleReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+
+        let dir = std::env::temp_dir().join("gwtf_scale_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_scale.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_scale_profile(&path, "test_sized").is_none(), "missing file");
+        update_scale_json(&path, "test_sized", &report).unwrap();
+        assert_eq!(read_scale_profile(&path, "test_sized").unwrap(), report);
+        assert!(read_scale_profile(&path, "full").is_none(), "other profile null");
+        // updating the other profile preserves the first
+        update_scale_json(&path, "full", &report).unwrap();
+        assert_eq!(read_scale_profile(&path, "test_sized").unwrap(), report);
+        assert_eq!(read_scale_profile(&path, "full").unwrap(), report);
     }
 
     #[test]

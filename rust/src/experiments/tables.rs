@@ -97,6 +97,9 @@ impl Router for GwtfWithPolicy {
     fn last_plan_rounds(&self) -> usize {
         self.inner.last_plan_rounds()
     }
+    fn on_gossip(&mut self, t: crate::sim::events::Time) {
+        self.inner.on_gossip(t)
+    }
     fn recovery(&self) -> RecoveryPolicy {
         self.policy
     }

@@ -75,7 +75,7 @@ pub struct Chain {
     pub last_progress: usize,
 }
 
-/// Per-round convergence statistics (Fig. 7 series).
+/// Per-round convergence statistics (Fig. 7 series + scale diagnostics).
 #[derive(Debug, Clone, Copy)]
 pub struct RoundStats {
     pub round: usize,
@@ -83,6 +83,16 @@ pub struct RoundStats {
     pub avg_cost_per_microbatch: f64,
     pub max_edge_cost: f64,
     pub moves_applied: usize,
+    /// Chains alive at the end of the round (complete + under
+    /// construction) — the `chains` in the O(chains·k) bound.
+    pub chains: usize,
+    /// Peer-candidate evaluations this round outside Request Change
+    /// (seed / extend / redirect visibility + cost checks).
+    pub candidate_scans: usize,
+    /// Request Change pair candidates examined this round; bounded by
+    /// 2·chains ≤ k·chains for any overlay fanout k ≥ 2 (asserted in
+    /// `rust/tests/overlay.rs`).
+    pub change_scans: usize,
 }
 
 /// The decentralized optimizer state.
@@ -99,11 +109,15 @@ pub struct DecentralizedFlow<'p> {
     annealer: Annealer,
     rng: Rng,
     round: usize,
-    /// Optional restricted peer views (NodeId -> visible peers); None =
-    /// full adjacent-stage visibility.
-    pub visibility: Option<BTreeMap<NodeId, Vec<NodeId>>>,
+    /// Per-node overlay neighbor lists (sorted; see
+    /// [`set_neighbors`](Self::set_neighbors)).  None = legacy global
+    /// adjacent-stage visibility.
+    neighbors: Option<BTreeMap<NodeId, Vec<NodeId>>>,
     /// Nodes currently dead (crashed); they take part in nothing.
     dead: Vec<bool>,
+    /// Candidate-scan counters for the round in flight (RoundStats).
+    scans: usize,
+    change_scans: usize,
 }
 
 impl<'p> DecentralizedFlow<'p> {
@@ -126,9 +140,30 @@ impl<'p> DecentralizedFlow<'p> {
             annealer,
             rng: Rng::new(seed),
             round: 0,
-            visibility: None,
+            neighbors: None,
             dead: vec![false; prob.cap.len()],
+            scans: 0,
+            change_scans: 0,
         }
+    }
+
+    /// Restrict every node's candidate pool to its overlay neighbor list
+    /// (`NodeId -> visible peers`, typically
+    /// [`crate::net::Overlay::neighbor_map`]).  Lists are sorted and
+    /// deduplicated here so [`sees`](Self::sees) can binary-search on the
+    /// planner's hottest path.  A node absent from the map sees no one
+    /// (data nodes never act as viewers, so they need no entry).
+    ///
+    /// With lists covering the full adjacent stages (overlay fanout
+    /// `k >= n-1`) every decision — including RNG draws and tie-breaks —
+    /// matches the global-visibility planner bit for bit; the parity
+    /// test in `rust/tests/overlay.rs` holds this invariant.
+    pub fn set_neighbors(&mut self, mut map: BTreeMap<NodeId, Vec<NodeId>>) {
+        for peers in map.values_mut() {
+            peers.sort_unstable();
+            peers.dedup();
+        }
+        self.neighbors = Some(map);
     }
 
     /// Warm-start construction (§V-A/§V-D): adopt the surviving chains of
@@ -202,11 +237,14 @@ impl<'p> DecentralizedFlow<'p> {
         !self.dead[n.0]
     }
 
-    /// Can `viewer` see `peer`? (partial-membership restriction)
+    /// Can `viewer` see `peer`? (partial-membership restriction; lists
+    /// are sorted by [`set_neighbors`](Self::set_neighbors))
     fn sees(&self, viewer: NodeId, peer: NodeId) -> bool {
-        match &self.visibility {
+        match &self.neighbors {
             None => true,
-            Some(v) => v.get(&viewer).map(|ps| ps.contains(&peer)).unwrap_or(false),
+            Some(v) => {
+                v.get(&viewer).map(|ps| ps.binary_search(&peer).is_ok()).unwrap_or(false)
+            }
         }
     }
 
@@ -228,6 +266,8 @@ impl<'p> DecentralizedFlow<'p> {
     /// One synchronous round of the protocol.  Returns stats.
     pub fn step(&mut self) -> RoundStats {
         self.round += 1;
+        self.scans = 0;
+        self.change_scans = 0;
         let mut moves = 0;
         moves += self.seed_chains();
         moves += self.extend_chains();
@@ -274,6 +314,9 @@ impl<'p> DecentralizedFlow<'p> {
             avg_cost_per_microbatch: avg,
             max_edge_cost: max_edge,
             moves_applied: moves,
+            chains: self.chains.len(),
+            candidate_scans: self.scans,
+            change_scans: self.change_scans,
         }
     }
 
@@ -288,18 +331,20 @@ impl<'p> DecentralizedFlow<'p> {
             if !self.alive(r) || self.cap_left[r.0] == 0 {
                 continue;
             }
-            // Cheapest data node with remaining sink budget this relay can see.
-            let best = self
-                .prob
-                .graph
-                .data_nodes
-                .iter()
-                .filter(|&&d| self.sink_left[&d] > 0 && self.sees(r, d))
-                .min_by(|&&a, &&b| {
-                    self.prob.cost(r, a).partial_cmp(&self.prob.cost(r, b)).unwrap()
-                })
-                .copied();
-            if let Some(d) = best {
+            // Cheapest data node with remaining sink budget this relay can
+            // see (first minimal wins, as `Iterator::min_by` would pick).
+            let mut best: Option<(NodeId, f64)> = None;
+            for &d in &self.prob.graph.data_nodes {
+                if self.sink_left[&d] == 0 || !self.sees(r, d) {
+                    continue;
+                }
+                self.scans += 1;
+                let c = self.prob.cost(r, d);
+                if best.map(|(_, bc)| c < bc).unwrap_or(true) {
+                    best = Some((d, c));
+                }
+            }
+            if let Some((d, _)) = best {
                 *self.sink_left.get_mut(&d).unwrap() -= 1;
                 self.cap_left[r.0] -= 1;
                 let round = self.round;
@@ -318,31 +363,68 @@ impl<'p> DecentralizedFlow<'p> {
 
     /// Relays with spare capacity extend chains whose head sits one stage
     /// after them (Request Flow towards the head).
+    ///
+    /// Chains open at each stage boundary are indexed by their head node,
+    /// so a relay only evaluates the chains headed by its overlay
+    /// neighbors — O(k·chains) per round instead of every relay scanning
+    /// every chain.  Candidates are always visited in ascending chain
+    /// order (first minimal wins), which keeps partial and global views
+    /// on identical tie-breaks: full neighbor lists reproduce the legacy
+    /// global scan bit for bit.
     fn extend_chains(&mut self) -> usize {
         let mut moves = 0;
         for s in (0..self.n_stages() - 1).rev() {
+            // Index the chains open for extension at this boundary:
+            // incomplete, head at stage s+1.  `open` is ascending by
+            // construction; `by_head` serves the neighbor-scoped lookups.
+            let mut open: Vec<usize> = Vec::new();
+            let mut by_head: BTreeMap<NodeId, Vec<usize>> = BTreeMap::new();
+            for (ci, ch) in self.chains.iter().enumerate() {
+                if !ch.complete && ch.head_stage == s + 1 {
+                    open.push(ci);
+                    by_head.entry(ch.nodes[0]).or_default().push(ci);
+                }
+            }
             let mut members = self.prob.graph.stages[s].clone();
             self.rng.shuffle(&mut members);
             for i in members {
                 if !self.alive(i) || self.cap_left[i.0] == 0 {
                     continue;
                 }
-                // Candidate chains: head at stage s+1, not complete, head visible.
+                // Global mode iterates the shared `open` index in place;
+                // neighbor mode materializes the (small) per-relay set.
+                let scoped: Option<Vec<usize>> = match &self.neighbors {
+                    None => None,
+                    Some(map) => {
+                        let Some(peers) = map.get(&i) else { continue };
+                        let mut v: Vec<usize> = peers
+                            .iter()
+                            .filter_map(|p| by_head.get(p))
+                            .flatten()
+                            .copied()
+                            .collect();
+                        v.sort_unstable();
+                        Some(v)
+                    }
+                };
+                let cand: &[usize] = scoped.as_deref().unwrap_or(&open);
                 let mut best: Option<(usize, f64)> = None;
-                for (ci, ch) in self.chains.iter().enumerate() {
-                    if ch.complete || ch.head_stage != s + 1 {
-                        continue;
-                    }
-                    let head = ch.nodes[0];
-                    if !self.sees(i, head) {
-                        continue;
-                    }
-                    let c = self.prob.cost(i, head) + self.cost_to_sink(ch);
+                for &ci in cand {
+                    self.scans += 1;
+                    let ch = &self.chains[ci];
+                    let c = self.prob.cost(i, ch.nodes[0]) + self.cost_to_sink(ch);
                     if best.map(|(_, bc)| c < bc).unwrap_or(true) {
                         best = Some((ci, c));
                     }
                 }
                 if let Some((ci, _)) = best {
+                    // The chain's head moves to stage s: drop it from this
+                    // boundary's index so later relays skip it.
+                    let head = self.chains[ci].nodes[0];
+                    open.retain(|&x| x != ci);
+                    if let Some(v) = by_head.get_mut(&head) {
+                        v.retain(|&x| x != ci);
+                    }
                     self.chains[ci].nodes.insert(0, i);
                     self.chains[ci].head_stage = s;
                     self.chains[ci].last_progress = self.round;
@@ -451,7 +533,10 @@ impl<'p> DecentralizedFlow<'p> {
             if i1 == i2 || j1 == j2 {
                 continue;
             }
-            // Nodes must see each other's peers to negotiate the swap.
+            self.change_scans += 1;
+            // Nodes must see each other's peers to negotiate the swap —
+            // with an overlay attached, swap partners come only from the
+            // nodes' bounded neighbor views.
             if !self.sees(i1, j2) || !self.sees(i2, j1) {
                 continue;
             }
@@ -483,17 +568,19 @@ impl<'p> DecentralizedFlow<'p> {
                 let prev = if pi == 0 { ch.sink } else { ch.nodes[pi - 1] };
                 let next = if pi + 1 < ch.nodes.len() { ch.nodes[pi + 1] } else { ch.sink };
                 // Candidate replacements with spare capacity in the same stage.
+                let mut scans = 0usize;
                 let cand: Vec<NodeId> = self.prob.graph.stages[stage]
                     .iter()
                     .filter(|&&m| {
-                        m != x
-                            && self.alive(m)
-                            && self.cap_left[m.0] > 0
-                            && self.sees(m, prev)
-                            && self.sees(m, next)
+                        if m == x || !self.alive(m) || self.cap_left[m.0] == 0 {
+                            return false;
+                        }
+                        scans += 1;
+                        self.sees(m, prev) && self.sees(m, next)
                     })
                     .copied()
                     .collect();
+                self.scans += scans;
                 let Some(&m) = cand.iter().min_by(|&&p, &&q| {
                     let cp = self.prob.cost(prev, p) + self.prob.cost(p, next);
                     let cq = self.prob.cost(prev, q) + self.prob.cost(q, next);
@@ -515,13 +602,22 @@ impl<'p> DecentralizedFlow<'p> {
         moves
     }
 
+    /// Record a node as dead without repairing yet.  Callers tearing down
+    /// several nodes should mark them all first, then
+    /// [`remove_node`](Self::remove_node) each: repair then knows every
+    /// dead flow neighbour regardless of removal order (the dead-endpoint
+    /// exemption in the candidate filter depends on it).
+    pub fn mark_dead(&mut self, x: NodeId) {
+        self.dead[x.0] = true;
+        self.cap_left[x.0] = 0;
+    }
+
     /// A node crashed: repair flows through it (§IV "amend a broken flow").
     /// Repair finds the last alive node before the crash and reconnects to
     /// the first alive node after it through a spare-capacity peer; if no
     /// peer exists, the whole chain is torn down (capacity refunded).
     pub fn remove_node(&mut self, x: NodeId) -> (usize, usize) {
-        self.dead[x.0] = true;
-        self.cap_left[x.0] = 0;
+        self.mark_dead(x);
         let mut repaired = 0;
         let mut destroyed = 0;
         let mut ci = 0;
@@ -534,9 +630,20 @@ impl<'p> DecentralizedFlow<'p> {
             let stage = ch.head_stage + pi;
             let prev = if pi == 0 { ch.sink } else { ch.nodes[pi - 1] };
             let next = if pi + 1 < ch.nodes.len() { ch.nodes[pi + 1] } else { ch.sink };
+            // §V-D repair is a local negotiation too: the stand-in must be
+            // able to see its *living* flow neighbours (a dead endpoint is
+            // itself pending removal — its own repair re-links that side,
+            // so requiring visibility towards it would veto repairs the
+            // global planner performs and break k = n-1 parity).
             let cand: Vec<NodeId> = self.prob.graph.stages[stage]
                 .iter()
-                .filter(|&&m| m != x && self.alive(m) && self.cap_left[m.0] > 0)
+                .filter(|&&m| {
+                    m != x
+                        && self.alive(m)
+                        && self.cap_left[m.0] > 0
+                        && (!self.alive(prev) || self.sees(m, prev))
+                        && (!self.alive(next) || self.sees(m, next))
+                })
                 .copied()
                 .collect();
             let best = cand.iter().min_by(|&&p, &&q| {
@@ -833,9 +940,56 @@ mod tests {
             vis.insert(n, seen);
         }
         let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), 21);
-        f.visibility = Some(vis);
+        f.set_neighbors(vis);
         f.run(120, 10);
         assert!(f.complete_flows() > 0);
         validate_paths(&f.established_paths(), &prob).unwrap();
+    }
+
+    /// Full neighbor lists must reproduce the global-visibility planner
+    /// bit for bit — same RNG draws, same tie-breaks, same chains.
+    #[test]
+    fn full_neighbor_lists_match_global_scan_bitwise() {
+        let mut rng = Rng::new(55);
+        let prob = random_problem(2, 32, 4, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        let all = prob.graph.all_nodes();
+        let mut full: BTreeMap<NodeId, Vec<NodeId>> = BTreeMap::new();
+        for &n in &all {
+            full.insert(n, all.iter().copied().filter(|&m| m != n).collect());
+        }
+        let mut a = DecentralizedFlow::new(&prob, FlowParams::default(), 55);
+        let mut b = DecentralizedFlow::new(&prob, FlowParams::default(), 55);
+        b.set_neighbors(full);
+        let (sa, sb) = (a.run(120, 10), b.run(120, 10));
+        assert_eq!(sa.len(), sb.len(), "same convergence trajectory");
+        for (x, y) in sa.iter().zip(&sb) {
+            assert_eq!(x.moves_applied, y.moves_applied, "round {}", x.round);
+            assert_eq!(
+                x.avg_cost_per_microbatch.to_bits(),
+                y.avg_cost_per_microbatch.to_bits(),
+                "round {}",
+                x.round
+            );
+        }
+        assert_eq!(a.established_paths(), b.established_paths());
+        assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+    }
+
+    #[test]
+    fn round_stats_report_bounded_change_scans() {
+        let mut rng = Rng::new(61);
+        let prob = random_problem(1, 40, 8, (1.0, 3.0), (1.0, 20.0), &mut rng);
+        let mut f = DecentralizedFlow::new(&prob, FlowParams::default(), 61);
+        let stats = f.run(60, 8);
+        assert!(stats.iter().any(|s| s.candidate_scans > 0), "scans must be counted");
+        for s in &stats {
+            assert!(
+                s.change_scans <= 2 * s.chains.max(1),
+                "round {}: {} change scans for {} chains",
+                s.round,
+                s.change_scans,
+                s.chains
+            );
+        }
     }
 }

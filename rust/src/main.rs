@@ -6,7 +6,7 @@
 //! gwtf doctor                         PJRT + artifact sanity check
 //! gwtf sim    [--system gwtf|swarm] [--heterogeneous] [--churn P] [--iters N]
 //! gwtf train  [--family llama|gpt] [--steps N] [--churn P] [--lr X]
-//! gwtf bench  <table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|all>
+//! gwtf bench  <table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|scale|all>
 //!             [--reps N] [--full]
 //! gwtf join-demo                      Fig. 3 walkthrough
 //! ```
@@ -24,7 +24,8 @@ use gwtf::coordinator::GwtfRouter;
 use gwtf::cost::NodeId;
 use gwtf::experiments::{
     results_dir, run_fig5, run_fig6, run_fig7, run_link_jitter, run_mid_agg_crash,
-    run_poisson_churn, run_table2, run_table3, run_table6, Fig6Opts, ScenarioOpts, TableOpts,
+    run_poisson_churn, run_scale, run_table2, run_table3, run_table6, update_scale_json,
+    Fig6Opts, ScaleOpts, ScenarioOpts, TableOpts,
 };
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::flow::FlowParams;
@@ -40,8 +41,10 @@ const USAGE: &str = "usage: gwtf <doctor|sim|train|bench|join-demo> [options]
   sim       --system gwtf|swarm  --heterogeneous --churn P --iters N --seed S
             --warm-replan        (GWTF warm-starts re-plans from surviving chains)
   train     --family llama|gpt   --steps N --churn P --lr X --microbatches M
-  bench     table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|all
+  bench     table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|scale|all
             --reps N --iters N --full --warm-replan
+            (scale: --relays \"100,200\" --churn P — overlay GWTF vs baselines,
+             writes BENCH_scale.json at the repo root)
   join-demo                      Fig. 3 walkthrough";
 
 fn main() {
@@ -239,6 +242,27 @@ fn bench(args: &Args) -> Result<()> {
     if target == "poissonchurn" || target == "all" {
         let sopts = ScenarioOpts { reps: reps.min(10), iters_per_rep: iters, seed };
         emit(&run_poisson_churn(&sopts)?, "poissonchurn")?;
+        ran = true;
+    }
+    if target == "scale" || target == "all" {
+        let sizes: Vec<usize> = args
+            .str_or("relays", "100,200")
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| anyhow!("--relays expects integers")))
+            .collect::<Result<_>>()?;
+        let sopts = ScaleOpts {
+            sizes,
+            reps: reps.min(3),
+            iters_per_rep: iters,
+            seed,
+            churn_p: args.f64_or("churn", 0.2)?,
+            ..Default::default()
+        };
+        let (t, report) = run_scale(&sopts)?;
+        emit(&t, "scale")?;
+        let json_path = gwtf::experiments::scale_json_path();
+        update_scale_json(&json_path, "full", &report)?;
+        println!("-> {}", json_path.display());
         ran = true;
     }
     if target == "fig7" || target == "all" {

@@ -104,11 +104,16 @@ impl Dht {
 
     /// Join the DHT: bootstrap from `contact` (None for the first node),
     /// then iterative-lookup towards the joiner's own key, filling buckets.
+    ///
+    /// A contact that has itself crashed/left (no longer in `keys`) is
+    /// ignored: the joiner comes up isolated and must retry through a
+    /// live contact — it does not panic the simulation.
     pub fn join(&mut self, id: NodeId, contact: Option<NodeId>, _rng: &mut Rng) {
         let key = Self::key_for(id);
         let mut table = RoutingTable::new(key, self.k);
-        if let Some(c) = contact {
-            let ckey = self.keys[&c];
+        let live_contact =
+            contact.and_then(|c| self.keys.get(&c).copied().map(|ckey| (c, ckey)));
+        if let Some((c, ckey)) = live_contact {
             table.insert(ckey, c);
             // Iterative lookup for our own key through the contact graph.
             let found = self.iterative_lookup_from(ckey, key);
@@ -136,6 +141,23 @@ impl Dht {
             for t in self.tables.values_mut() {
                 t.remove(key);
             }
+        }
+    }
+
+    /// Reconcile with a liveness vector: expunge every dead member's key
+    /// from all routing-table buckets (and drop its own table).  This is
+    /// the churn-crash wiring the overlay relies on — without it, crashed
+    /// peers' keys linger in buckets and bootstrap hands out dead
+    /// contacts.
+    pub fn evict_dead(&mut self, alive: &[bool]) {
+        let dead: Vec<NodeId> = self
+            .keys
+            .keys()
+            .copied()
+            .filter(|n| !alive.get(n.0).copied().unwrap_or(true))
+            .collect();
+        for n in dead {
+            self.leave(n);
         }
     }
 
@@ -262,6 +284,43 @@ mod tests {
             }
             assert!(!dht.peers_of(NodeId(i)).contains(&NodeId(5)));
         }
+    }
+
+    #[test]
+    fn evict_dead_purges_every_bucket() {
+        let mut dht = build(24);
+        let mut alive = vec![true; 24];
+        for dead in [3usize, 11, 17] {
+            alive[dead] = false;
+        }
+        dht.evict_dead(&alive);
+        for dead in [3usize, 11, 17] {
+            assert!(!dht.contains(NodeId(dead)));
+            for i in 0..24 {
+                if alive[i] {
+                    assert!(
+                        !dht.peers_of(NodeId(i)).contains(&NodeId(dead)),
+                        "stale contact n{dead} lingers in n{i}'s buckets"
+                    );
+                }
+            }
+        }
+        // idempotent
+        dht.evict_dead(&alive);
+        assert_eq!(dht.len(), 21);
+    }
+
+    #[test]
+    fn join_through_dead_contact_is_isolated_not_panicking() {
+        let mut dht = build(8);
+        let mut rng = Rng::new(1);
+        dht.leave(NodeId(3));
+        dht.join(NodeId(20), Some(NodeId(3)), &mut rng);
+        assert!(dht.contains(NodeId(20)));
+        assert!(dht.peers_of(NodeId(20)).is_empty(), "dead contact bootstraps nothing");
+        // a later join through a live contact works normally
+        dht.join(NodeId(21), Some(NodeId(0)), &mut rng);
+        assert!(!dht.peers_of(NodeId(21)).is_empty());
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! SWIM-style partial-view membership state (the per-node half of the
+//! gossip overlay; the network-wide orchestration lives in
+//! [`super::overlay`]).
+//!
+//! Each relay keeps two **directed views** of bounded size
+//! ([`GossipConfig::fanout`] peers each): `fwd` over the next pipeline
+//! stage and `bwd` over the previous one — exactly the "peer view
+//! (adjacent stages, from the DHT)" the flow protocol consumes — plus a
+//! larger *passive* pool per view (HyParView's active/passive split) used
+//! to repair the active view after evictions.
+//!
+//! Failure detection is suspicion-then-eviction, as in SWIM: a failed
+//! probe increments a per-peer suspicion counter; only after
+//! [`GossipConfig::suspicion_rounds`] consecutive failures is the peer
+//! evicted and a passive member promoted in its place.  A transiently
+//! unreachable peer that answers a later probe has its suspicion cleared.
+//! Every few rounds ([`GossipConfig::shuffle_every`]) a view rotates one
+//! active slot against a random passive member — the HyParView shuffle
+//! collapsed to its effect — so the candidate sets the flow planner draws
+//! from keep churning even without failures.
+//!
+//! Everything here is deterministic given the caller's [`Rng`]; the
+//! overlay proptests assert byte-identical views across same-seed runs.
+
+use std::collections::BTreeMap;
+
+use crate::cost::NodeId;
+use crate::util::Rng;
+
+/// Tunables of the gossip overlay.
+#[derive(Debug, Clone)]
+pub struct GossipConfig {
+    /// Active-view size per direction (the `k` in the planner's
+    /// O(chains·k) bound; `ScenarioConfig::overlay_fanout`).
+    pub fanout: usize,
+    /// Passive-pool size per direction (repair candidates).
+    pub passive_size: usize,
+    /// Rotate one active slot against the passive pool every this many
+    /// gossip rounds (0 disables shuffling).
+    pub shuffle_every: u64,
+    /// Failed probes before a suspected peer is evicted.
+    pub suspicion_rounds: u32,
+}
+
+impl Default for GossipConfig {
+    fn default() -> Self {
+        GossipConfig { fanout: 8, passive_size: 16, shuffle_every: 2, suspicion_rounds: 2 }
+    }
+}
+
+/// One bounded directed view (active + passive + suspicion state).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DirectedView {
+    /// Peers the owner actively probes and offers to the flow planner.
+    pub active: Vec<NodeId>,
+    /// Known-but-unmonitored fallback peers (promotion pool).
+    pub passive: Vec<NodeId>,
+    /// Failed-probe counts for currently-suspected active peers.
+    pub suspicion: BTreeMap<NodeId, u32>,
+}
+
+impl DirectedView {
+    pub fn contains(&self, n: NodeId) -> bool {
+        self.active.contains(&n)
+    }
+
+    /// Add to the passive pool (FIFO-bounded, no duplicates, never a peer
+    /// already in the active view).
+    pub fn insert_passive(&mut self, n: NodeId, cap: usize) {
+        if cap == 0 || self.active.contains(&n) || self.passive.contains(&n) {
+            return;
+        }
+        if self.passive.len() >= cap {
+            self.passive.remove(0);
+        }
+        self.passive.push(n);
+    }
+
+    /// Remove a peer from every slot of this view.
+    pub fn evict(&mut self, n: NodeId) {
+        self.active.retain(|&m| m != n);
+        self.passive.retain(|&m| m != n);
+        self.suspicion.remove(&n);
+    }
+
+    /// Record a failed probe of `peer`.  Returns `true` when the peer
+    /// crossed the suspicion threshold and was evicted.
+    pub fn record_failure(&mut self, peer: NodeId, threshold: u32) -> bool {
+        let s = self.suspicion.entry(peer).or_insert(0);
+        *s += 1;
+        if *s >= threshold {
+            self.evict(peer);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A probe of `peer` succeeded: clear any suspicion.
+    pub fn record_ok(&mut self, peer: NodeId) {
+        self.suspicion.remove(&peer);
+    }
+
+    /// Promote alive passive members into the active view until it holds
+    /// `cap` peers (or the pool runs dry).
+    pub fn refill(&mut self, cap: usize, alive: &[bool]) {
+        while self.active.len() < cap {
+            let Some(pos) =
+                self.passive.iter().position(|&m| alive.get(m.0).copied().unwrap_or(false))
+            else {
+                break;
+            };
+            let m = self.passive.remove(pos);
+            if !self.active.contains(&m) {
+                self.active.push(m);
+            }
+        }
+    }
+
+    /// Rotate one active slot against a random alive passive member
+    /// (keeps planner candidate sets diverse under stable membership).
+    pub fn shuffle(&mut self, rng: &mut Rng, alive: &[bool]) {
+        if self.active.is_empty() || self.passive.is_empty() {
+            return;
+        }
+        let pi = rng.index(self.passive.len());
+        if !alive.get(self.passive[pi].0).copied().unwrap_or(false) {
+            return;
+        }
+        let ai = rng.index(self.active.len());
+        let demoted = self.active[ai];
+        self.active[ai] = self.passive[pi];
+        self.passive[pi] = demoted;
+        // both parties start clean: the promoted peer is unprobed, the
+        // demoted one is no longer monitored
+        self.suspicion.remove(&demoted);
+        self.suspicion.remove(&self.active[ai]);
+    }
+
+    /// Drop every peer the caller knows to be dead (reconciliation).
+    pub fn drop_dead(&mut self, alive: &[bool]) {
+        self.active.retain(|&m| alive.get(m.0).copied().unwrap_or(false));
+        self.passive.retain(|&m| alive.get(m.0).copied().unwrap_or(false));
+        self.suspicion.retain(|m, _| alive.get(m.0).copied().unwrap_or(false));
+    }
+}
+
+/// A relay's complete overlay state: both directed views plus the
+/// key-ring successor.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NodeViews {
+    /// Next-stage peers (Request Flow / Change targets).
+    pub fwd: DirectedView,
+    /// Previous-stage peers (who can extend my chains towards the head).
+    pub bwd: DirectedView,
+    /// Successor on the XOR key ring over *alive* relays — the
+    /// connectivity anchor: the union of all ring edges is a cycle over
+    /// the alive membership, so the overlay graph can never partition
+    /// even if every gossip-chosen peer is lost (repaired on reconcile,
+    /// the way a Kademlia node re-resolves its own key neighbourhood).
+    pub ring: Option<NodeId>,
+}
+
+impl NodeViews {
+    /// Can the owner see `peer`? (union of both active views + ring)
+    pub fn sees(&self, peer: NodeId) -> bool {
+        self.ring == Some(peer) || self.fwd.contains(peer) || self.bwd.contains(peer)
+    }
+
+    /// Peers offered to the flow planner as this node's neighbor list.
+    pub fn planning_peers(&self) -> Vec<NodeId> {
+        let mut v = Vec::with_capacity(self.fwd.active.len() + self.bwd.active.len() + 1);
+        v.extend_from_slice(&self.fwd.active);
+        v.extend_from_slice(&self.bwd.active);
+        if let Some(r) = self.ring {
+            v.push(r);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alive(n: usize) -> Vec<bool> {
+        vec![true; n]
+    }
+
+    #[test]
+    fn passive_insert_bounded_and_deduped() {
+        let mut v = DirectedView::default();
+        v.active.push(NodeId(1));
+        v.insert_passive(NodeId(1), 3); // already active: rejected
+        assert!(v.passive.is_empty());
+        for i in 2..8 {
+            v.insert_passive(NodeId(i), 3);
+            v.insert_passive(NodeId(i), 3); // dup: rejected
+        }
+        assert_eq!(v.passive.len(), 3, "FIFO-bounded");
+        assert_eq!(v.passive, vec![NodeId(5), NodeId(6), NodeId(7)]);
+    }
+
+    #[test]
+    fn suspicion_then_eviction() {
+        let mut v = DirectedView {
+            active: vec![NodeId(1), NodeId(2)],
+            passive: vec![NodeId(3)],
+            suspicion: BTreeMap::new(),
+        };
+        assert!(!v.record_failure(NodeId(1), 2), "first failure only suspects");
+        assert!(v.contains(NodeId(1)));
+        assert!(v.record_failure(NodeId(1), 2), "second failure evicts");
+        assert!(!v.contains(NodeId(1)));
+        v.refill(2, &alive(4));
+        assert_eq!(v.active, vec![NodeId(2), NodeId(3)], "passive member promoted");
+        assert!(v.passive.is_empty());
+    }
+
+    #[test]
+    fn probe_ok_clears_suspicion() {
+        let mut v = DirectedView { active: vec![NodeId(1)], ..Default::default() };
+        v.record_failure(NodeId(1), 3);
+        v.record_failure(NodeId(1), 3);
+        v.record_ok(NodeId(1));
+        // the counter restarted: two more failures still below threshold 3
+        assert!(!v.record_failure(NodeId(1), 3));
+        assert!(!v.record_failure(NodeId(1), 3));
+        assert!(v.contains(NodeId(1)));
+    }
+
+    #[test]
+    fn refill_skips_dead_passive_members() {
+        let mut v = DirectedView {
+            active: vec![],
+            passive: vec![NodeId(0), NodeId(1), NodeId(2)],
+            suspicion: BTreeMap::new(),
+        };
+        let mut a = alive(3);
+        a[0] = false;
+        v.refill(2, &a);
+        assert_eq!(v.active, vec![NodeId(1), NodeId(2)]);
+        assert_eq!(v.passive, vec![NodeId(0)], "dead member left in the pool");
+    }
+
+    #[test]
+    fn shuffle_swaps_one_slot_and_preserves_bounds() {
+        let mut v = DirectedView {
+            active: vec![NodeId(0), NodeId(1)],
+            passive: vec![NodeId(2), NodeId(3)],
+            suspicion: BTreeMap::new(),
+        };
+        let mut rng = Rng::new(7);
+        let before: Vec<NodeId> =
+            v.active.iter().chain(v.passive.iter()).copied().collect();
+        v.shuffle(&mut rng, &alive(4));
+        assert_eq!(v.active.len(), 2);
+        assert_eq!(v.passive.len(), 2);
+        let mut after: Vec<NodeId> = v.active.iter().chain(v.passive.iter()).copied().collect();
+        let mut want = before.clone();
+        after.sort();
+        want.sort();
+        assert_eq!(after, want, "shuffle permutes, never invents or drops peers");
+    }
+
+    #[test]
+    fn drop_dead_clears_all_slots() {
+        let mut v = DirectedView {
+            active: vec![NodeId(0), NodeId(1)],
+            passive: vec![NodeId(2)],
+            suspicion: [(NodeId(0), 1)].into_iter().collect(),
+        };
+        let mut a = alive(3);
+        a[0] = false;
+        a[2] = false;
+        v.drop_dead(&a);
+        assert_eq!(v.active, vec![NodeId(1)]);
+        assert!(v.passive.is_empty());
+        assert!(v.suspicion.is_empty());
+    }
+
+    #[test]
+    fn node_views_sees_union() {
+        let views = NodeViews {
+            fwd: DirectedView { active: vec![NodeId(1)], ..Default::default() },
+            bwd: DirectedView { active: vec![NodeId(2)], ..Default::default() },
+            ring: Some(NodeId(3)),
+        };
+        for n in 1..=3 {
+            assert!(views.sees(NodeId(n)));
+        }
+        assert!(!views.sees(NodeId(4)));
+        let mut peers = views.planning_peers();
+        peers.sort();
+        assert_eq!(peers, vec![NodeId(1), NodeId(2), NodeId(3)]);
+    }
+}

@@ -2,12 +2,18 @@
 //!
 //! The paper's testbed hosts logical nodes on 5 GPUs and throttles the
 //! links to mimic 10 geographic locations (50–500 Mb/s between regions).
-//! We reproduce that envelope with a deterministic topology generator plus
-//! a Kademlia-style DHT for partial-membership peer discovery
+//! We reproduce that envelope with a deterministic topology generator, a
+//! Kademlia-style DHT for peer discovery, and a gossip-based partial-view
+//! overlay ([`overlay`]/[`gossip`]) that gives every relay a bounded
+//! neighbor list for neighbor-scoped flow planning
 //! (DESIGN.md §Substitutions).
 
 pub mod dht;
+pub mod gossip;
+pub mod overlay;
 pub mod topology;
 
 pub use dht::Dht;
+pub use gossip::{DirectedView, GossipConfig, NodeViews};
+pub use overlay::Overlay;
 pub use topology::{Topology, TopologyConfig};

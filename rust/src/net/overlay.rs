@@ -1,0 +1,497 @@
+//! Gossip-based partial-view overlay: the membership substrate behind
+//! neighbor-scoped flow planning.
+//!
+//! GWTF's §V protocol claims no node needs a global view, yet the seed
+//! planner let every relay scan every chain.  This module supplies the
+//! missing substrate: each relay holds *bounded* directed views over its
+//! adjacent pipeline stages ([`NodeViews`] from [`super::gossip`]),
+//! bootstrapped from the Kademlia
+//! [`RoutingTable`](super::dht::RoutingTable) contacts and maintained by
+//! a SWIM-style probe / suspicion / eviction loop plus a periodic
+//! shuffle.  The flow planner
+//! ([`crate::flow::DecentralizedFlow::set_neighbors`]) then draws
+//! Request Flow / Change / Redirect candidates exclusively from these
+//! views, making a planning round O(chains·k) for view size `k`
+//! (`ScenarioConfig::overlay_fanout`) instead of scanning the global
+//! membership.
+//!
+//! Three liveness paths keep the views honest:
+//!
+//! - **Gossip rounds** run on the engine's continuous clock (the
+//!   `gossip_ticks` of a [`crate::sim::WorldSchedule`], emitted by
+//!   [`crate::sim::sources::GossipCadenceSource`] and delivered through
+//!   `Router::on_gossip`): each alive relay probes one peer per directed
+//!   view; dead peers accumulate suspicion and are evicted after
+//!   [`GossipConfig::suspicion_rounds`] failures, with passive members
+//!   promoted in their place.
+//! - **Crash events** ([`Overlay::on_crash`], fired when churn kills a
+//!   node mid-iteration) immediately expunge the victim's key from every
+//!   DHT routing-table bucket, so overlay bootstrap never hands out dead
+//!   contacts — view eviction still waits for detection, as in a real
+//!   deployment.
+//! - **Reconciliation** ([`Overlay::reconcile`], called by
+//!   `GwtfRouter::{plan,replan}` with the start-of-iteration liveness):
+//!   dead members are dropped everywhere, rejoiners re-bootstrap through
+//!   the DHT, underfull views are repaired from the passive pool and then
+//!   the stage directory (a DHT stage-record lookup, simulated directly
+//!   like the rest of [`super::dht`]), and the XOR key ring over alive
+//!   relays is re-linked.  The ring makes the union of active views
+//!   provably connected after every reconcile — the overlay cannot
+//!   partition the planner.
+//!
+//! With `fanout >= max stage size` every directed view holds its whole
+//! adjacent stage and the overlay reproduces the legacy global-visibility
+//! planner bit for bit (the `k = n-1` parity test in
+//! `rust/tests/overlay.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::cost::NodeId;
+use crate::flow::graph::StageGraph;
+use crate::util::Rng;
+
+use super::dht::Dht;
+use super::gossip::{DirectedView, GossipConfig, NodeViews};
+
+/// The simulated overlay network: per-relay bounded views + the DHT they
+/// bootstrap from.
+#[derive(Debug, Clone)]
+pub struct Overlay {
+    pub cfg: GossipConfig,
+    /// Peer-discovery substrate; crashed peers are evicted from its
+    /// buckets the moment their crash event fires.
+    pub dht: Dht,
+    /// Views of currently-alive relays only.
+    views: BTreeMap<NodeId, NodeViews>,
+    /// Stage directory (the content of the well-known DHT stage records).
+    stages: Vec<Vec<NodeId>>,
+    data_nodes: Vec<NodeId>,
+    relays: Vec<NodeId>,
+    stage_of: BTreeMap<NodeId, usize>,
+    /// Liveness at the last reconcile.
+    alive: Vec<bool>,
+    rng: Rng,
+    /// Gossip rounds run so far (drives the shuffle cadence).
+    pub rounds: u64,
+}
+
+impl Overlay {
+    /// Build the overlay over a stage graph: join everyone to the DHT,
+    /// then seed each relay's directed views from its routing-table
+    /// neighbourhood (XOR-nearest adjacent-stage members).
+    pub fn build(graph: &StageGraph, n_nodes: usize, cfg: GossipConfig, seed: u64) -> Overlay {
+        assert!(cfg.fanout >= 2, "overlay fanout must be at least 2");
+        let data_nodes = graph.data_nodes.clone();
+        let relays: Vec<NodeId> = graph.stages.iter().flatten().copied().collect();
+        let mut stage_of = BTreeMap::new();
+        for (s, members) in graph.stages.iter().enumerate() {
+            for &m in members {
+                stage_of.insert(m, s);
+            }
+        }
+        let mut rng = Rng::new(seed);
+        let mut dht = Dht::new(cfg.fanout.max(4));
+        let mut contact: Option<NodeId> = None;
+        for &n in data_nodes.iter().chain(relays.iter()) {
+            dht.join(n, contact, &mut rng);
+            contact = contact.or(Some(n));
+        }
+        let mut ov = Overlay {
+            cfg,
+            dht,
+            views: BTreeMap::new(),
+            stages: graph.stages.clone(),
+            data_nodes,
+            relays,
+            stage_of,
+            alive: vec![true; n_nodes],
+            rng,
+            rounds: 0,
+        };
+        let all_alive = vec![true; n_nodes];
+        for &r in &ov.relays.clone() {
+            let views = ov.bootstrap_views(r, &all_alive);
+            ov.views.insert(r, views);
+        }
+        ov.relink_ring(&all_alive);
+        ov
+    }
+
+    /// Adjacent-stage member lists for a relay: (previous, next).  Stage-0
+    /// relays have no `bwd` peers and last-stage relays no `fwd` peers —
+    /// both talk to the (always-visible) data nodes instead.
+    fn adjacent(&self, r: NodeId) -> (&[NodeId], &[NodeId]) {
+        let s = self.stage_of[&r];
+        let bwd: &[NodeId] = if s == 0 { &[] } else { &self.stages[s - 1] };
+        let fwd: &[NodeId] =
+            if s + 1 < self.stages.len() { &self.stages[s + 1] } else { &[] };
+        (bwd, fwd)
+    }
+
+    /// Seed one directed view deterministically: XOR-nearest alive
+    /// members first (what an iterative DHT lookup towards the owner's
+    /// key surfaces), active up to `fanout`, the rest passive.
+    fn seeded_view(&self, owner: NodeId, members: &[NodeId], alive: &[bool]) -> DirectedView {
+        let ok = Dht::key_for(owner);
+        let mut sorted: Vec<NodeId> = members
+            .iter()
+            .copied()
+            .filter(|&m| m != owner && alive.get(m.0).copied().unwrap_or(false))
+            .collect();
+        sorted.sort_by_key(|&m| Dht::key_for(m) ^ ok);
+        let active: Vec<NodeId> = sorted.iter().copied().take(self.cfg.fanout).collect();
+        let passive: Vec<NodeId> = sorted
+            .iter()
+            .copied()
+            .skip(self.cfg.fanout)
+            .take(self.cfg.passive_size)
+            .collect();
+        DirectedView { active, passive, suspicion: BTreeMap::new() }
+    }
+
+    fn bootstrap_views(&self, r: NodeId, alive: &[bool]) -> NodeViews {
+        let (bwd, fwd) = self.adjacent(r);
+        let (bwd, fwd) = (bwd.to_vec(), fwd.to_vec());
+        NodeViews {
+            fwd: self.seeded_view(r, &fwd, alive),
+            bwd: self.seeded_view(r, &bwd, alive),
+            ring: None, // relink_ring fills this in
+        }
+    }
+
+    /// Re-link the XOR key ring over alive relays (connectivity anchor).
+    fn relink_ring(&mut self, alive: &[bool]) {
+        let mut ring: Vec<NodeId> = self
+            .relays
+            .iter()
+            .copied()
+            .filter(|&r| alive.get(r.0).copied().unwrap_or(false))
+            .collect();
+        ring.sort_by_key(|&r| Dht::key_for(r));
+        for (i, &r) in ring.iter().enumerate() {
+            let succ = if ring.len() < 2 { None } else { Some(ring[(i + 1) % ring.len()]) };
+            if let Some(v) = self.views.get_mut(&r) {
+                v.ring = succ;
+            }
+        }
+    }
+
+    /// Can `viewer` see `peer`?  Data nodes are persistent, well-known
+    /// anchors (every relay learns them when it joins, §V-B): they are
+    /// always visible as peers, and as viewers they hold effectively full
+    /// membership (every join handshake passes through them), so they see
+    /// everyone.
+    pub fn sees(&self, viewer: NodeId, peer: NodeId) -> bool {
+        if self.data_nodes.contains(&peer) || self.data_nodes.contains(&viewer) {
+            return true;
+        }
+        self.views.get(&viewer).map(|v| v.sees(peer)).unwrap_or(false)
+    }
+
+    /// Per-relay neighbor lists for
+    /// [`crate::flow::DecentralizedFlow::set_neighbors`]: each alive
+    /// relay's planning peers plus the data nodes.
+    pub fn neighbor_map(&self) -> BTreeMap<NodeId, Vec<NodeId>> {
+        let mut map = BTreeMap::new();
+        for (&r, v) in &self.views {
+            let mut peers = v.planning_peers();
+            peers.extend_from_slice(&self.data_nodes);
+            map.insert(r, peers);
+        }
+        map
+    }
+
+    /// Active view of one relay (tests / diagnostics).
+    pub fn views_of(&self, r: NodeId) -> Option<&NodeViews> {
+        self.views.get(&r)
+    }
+
+    /// Was `n` part of the overlay membership at the last reconcile?
+    /// A node unknown to the overlay mid-iteration is a fresh joiner —
+    /// its §V-B join announcement (leader handshake + DHT record) is how
+    /// peers learn of it before any view refresh, so visibility filters
+    /// must exempt it rather than veto it.
+    pub fn knows(&self, n: NodeId) -> bool {
+        self.views.contains_key(&n) || self.data_nodes.contains(&n)
+    }
+
+    pub fn alive_relays(&self) -> Vec<NodeId> {
+        self.relays
+            .iter()
+            .copied()
+            .filter(|&r| self.alive.get(r.0).copied().unwrap_or(false))
+            .collect()
+    }
+
+    /// A churn crash event fired for `node`: expunge its key from every
+    /// routing-table bucket right away (stale-contact fix — bootstrap must
+    /// never hand out dead contacts).  Its entries in other relays' views
+    /// survive until the failure detector or the next reconcile removes
+    /// them, as in a real deployment.
+    pub fn on_crash(&mut self, node: NodeId) {
+        self.dht.leave(node);
+    }
+
+    /// One SWIM round for every alive relay: probe a random active peer
+    /// per directed view against the caller's ground-truth liveness,
+    /// escalate suspicion on failure, promote passive members after
+    /// evictions, and periodically shuffle a slot for view diversity.
+    pub fn gossip_round(&mut self, truth: &[bool]) {
+        self.rounds += 1;
+        let shuffle = self.cfg.shuffle_every > 0 && self.rounds % self.cfg.shuffle_every == 0;
+        for i in 0..self.relays.len() {
+            let r = self.relays[i];
+            if !truth.get(r.0).copied().unwrap_or(false) {
+                continue;
+            }
+            let Some(v) = self.views.get_mut(&r) else { continue };
+            for dir in [&mut v.bwd, &mut v.fwd] {
+                if dir.active.is_empty() {
+                    continue;
+                }
+                let probe = dir.active[self.rng.index(dir.active.len())];
+                if truth.get(probe.0).copied().unwrap_or(false) {
+                    dir.record_ok(probe);
+                    if shuffle {
+                        dir.shuffle(&mut self.rng, truth);
+                    }
+                } else if dir.record_failure(probe, self.cfg.suspicion_rounds) {
+                    dir.refill(self.cfg.fanout, truth);
+                }
+            }
+        }
+    }
+
+    /// Reconcile the overlay with the start-of-iteration liveness (called
+    /// by `GwtfRouter::{plan,replan}`): evict the dead from the DHT and
+    /// every view, re-admit rejoiners through a fresh DHT bootstrap,
+    /// repair underfull active views from the passive pool and then the
+    /// stage directory, and re-link the key ring.
+    pub fn reconcile(&mut self, alive: &[bool]) {
+        self.dht.evict_dead(alive);
+        let relays = self.relays.clone();
+        for &r in &relays {
+            let up = alive.get(r.0).copied().unwrap_or(false);
+            if !up {
+                self.views.remove(&r);
+                continue;
+            }
+            if !self.dht.contains(r) {
+                // Rejoiner: bootstrap from a persistent data node.
+                let contact =
+                    self.data_nodes.first().copied().filter(|&d| self.dht.contains(d));
+                self.dht.join(r, contact, &mut self.rng);
+            }
+            if !self.views.contains_key(&r) {
+                let views = self.bootstrap_views(r, alive);
+                self.views.insert(r, views);
+                continue;
+            }
+            // Existing member: drop dead peers, repair from passive, then
+            // top up from the stage directory (DHT stage-record lookup).
+            let (bwd_members, fwd_members) = {
+                let (b, f) = self.adjacent(r);
+                (b.to_vec(), f.to_vec())
+            };
+            let fanout = self.cfg.fanout;
+            let passive_size = self.cfg.passive_size;
+            let v = self.views.get_mut(&r).expect("view just checked");
+            for (dir, members) in
+                [(&mut v.bwd, &bwd_members), (&mut v.fwd, &fwd_members)]
+            {
+                dir.drop_dead(alive);
+                dir.refill(fanout, alive);
+                if dir.active.len() < fanout || dir.passive.len() < passive_size {
+                    let ok = Dht::key_for(r);
+                    let mut candidates: Vec<NodeId> = members
+                        .iter()
+                        .copied()
+                        .filter(|&m| {
+                            m != r
+                                && alive.get(m.0).copied().unwrap_or(false)
+                                && !dir.active.contains(&m)
+                                && !dir.passive.contains(&m)
+                        })
+                        .collect();
+                    candidates.sort_by_key(|&m| Dht::key_for(m) ^ ok);
+                    for m in candidates {
+                        if dir.active.len() < fanout {
+                            dir.active.push(m);
+                        } else if dir.passive.len() < passive_size {
+                            dir.insert_passive(m, passive_size);
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        self.relink_ring(alive);
+        self.alive = alive.to_vec();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(n_data: usize, per_stage: usize, stages: usize) -> (StageGraph, usize) {
+        let data_nodes: Vec<NodeId> = (0..n_data).map(NodeId).collect();
+        let mut next = n_data;
+        let stages: Vec<Vec<NodeId>> = (0..stages)
+            .map(|_| {
+                (0..per_stage)
+                    .map(|_| {
+                        let id = NodeId(next);
+                        next += 1;
+                        id
+                    })
+                    .collect()
+            })
+            .collect();
+        (StageGraph { stages, data_nodes }, next)
+    }
+
+    fn build(per_stage: usize, fanout: usize, seed: u64) -> (Overlay, usize) {
+        let (g, n) = graph(2, per_stage, 4);
+        (Overlay::build(&g, n, GossipConfig { fanout, ..Default::default() }, seed), n)
+    }
+
+    #[test]
+    fn views_bounded_by_fanout_and_stage_adjacent() {
+        let (ov, _) = build(6, 3, 1);
+        for &r in &ov.relays.clone() {
+            let v = ov.views_of(r).unwrap();
+            assert!(v.fwd.active.len() <= 3);
+            assert!(v.bwd.active.len() <= 3);
+            let s = ov.stage_of[&r];
+            for &m in &v.fwd.active {
+                assert_eq!(ov.stage_of[&m], s + 1, "fwd peers live in the next stage");
+            }
+            for &m in &v.bwd.active {
+                assert_eq!(ov.stage_of[&m], s - 1, "bwd peers live in the previous stage");
+            }
+        }
+    }
+
+    #[test]
+    fn full_fanout_views_cover_whole_adjacent_stages() {
+        let (ov, _) = build(4, 16, 2);
+        for &r in &ov.relays.clone() {
+            let v = ov.views_of(r).unwrap();
+            let s = ov.stage_of[&r];
+            if s + 1 < ov.stages.len() {
+                assert_eq!(v.fwd.active.len(), 4, "fanout >= stage size: full view");
+            }
+            if s > 0 {
+                assert_eq!(v.bwd.active.len(), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn data_nodes_always_visible() {
+        let (ov, _) = build(4, 2, 3);
+        for &r in &ov.relays.clone() {
+            assert!(ov.sees(r, NodeId(0)));
+            assert!(ov.sees(r, NodeId(1)));
+        }
+    }
+
+    #[test]
+    fn ring_links_all_alive_relays() {
+        let (mut ov, n) = build(5, 2, 4);
+        let mut alive = vec![true; n];
+        // kill a third of the relays
+        for &r in ov.relays.clone().iter().step_by(3) {
+            alive[r.0] = false;
+        }
+        ov.reconcile(&alive);
+        let alive_relays = ov.alive_relays();
+        let mut seen = std::collections::BTreeSet::new();
+        let mut cur = alive_relays[0];
+        for _ in 0..alive_relays.len() {
+            seen.insert(cur);
+            cur = ov.views_of(cur).unwrap().ring.expect("ring successor");
+            assert!(alive.get(cur.0).copied().unwrap(), "ring points at a dead relay");
+        }
+        assert_eq!(seen.len(), alive_relays.len(), "ring is a full cycle");
+    }
+
+    #[test]
+    fn crash_evicts_dht_contacts_immediately() {
+        let (mut ov, _) = build(4, 3, 5);
+        let victim = ov.relays[3];
+        assert!(ov.dht.contains(victim));
+        ov.on_crash(victim);
+        assert!(!ov.dht.contains(victim));
+        for &r in &ov.relays.clone() {
+            if r != victim {
+                assert!(
+                    !ov.dht.peers_of(r).contains(&victim),
+                    "stale contact for {victim} lingers at {r}"
+                );
+            }
+        }
+        // views still hold the victim until detection/reconcile
+        let holders = ov
+            .relays
+            .clone()
+            .iter()
+            .filter(|&&r| r != victim && ov.sees(r, victim))
+            .count();
+        assert!(holders > 0, "view eviction must wait for the failure detector");
+    }
+
+    #[test]
+    fn gossip_detects_and_evicts_dead_peer() {
+        let (mut ov, n) = build(4, 16, 6); // full views: everyone monitors everyone adjacent
+        let victim = ov.stages[1][0];
+        let mut truth = vec![true; n];
+        truth[victim.0] = false;
+        // enough rounds for every view to probe the victim past the threshold
+        for _ in 0..64 {
+            ov.gossip_round(&truth);
+        }
+        for &r in &ov.stages[0].clone() {
+            assert!(
+                !ov.views_of(r).unwrap().fwd.contains(victim),
+                "{r} still lists the dead {victim} after suspicion rounds"
+            );
+        }
+    }
+
+    #[test]
+    fn reconcile_readmits_rejoiners() {
+        let (mut ov, n) = build(4, 3, 7);
+        let victim = ov.relays[5];
+        let mut alive = vec![true; n];
+        alive[victim.0] = false;
+        ov.on_crash(victim);
+        ov.reconcile(&alive);
+        assert!(ov.views_of(victim).is_none());
+        assert!(!ov.dht.contains(victim));
+        // rejoin
+        alive[victim.0] = true;
+        ov.reconcile(&alive);
+        assert!(ov.dht.contains(victim), "rejoiner re-bootstraps the DHT");
+        let v = ov.views_of(victim).expect("rejoiner gets fresh views");
+        assert!(!v.fwd.active.is_empty() || !v.bwd.active.is_empty());
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let (mut a, n) = build(5, 3, 9);
+        let (mut b, _) = build(5, 3, 9);
+        assert_eq!(a.neighbor_map(), b.neighbor_map());
+        let mut alive = vec![true; n];
+        alive[a.relays[2].0] = false;
+        for _ in 0..5 {
+            a.gossip_round(&alive);
+            b.gossip_round(&alive);
+        }
+        a.reconcile(&alive);
+        b.reconcile(&alive);
+        assert_eq!(a.neighbor_map(), b.neighbor_map());
+    }
+}

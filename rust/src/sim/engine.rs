@@ -103,6 +103,11 @@ pub struct WorldSchedule {
     /// barrier has elapsed; its stage redoes that fraction of its weight
     /// exchange among the survivors.
     pub agg_crashes: Vec<(NodeId, f64)>,
+    /// Virtual instants at which the gossip overlay runs one protocol
+    /// round (probe / suspicion / shuffle), delivered to the router via
+    /// [`crate::sim::training::Router::on_gossip`] so failure detection
+    /// interleaves with churn and jitter on the same timeline.
+    pub gossip_ticks: Vec<Time>,
 }
 
 impl WorldSchedule {
@@ -114,6 +119,7 @@ impl WorldSchedule {
         self.jitter.extend(other.jitter);
         self.slowdowns.extend(other.slowdowns);
         self.agg_crashes.extend(other.agg_crashes);
+        self.gossip_ticks.extend(other.gossip_ticks);
     }
 
     pub fn is_empty(&self) -> bool {
@@ -123,6 +129,7 @@ impl WorldSchedule {
             && self.jitter.is_empty()
             && self.slowdowns.is_empty()
             && self.agg_crashes.is_empty()
+            && self.gossip_ticks.is_empty()
     }
 }
 
@@ -141,6 +148,8 @@ pub trait EventSource {
 pub(crate) enum WorldEvent {
     Crash(NodeId),
     Join(NodeId),
+    /// One gossip-overlay protocol round (Router::on_gossip).
+    Gossip,
 }
 
 /// Everything the engine dispatches: microbatch progress or world events.
@@ -182,12 +191,21 @@ impl Engine {
     }
 
     /// Build from a scenario (clones its topology, config and churn).
+    /// Overlay scenarios (`ScenarioConfig::overlay_fanout`) get the
+    /// gossip cadence source so failure detection runs on the same
+    /// continuous clock as churn and jitter.
     pub fn from_scenario(sc: &Scenario, seed: u64) -> Engine {
-        Engine::new(
+        let mut engine = Engine::new(
             TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone()),
             sc.churn.clone(),
             seed,
-        )
+        );
+        if sc.cfg.overlay_fanout.is_some() {
+            engine.add_source(Box::new(super::sources::GossipCadenceSource::new(
+                super::scenario::GOSSIP_PERIOD_S,
+            )));
+        }
+        engine
     }
 
     pub fn add_source(&mut self, source: Box<dyn EventSource>) {
@@ -326,6 +344,9 @@ impl TrainingSim {
         for &(node, t) in &sched.joins {
             q.schedule(t.max(0.0), Ev::World(WorldEvent::Join(node)));
         }
+        for &t in &sched.gossip_ticks {
+            q.schedule(t.max(0.0), Ev::World(WorldEvent::Gossip));
+        }
         // Data nodes send out all their microbatches at t=0 (transfer to hop 0).
         for (mi, mb) in mbs.iter().enumerate() {
             let d = mb.path.source;
@@ -344,6 +365,10 @@ impl TrainingSim {
                     continue;
                 }
                 Ev::World(WorldEvent::Join(_)) => continue,
+                Ev::World(WorldEvent::Gossip) => {
+                    router.on_gossip(t);
+                    continue;
+                }
                 Ev::Micro(mi, phase) => (mi, phase),
             };
             if mbs[mi].dropped {
@@ -442,6 +467,7 @@ mod tests {
             jitter: vec![JitterWindow { from: 0.0, until: 1.0, factor: 1.5 }],
             slowdowns: vec![Slowdown { node: NodeId(3), from: 0.0, until: 9.0, factor: 2.0 }],
             agg_crashes: vec![(NodeId(6), 0.2)],
+            gossip_ticks: vec![4.5, 9.0],
         });
         assert_eq!(a.crashes.len(), 2);
         assert_eq!(a.rejoins, vec![NodeId(4)]);
@@ -449,6 +475,7 @@ mod tests {
         assert_eq!(a.jitter.len(), 1);
         assert_eq!(a.slowdowns.len(), 1);
         assert_eq!(a.agg_crashes.len(), 1);
+        assert_eq!(a.gossip_ticks, vec![4.5, 9.0]);
         assert!(!a.is_empty());
         assert!(WorldSchedule::default().is_empty());
     }

@@ -40,6 +40,13 @@ pub struct ScenarioConfig {
     pub churn_model: ChurnModel,
     /// Base forward compute per microbatch at a relay stage, seconds.
     pub base_compute_s: f64,
+    /// Gossip-overlay view size per adjacent stage (`k` in the planner's
+    /// O(chains·k) bound).  `Some(k)` attaches a
+    /// [`crate::net::Overlay`] to the GWTF router and a
+    /// [`super::sources::GossipCadenceSource`] to the engine; `None`
+    /// keeps the legacy global-visibility planner (the paper-table
+    /// scenarios, bit-for-bit stable).
+    pub overlay_fanout: Option<usize>,
     pub seed: u64,
 }
 
@@ -56,6 +63,7 @@ impl ScenarioConfig {
             churn_p,
             churn_model: ChurnModel::Bernoulli,
             base_compute_s: 8.0,
+            overlay_fanout: None,
             seed,
         }
     }
@@ -83,10 +91,38 @@ impl ScenarioConfig {
             churn_p: 0.0,
             churn_model: ChurnModel::Bernoulli,
             base_compute_s: 8.0,
+            overlay_fanout: None,
+            seed,
+        }
+    }
+
+    /// Scale setting (`gwtf bench scale`): `n_relays` relays over 6
+    /// stages in 10 regions, 2 persistent data nodes pushing 8
+    /// microbatches each, homogeneous caps, continuous-clock Poisson
+    /// churn, and the gossip overlay at the default fanout — Table II's
+    /// shape pushed to the 100+ relay regime the overlay exists for.
+    pub fn scale(n_relays: usize, churn_p: f64, seed: u64) -> Self {
+        ScenarioConfig {
+            family: Family::Llama,
+            n_data: 2,
+            n_relays,
+            n_stages: 6,
+            microbatches_per_data: 8,
+            homogeneous: true,
+            churn_p,
+            churn_model: ChurnModel::Poisson,
+            base_compute_s: 8.0,
+            overlay_fanout: Some(DEFAULT_OVERLAY_FANOUT),
             seed,
         }
     }
 }
+
+/// Default gossip-overlay view size per adjacent stage (`k`).
+pub const DEFAULT_OVERLAY_FANOUT: usize = 8;
+
+/// Virtual seconds between gossip-overlay protocol rounds.
+pub const GOSSIP_PERIOD_S: f64 = 30.0;
 
 /// Fully-instantiated scenario.
 pub struct Scenario {
@@ -242,6 +278,24 @@ mod tests {
         // changes churn sampling.
         assert_eq!(bern.prob.cap, pois.prob.cap);
         assert_eq!(bern.topo.region, pois.topo.region);
+    }
+
+    #[test]
+    fn scale_shape_overlay_knob_and_gossip_cadence() {
+        let s = build(&ScenarioConfig::scale(100, 0.2, 8));
+        assert_eq!(s.relays.len(), 100);
+        assert_eq!(s.data_nodes.len(), 2);
+        assert_eq!(s.cfg.overlay_fanout, Some(DEFAULT_OVERLAY_FANOUT));
+        assert_eq!(s.cfg.churn_model, ChurnModel::Poisson);
+        let sizes: Vec<usize> = s.prob.graph.stages.iter().map(|v| v.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+        assert!(sizes.iter().all(|&n| n >= 16), "{sizes:?}");
+        // overlay scenarios drive the failure detector from the engine
+        // clock; legacy scenarios must not grow a source (bit-for-bit
+        // guarantees depend on it)
+        assert_eq!(s.engine(1).sources.len(), 1);
+        let legacy = build(&ScenarioConfig::table2(true, 0.1, 8));
+        assert!(legacy.engine(1).sources.is_empty());
     }
 
     #[test]

@@ -134,6 +134,39 @@ impl EventSource for MidAggCrashSource {
     }
 }
 
+/// Periodic gossip-overlay protocol rounds on the continuous clock: one
+/// `gossip_ticks` entry every `period_s` of virtual time, covering the
+/// same 4x-horizon span as the other sources so failure detection keeps
+/// running while straggling microbatches drain.  The engine delivers each
+/// tick to the router (`Router::on_gossip`), where the overlay probes
+/// peers, escalates suspicion and repairs views — interleaved with
+/// churn crashes and jitter on one timeline.  Stateless and identical
+/// every iteration, so it perturbs no RNG stream.
+pub struct GossipCadenceSource {
+    pub period_s: f64,
+}
+
+impl GossipCadenceSource {
+    pub fn new(period_s: f64) -> Self {
+        assert!(period_s > 0.0, "gossip period must be positive");
+        GossipCadenceSource { period_s }
+    }
+}
+
+impl EventSource for GossipCadenceSource {
+    fn name(&self) -> &str {
+        "gossip-cadence"
+    }
+
+    fn sample(&mut self, _iter: usize, horizon: Time) -> WorldSchedule {
+        let span = horizon * SPAN_FACTOR;
+        let n_ticks = ((span / self.period_s).ceil() as usize).clamp(1, 4096);
+        let gossip_ticks: Vec<Time> =
+            (1..=n_ticks).map(|k| k as f64 * self.period_s).collect();
+        WorldSchedule { gossip_ticks, ..Default::default() }
+    }
+}
+
 /// A node joining mid-iteration (§V-B): invisible to the planner this
 /// iteration, but crash recovery can route onto it from its join instant,
 /// and it is full membership from the next iteration on.
@@ -205,6 +238,20 @@ mod tests {
         assert_eq!(sched.slowdowns.len(), 10);
         for s in &sched.slowdowns {
             assert!((2.0..=3.0).contains(&s.factor));
+        }
+    }
+
+    #[test]
+    fn gossip_cadence_tiles_the_span_every_iteration() {
+        let mut s = GossipCadenceSource::new(25.0);
+        for iter in 0..3 {
+            let sched = s.sample(iter, 100.0);
+            assert_eq!(sched.gossip_ticks.len(), 16, "4x span / 25s period");
+            for (k, &t) in sched.gossip_ticks.iter().enumerate() {
+                assert!((t - (k + 1) as f64 * 25.0).abs() < 1e-9);
+            }
+            assert!(!sched.is_empty());
+            assert!(sched.crashes.is_empty() && sched.joins.is_empty());
         }
     }
 

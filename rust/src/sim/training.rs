@@ -77,6 +77,15 @@ pub trait Router {
     /// Notify of a mid-iteration crash so internal state can adapt.
     fn on_crash(&mut self, node: NodeId);
 
+    /// A gossip-overlay round fires at virtual time `t`
+    /// (`WorldSchedule::gossip_ticks`, emitted by
+    /// [`crate::sim::sources::GossipCadenceSource`]): probe peers,
+    /// escalate suspicion, repair views.  Routers without an overlay
+    /// ignore it.
+    fn on_gossip(&mut self, t: Time) {
+        let _ = t;
+    }
+
     /// Choose a replacement relay at `stage` for a flow `prev -> X -> next`
     /// whose X crashed. `candidates` are alive nodes with a free slot.
     fn choose_replacement(

@@ -1,0 +1,267 @@
+//! Integration tests for the gossip-based partial-view overlay (ISSUE 3):
+//!
+//! - **Parity**: with fanout >= n-1 every directed view covers its whole
+//!   adjacent stage, and neighbor-scoped planning must reproduce the
+//!   pre-overlay global-scan planner *bit for bit* — identical paths,
+//!   identical protocol rounds, identical Eq. 2 cost bits, both for cold
+//!   plans and warm replans, and end-to-end through the engine under
+//!   churn.
+//! - **Connectivity**: the union of active views (fwd + bwd + key ring)
+//!   over alive relays stays connected across Poisson churn and
+//!   reconciliation — the ring repair makes this a hard invariant, not a
+//!   probabilistic one.
+//! - **Determinism**: same seeds, same churn stream => byte-identical
+//!   neighbor maps.
+//! - **Scan bound** (acceptance): with the default fanout, Request
+//!   Change examines at most k·chains candidate pairs per round.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use gwtf::coordinator::GwtfRouter;
+use gwtf::cost::NodeId;
+use gwtf::flow::decentralized::DecentralizedFlow;
+use gwtf::flow::FlowParams;
+use gwtf::net::{GossipConfig, Overlay};
+use gwtf::sim::scenario::{build, ScenarioConfig, DEFAULT_OVERLAY_FANOUT};
+use gwtf::sim::training::Router;
+use gwtf::sim::{ChurnModel, ChurnProcess, Engine, EventSource};
+
+/// A GwtfRouter over `sc` with a full-fanout overlay attached (fanout =
+/// total node count >= any stage size => global views).
+fn full_overlay_router(sc: &gwtf::sim::scenario::Scenario, seed: u64) -> GwtfRouter {
+    let mut r = GwtfRouter::from_scenario(sc, FlowParams::default(), seed);
+    r.attach_overlay(Overlay::build(
+        &sc.prob.graph,
+        sc.topo.n(),
+        GossipConfig { fanout: sc.topo.n(), ..Default::default() },
+        0xFA11,
+    ));
+    r
+}
+
+#[test]
+fn parity_full_fanout_matches_global_planner_bitwise() {
+    let sc = build(&ScenarioConfig::table2(true, 0.0, 77));
+    let n = sc.topo.n();
+    let mut base = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
+    let mut full = full_overlay_router(&sc, 7);
+
+    let mut alive = vec![true; n];
+    let (pa, _) = base.plan(&alive);
+    let (pb, _) = full.plan(&alive);
+    assert_eq!(pa, pb, "cold plans diverge");
+    assert_eq!(base.last_rounds, full.last_rounds, "cold-plan protocol rounds diverge");
+    assert_eq!(base.last_cost.to_bits(), full.last_cost.to_bits(), "Eq. 2 cost bits diverge");
+
+    // crash a routed relay -> warm replan
+    let victim = pa[0].relays[1];
+    alive[victim.0] = false;
+    let (ra, _) = base.replan(&alive, &[victim]);
+    let (rb, _) = full.replan(&alive, &[victim]);
+    assert_eq!(ra, rb, "warm replans diverge after a crash");
+    assert_eq!(base.last_rounds, full.last_rounds);
+    assert_eq!(base.last_cost.to_bits(), full.last_cost.to_bits());
+
+    // rejoin -> another warm replan (overlay re-admits the relay)
+    alive[victim.0] = true;
+    let (ja, _) = base.replan(&alive, &[]);
+    let (jb, _) = full.replan(&alive, &[]);
+    assert_eq!(ja, jb, "warm replans diverge after a rejoin");
+    assert_eq!(base.last_cost.to_bits(), full.last_cost.to_bits());
+}
+
+#[test]
+fn parity_full_fanout_engine_run_under_churn_bitwise() {
+    // End-to-end: same engine seed, Bernoulli 20% churn, warm replans;
+    // the full-fanout overlay router must move not a single metric bit
+    // relative to the pre-overlay planner (mid-iteration recovery and
+    // crash events included).
+    let run = |with_overlay: bool| {
+        let sc = build(&ScenarioConfig::table2(true, 0.2, 91));
+        let mut router = if with_overlay {
+            full_overlay_router(&sc, 13)
+        } else {
+            GwtfRouter::from_scenario(&sc, FlowParams::default(), 13)
+        };
+        let mut engine = Engine::from_scenario(&sc, 29);
+        engine.warm_replan = true;
+        (0..5)
+            .map(|_| engine.step(&sc.prob, &mut router))
+            .map(|m| {
+                (
+                    m.completed,
+                    m.dropped,
+                    m.fwd_recoveries,
+                    m.bwd_recoveries,
+                    m.replan_rounds,
+                    m.makespan_s.to_bits(),
+                    m.comm_s.to_bits(),
+                    m.wasted_gpu_s.to_bits(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(false), run(true), "k = n-1 overlay must be invisible in the metrics");
+}
+
+/// Undirected overlay graph over alive relays; true iff connected.
+fn overlay_connected(ov: &Overlay) -> bool {
+    let alive = ov.alive_relays();
+    if alive.len() <= 1 {
+        return true;
+    }
+    let mut adj: BTreeMap<NodeId, BTreeSet<NodeId>> = BTreeMap::new();
+    for &r in &alive {
+        let v = ov.views_of(r).expect("alive relay has views");
+        for p in v.planning_peers() {
+            if alive.contains(&p) {
+                adj.entry(r).or_default().insert(p);
+                adj.entry(p).or_default().insert(r);
+            }
+        }
+    }
+    let mut seen = BTreeSet::new();
+    let mut stack = vec![alive[0]];
+    while let Some(x) = stack.pop() {
+        if !seen.insert(x) {
+            continue;
+        }
+        if let Some(ns) = adj.get(&x) {
+            stack.extend(ns.iter().copied().filter(|m| !seen.contains(m)));
+        }
+    }
+    seen.len() == alive.len()
+}
+
+#[test]
+fn prop_active_view_union_stays_connected_under_poisson_churn() {
+    for seed in 0..8u64 {
+        let cfg = ScenarioConfig::scale(48, 0.3, 100 + seed);
+        let sc = build(&cfg);
+        let n = sc.topo.n();
+        let mut ov = Overlay::build(
+            &sc.prob.graph,
+            n,
+            GossipConfig { fanout: 4, ..Default::default() },
+            seed ^ 0xC0,
+        );
+        let mut churn =
+            ChurnProcess::with_model(ChurnModel::Poisson, n, sc.relays.clone(), 0.3, seed);
+        for iter in 0..12 {
+            let sched = EventSource::sample(&mut churn, iter, 240.0);
+            // mid-iteration: detector rounds run against the live truth
+            for _ in 0..4 {
+                ov.gossip_round(&churn.alive);
+            }
+            // engine applies mid-iteration joins after the iteration
+            for &(node, _) in &sched.joins {
+                churn.alive[node.0] = true;
+            }
+            // next plan reconciles the overlay with the new liveness
+            ov.reconcile(&churn.alive);
+
+            assert!(
+                overlay_connected(&ov),
+                "seed {seed} iter {iter}: overlay partitioned ({} alive)",
+                ov.alive_relays().len()
+            );
+            for &r in &ov.alive_relays() {
+                let v = ov.views_of(r).unwrap();
+                assert!(v.fwd.active.len() <= 4, "fwd view exceeds fanout");
+                assert!(v.bwd.active.len() <= 4, "bwd view exceeds fanout");
+                for p in v.planning_peers() {
+                    assert!(
+                        churn.alive[p.0],
+                        "seed {seed} iter {iter}: {r} still sees dead {p} after reconcile"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_overlay_views_deterministic_per_seed() {
+    for seed in 0..6u64 {
+        let run = || {
+            let cfg = ScenarioConfig::scale(36, 0.4, 50 + seed);
+            let sc = build(&cfg);
+            let n = sc.topo.n();
+            let mut ov = Overlay::build(
+                &sc.prob.graph,
+                n,
+                GossipConfig { fanout: 5, ..Default::default() },
+                seed ^ 0xD5,
+            );
+            let mut churn =
+                ChurnProcess::with_model(ChurnModel::Poisson, n, sc.relays.clone(), 0.4, seed);
+            let mut maps = Vec::new();
+            for iter in 0..8 {
+                let sched = EventSource::sample(&mut churn, iter, 240.0);
+                for _ in 0..3 {
+                    ov.gossip_round(&churn.alive);
+                }
+                for &(node, _) in &sched.joins {
+                    churn.alive[node.0] = true;
+                }
+                ov.reconcile(&churn.alive);
+                maps.push(ov.neighbor_map());
+            }
+            maps
+        };
+        assert_eq!(run(), run(), "seed {seed}: neighbor maps diverged across runs");
+    }
+}
+
+#[test]
+fn acceptance_change_scans_bounded_by_fanout_times_chains() {
+    // 100 relays at the default fanout: every round's Request Change
+    // candidate scans stay within k·chains (the O(chains·k) bound).
+    let cfg = ScenarioConfig::scale(100, 0.0, 3);
+    let sc = build(&cfg);
+    let ov = Overlay::build(
+        &sc.prob.graph,
+        sc.topo.n(),
+        GossipConfig { fanout: DEFAULT_OVERLAY_FANOUT, ..Default::default() },
+        0xB0B,
+    );
+    let mut flow = DecentralizedFlow::new(&sc.prob, FlowParams::default(), 3);
+    flow.set_neighbors(ov.neighbor_map());
+    let stats = flow.run(120, 8);
+    assert!(flow.complete_flows() > 0, "overlay-scoped planning must route flows");
+    let k = DEFAULT_OVERLAY_FANOUT;
+    for s in &stats {
+        assert!(
+            s.change_scans <= k * s.chains.max(1),
+            "round {}: {} change scans > k·chains = {}·{}",
+            s.round,
+            s.change_scans,
+            k,
+            s.chains
+        );
+    }
+    // neighbor lists themselves are bounded: 2 directed views + ring +
+    // the always-visible data nodes
+    let bound = 2 * k + 1 + sc.data_nodes.len();
+    for (r, peers) in ov.neighbor_map() {
+        assert!(peers.len() <= bound, "{r}: {} peers > {bound}", peers.len());
+    }
+}
+
+#[test]
+fn overlay_router_routes_under_partial_views_at_scale() {
+    // Sanity beyond the bound: a genuinely partial view (fanout 8 over
+    // ~17-relay stages) still routes the demand through the engine.
+    let cfg = ScenarioConfig::scale(100, 0.0, 19);
+    let sc = build(&cfg);
+    let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 19);
+    let mut engine = sc.engine(19 ^ 0x1);
+    engine.warm_replan = true;
+    let mut completed = 0;
+    for _ in 0..2 {
+        completed += engine.step(&sc.prob, &mut router).completed;
+    }
+    assert!(completed > 0, "no microbatch completed at 100 relays");
+    let rounds = router.last_plan_rounds();
+    assert!(rounds > 0, "flow protocol must report its rounds");
+}

@@ -1,0 +1,96 @@
+//! Test-sized scale bench + planner-round regression gate (ISSUE 3).
+//!
+//! Runs the 100/200-relay overlay scenario with tiny rep/iteration
+//! counts, records planner wall time and protocol rounds, and maintains
+//! the `test_sized` profile of `BENCH_scale.json` at the repo root:
+//!
+//! - When the committed profile is `null` (first run on a fresh
+//!   machine), the measurement is captured and written — **commit the
+//!   updated `BENCH_scale.json`** to arm the gate (the `arm-baselines`
+//!   CI job does this automatically on `main`).
+//! - When a baseline exists, the 100-relay GWTF planner rounds must stay
+//!   within 2x of it.  Rounds are deterministic per seed, so the gate is
+//!   stable across machines up to libm-level annealer differences —
+//!   hence the 2x headroom (wall time is recorded but never gated; CI
+//!   machines vary).
+//! - `GWTF_UPDATE_SCALE_BASELINE=1` re-captures after an intentional
+//!   planner change.
+//!
+//! The full-size sweep is `cargo bench --bench scale_bench` /
+//! `gwtf bench scale`, which fills the `full` profile of the same file.
+
+use gwtf::experiments::{
+    read_scale_profile, run_scale, scale_json_path, update_scale_json, ScaleOpts,
+};
+
+fn opts() -> ScaleOpts {
+    ScaleOpts {
+        sizes: vec![100, 200],
+        reps: 1,
+        iters_per_rep: 2,
+        seed: 7,
+        churn_p: 0.2,
+        dtfm_generations: 10,
+    }
+}
+
+#[test]
+fn scale_completes_at_100_and_200_relays_and_gates_planner_rounds() {
+    let (table, report) = run_scale(&opts()).unwrap();
+
+    // Acceptance: completes at 100 and 200 relays under 20% Poisson
+    // churn, all three systems produce cells, GWTF reports its rounds.
+    for &n in &[100usize, 200] {
+        let row = format!("scale {n}");
+        for col in ["gwtf", "swarm", "dtfm"] {
+            assert!(
+                table.cells.contains_key(&(row.clone(), col.to_string())),
+                "missing cell {row}/{col}"
+            );
+        }
+        let g = report.case(n, "gwtf").expect("gwtf case");
+        assert!(g.throughput_total > 0.0, "{n}-relay overlay run routed nothing");
+        assert!(g.plan_rounds_total > 0, "{n}-relay planner reported no rounds");
+        assert_eq!(g.plan_calls, 2, "one (re)plan per iteration");
+    }
+
+    let path = scale_json_path();
+    let update = std::env::var("GWTF_UPDATE_SCALE_BASELINE").is_ok();
+    match (update, read_scale_profile(&path, "test_sized")) {
+        (false, Some(baseline)) => {
+            let base = baseline.case(100, "gwtf").expect("baseline 100-relay gwtf case");
+            let fresh = report.case(100, "gwtf").unwrap();
+            assert!(
+                fresh.plan_rounds_total <= 2 * base.plan_rounds_total,
+                "100-relay planner rounds regressed >2x: {} vs baseline {} \
+                 (GWTF_UPDATE_SCALE_BASELINE=1 to re-baseline intentionally)",
+                fresh.plan_rounds_total,
+                base.plan_rounds_total
+            );
+            assert!(
+                fresh.cold_rounds <= 2 * base.cold_rounds,
+                "100-relay cold-plan convergence regressed >2x: {} vs baseline {}",
+                fresh.cold_rounds,
+                base.cold_rounds
+            );
+        }
+        (update, _) => {
+            update_scale_json(&path, "test_sized", &report).unwrap();
+            let where_ = if std::env::var("GITHUB_ACTIONS").is_ok() {
+                "NOTE: on a CI runner the capture is discarded with the checkout \
+                 unless the arm-baselines job commits it"
+            } else {
+                "commit BENCH_scale.json to arm the regression gate"
+            };
+            eprintln!(
+                "scale baseline {} at {} — {where_}",
+                if update {
+                    "re-captured (GWTF_UPDATE_SCALE_BASELINE)"
+                } else {
+                    "was null/missing; captured"
+                },
+                path.display()
+            );
+        }
+    }
+}
