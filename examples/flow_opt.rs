@@ -12,7 +12,7 @@ use gwtf::baselines::{CostFn, SwarmRouter};
 use gwtf::flow::decentralized::{DecentralizedFlow, FlowParams};
 use gwtf::flow::graph::random_problem;
 use gwtf::flow::mcmf::mcmf_min_cost;
-use gwtf::sim::training::Router;
+use gwtf::sim::training::BlockingPlanner;
 use gwtf::util::Rng;
 
 fn main() {
@@ -60,7 +60,7 @@ fn main() {
     let mut swarm = SwarmRouter::from_problem(&prob, cost, seed);
     swarm.ignore_capacity = false;
     let alive = vec![true; prob.cap.len()];
-    let (paths, _) = swarm.plan(&alive);
+    let (paths, _) = swarm.plan_once(&alive);
     let swarm_avg = swarm.total_cost(&paths) / paths.len().max(1) as f64;
 
     // Exact optimum (requires global knowledge).

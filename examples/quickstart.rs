@@ -13,7 +13,7 @@ use gwtf::coordinator::GwtfRouter;
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::flow::FlowParams;
 use gwtf::sim::scenario::{build, ScenarioConfig};
-use gwtf::sim::training::{Router, TrainingSim};
+use gwtf::sim::training::TrainingSim;
 use gwtf::util::Rng;
 
 fn main() {

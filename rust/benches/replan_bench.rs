@@ -11,7 +11,6 @@ use gwtf::coordinator::GwtfRouter;
 use gwtf::cost::NodeId;
 use gwtf::flow::FlowParams;
 use gwtf::sim::scenario::{build, ScenarioConfig};
-use gwtf::sim::training::Router;
 use gwtf::util::bench::{bench, black_box};
 
 fn main() {

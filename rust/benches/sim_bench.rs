@@ -9,7 +9,7 @@ use gwtf::baselines::{DtfmRouter, GaParams, SwarmRouter};
 use gwtf::coordinator::GwtfRouter;
 use gwtf::flow::FlowParams;
 use gwtf::sim::scenario::{build, ScenarioConfig};
-use gwtf::sim::training::{Router, TrainingSim};
+use gwtf::sim::training::{BlockingPlanner, TrainingSim};
 use gwtf::util::bench::{bench, black_box};
 use gwtf::util::Rng;
 
@@ -62,7 +62,7 @@ fn main() {
         );
         let alive = vec![true; sc.topo.n()];
         results.push(bench("plan/swarm greedy", budget, || {
-            black_box(router.plan(&alive));
+            black_box(router.plan_once(&alive));
         }));
     }
     {
@@ -81,7 +81,7 @@ fn main() {
                 n,
             );
             let alive = vec![true; sc6.topo.n()];
-            black_box(router.plan(&alive));
+            black_box(router.plan_once(&alive));
         }));
     }
 

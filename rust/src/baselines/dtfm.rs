@@ -14,9 +14,11 @@
 //! boundary hops), which the GA minimizes through tournament selection,
 //! order crossover (OX1), and swap mutation.
 
+use std::sync::Arc;
+
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, StageGraph};
-use crate::sim::training::{RecoveryPolicy, Router};
+use crate::sim::training::{BlockingPlanner, RecoveryPolicy};
 use crate::util::Rng;
 
 use super::CostFn;
@@ -49,9 +51,14 @@ pub struct Arrangement {
     pub compute_s: f64,
 }
 
-/// GA-based arrangement optimizer + static GPipe router.
+/// GA-based arrangement optimizer + static GPipe router.  A single-shot
+/// planner ([`BlockingPlanner`]): the GA has no incremental or
+/// round-based mode — wrap in a
+/// [`crate::sim::training::BlockingPlanAdapter`] to plug into the
+/// engine's plan lifecycle (one commit per request, the paper's point
+/// about the GA being expensive under churn).
 pub struct DtfmRouter {
-    pub graph: StageGraph,
+    pub graph: Arc<StageGraph>,
     pub demand: Vec<usize>,
     pub cost: CostFn,
     pub params: GaParams,
@@ -61,7 +68,13 @@ pub struct DtfmRouter {
 }
 
 impl DtfmRouter {
-    pub fn new(graph: StageGraph, demand: Vec<usize>, cost: CostFn, params: GaParams, seed: u64) -> Self {
+    pub fn new(
+        graph: Arc<StageGraph>,
+        demand: Vec<usize>,
+        cost: CostFn,
+        params: GaParams,
+        seed: u64,
+    ) -> Self {
         DtfmRouter { graph, demand, cost, params, assignment: None, rng: Rng::new(seed) }
     }
 
@@ -218,14 +231,15 @@ impl DtfmRouter {
     }
 }
 
-impl Router for DtfmRouter {
+impl BlockingPlanner for DtfmRouter {
     fn name(&self) -> String {
         "dtfm".into()
     }
 
-    fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
-        // Arrangement computed once (DT-FM ignores churn); re-planning only
-        // if the cached arrangement references dead nodes.
+    /// Arrangement computed once (DT-FM ignores churn); the GA re-runs
+    /// from scratch only when the cached arrangement references a dead
+    /// node — there is no incremental path.
+    fn plan_once(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
         let needs_replan = match &self.assignment {
             None => true,
             Some(a) => a
@@ -254,23 +268,12 @@ impl Router for DtfmRouter {
         (paths, planning_s)
     }
 
-    /// DT-FM recomputes the GA arrangement from scratch whenever its
-    /// cached pipelines reference a dead node ([`plan`](Router::plan)
-    /// already implements that cache-or-recompute logic); there is no
-    /// incremental path — the paper's point about the GA being expensive
-    /// under churn.
-    fn replan(&mut self, alive: &[bool], _dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
-        self.plan(alive)
-    }
-
     fn on_crash(&mut self, _node: NodeId) {}
 
     fn choose_replacement(
         &mut self,
         prev: NodeId,
         next: NodeId,
-        _stage: usize,
-        _sink: NodeId,
         candidates: &[NodeId],
     ) -> Option<NodeId> {
         candidates
@@ -293,7 +296,6 @@ impl Router for DtfmRouter {
 mod tests {
     use super::*;
     use crate::flow::graph::random_problem;
-    use std::sync::Arc;
 
     fn setup(seed: u64, sources: usize, relays: usize, stages: usize) -> DtfmRouter {
         let mut rng = Rng::new(seed);
@@ -339,10 +341,10 @@ mod tests {
     fn plan_charges_ga_time_once() {
         let mut r = setup(3, 2, 16, 4);
         let alive = vec![true; 18];
-        let (paths, t1) = r.plan(&alive);
+        let (paths, t1) = r.plan_once(&alive);
         assert_eq!(paths.len(), 8, "2 data nodes x 4 microbatches");
         assert!(t1 > 0.0);
-        let (_, t2) = r.plan(&alive);
+        let (_, t2) = r.plan_once(&alive);
         assert_eq!(t2, 0.0, "cached arrangement re-used");
     }
 
@@ -350,10 +352,10 @@ mod tests {
     fn dead_node_triggers_replan() {
         let mut r = setup(4, 2, 16, 4);
         let mut alive = vec![true; 18];
-        let (paths, _) = r.plan(&alive);
+        let (paths, _) = r.plan_once(&alive);
         let victim = paths[0].relays[0];
         alive[victim.0] = false;
-        let (paths2, t2) = r.plan(&alive);
+        let (paths2, t2) = r.plan_once(&alive);
         assert!(t2 > 0.0, "replan charged");
         for p in &paths2 {
             assert!(!p.relays.contains(&victim));
@@ -364,7 +366,7 @@ mod tests {
     fn too_few_nodes_yields_empty_plan() {
         let mut r = setup(5, 3, 6, 6); // 1 node/stage but 3 pipelines needed
         let alive = vec![true; 9];
-        let (paths, _) = r.plan(&alive);
+        let (paths, _) = r.plan_once(&alive);
         assert!(paths.is_empty());
     }
 

@@ -224,7 +224,10 @@ impl JoinExperiment {
 
     /// Snapshot the current system as a [`FlowProblem`] (placed nodes only).
     pub fn problem(&self) -> FlowProblem {
-        let graph = StageGraph { stages: self.stages.clone(), data_nodes: vec![NodeId(0)] };
+        let graph = std::sync::Arc::new(StageGraph {
+            stages: self.stages.clone(),
+            data_nodes: vec![NodeId(0)],
+        });
         let costs = self.costs.clone();
         FlowProblem {
             graph,

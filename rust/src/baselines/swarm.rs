@@ -10,16 +10,22 @@
 //! (§II, §III) — the paper's key inefficiency that GWTF's path repair
 //! removes.
 
+use std::sync::Arc;
+
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem, StageGraph};
-use crate::sim::training::{RecoveryPolicy, Router};
+use crate::sim::training::{BlockingPlanner, RecoveryPolicy};
 use crate::util::Rng;
 
 use super::CostFn;
 
-/// Greedy-wiring SWARM router.
+/// Greedy-wiring SWARM router.  A single-shot planner
+/// ([`BlockingPlanner`]): every plan is a fresh greedy rewire with no
+/// session state — wrap in a
+/// [`crate::sim::training::BlockingPlanAdapter`] to plug into the
+/// engine's plan lifecycle (one commit per request).
 pub struct SwarmRouter {
-    pub graph: StageGraph,
+    pub graph: Arc<StageGraph>,
     pub cap: Vec<usize>,
     pub demand: Vec<usize>,
     pub cost: CostFn,
@@ -35,7 +41,7 @@ pub struct SwarmRouter {
 
 impl SwarmRouter {
     pub fn new(
-        graph: StageGraph,
+        graph: Arc<StageGraph>,
         cap: Vec<usize>,
         demand: Vec<usize>,
         cost: CostFn,
@@ -100,12 +106,16 @@ impl SwarmRouter {
     }
 }
 
-impl Router for SwarmRouter {
+impl BlockingPlanner for SwarmRouter {
     fn name(&self) -> String {
         "swarm".into()
     }
 
-    fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
+    /// SWARM has no incremental mode: every plan is a cold greedy rewire
+    /// from scratch (the baseline behavior the paper compares GWTF's
+    /// warm-start chain repair against), wired on the fly — no separate
+    /// planning phase is charged.
+    fn plan_once(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
         let n = self.cap.len();
         let mut load = vec![0usize; n];
         let mut paths = Vec::new();
@@ -118,15 +128,7 @@ impl Router for SwarmRouter {
                 }
             }
         }
-        // SWARM wires on the fly; no separate planning phase is charged.
         (paths, 0.0)
-    }
-
-    /// SWARM has no incremental mode: every re-plan is a cold greedy
-    /// rewire from scratch (the baseline behavior the paper compares
-    /// GWTF's warm-start chain repair against).
-    fn replan(&mut self, alive: &[bool], _dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
-        self.plan(alive)
     }
 
     fn on_crash(&mut self, _node: NodeId) {}
@@ -135,8 +137,6 @@ impl Router for SwarmRouter {
         &mut self,
         prev: NodeId,
         _next: NodeId,
-        _stage: usize,
-        _sink: NodeId,
         candidates: &[NodeId],
     ) -> Option<NodeId> {
         // Greedy: nearest alternative from the upstream node only (SWARM
@@ -156,7 +156,6 @@ impl Router for SwarmRouter {
 mod tests {
     use super::*;
     use crate::flow::graph::random_problem;
-    use std::sync::Arc;
 
     fn setup(seed: u64) -> (FlowProblem, SwarmRouter) {
         let mut rng = Rng::new(seed);
@@ -173,7 +172,7 @@ mod tests {
     fn wires_all_demand() {
         let (prob, mut r) = setup(1);
         let alive = vec![true; prob.cap.len()];
-        let (paths, planning) = r.plan(&alive);
+        let (paths, planning) = r.plan_once(&alive);
         assert_eq!(paths.len(), prob.demand[0]);
         assert_eq!(planning, 0.0);
         for p in &paths {
@@ -185,7 +184,7 @@ mod tests {
     fn greedy_picks_nearest_next_hop() {
         let (prob, mut r) = setup(2);
         let alive = vec![true; prob.cap.len()];
-        let (paths, _) = r.plan(&alive);
+        let (paths, _) = r.plan_once(&alive);
         // first hop of the first path is the nearest stage-0 node to the source
         let p = &paths[0];
         let best = prob.graph.stages[0]
@@ -204,7 +203,7 @@ mod tests {
         let mut alive = vec![true; prob.cap.len()];
         let victim = prob.graph.stages[0][0];
         alive[victim.0] = false;
-        let (paths, _) = r.plan(&alive);
+        let (paths, _) = r.plan_once(&alive);
         for p in &paths {
             assert!(!p.relays.contains(&victim));
         }
@@ -222,7 +221,7 @@ mod tests {
         let (prob, mut r) = setup(5);
         assert!(r.ignore_capacity);
         let alive = vec![true; prob.cap.len()];
-        let (paths, _) = r.plan(&alive);
+        let (paths, _) = r.plan_once(&alive);
         assert_eq!(paths.len(), prob.demand[0]);
     }
 
@@ -231,7 +230,7 @@ mod tests {
         let (prob, mut r) = setup(6);
         r.ignore_capacity = false;
         let alive = vec![true; prob.cap.len()];
-        let (paths, _) = r.plan(&alive);
+        let (paths, _) = r.plan_once(&alive);
         let mut usage = vec![0usize; prob.cap.len()];
         for p in &paths {
             for &n in &p.relays {
@@ -248,9 +247,7 @@ mod tests {
         let (prob, mut r) = setup(7);
         let prev = prob.graph.data_nodes[0];
         let cands = prob.graph.stages[0].clone();
-        let pick = r
-            .choose_replacement(prev, prob.graph.stages[1][0], 0, prev, &cands)
-            .unwrap();
+        let pick = r.choose_replacement(prev, prob.graph.stages[1][0], &cands).unwrap();
         let best = cands
             .iter()
             .min_by(|&&a, &&b| (r.cost)(prev, a).partial_cmp(&(r.cost)(prev, b)).unwrap())

@@ -10,7 +10,7 @@
 //! - [`recovery`] — §V-D: ping-sweep path repair planning.
 //! - [`node`]    — a message-driven GWTF node state machine tying the
 //!   pieces together (used by the protocol-level tests).
-//! - [`router`]  — the [`crate::sim::Router`] implementation backed by the
+//! - [`router`]  — the [`crate::sim::RoutingPolicy`] implementation backed by the
 //!   decentralized flow optimizer; this is what the experiment harness
 //!   plugs into the training simulator.
 

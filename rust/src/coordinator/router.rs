@@ -1,24 +1,39 @@
 //! GWTF's routing policy for the training simulator.
 //!
-//! Wraps the decentralized flow optimizer (§V-A/§V-C): at iteration start
-//! it (re)builds flows over the currently-alive membership, and during the
-//! iteration it serves crash-recovery replacement queries with the same
-//! min `d(prev,m) + d(m,next)` rule the flow algorithm uses (§V-D).
+//! Wraps the decentralized flow optimizer (§V-A/§V-C) behind the
+//! [`RoutingPolicy`] plan lifecycle: the engine *requests* a plan at
+//! iteration start ([`RoutingPolicy::request_plan`] runs the flow
+//! protocol over the currently-alive membership — warm-starting from the
+//! previous plan's surviving chains when asked — and stashes the result
+//! under a [`PlanTicket`] naming the protocol rounds it took), and the
+//! plan *commits* at the virtual time those rounds converge on the
+//! engine clock ([`RoutingPolicy::commit_plan`]).  A crash landing while
+//! the session is in flight marks the ticket stale: the commit performs
+//! a §V-D local repair of the affected flows (the same min
+//! `d(prev,m) + d(m,next)` replacement rule recovery uses) instead of a
+//! silent restart, charging one extra protocol round per repaired crash
+//! site.
 //!
-//! Planning cost: the flow algorithm exchanges only small control
-//! messages and "converges ... significantly faster than a training
-//! iteration" while running *in parallel* with training (§V-C), so only
-//! the first plan (cold start) is charged wall-time; replans after churn
-//! overlap training and cost nothing in the simulated makespan.
+//! Planning cost on the timeline: the flow algorithm exchanges only
+//! small control messages and "converges ... significantly faster than a
+//! training iteration" while running *in parallel* with training (§V-C).
+//! Under the degenerate commit-at-request lifecycle the ticket claims
+//! the legacy charge (cold start pays `rounds * round_ctrl_s`, every
+//! later (re)plan is free); under
+//! [`crate::sim::engine::PlanLifecycle::RoundLatency`] the claim is
+//! ignored and the commit instant — rounds delivered as engine events —
+//! decides what overlaps and what stalls (`gwtf bench planlag`).
 //!
-//! With a gossip overlay attached ([`GwtfRouter::attach_overlay`] /
+//! During the iteration the router serves crash-recovery replacement
+//! queries ([`RoutingPolicy::choose_replacement`]).  With a gossip
+//! overlay attached ([`GwtfRouter::attach_overlay`] /
 //! `ScenarioConfig::overlay_fanout`), every (re)plan first reconciles
 //! the overlay with the start-of-iteration liveness and then hands the
 //! per-node neighbor lists to the flow optimizer
 //! ([`DecentralizedFlow::set_neighbors`]): candidates come only from
 //! bounded views, crash events evict DHT contacts immediately, and
-//! engine gossip ticks ([`Router::on_gossip`]) drive the SWIM failure
-//! detector between plans.
+//! engine gossip ticks ([`RoutingPolicy::on_gossip`]) drive the SWIM
+//! failure detector between plans.
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -30,29 +45,31 @@ use crate::net::gossip::GossipConfig;
 use crate::net::overlay::Overlay;
 use crate::sim::events::Time;
 use crate::sim::scenario::Scenario;
-use crate::sim::training::{RecoveryPolicy, Router};
+use crate::sim::training::{PlanOutcome, PlanRequest, PlanTicket, RecoveryPolicy, RoutingPolicy};
 
 /// Cost closure shared by router and rebuilt problems.
 pub type CostFn = Arc<dyn Fn(NodeId, NodeId) -> f64 + Send + Sync>;
 
 pub struct GwtfRouter {
-    pub graph: StageGraph,
+    pub graph: Arc<StageGraph>,
     pub cap: Vec<usize>,
     pub demand: Vec<usize>,
     pub cost: CostFn,
     pub params: FlowParams,
     /// Max protocol rounds per (re)plan and the control RTT charged per
-    /// round on the cold-start plan.
+    /// round on the cold-start plan (the degenerate lifecycle's blocking
+    /// claim; under `PlanLifecycle::RoundLatency` the engine's round
+    /// cadence decides instead).
     pub max_rounds: usize,
     pub round_ctrl_s: f64,
-    /// Round budget for a warm-start [`Router::replan`] (§V-D local
-    /// repair + refinement; far fewer rounds than a cold plan needs).
+    /// Round budget for a warm-start re-plan (§V-D local repair +
+    /// refinement; far fewer rounds than a cold plan needs).
     pub warm_max_rounds: usize,
     seed: u64,
     plans: u64,
     dead: HashSet<NodeId>,
     /// Chains + annealer temperature of the most recent plan — the warm
-    /// state a [`Router::replan`] resumes from.
+    /// state a warm re-plan resumes from.
     warm_state: Option<(Vec<Chain>, f64)>,
     /// Rounds used by the most recent plan (diagnostics / Fig. 7).
     pub last_rounds: usize,
@@ -62,11 +79,26 @@ pub struct GwtfRouter {
     /// Liveness at the most recent (re)plan — the ground truth gossip
     /// probes run against (refined by `dead` as crashes land).
     last_alive: Vec<bool>,
+    /// Ticket-id source for the plan lifecycle.
+    next_ticket: u64,
+    /// The open planning session: result computed at request, delivered
+    /// (after any commit-time §V-D repair) at commit.
+    pending: Option<PendingPlan>,
+}
+
+/// A requested-but-uncommitted plan.
+struct PendingPlan {
+    id: u64,
+    paths: Vec<FlowPath>,
+    rounds: usize,
+    charge_s: f64,
+    /// Liveness the plan was computed against (the repair's base view).
+    alive: Vec<bool>,
 }
 
 impl GwtfRouter {
     pub fn new(
-        graph: StageGraph,
+        graph: Arc<StageGraph>,
         cap: Vec<usize>,
         demand: Vec<usize>,
         cost: CostFn,
@@ -90,6 +122,8 @@ impl GwtfRouter {
             last_cost: f64::NAN,
             overlay: None,
             last_alive: Vec::new(),
+            next_ticket: 0,
+            pending: None,
         }
     }
 
@@ -153,20 +187,19 @@ impl GwtfRouter {
         }
         let cost = Arc::clone(&self.cost);
         FlowProblem {
-            graph: self.graph.clone(),
+            // The graph is immutable and shared: rebuilding the problem
+            // per (re)plan must not deep-clone it (scale hot path).
+            graph: Arc::clone(&self.graph),
             cap,
             demand: self.demand.clone(),
             cost: Box::new(move |i, j| (cost)(i, j)),
         }
     }
-}
 
-impl Router for GwtfRouter {
-    fn name(&self) -> String {
-        "gwtf".into()
-    }
-
-    fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
+    /// Cold plan over `alive` from scratch.  Returns the paths and the
+    /// blocking charge (only the very first plan pays its control rounds;
+    /// §V-C overlaps everything later).
+    fn cold_plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
         self.dead.clear();
         let neighbors = self.reconciled_neighbors(alive);
         let prob = self.problem_with_liveness(alive);
@@ -191,11 +224,18 @@ impl Router for GwtfRouter {
     /// Warm-start re-plan (§V-A/§V-D): resume from the surviving chains
     /// of the previous plan, tear down / locally repair only the flows
     /// through dead nodes, and refine for a few rounds with the carried
-    /// (cooled) annealing temperature.  Falls back to a cold [`plan`] on
-    /// the first call.
-    fn replan(&mut self, alive: &[bool], dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
+    /// (cooled) annealing temperature.  Falls back to a cold plan on the
+    /// first call.
+    ///
+    /// `dirty` (the request's invalidation set, seeded into the ticket)
+    /// names the nodes newly dead since the previous plan; the rebuild
+    /// additionally sweeps the full liveness view so callers passing an
+    /// incomplete diff stay correct, and so every dead flow neighbour is
+    /// marked before any repair (a stand-in's visibility check must
+    /// exempt all of them, whatever the removal order).
+    fn warm_plan(&mut self, alive: &[bool], dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
         let Some((chains, temperature)) = self.warm_state.take() else {
-            return self.plan(alive);
+            return self.cold_plan(alive);
         };
         self.dead.clear();
         // Views are reconciled before the warm start so crash repair and
@@ -212,13 +252,10 @@ impl Router for GwtfRouter {
         if let Some(map) = neighbors {
             flow.set_neighbors(map);
         }
-        // `dirty` is advisory (newly dead since the last plan); the sweep
-        // over the full liveness view also covers callers that pass an
-        // incomplete diff, and is a cheap no-op for long-dead nodes.
-        // All dead nodes are marked before any repair so a stand-in's
-        // visibility check exempts every dead flow neighbour, whatever
-        // the removal order.
-        let _ = dirty;
+        debug_assert!(
+            dirty.iter().all(|d| !alive.get(d.0).copied().unwrap_or(false)),
+            "invalidation set must name dead nodes"
+        );
         for (i, &up) in alive.iter().enumerate() {
             if !up {
                 flow.mark_dead(NodeId(i));
@@ -236,6 +273,120 @@ impl Router for GwtfRouter {
         self.plans += 1;
         // Re-plans run in parallel with training (§V-C): no charge.
         (flow.established_paths(), 0.0)
+    }
+
+    /// Blocking convenience: request and immediately commit a cold plan
+    /// (the degenerate lifecycle, what benches and the churn trainer
+    /// drive directly).  Returns the paths and the blocking charge.
+    pub fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
+        let req =
+            PlanRequest { alive, dirty: &[], warm: false, requested_at: 0.0, iter: 0 };
+        let ticket = self.request_plan(&req);
+        let charge = ticket.ready_after_s;
+        let out = self.commit_plan(&ticket, &[]);
+        (out.paths, charge)
+    }
+
+    /// Blocking convenience: request and immediately commit a warm
+    /// re-plan with `dirty` as the invalidation set.
+    pub fn replan(&mut self, alive: &[bool], dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
+        let req = PlanRequest { alive, dirty, warm: true, requested_at: 0.0, iter: 0 };
+        let ticket = self.request_plan(&req);
+        let charge = ticket.ready_after_s;
+        let out = self.commit_plan(&ticket, &[]);
+        (out.paths, charge)
+    }
+}
+
+impl RoutingPolicy for GwtfRouter {
+    fn name(&self) -> String {
+        "gwtf".into()
+    }
+
+    fn request_plan(&mut self, req: &PlanRequest) -> PlanTicket {
+        let (paths, charge) = if req.warm {
+            self.warm_plan(req.alive, req.dirty)
+        } else {
+            self.cold_plan(req.alive)
+        };
+        let id = self.next_ticket;
+        self.next_ticket += 1;
+        self.pending = Some(PendingPlan {
+            id,
+            paths,
+            rounds: self.last_rounds,
+            charge_s: charge,
+            alive: req.alive.to_vec(),
+        });
+        PlanTicket {
+            id,
+            rounds: self.last_rounds,
+            ready_after_s: charge,
+            requested_at: req.requested_at,
+            invalidated: req.dirty.to_vec(),
+        }
+    }
+
+    /// Deliver the stashed plan.  If `invalidated` names nodes that
+    /// crashed while the session was converging, the plan is stale: every
+    /// affected flow gets the §V-D local repair (cheapest alive
+    /// same-stage stand-in by `d(prev,m) + d(m,next)`, capacity
+    /// respected) and each repaired crash site charges one extra protocol
+    /// round — no restart, exactly the paper's crash-during-planning
+    /// story.  A flow nobody can absorb keeps its dead relay; the
+    /// runtime's recovery machinery then handles it like any other stale
+    /// route.
+    fn commit_plan(&mut self, ticket: &PlanTicket, invalidated: &[NodeId]) -> PlanOutcome {
+        let PendingPlan { id, mut paths, mut rounds, charge_s, alive } =
+            self.pending.take().expect("commit_plan without a matching request_plan");
+        assert_eq!(id, ticket.id, "plan tickets must commit in request order");
+        let mut stale = false;
+        if !invalidated.is_empty() {
+            stale = true;
+            let dead_now: HashSet<NodeId> = invalidated.iter().copied().collect();
+            let mut usage = vec![0usize; self.cap.len()];
+            for path in &paths {
+                for &r in &path.relays {
+                    usage[r.0] += 1;
+                }
+            }
+            let mut repaired_sites: HashSet<NodeId> = HashSet::new();
+            for pi in 0..paths.len() {
+                for hop in 0..paths[pi].relays.len() {
+                    let victim = paths[pi].relays[hop];
+                    if !dead_now.contains(&victim) {
+                        continue;
+                    }
+                    let sink = paths[pi].source;
+                    let prev = if hop == 0 { sink } else { paths[pi].relays[hop - 1] };
+                    let next = if hop + 1 < paths[pi].relays.len() {
+                        paths[pi].relays[hop + 1]
+                    } else {
+                        sink
+                    };
+                    let candidates: Vec<NodeId> = self.graph.stages[hop]
+                        .iter()
+                        .filter(|&&m| {
+                            m != victim
+                                && !dead_now.contains(&m)
+                                && alive.get(m.0).copied().unwrap_or(false)
+                                && usage[m.0] < self.cap[m.0]
+                        })
+                        .copied()
+                        .collect();
+                    if let Some(m) = self.choose_replacement(prev, next, &candidates) {
+                        usage[victim.0] = usage[victim.0].saturating_sub(1);
+                        usage[m.0] += 1;
+                        paths[pi].relays[hop] = m;
+                        repaired_sites.insert(victim);
+                    }
+                }
+            }
+            // One Request Change negotiation per repaired crash site.
+            rounds += repaired_sites.len();
+            self.last_rounds = rounds;
+        }
+        PlanOutcome { paths, committed_at: ticket.requested_at + charge_s, rounds, stale }
     }
 
     fn last_plan_rounds(&self) -> usize {
@@ -271,8 +422,6 @@ impl Router for GwtfRouter {
         &mut self,
         prev: NodeId,
         next: NodeId,
-        _stage: usize,
-        _sink: NodeId,
         candidates: &[NodeId],
     ) -> Option<NodeId> {
         // §V-D: the repair is initiated by the peer holding the stored
@@ -351,7 +500,7 @@ mod tests {
         let stage1 = r.graph.stages[1].clone();
         let prev = r.graph.stages[0][0];
         let next = r.graph.stages[2][0];
-        let pick = r.choose_replacement(prev, next, 1, r.graph.data_nodes[0], &stage1).unwrap();
+        let pick = r.choose_replacement(prev, next, &stage1).unwrap();
         let best = stage1
             .iter()
             .min_by(|&&a, &&b| {
@@ -371,13 +520,8 @@ mod tests {
         r.plan(&alive);
         let stage1 = r.graph.stages[1].clone();
         r.on_crash(stage1[0]);
-        let pick = r.choose_replacement(
-            r.graph.stages[0][0],
-            r.graph.stages[2][0],
-            1,
-            r.graph.data_nodes[0],
-            &stage1,
-        );
+        let pick =
+            r.choose_replacement(r.graph.stages[0][0], r.graph.stages[2][0], &stage1);
         assert_ne!(pick, Some(stage1[0]));
     }
 
@@ -462,6 +606,60 @@ mod tests {
             assert!(!p.relays.contains(&victim));
         }
         assert!(r.overlay().unwrap().views_of(victim).is_none());
+    }
+
+    #[test]
+    fn stale_commit_repairs_in_flight_plan_locally() {
+        use crate::sim::training::PlanRequest;
+        let (mut r, n) = router();
+        let alive = vec![true; n];
+        let req = PlanRequest { alive: &alive, dirty: &[], warm: false, requested_at: 0.0, iter: 0 };
+        let ticket = r.request_plan(&req);
+        let planned_rounds = ticket.rounds;
+        // Peek at the stashed plan to pick a genuinely routed victim.
+        let victim = r.pending.as_ref().unwrap().paths[0].relays[1];
+        r.on_crash(victim); // what the engine does when the crash event fires
+        let out = r.commit_plan(&ticket, &[victim]);
+        assert!(out.stale, "mid-planning crash must mark the outcome stale");
+        assert!(
+            out.rounds > planned_rounds,
+            "§V-D repair must charge extra rounds: {} vs {}",
+            out.rounds,
+            planned_rounds
+        );
+        for p in &out.paths {
+            assert!(!p.relays.contains(&victim), "repaired plan still routes the dead relay");
+            for (stage, relay) in p.relays.iter().enumerate() {
+                assert!(r.graph.stages[stage].contains(relay), "repair broke stage validity");
+            }
+        }
+        // Capacity stays respected after the local repair.
+        let mut usage = vec![0usize; n];
+        for p in &out.paths {
+            for &relay in &p.relays {
+                usage[relay.0] += 1;
+            }
+        }
+        for (i, &u) in usage.iter().enumerate() {
+            assert!(u <= r.cap[i], "node n{i} over capacity after repair: {u}");
+        }
+    }
+
+    #[test]
+    fn commit_without_invalidation_is_clean() {
+        use crate::sim::training::PlanRequest;
+        let (mut r, n) = router();
+        let alive = vec![true; n];
+        let req = PlanRequest { alive: &alive, dirty: &[], warm: false, requested_at: 0.0, iter: 0 };
+        let t0 = r.request_plan(&req);
+        let out = r.commit_plan(&t0, &[]);
+        assert!(!out.stale);
+        assert_eq!(out.rounds, t0.rounds);
+        assert_eq!(out.committed_at, t0.ready_after_s, "blocking claim: request + charge");
+        let t1 = r.request_plan(&req);
+        assert!(t1.id > t0.id, "ticket ids strictly increase");
+        assert_eq!(t1.ready_after_s, 0.0, "only the cold start is charged");
+        r.commit_plan(&t1, &[]);
     }
 
     #[test]

@@ -102,7 +102,8 @@ pub fn run_fig7(reps: usize, seed: u64) -> Result<SeriesReport> {
             // forbids, so the greedy baseline honours caps here.
             swarm.ignore_capacity = false;
             let alive = vec![true; prob.cap.len()];
-            let (paths, _) = crate::sim::training::Router::plan(&mut swarm, &alive);
+            let (paths, _) =
+                crate::sim::training::BlockingPlanner::plan_once(&mut swarm, &alive);
             if !paths.is_empty() {
                 swarm_final.push(swarm.total_cost(&paths) / paths.len() as f64);
             }

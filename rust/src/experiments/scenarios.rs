@@ -14,9 +14,9 @@
 //!   continuous-clock Poisson churn model (`sim::churn`): crash/rejoin
 //!   arrivals land mid-iteration from exponential clocks instead of
 //!   synchronized Bernoulli flips.  GWTF runs with warm re-planning, so
-//!   every arbitrary-timestamp crash exercises `Router::on_crash`
-//!   mid-pipeline and the next iteration's warm `Router::replan` repair;
-//!   SWARM and DT-FM are the baselines.
+//!   every arbitrary-timestamp crash exercises `RoutingPolicy::on_crash`
+//!   mid-pipeline and the next iteration's warm re-plan repair; SWARM
+//!   and DT-FM are the baselines.
 //! - [`run_scale`] — Table II's shape at 100/200 relays under 20%
 //!   Poisson churn with the gossip overlay attached (GWTF plans over
 //!   bounded neighbor views, O(chains·k) per round) vs SWARM and DT-FM.
@@ -24,6 +24,15 @@
 //!   protocol rounds per (re)plan; `gwtf bench scale` and the
 //!   `rust/tests/scale_guard.rs` regression gate write those numbers to
 //!   `BENCH_scale.json` at the repo root.
+//! - [`run_plan_lag`] — the plan lifecycle on the clock
+//!   (`gwtf bench planlag`): sweep the flow protocol's per-round RTT
+//!   against the iteration length with GWTF warm re-plans under the
+//!   [`crate::sim::engine::PlanLifecycle::RoundLatency`] lifecycle.
+//!   While `rounds x RTT` fits inside an iteration the overlap hides
+//!   planning entirely (the §V-C claim); past that point every iteration
+//!   pays a growing stall — makespan grows monotonically with the RTT.
+//!   Results land in `BENCH_planlag.json` (`test_sized` profile via
+//!   `rust/tests/plan_lag.rs`, `full` via the CLI bench).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -38,7 +47,9 @@ use crate::flow::FlowParams;
 use crate::metrics::MetricsTable;
 use crate::sim::scenario::{build, ScenarioConfig, DEFAULT_OVERLAY_FANOUT};
 use crate::sim::sources::{LinkJitterSource, MidAggCrashSource};
-use crate::sim::training::{RecoveryPolicy, Router};
+use crate::sim::training::{
+    PlanOutcome, PlanRequest, PlanTicket, RecoveryPolicy, RoutingPolicy,
+};
 use crate::sim::ChurnModel;
 use crate::util::json::Json;
 
@@ -145,8 +156,8 @@ pub fn run_poisson_churn(opts: &ScenarioOpts) -> Result<MetricsTable> {
             cfg.churn_model = ChurnModel::Poisson;
             let sc = build(&cfg);
             // GWTF with warm re-plans: crashes at arbitrary timestamps hit
-            // Router::on_crash mid-pipeline; the next iteration's warm
-            // replan resumes the surviving chains around them.
+            // RoutingPolicy::on_crash mid-pipeline; the next iteration's
+            // warm replan resumes the surviving chains around them.
             {
                 let mut router =
                     GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
@@ -220,7 +231,7 @@ impl Default for ScaleOpts {
 pub struct ScaleCase {
     pub relays: usize,
     pub system: String,
-    /// `Router::plan`/`replan` invocations measured.
+    /// Planning sessions measured (`RoutingPolicy::request_plan` calls).
     pub plan_calls: usize,
     /// Protocol rounds across all (re)plans (deterministic per seed —
     /// the quantity the CI regression gate compares).
@@ -350,8 +361,11 @@ pub fn update_scale_json(path: &Path, profile: &str, report: &ScaleReport) -> Re
     Ok(())
 }
 
-/// Wall-time + protocol-round instrumentation around any [`Router`].
-struct TimedRouter<R: Router> {
+/// Wall-time + protocol-round instrumentation around any
+/// [`RoutingPolicy`]: the planning CPU work happens at `request_plan`
+/// (and any §V-D repair at `commit_plan`), so both ends of the lifecycle
+/// are timed.
+struct TimedRouter<R: RoutingPolicy> {
     inner: R,
     wall_ms: f64,
     calls: usize,
@@ -359,12 +373,19 @@ struct TimedRouter<R: Router> {
     cold_rounds: usize,
 }
 
-impl<R: Router> TimedRouter<R> {
+impl<R: RoutingPolicy> TimedRouter<R> {
     fn new(inner: R) -> Self {
         TimedRouter { inner, wall_ms: 0.0, calls: 0, rounds_total: 0, cold_rounds: 0 }
     }
+}
 
-    fn record(&mut self, t0: Instant) {
+impl<R: RoutingPolicy> RoutingPolicy for TimedRouter<R> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+    fn request_plan(&mut self, req: &PlanRequest) -> PlanTicket {
+        let t0 = Instant::now();
+        let ticket = self.inner.request_plan(req);
         self.wall_ms += t0.elapsed().as_secs_f64() * 1e3;
         self.calls += 1;
         let rounds = self.inner.last_plan_rounds();
@@ -372,27 +393,12 @@ impl<R: Router> TimedRouter<R> {
         if self.calls == 1 {
             self.cold_rounds = rounds;
         }
+        ticket
     }
-}
-
-impl<R: Router> Router for TimedRouter<R> {
-    fn name(&self) -> String {
-        self.inner.name()
-    }
-    fn plan(&mut self, alive: &[bool]) -> (Vec<crate::flow::graph::FlowPath>, f64) {
+    fn commit_plan(&mut self, ticket: &PlanTicket, invalidated: &[NodeId]) -> PlanOutcome {
         let t0 = Instant::now();
-        let out = self.inner.plan(alive);
-        self.record(t0);
-        out
-    }
-    fn replan(
-        &mut self,
-        alive: &[bool],
-        dirty: &[NodeId],
-    ) -> (Vec<crate::flow::graph::FlowPath>, f64) {
-        let t0 = Instant::now();
-        let out = self.inner.replan(alive, dirty);
-        self.record(t0);
+        let out = self.inner.commit_plan(ticket, invalidated);
+        self.wall_ms += t0.elapsed().as_secs_f64() * 1e3;
         out
     }
     fn last_plan_rounds(&self) -> usize {
@@ -408,11 +414,9 @@ impl<R: Router> Router for TimedRouter<R> {
         &mut self,
         prev: NodeId,
         next: NodeId,
-        stage: usize,
-        sink: NodeId,
         candidates: &[NodeId],
     ) -> Option<NodeId> {
-        self.inner.choose_replacement(prev, next, stage, sink, candidates)
+        self.inner.choose_replacement(prev, next, candidates)
     }
     fn recovery(&self) -> RecoveryPolicy {
         self.inner.recovery()
@@ -443,7 +447,7 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
     }
 
     impl ScaleRun<'_> {
-        fn measure<R: Router>(&mut self, system: &str, warm_replan: bool, inner: R) {
+        fn measure<R: RoutingPolicy>(&mut self, system: &str, warm_replan: bool, inner: R) {
             let mut router = TimedRouter::new(inner);
             let mut engine = self.sc.engine(self.engine_seed);
             engine.warm_replan = warm_replan;
@@ -513,6 +517,225 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
         iters_per_rep: opts.iters_per_rep,
         cases: cases.into_values().collect(),
     };
+    Ok((table, report))
+}
+
+/// Options for the plan-lifecycle round-RTT sweep (`gwtf bench planlag`).
+#[derive(Debug, Clone)]
+pub struct PlanLagOpts {
+    /// Per-round RTTs to sweep, seconds.  `0.0` means the degenerate
+    /// commit-at-request lifecycle (the blocking reference point).
+    pub rtts_s: Vec<f64>,
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub seed: u64,
+    /// Bernoulli join-leave chance for the churn rows (the 0%-churn rows
+    /// are the monotonicity gate; churn adds staleness on top).
+    pub churn_p: f64,
+}
+
+impl Default for PlanLagOpts {
+    fn default() -> Self {
+        PlanLagOpts {
+            rtts_s: vec![0.0, 0.5, 2.0, 8.0, 30.0, 120.0],
+            reps: 3,
+            iters_per_rep: 6,
+            seed: 1,
+            churn_p: 0.1,
+        }
+    }
+}
+
+/// One (churn, RTT) cell of the plan-lag sweep, summed/averaged over
+/// reps and iterations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanLagCase {
+    pub churn_p: f64,
+    pub rtt_s: f64,
+    /// Mean iteration makespan, seconds (the monotonicity gate at 0%
+    /// churn: grows once `rounds x RTT` stops fitting the iteration).
+    pub makespan_mean_s: f64,
+    /// Mean planning charge per iteration (cold-start + stalls).
+    pub stall_mean_s: f64,
+    /// Mean planning seconds hidden behind training per iteration.
+    pub overlap_mean_s: f64,
+    /// Tickets invalidated by mid-planning churn, total.
+    pub stale_total: usize,
+    /// Microbatches completed, total.
+    pub throughput_total: f64,
+}
+
+/// The `BENCH_planlag.json` payload for one profile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanLagReport {
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub cases: Vec<PlanLagCase>,
+}
+
+impl PlanLagReport {
+    pub fn case(&self, churn_p: f64, rtt_s: f64) -> Option<&PlanLagCase> {
+        self.cases.iter().find(|c| c.churn_p == churn_p && c.rtt_s == rtt_s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let case_json = |c: &PlanLagCase| {
+            let mut o = BTreeMap::new();
+            o.insert("churn_p".into(), Json::Num(c.churn_p));
+            o.insert("rtt_s".into(), Json::Num(c.rtt_s));
+            o.insert("makespan_mean_s".into(), Json::Num(c.makespan_mean_s));
+            o.insert("stall_mean_s".into(), Json::Num(c.stall_mean_s));
+            o.insert("overlap_mean_s".into(), Json::Num(c.overlap_mean_s));
+            o.insert("stale_total".into(), Json::Num(c.stale_total as f64));
+            o.insert("throughput_total".into(), Json::Num(c.throughput_total));
+            Json::Obj(o)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("reps".into(), Json::Num(self.reps as f64));
+        root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
+        root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Option<PlanLagReport> {
+        let num = |o: &Json, k: &str| o.get(k).and_then(Json::as_f64);
+        let cases = match j.get("cases")? {
+            Json::Arr(v) => v
+                .iter()
+                .map(|c| {
+                    Some(PlanLagCase {
+                        churn_p: num(c, "churn_p")?,
+                        rtt_s: num(c, "rtt_s")?,
+                        makespan_mean_s: num(c, "makespan_mean_s")?,
+                        stall_mean_s: num(c, "stall_mean_s")?,
+                        overlap_mean_s: num(c, "overlap_mean_s")?,
+                        stale_total: num(c, "stale_total")? as usize,
+                        throughput_total: num(c, "throughput_total")?,
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?,
+            _ => return None,
+        };
+        Some(PlanLagReport {
+            reps: num(j, "reps")? as usize,
+            iters_per_rep: num(j, "iters_per_rep")? as usize,
+            cases,
+        })
+    }
+}
+
+/// Canonical location of `BENCH_planlag.json` (same convention as
+/// [`scale_json_path`]): the repo root of the build tree, overridable via
+/// `GWTF_PLANLAG_JSON` for relocated binaries.
+pub fn plan_lag_json_path() -> std::path::PathBuf {
+    std::env::var("GWTF_PLANLAG_JSON").map(std::path::PathBuf::from).unwrap_or_else(|_| {
+        std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_planlag.json"))
+    })
+}
+
+/// Read one profile (`"test_sized"` / `"full"`) from `BENCH_planlag.json`.
+pub fn read_plan_lag_profile(path: &Path, profile: &str) -> Option<PlanLagReport> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(text.trim()).ok()?;
+    PlanLagReport::from_json(j.get(profile)?)
+}
+
+/// Write one profile into `BENCH_planlag.json`, preserving the other
+/// profile; a present-but-corrupt file is an error, not a reset (same
+/// rationale as [`update_scale_json`]).
+pub fn update_plan_lag_json(path: &Path, profile: &str, report: &PlanLagReport) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Err(_) => BTreeMap::new(), // no file yet: fresh capture
+        Ok(text) => match Json::parse(text.trim()) {
+            Ok(Json::Obj(o)) => o,
+            _ => bail!(
+                "{} exists but is not a JSON object; refusing to overwrite \
+                 (fix or delete it to re-capture)",
+                path.display()
+            ),
+        },
+    };
+    root.insert("bench".into(), Json::Str("planlag".into()));
+    root.insert(
+        "source".into(),
+        Json::Str("rust/src/experiments/scenarios.rs::run_plan_lag".into()),
+    );
+    root.entry("test_sized".to_string()).or_insert(Json::Null);
+    root.entry("full".to_string()).or_insert(Json::Null);
+    root.insert(profile.to_string(), report.to_json());
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+/// The plan-lifecycle round-RTT sweep: GWTF with warm re-plans on the
+/// Table II scenario, planning rounds riding the engine clock
+/// ([`crate::sim::engine::PlanLifecycle::RoundLatency`]).  Rows sweep
+/// the per-round RTT at 0% churn (pure overlap-vs-stall: makespan must
+/// grow monotonically with the RTT once `rounds x RTT` stops fitting
+/// inside an iteration) and at `churn_p` (staleness on top: mid-planning
+/// crashes invalidate in-flight tickets, visible in the `stale_replans`
+/// column).  `rtt = 0` is the degenerate blocking lifecycle for
+/// reference.
+pub fn run_plan_lag(opts: &PlanLagOpts) -> Result<(MetricsTable, PlanLagReport)> {
+    let mut table = MetricsTable::new(
+        "Plan lag — flow-protocol round-RTT vs iteration length (plan lifecycle on the clock)",
+    );
+    let mut cases = Vec::new();
+    // 0% churn is always measured (the monotonicity gate); the churn row
+    // is added on top unless it would duplicate it (`--churn 0`).
+    let mut churn_rows = vec![0.0];
+    if opts.churn_p > 0.0 {
+        churn_rows.push(opts.churn_p);
+    }
+    for &churn_p in &churn_rows {
+        for &rtt in &opts.rtts_s {
+            let row = format!("churn {:>2.0}% rtt {:>5.1}s", churn_p * 100.0, rtt);
+            let mut makespans = Vec::new();
+            let mut stalls = Vec::new();
+            let mut overlaps = Vec::new();
+            let mut stale_total = 0usize;
+            let mut throughput_total = 0.0;
+            for rep in 0..opts.reps {
+                let seed = opts.seed + rep as u64 * 9001;
+                let mut cfg = ScenarioConfig::table2(true, churn_p, seed);
+                // rtt > 0 opts into the round-latency lifecycle through
+                // the scenario knob (the same path `Engine::from_scenario`
+                // wires for any plan_round_rtt_s scenario); rtt = 0 keeps
+                // the degenerate blocking reference.
+                if rtt > 0.0 {
+                    cfg.plan_round_rtt_s = Some(rtt);
+                }
+                let sc = build(&cfg);
+                let mut router =
+                    GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
+                let mut engine = sc.engine(seed ^ 0x1);
+                engine.warm_replan = true;
+                let cell = table.cell(&row, "gwtf");
+                for _ in 0..opts.iters_per_rep {
+                    let m = engine.step(&sc.prob, &mut router);
+                    makespans.push(m.makespan_s);
+                    stalls.push(m.planning_s);
+                    overlaps.push(m.plan_overlap_s);
+                    stale_total += m.stale_replans;
+                    throughput_total += m.completed as f64;
+                    cell.push(&m);
+                }
+            }
+            let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+            cases.push(PlanLagCase {
+                churn_p,
+                rtt_s: rtt,
+                makespan_mean_s: mean(&makespans),
+                stall_mean_s: mean(&stalls),
+                overlap_mean_s: mean(&overlaps),
+                stale_total,
+                throughput_total,
+            });
+        }
+    }
+    let report =
+        PlanLagReport { reps: opts.reps, iters_per_rep: opts.iters_per_rep, cases };
     Ok((table, report))
 }
 
@@ -614,6 +837,81 @@ mod tests {
         update_scale_json(&path, "full", &report).unwrap();
         assert_eq!(read_scale_profile(&path, "test_sized").unwrap(), report);
         assert_eq!(read_scale_profile(&path, "full").unwrap(), report);
+    }
+
+    #[test]
+    fn plan_lag_sweep_shapes_table_and_report() {
+        // Shape checks only — the acceptance property (monotone makespan
+        // growth with the round-RTT) is gated by rust/tests/plan_lag.rs,
+        // which CI runs in the dedicated guard step; duplicating the
+        // heavy sweep here would defeat the workspace-pass --skip.
+        let opts = PlanLagOpts {
+            rtts_s: vec![0.0, 0.5],
+            reps: 1,
+            iters_per_rep: 2,
+            seed: 5,
+            churn_p: 0.2,
+        };
+        let (t, report) = run_plan_lag(&opts).unwrap();
+        assert_eq!(t.cells.len(), 2 * 2, "2 churn rows x 2 RTTs");
+        for acc in t.cells.values() {
+            assert_eq!(acc.throughput.len(), 2, "1 rep x 2 iterations");
+        }
+        assert_eq!(report.cases.len(), 4);
+        for &(churn, rtt) in &[(0.0, 0.0), (0.0, 0.5), (0.2, 0.0), (0.2, 0.5)] {
+            let c = report.case(churn, rtt).expect("case present");
+            assert!(c.makespan_mean_s > 0.0 && c.throughput_total > 0.0);
+        }
+        // On-the-clock sessions record their overlap window.
+        assert!(report.case(0.0, 0.5).unwrap().overlap_mean_s > 0.0);
+    }
+
+    #[test]
+    fn plan_lag_zero_churn_skips_duplicate_row() {
+        let opts = PlanLagOpts {
+            rtts_s: vec![0.0, 0.5],
+            reps: 1,
+            iters_per_rep: 2,
+            seed: 5,
+            churn_p: 0.0, // --churn 0: the churn row would duplicate 0%
+        };
+        let (t, report) = run_plan_lag(&opts).unwrap();
+        assert_eq!(t.cells.len(), 2, "one churn row x 2 RTTs");
+        assert_eq!(report.cases.len(), 2, "no duplicate (0.0, rtt) cases");
+        for acc in t.cells.values() {
+            assert_eq!(acc.throughput.len(), 2, "cells not double-accumulated");
+        }
+    }
+
+    #[test]
+    fn plan_lag_report_json_roundtrip_and_profile_update() {
+        let report = PlanLagReport {
+            reps: 1,
+            iters_per_rep: 4,
+            cases: vec![PlanLagCase {
+                churn_p: 0.0,
+                rtt_s: 2.0,
+                makespan_mean_s: 512.25,
+                stall_mean_s: 3.5,
+                overlap_mean_s: 40.0,
+                stale_total: 1,
+                throughput_total: 32.0,
+            }],
+        };
+        let back = PlanLagReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+
+        let dir = std::env::temp_dir().join("gwtf_planlag_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_planlag.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_plan_lag_profile(&path, "test_sized").is_none(), "missing file");
+        update_plan_lag_json(&path, "test_sized", &report).unwrap();
+        assert_eq!(read_plan_lag_profile(&path, "test_sized").unwrap(), report);
+        assert!(read_plan_lag_profile(&path, "full").is_none(), "other profile null");
+        update_plan_lag_json(&path, "full", &report).unwrap();
+        assert_eq!(read_plan_lag_profile(&path, "test_sized").unwrap(), report);
+        assert_eq!(read_plan_lag_profile(&path, "full").unwrap(), report);
     }
 
     #[test]

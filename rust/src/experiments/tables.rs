@@ -10,7 +10,9 @@ use crate::flow::FlowParams;
 use crate::metrics::MetricsTable;
 use crate::sim::engine::Engine;
 use crate::sim::scenario::{build, Family, Scenario, ScenarioConfig};
-use crate::sim::training::{RecoveryPolicy, Router};
+use crate::sim::training::{
+    BlockingPlanAdapter, PlanOutcome, PlanRequest, PlanTicket, RecoveryPolicy, RoutingPolicy,
+};
 
 /// Harness options for the table experiments.
 #[derive(Debug, Clone)]
@@ -28,9 +30,9 @@ pub struct TableOpts {
     /// Ablation: sum-cost objective instead of min-max.
     pub sum_objective: bool,
     /// Use warm-start incremental re-planning after the first iteration
-    /// (GWTF resumes from surviving chains; the baselines' [`Router`]
-    /// default still cold-plans).  Off by default: the paper harness
-    /// re-plans from scratch every iteration.
+    /// (GWTF resumes from surviving chains; the single-shot baselines
+    /// ignore the warm hint and cold-plan).  Off by default: the paper
+    /// harness re-plans from scratch every iteration.
     pub warm_replan: bool,
 }
 
@@ -67,12 +69,19 @@ struct GwtfWithPolicy {
     policy: RecoveryPolicy,
 }
 
-impl Router for GwtfWithPolicy {
+impl RoutingPolicy for GwtfWithPolicy {
     fn name(&self) -> String {
         self.inner.name()
     }
-    fn plan(&mut self, alive: &[bool]) -> (Vec<crate::flow::graph::FlowPath>, f64) {
-        self.inner.plan(alive)
+    fn request_plan(&mut self, req: &PlanRequest) -> PlanTicket {
+        self.inner.request_plan(req)
+    }
+    fn commit_plan(
+        &mut self,
+        ticket: &PlanTicket,
+        invalidated: &[crate::cost::NodeId],
+    ) -> PlanOutcome {
+        self.inner.commit_plan(ticket, invalidated)
     }
     fn on_crash(&mut self, node: crate::cost::NodeId) {
         self.inner.on_crash(node)
@@ -81,18 +90,9 @@ impl Router for GwtfWithPolicy {
         &mut self,
         prev: crate::cost::NodeId,
         next: crate::cost::NodeId,
-        stage: usize,
-        sink: crate::cost::NodeId,
         candidates: &[crate::cost::NodeId],
     ) -> Option<crate::cost::NodeId> {
-        self.inner.choose_replacement(prev, next, stage, sink, candidates)
-    }
-    fn replan(
-        &mut self,
-        alive: &[bool],
-        dirty: &[crate::cost::NodeId],
-    ) -> (Vec<crate::flow::graph::FlowPath>, f64) {
-        self.inner.replan(alive, dirty)
+        self.inner.choose_replacement(prev, next, candidates)
     }
     fn last_plan_rounds(&self) -> usize {
         self.inner.last_plan_rounds()
@@ -110,7 +110,7 @@ impl Router for GwtfWithPolicy {
 /// iteration's metrics into `push`.
 fn simulate(
     sc: &Scenario,
-    router: &mut dyn Router,
+    router: &mut dyn RoutingPolicy,
     iters: usize,
     seed: u64,
     warm_replan: bool,
@@ -137,20 +137,30 @@ fn gwtf_router(sc: &Scenario, opts: &TableOpts, seed: u64) -> GwtfWithPolicy {
 /// scenario experiments.  SWARM wires to the *closest* next-stage node —
 /// network proximity only ("sending to the next stage closest node",
 /// SVI) — unlike GWTF's Eq. 1 cost, it is blind to compute heterogeneity.
-pub(crate) fn swarm_router(sc: &Scenario, seed: u64) -> SwarmRouter {
+pub(crate) fn swarm_router(sc: &Scenario, seed: u64) -> BlockingPlanAdapter<SwarmRouter> {
     let topo = sc.topo.clone();
     let payload = sc.sim_cfg.payload_bytes;
     let comm: crate::baselines::CostFn = Arc::new(move |i, j| topo.comm(i, j, payload));
-    SwarmRouter::from_problem(&sc.prob, comm, seed)
+    BlockingPlanAdapter::new(SwarmRouter::from_problem(&sc.prob, comm, seed))
 }
 
 /// DT-FM baseline wired from a scenario (full Eq. 1 cost closure); shared
 /// with the continuous-time scenario experiments.
-pub(crate) fn dtfm_router(sc: &Scenario, params: GaParams, seed: u64) -> DtfmRouter {
+pub(crate) fn dtfm_router(
+    sc: &Scenario,
+    params: GaParams,
+    seed: u64,
+) -> BlockingPlanAdapter<DtfmRouter> {
     let topo = sc.topo.clone();
     let payload = sc.sim_cfg.payload_bytes;
     let cost: crate::baselines::CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
-    DtfmRouter::new(sc.prob.graph.clone(), sc.prob.demand.clone(), cost, params, seed)
+    BlockingPlanAdapter::new(DtfmRouter::new(
+        sc.prob.graph.clone(),
+        sc.prob.demand.clone(),
+        cost,
+        params,
+        seed,
+    ))
 }
 
 /// The Table II / Table III grid: {homogeneous, heterogeneous} x

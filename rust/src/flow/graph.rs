@@ -6,6 +6,8 @@
 //! Eq. 1.  Costs may come from a simulated [`crate::net::Topology`] or
 //! from the abstract `U(..)`-sampled settings of Tables IV/V.
 
+use std::sync::Arc;
+
 use crate::cost::NodeId;
 use crate::util::Rng;
 
@@ -43,8 +45,14 @@ impl StageGraph {
 }
 
 /// A complete flow-routing problem instance.
+///
+/// The stage graph is shared behind an [`Arc`]: routers rebuild a
+/// `FlowProblem` with fresh capacities on every (re)plan, and the graph —
+/// the one immutable, potentially large piece — must not be deep-cloned
+/// on that hot path (the scale bench plans over 200 relays every
+/// iteration).
 pub struct FlowProblem {
-    pub graph: StageGraph,
+    pub graph: Arc<StageGraph>,
     /// `cap[node.0]` = node capacity in concurrent microbatches.
     pub cap: Vec<usize>,
     /// Microbatches each data node pushes per iteration.
@@ -209,7 +217,7 @@ pub fn random_problem(
         }
     }
     FlowProblem {
-        graph: StageGraph { stages: stage_vec, data_nodes },
+        graph: Arc::new(StageGraph { stages: stage_vec, data_nodes }),
         cap,
         demand,
         cost: Box::new(move |i, j| costs[i.0][j.0]),
@@ -222,10 +230,10 @@ mod tests {
 
     fn tiny() -> FlowProblem {
         // 1 data node, 2 stages x 2 relays, unit demand 2.
-        let graph = StageGraph {
+        let graph = Arc::new(StageGraph {
             stages: vec![vec![NodeId(1), NodeId(2)], vec![NodeId(3), NodeId(4)]],
             data_nodes: vec![NodeId(0)],
-        };
+        });
         FlowProblem {
             graph,
             cap: vec![4, 1, 1, 1, 1],

@@ -285,10 +285,10 @@ mod tests {
     fn diamond() -> FlowProblem {
         // data 0; stage0 = {1 (cheap), 2 (pricey)}; stage1 = {3}.
         // cap: n1=1, n2=1, n3=2; demand 2 => one unit must take the pricey relay.
-        let graph = StageGraph {
+        let graph = std::sync::Arc::new(StageGraph {
             stages: vec![vec![NodeId(1), NodeId(2)], vec![NodeId(3)]],
             data_nodes: vec![NodeId(0)],
-        };
+        });
         FlowProblem {
             graph,
             cap: vec![8, 1, 1, 2],

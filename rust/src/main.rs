@@ -6,8 +6,8 @@
 //! gwtf doctor                         PJRT + artifact sanity check
 //! gwtf sim    [--system gwtf|swarm] [--heterogeneous] [--churn P] [--iters N]
 //! gwtf train  [--family llama|gpt] [--steps N] [--churn P] [--lr X]
-//! gwtf bench  <table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|scale|all>
-//!             [--reps N] [--full]
+//! gwtf bench  <TARGET>          (see BENCH_TARGETS: tables, figures, and the
+//!             [--reps N] [--full]  continuous-time scenario sweeps)
 //! gwtf join-demo                      Fig. 3 walkthrough
 //! ```
 //!
@@ -24,28 +24,41 @@ use gwtf::coordinator::GwtfRouter;
 use gwtf::cost::NodeId;
 use gwtf::experiments::{
     results_dir, run_fig5, run_fig6, run_fig7, run_link_jitter, run_mid_agg_crash,
-    run_poisson_churn, run_scale, run_table2, run_table3, run_table6, update_scale_json,
-    Fig6Opts, ScaleOpts, ScenarioOpts, TableOpts,
+    run_plan_lag, run_poisson_churn, run_scale, run_table2, run_table3, run_table6,
+    update_plan_lag_json, update_scale_json, Fig6Opts, PlanLagOpts, ScaleOpts, ScenarioOpts,
+    TableOpts,
 };
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::flow::FlowParams;
 use gwtf::metrics::MetricsTable;
 use gwtf::runtime::Manifest;
 use gwtf::sim::scenario::{build, Family, ScenarioConfig};
-use gwtf::sim::training::Router;
+use gwtf::sim::training::{BlockingPlanAdapter, RoutingPolicy};
 use gwtf::trainer::{ChurnTrainer, PipelineTrainer};
 use gwtf::util::Rng;
 
-const USAGE: &str = "usage: gwtf <doctor|sim|train|bench|join-demo> [options]
+/// The canonical bench-target list: the single source for the usage
+/// text and the `gwtf bench` error message (they drifted apart once
+/// already — new targets go here and nowhere else).
+const BENCH_TARGETS: &str =
+    "table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|scale|planlag|all";
+
+fn usage() -> String {
+    format!(
+        "usage: gwtf <doctor|sim|train|bench|join-demo> [options]
   doctor                         check PJRT + artifacts
   sim       --system gwtf|swarm  --heterogeneous --churn P --iters N --seed S
             --warm-replan        (GWTF warm-starts re-plans from surviving chains)
   train     --family llama|gpt   --steps N --churn P --lr X --microbatches M
-  bench     table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|scale|all
+  bench     {BENCH_TARGETS}
             --reps N --iters N --full --warm-replan
             (scale: --relays \"100,200\" --churn P — overlay GWTF vs baselines,
              writes BENCH_scale.json at the repo root)
-  join-demo                      Fig. 3 walkthrough";
+            (planlag: --rtts \"0,0.5,2,8,30,120\" --churn P — plan-lifecycle
+             round-RTT sweep, writes BENCH_planlag.json at the repo root)
+  join-demo                      Fig. 3 walkthrough"
+    )
+}
 
 fn main() {
     let args = Args::from_env();
@@ -63,7 +76,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("bench") => bench(args),
         Some("join-demo") => join_demo(args),
         _ => {
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
     }
@@ -103,17 +116,17 @@ fn sim(args: &Args) -> Result<()> {
     let mut engine = sc.engine(seed ^ 0x51);
     engine.warm_replan = args.flag("warm-replan");
 
-    let mut router: Box<dyn Router> = match system.as_str() {
+    let mut router: Box<dyn RoutingPolicy> = match system.as_str() {
         "gwtf" => Box::new(GwtfRouter::from_scenario(&sc, FlowParams::default(), seed)),
         "swarm" => {
             // comm-only cost: SWARM's greedy is blind to compute (SVI)
             let topo = sc.topo.clone();
             let payload = sc.sim_cfg.payload_bytes;
-            Box::new(SwarmRouter::from_problem(
+            Box::new(BlockingPlanAdapter::new(SwarmRouter::from_problem(
                 &sc.prob,
                 Arc::new(move |i, j| topo.comm(i, j, payload)),
                 seed,
-            ))
+            )))
         }
         other => bail!("unknown --system {other} (gwtf|swarm)"),
     };
@@ -184,7 +197,7 @@ fn bench(args: &Args) -> Result<()> {
     let target = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("bench needs a target: table2|table3|table6|fig5|fig6|fig7|all"))?
+        .ok_or_else(|| anyhow!("bench needs a target: {BENCH_TARGETS}"))?
         .clone();
     let reps = args.usize_or("reps", 25)?;
     let iters = args.usize_or("iters", 4)?;
@@ -262,6 +275,26 @@ fn bench(args: &Args) -> Result<()> {
         emit(&t, "scale")?;
         let json_path = gwtf::experiments::scale_json_path();
         update_scale_json(&json_path, "full", &report)?;
+        println!("-> {}", json_path.display());
+        ran = true;
+    }
+    if target == "planlag" || target == "all" {
+        let rtts: Vec<f64> = args
+            .str_or("rtts", "0,0.5,2,8,30,120")
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| anyhow!("--rtts expects numbers (seconds)")))
+            .collect::<Result<_>>()?;
+        let lopts = PlanLagOpts {
+            rtts_s: rtts,
+            reps: reps.min(5),
+            iters_per_rep: iters.max(6),
+            seed,
+            churn_p: args.f64_or("churn", 0.1)?,
+        };
+        let (t, report) = run_plan_lag(&lopts)?;
+        emit(&t, "planlag")?;
+        let json_path = gwtf::experiments::plan_lag_json_path();
+        update_plan_lag_json(&json_path, "full", &report)?;
         println!("-> {}", json_path.display());
         ran = true;
     }

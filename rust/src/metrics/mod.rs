@@ -29,6 +29,13 @@ pub struct CellAccumulator {
     /// Flow-protocol rounds per iteration's (re)plan (warm-replan
     /// diagnostics; 0 for routers without a round-based protocol).
     pub replan_rounds: Vec<f64>,
+    /// Planning minutes hidden behind training per iteration (the plan
+    /// lifecycle's overlap window; 0 under the degenerate
+    /// commit-at-request lifecycle).
+    pub plan_overlap_min: Vec<f64>,
+    /// Plan tickets invalidated by mid-planning churn per iteration
+    /// (commit-time §V-D repairs instead of clean convergences).
+    pub stale_replans: Vec<f64>,
 }
 
 impl CellAccumulator {
@@ -46,6 +53,8 @@ impl CellAccumulator {
         self.bwd_recoveries.push(m.bwd_recoveries as f64);
         self.agg_recoveries.push(m.agg_recoveries as f64);
         self.replan_rounds.push(m.replan_rounds as f64);
+        self.plan_overlap_min.push(m.plan_overlap_s / 60.0);
+        self.stale_replans.push(m.stale_replans as f64);
     }
 
     pub fn row(&self) -> BTreeMap<&'static str, Summary> {
@@ -57,6 +66,8 @@ impl CellAccumulator {
         r.insert("makespan_min", Summary::of(&self.makespan_min));
         r.insert("agg_recoveries", Summary::of(&self.agg_recoveries));
         r.insert("replan_rounds", Summary::of(&self.replan_rounds));
+        r.insert("plan_overlap_min", Summary::of(&self.plan_overlap_min));
+        r.insert("stale_replans", Summary::of(&self.stale_replans));
         r
     }
 }
@@ -101,6 +112,8 @@ impl MetricsTable {
             ("wasted_gpu_min", "Wasted GPU time (min)"),
             ("agg_recoveries", "Aggregation-barrier recoveries (#/iteration)"),
             ("replan_rounds", "Flow re-plan rounds (#/iteration)"),
+            ("plan_overlap_min", "Plan overlap (min, hidden behind training)"),
+            ("stale_replans", "Stale re-plans (#/iteration)"),
         ];
         let rows = self.rows();
         let cols = self.cols();
@@ -247,17 +260,24 @@ mod tests {
         let m = IterationMetrics {
             agg_recoveries: 2,
             replan_rounds: 7,
+            plan_overlap_s: 180.0,
+            stale_replans: 1,
             ..metric(4, 100.0)
         };
         t.cell("poisson 10%", "gwtf").push(&m);
         let md = t.to_markdown();
         assert!(md.contains("Aggregation-barrier recoveries"), "{md}");
         assert!(md.contains("Flow re-plan rounds"), "{md}");
+        assert!(md.contains("Plan overlap"), "{md}");
+        assert!(md.contains("Stale re-plans"), "{md}");
         assert!(md.contains("2.00 ± 0.00"), "{md}");
         assert!(md.contains("7.00 ± 0.00"), "{md}");
+        assert!(md.contains("3.00 ± 0.00"), "{md}"); // 180s overlap = 3 min
         let csv = t.to_csv();
         assert!(csv.contains("poisson 10%,gwtf,agg_recoveries,2.0"), "{csv}");
         assert!(csv.contains("poisson 10%,gwtf,replan_rounds,7.0"), "{csv}");
+        assert!(csv.contains("poisson 10%,gwtf,plan_overlap_min,3.0"), "{csv}");
+        assert!(csv.contains("poisson 10%,gwtf,stale_replans,1.0"), "{csv}");
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! - **Gossip rounds** run on the engine's continuous clock (the
 //!   `gossip_ticks` of a [`crate::sim::WorldSchedule`], emitted by
 //!   [`crate::sim::sources::GossipCadenceSource`] and delivered through
-//!   `Router::on_gossip`): each alive relay probes one peer per directed
+//!   `RoutingPolicy::on_gossip`): each alive relay probes one peer per directed
 //!   view; dead peers accumulate suspicion and are evicted after
 //!   [`GossipConfig::suspicion_rounds`] failures, with passive members
 //!   promoted in their place.

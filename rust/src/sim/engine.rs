@@ -47,6 +47,8 @@
 //! | `jitter` | geo-link variability beyond the static 50–500 Mb/s envelope (`experiments::scenarios::run_link_jitter`) |
 //! | `slowdowns` | the heterogeneous-device rows, made time-varying (stragglers) |
 //! | `joins` | §V-B joining nodes, visible to recovery mid-iteration |
+//! | `gossip_ticks` | the overlay failure detector's probe rounds |
+//! | `plan_rounds` | §V-C flow-protocol rounds: the plan lifecycle's convergence clock (`gwtf bench planlag`) |
 
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
@@ -56,7 +58,9 @@ use super::churn::ChurnProcess;
 use super::events::{EventQueue, Slots, Time};
 use super::handlers::{MicrobatchState, Phase};
 use super::scenario::Scenario;
-use super::training::{IterationMetrics, Router, TrainingSim};
+use super::training::{
+    IterationMetrics, PlanOutcome, PlanRequest, PlanTicket, RoutingPolicy, TrainingSim,
+};
 
 /// Piecewise-constant link-delay multiplier window.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -105,9 +109,15 @@ pub struct WorldSchedule {
     pub agg_crashes: Vec<(NodeId, f64)>,
     /// Virtual instants at which the gossip overlay runs one protocol
     /// round (probe / suspicion / shuffle), delivered to the router via
-    /// [`crate::sim::training::Router::on_gossip`] so failure detection
-    /// interleaves with churn and jitter on the same timeline.
+    /// [`crate::sim::training::RoutingPolicy::on_gossip`] so failure
+    /// detection interleaves with churn and jitter on the same timeline.
     pub gossip_ticks: Vec<Time>,
+    /// Virtual instants at which the flow protocol completes one planning
+    /// round (emitted by [`crate::sim::sources::PlanningSource`]).  The
+    /// engine's in-flight [`PlanSession`] advances one round per tick and
+    /// commits at the tick where its rounds converge, so plan convergence
+    /// interleaves with churn, jitter and gossip on one timeline.
+    pub plan_rounds: Vec<Time>,
 }
 
 impl WorldSchedule {
@@ -120,6 +130,7 @@ impl WorldSchedule {
         self.slowdowns.extend(other.slowdowns);
         self.agg_crashes.extend(other.agg_crashes);
         self.gossip_ticks.extend(other.gossip_ticks);
+        self.plan_rounds.extend(other.plan_rounds);
     }
 
     pub fn is_empty(&self) -> bool {
@@ -130,6 +141,7 @@ impl WorldSchedule {
             && self.slowdowns.is_empty()
             && self.agg_crashes.is_empty()
             && self.gossip_ticks.is_empty()
+            && self.plan_rounds.is_empty()
     }
 }
 
@@ -148,8 +160,11 @@ pub trait EventSource {
 pub(crate) enum WorldEvent {
     Crash(NodeId),
     Join(NodeId),
-    /// One gossip-overlay protocol round (Router::on_gossip).
+    /// One gossip-overlay protocol round (RoutingPolicy::on_gossip).
     Gossip,
+    /// One flow-planning protocol round completes: the in-flight
+    /// [`PlanSession`] (if any) advances and commits when converged.
+    PlanRound,
 }
 
 /// Everything the engine dispatches: microbatch progress or world events.
@@ -159,19 +174,130 @@ pub(crate) enum Ev {
     World(WorldEvent),
 }
 
+/// When a requested plan becomes usable — the knob behind the
+/// plan-lifecycle redesign.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlanLifecycle {
+    /// Degenerate lifecycle (the default): every request commits at the
+    /// request instant and the iteration blocks for the ticket's
+    /// `ready_after_s` charge.  Reproduces the pre-lifecycle simulator
+    /// bit for bit (the router/engine/golden-trace parity tests pin
+    /// this).
+    CommitAtRequest,
+    /// Planning rounds ride the engine clock: a
+    /// [`crate::sim::sources::PlanningSource`] emits one
+    /// `WorldSchedule::plan_rounds` tick every `rtt_s` virtual seconds,
+    /// the in-flight [`PlanSession`] advances per tick, and the plan
+    /// commits at the tick its rounds converge.  Iterations run on the
+    /// *previous* committed plan while the next converges; if a session
+    /// outlasts its iteration, the uncovered tail is charged to the next
+    /// iteration as a planning stall.
+    RoundLatency {
+        /// Virtual seconds per flow-protocol round (one control-message
+        /// exchange across the slowest participating link).
+        rtt_s: f64,
+    },
+}
+
+/// Engine-side state of one in-flight planning session: the ticket, the
+/// rounds delivered so far, crashes that landed while the plan was
+/// converging (the ticket's runtime invalidation set), and the outcome
+/// once committed.
+pub struct PlanSession {
+    ticket: PlanTicket,
+    rtt_s: f64,
+    rounds_done: usize,
+    last_round_at: Time,
+    invalidated: Vec<NodeId>,
+    outcome: Option<PlanOutcome>,
+}
+
+impl PlanSession {
+    pub fn new(ticket: PlanTicket, rtt_s: f64) -> PlanSession {
+        PlanSession {
+            ticket,
+            rtt_s,
+            rounds_done: 0,
+            last_round_at: 0.0,
+            invalidated: Vec::new(),
+            outcome: None,
+        }
+    }
+
+    /// A crash at `node` while the session is in flight invalidates the
+    /// ticket; the policy repairs around it at commit (§V-D).
+    pub(crate) fn note_crash(&mut self, node: NodeId) {
+        if self.outcome.is_none() {
+            self.invalidated.push(node);
+        }
+    }
+
+    /// Ticks this session can still consume (it commits on the
+    /// `ticket.rounds`-th): the dispatcher schedules no more than this, so
+    /// a fine-grained cadence never floods the queue with dead events.
+    pub(crate) fn rounds_needed(&self) -> usize {
+        self.ticket.rounds
+    }
+
+    /// One planning round completes at virtual time `t`; commit once the
+    /// ticket's rounds have converged.  Repair rounds a stale commit adds
+    /// push the availability instant past the tick.
+    pub(crate) fn on_round(&mut self, t: Time, router: &mut dyn RoutingPolicy) {
+        if self.outcome.is_some() {
+            return;
+        }
+        self.rounds_done += 1;
+        self.last_round_at = t;
+        if self.rounds_done >= self.ticket.rounds {
+            self.commit(t, router);
+        }
+    }
+
+    fn commit(&mut self, now: Time, router: &mut dyn RoutingPolicy) {
+        let mut out = router.commit_plan(&self.ticket, &self.invalidated);
+        let extra = out.rounds.saturating_sub(self.rounds_done.max(self.ticket.rounds));
+        out.committed_at = now + extra as f64 * self.rtt_s;
+        self.outcome = Some(out);
+    }
+
+    /// Close the session.  If the iteration's event queue drained before
+    /// the rounds converged, the remaining rounds complete off-timeline
+    /// at the session cadence (the commit instant still lands at
+    /// `rounds * rtt_s` after the request).
+    pub(crate) fn finalize(mut self, router: &mut dyn RoutingPolicy) -> PlanOutcome {
+        if self.outcome.is_none() {
+            let pending = self.ticket.rounds.saturating_sub(self.rounds_done);
+            let at = self.last_round_at + pending as f64 * self.rtt_s;
+            self.commit(at, router);
+        }
+        self.outcome.expect("finalized session has an outcome")
+    }
+}
+
 /// Multi-iteration driver: owns the simulator, the churn process (the
-/// liveness authority) and any extra event sources, and handles the
-/// cold-plan / warm-replan dispatch to the [`Router`].
+/// liveness authority) and any extra event sources, and drives the
+/// [`RoutingPolicy`] plan lifecycle (request at iteration start, rounds
+/// on the engine clock, commit at convergence).
 pub struct Engine {
     pub sim: TrainingSim,
     pub churn: ChurnProcess,
     pub sources: Vec<Box<dyn EventSource>>,
-    /// When true, iterations after the first call [`Router::replan`] with
-    /// the diff of consecutive liveness views (GWTF warm-starts from its
-    /// surviving chains; baselines fall back to a cold plan).  Off by
-    /// default — the paper harness (Tables II/III/VI) cold-plans every
+    /// When true, iterations after the first request warm re-plans
+    /// (`PlanRequest::warm`) carrying the diff of consecutive liveness
+    /// views as the invalidation set (GWTF warm-starts from its surviving
+    /// chains; single-shot planners ignore the hint and cold-plan).  Off
+    /// by default — the paper harness (Tables II/III/VI) cold-plans every
     /// iteration.
     pub warm_replan: bool,
+    /// When a requested plan becomes usable (see [`PlanLifecycle`]).
+    pub plan_lifecycle: PlanLifecycle,
+    /// The last committed plan ([`PlanLifecycle::RoundLatency`] only):
+    /// what an iteration runs on while its own request converges.
+    committed: Option<Vec<FlowPath>>,
+    /// Planning stall carried into the next iteration: the part of the
+    /// previous session's convergence window that its iteration did not
+    /// cover.
+    pending_stall: f64,
     prev_alive: Option<Vec<bool>>,
     iter: usize,
     rng: Rng,
@@ -184,6 +310,9 @@ impl Engine {
             churn,
             sources: Vec::new(),
             warm_replan: false,
+            plan_lifecycle: PlanLifecycle::CommitAtRequest,
+            committed: None,
+            pending_stall: 0.0,
             prev_alive: None,
             iter: 0,
             rng: Rng::new(seed),
@@ -192,8 +321,11 @@ impl Engine {
 
     /// Build from a scenario (clones its topology, config and churn).
     /// Overlay scenarios (`ScenarioConfig::overlay_fanout`) get the
-    /// gossip cadence source so failure detection runs on the same
-    /// continuous clock as churn and jitter.
+    /// gossip cadence source; scenarios with
+    /// `ScenarioConfig::plan_round_rtt_s` set get the round-latency plan
+    /// lifecycle and its [`crate::sim::sources::PlanningSource`], so both
+    /// failure detection and plan convergence run on the same continuous
+    /// clock as churn and jitter.
     pub fn from_scenario(sc: &Scenario, seed: u64) -> Engine {
         let mut engine = Engine::new(
             TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone()),
@@ -205,6 +337,9 @@ impl Engine {
                 super::scenario::GOSSIP_PERIOD_S,
             )));
         }
+        if let Some(rtt_s) = sc.cfg.plan_round_rtt_s {
+            engine.set_plan_round_rtt(rtt_s);
+        }
         engine
     }
 
@@ -212,14 +347,29 @@ impl Engine {
         self.sources.push(source);
     }
 
+    /// Switch to the [`PlanLifecycle::RoundLatency`] lifecycle at `rtt_s`
+    /// seconds per planning round, attaching the matching
+    /// [`crate::sim::sources::PlanningSource`].  Idempotent in the source
+    /// list: any previously attached planning source is replaced, so
+    /// re-tuning the RTT (or calling this on a scenario that already set
+    /// `plan_round_rtt_s`) never leaves two tick cadences driving one
+    /// session.
+    pub fn set_plan_round_rtt(&mut self, rtt_s: f64) {
+        self.plan_lifecycle = PlanLifecycle::RoundLatency { rtt_s };
+        self.sources.retain(|s| s.name() != super::sources::PLANNING_SOURCE_NAME);
+        self.add_source(Box::new(super::sources::PlanningSource::new(rtt_s)));
+    }
+
     /// Iterations run so far.
     pub fn iterations(&self) -> usize {
         self.iter
     }
 
-    /// Run one training iteration: sample churn + sources, plan (or warm
-    /// re-plan) routes, execute the continuous-time schedule.
-    pub fn step(&mut self, prob: &FlowProblem, router: &mut dyn Router) -> IterationMetrics {
+    /// Run one training iteration: sample churn + sources, request a plan
+    /// (cold or warm) through the lifecycle, execute the continuous-time
+    /// schedule, and commit the plan at the virtual time its rounds
+    /// converge.
+    pub fn step(&mut self, prob: &FlowProblem, router: &mut dyn RoutingPolicy) -> IterationMetrics {
         let horizon = self.sim.current_iter_estimate();
         let iter = self.iter;
         // The churn model speaks the same EventSource contract as every
@@ -231,17 +381,57 @@ impl Engine {
         let mut sched = self.churn.sample(iter, horizon);
         // Planner view: mid-iteration crashes are in the future.
         let alive = self.churn.planning_view_for(&sched);
-        let (paths, planning_s) = match &self.prev_alive {
-            Some(prev) if self.warm_replan => {
-                let dirty: Vec<NodeId> = (0..alive.len())
-                    .filter(|&i| prev.get(i).copied().unwrap_or(true) && !alive[i])
-                    .map(NodeId)
-                    .collect();
-                router.replan(&alive, &dirty)
-            }
-            _ => router.plan(&alive),
+        // Invalidation set of the previous plan: nodes dead since it was
+        // requested.  Seeds the new ticket (PlanRequest::dirty).
+        let dirty: Vec<NodeId> = match &self.prev_alive {
+            Some(prev) => (0..alive.len())
+                .filter(|&i| prev.get(i).copied().unwrap_or(true) && !alive[i])
+                .map(NodeId)
+                .collect(),
+            None => Vec::new(),
         };
-        let plan_rounds = router.last_plan_rounds();
+        let warm = self.warm_replan && self.prev_alive.is_some();
+        let req = PlanRequest { alive: &alive, dirty: &dirty, warm, requested_at: 0.0, iter };
+
+        let mut session: Option<PlanSession> = None;
+        let (paths, planning_s, blocking_rounds) = match self.plan_lifecycle {
+            PlanLifecycle::CommitAtRequest => {
+                // Degenerate lifecycle: commit at the request instant,
+                // block for the ticket's charge (bit-for-bit the
+                // pre-lifecycle behavior).
+                let ticket = router.request_plan(&req);
+                let charge = ticket.ready_after_s;
+                let out = router.commit_plan(&ticket, &[]);
+                (out.paths, charge, out.rounds)
+            }
+            PlanLifecycle::RoundLatency { rtt_s } => {
+                let ticket = router.request_plan(&req);
+                if self.committed.is_none() || ticket.rounds == 0 {
+                    // Cold start (no plan to run on: the iteration blocks
+                    // until the commit, charging the convergence window)
+                    // or a single-shot planner (no round protocol: the
+                    // plan is ready at the request for its blocking
+                    // charge, one commit per request).
+                    let charge = if ticket.rounds == 0 {
+                        ticket.ready_after_s
+                    } else {
+                        ticket.rounds as f64 * rtt_s
+                    };
+                    let out = router.commit_plan(&ticket, &[]);
+                    self.committed = Some(out.paths.clone());
+                    (out.paths, charge, out.rounds)
+                } else {
+                    // Steady state: run on the previous committed plan
+                    // while this request converges on the engine clock;
+                    // charge any stall the previous session left behind.
+                    let prev_paths =
+                        self.committed.clone().expect("checked committed above");
+                    session = Some(PlanSession::new(ticket, rtt_s));
+                    let stall = std::mem::take(&mut self.pending_stall);
+                    (prev_paths, stall, 0)
+                }
+            }
+        };
 
         for s in &mut self.sources {
             let mut extra = s.sample(iter, horizon);
@@ -262,9 +452,23 @@ impl Engine {
             &self.churn,
             planning_s,
             paths,
+            session.as_mut(),
             &mut self.rng,
         );
-        metrics.replan_rounds = plan_rounds;
+        match session {
+            Some(s) => {
+                // Commit (off-timeline if the queue drained first); the
+                // outcome serves the next iteration, any convergence tail
+                // past this iteration's end is charged to it as a stall.
+                let out = s.finalize(router);
+                metrics.replan_rounds = out.rounds;
+                metrics.plan_overlap_s = out.committed_at.min(metrics.makespan_s).max(0.0);
+                metrics.stale_replans = out.stale as usize;
+                self.pending_stall = (out.committed_at - metrics.makespan_s).max(0.0);
+                self.committed = Some(out.paths);
+            }
+            None => metrics.replan_rounds = blocking_rounds,
+        }
 
         // Source-scheduled crashes/joins/rejoins update the liveness
         // authority *after* the iteration: the next plan sees them, this
@@ -292,17 +496,21 @@ impl TrainingSim {
     ///
     /// `churn_state` supplies start-of-iteration liveness (aggregation
     /// membership and availability windows); `paths` are the routed flows
-    /// (one per microbatch).  With a churn-only schedule this reproduces
-    /// the pre-engine simulator byte for byte.
+    /// (one per microbatch); `session`, when present, is the in-flight
+    /// plan session the schedule's `plan_rounds` ticks advance (crashes
+    /// landing before it converges invalidate its ticket).  With a
+    /// churn-only schedule this reproduces the pre-engine simulator byte
+    /// for byte.
     #[allow(clippy::too_many_arguments)]
     pub fn run_schedule(
         &mut self,
         prob: &FlowProblem,
-        router: &mut dyn Router,
+        router: &mut dyn RoutingPolicy,
         sched: &WorldSchedule,
         churn_state: &ChurnProcess,
         planning_s: f64,
         paths: Vec<FlowPath>,
+        mut session: Option<&mut PlanSession>,
         _rng: &mut Rng,
     ) -> IterationMetrics {
         let n = self.topo.n();
@@ -347,6 +555,14 @@ impl TrainingSim {
         for &t in &sched.gossip_ticks {
             q.schedule(t.max(0.0), Ev::World(WorldEvent::Gossip));
         }
+        // Only the ticks the in-flight session can consume enter the
+        // queue: the session commits on its ticket's round count (repair
+        // rounds extend the commit instant arithmetically, not via
+        // ticks), and without a session every tick would be a dead event.
+        let plan_ticks = session.as_deref().map_or(0, PlanSession::rounds_needed);
+        for &t in sched.plan_rounds.iter().take(plan_ticks) {
+            q.schedule(t.max(0.0), Ev::World(WorldEvent::PlanRound));
+        }
         // Data nodes send out all their microbatches at t=0 (transfer to hop 0).
         for (mi, mb) in mbs.iter().enumerate() {
             let d = mb.path.source;
@@ -362,11 +578,22 @@ impl TrainingSim {
             let (mi, phase) = match ev {
                 Ev::World(WorldEvent::Crash(node)) => {
                     router.on_crash(node);
+                    // A crash while a plan is converging invalidates the
+                    // in-flight ticket (§V-D repair at commit).
+                    if let Some(s) = session.as_deref_mut() {
+                        s.note_crash(node);
+                    }
                     continue;
                 }
                 Ev::World(WorldEvent::Join(_)) => continue,
                 Ev::World(WorldEvent::Gossip) => {
                     router.on_gossip(t);
+                    continue;
+                }
+                Ev::World(WorldEvent::PlanRound) => {
+                    if let Some(s) = session.as_deref_mut() {
+                        s.on_round(t, router);
+                    }
                     continue;
                 }
                 Ev::Micro(mi, phase) => (mi, phase),
@@ -468,6 +695,7 @@ mod tests {
             slowdowns: vec![Slowdown { node: NodeId(3), from: 0.0, until: 9.0, factor: 2.0 }],
             agg_crashes: vec![(NodeId(6), 0.2)],
             gossip_ticks: vec![4.5, 9.0],
+            plan_rounds: vec![1.5, 3.0],
         });
         assert_eq!(a.crashes.len(), 2);
         assert_eq!(a.rejoins, vec![NodeId(4)]);
@@ -476,6 +704,7 @@ mod tests {
         assert_eq!(a.slowdowns.len(), 1);
         assert_eq!(a.agg_crashes.len(), 1);
         assert_eq!(a.gossip_ticks, vec![4.5, 9.0]);
+        assert_eq!(a.plan_rounds, vec![1.5, 3.0]);
         assert!(!a.is_empty());
         assert!(WorldSchedule::default().is_empty());
     }
@@ -570,5 +799,101 @@ mod tests {
         assert!(m.completed > 0);
         assert!(!engine.churn.is_alive(victim), "source crash must persist");
         assert_eq!(engine.iterations(), 1);
+    }
+
+    /// Drive `iters` iterations of a fresh table2 scenario under the
+    /// round-latency lifecycle at `rtt_s` seconds per planning round.
+    fn round_latency_run(rtt_s: f64, churn: f64, iters: usize) -> Vec<IterationMetrics> {
+        let sc = build(&ScenarioConfig::table2(true, churn, 11));
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 11);
+        let mut engine = Engine::from_scenario(&sc, 3);
+        engine.warm_replan = true;
+        engine.set_plan_round_rtt(rtt_s);
+        (0..iters).map(|_| engine.step(&sc.prob, &mut router)).collect()
+    }
+
+    #[test]
+    fn round_latency_cold_start_charges_then_overlap_hides_planning() {
+        let ms = round_latency_run(0.5, 0.0, 4);
+        // Iteration 0 blocks on the cold plan: charge = rounds * rtt.
+        assert!(ms[0].replan_rounds > 0);
+        assert!(
+            (ms[0].planning_s - ms[0].replan_rounds as f64 * 0.5).abs() < 1e-9,
+            "cold-start charge must be the convergence window: {} vs {} rounds",
+            ms[0].planning_s,
+            ms[0].replan_rounds
+        );
+        // Steady state at a small RTT: the warm session converges well
+        // inside the iteration — overlap hides it all, no stall.
+        for m in &ms[1..] {
+            assert!(m.plan_overlap_s > 0.0, "session must overlap training");
+            assert!(m.replan_rounds > 0, "session rounds recorded");
+            assert_eq!(m.stale_replans, 0, "no churn, no stale tickets");
+        }
+        for m in &ms[2..] {
+            assert_eq!(m.planning_s, 0.0, "fully-overlapped plans cost nothing");
+        }
+    }
+
+    #[test]
+    fn round_latency_stall_grows_once_rtt_stops_hiding() {
+        // 600s per round: even a handful of warm rounds outlasts any
+        // iteration (the 2x-estimate deadline bounds the microbatch
+        // phase), so the convergence tail must surface as a stall.
+        let fast: f64 = round_latency_run(0.5, 0.0, 5).iter().map(|m| m.makespan_s).sum();
+        let slow_ms = round_latency_run(600.0, 0.0, 5);
+        let slow: f64 = slow_ms.iter().map(|m| m.makespan_s).sum();
+        assert!(
+            slow > fast,
+            "rounds at 600s RTT must stop hiding behind the iteration: {slow} vs {fast}"
+        );
+        assert!(
+            slow_ms[2..].iter().any(|m| m.planning_s > 0.0),
+            "some steady-state iteration must pay a planning stall"
+        );
+    }
+
+    #[test]
+    fn mid_planning_crash_marks_ticket_stale_and_repairs() {
+        struct CrashAt {
+            at_iter: usize,
+            victim: NodeId,
+            frac: f64,
+        }
+        impl EventSource for CrashAt {
+            fn name(&self) -> &str {
+                "crash-at"
+            }
+            fn sample(&mut self, iter: usize, horizon: Time) -> WorldSchedule {
+                if iter != self.at_iter {
+                    return WorldSchedule::default();
+                }
+                WorldSchedule {
+                    crashes: vec![(self.victim, self.frac * horizon)],
+                    ..Default::default()
+                }
+            }
+        }
+        let sc = build(&ScenarioConfig::table2(true, 0.0, 21));
+        let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 21);
+        let mut engine = Engine::from_scenario(&sc, 9);
+        engine.warm_replan = true;
+        // 30s per round: the warm session is still converging when the
+        // crash lands at 5% of the horizon (well before the session's
+        // earliest possible convergence tick).
+        engine.set_plan_round_rtt(30.0);
+        let m0 = engine.step(&sc.prob, &mut router);
+        assert_eq!(m0.stale_replans, 0, "cold start commits before any crash");
+        let victim = sc.prob.graph.stages[1][0];
+        engine.add_source(Box::new(CrashAt { at_iter: 1, victim, frac: 0.05 }));
+        let m1 = engine.step(&sc.prob, &mut router);
+        assert_eq!(
+            m1.stale_replans, 1,
+            "a crash during plan convergence must mark the ticket stale"
+        );
+        // The stale commit's §V-D repair keeps the next iteration off the
+        // dead relay without a restart: the run keeps completing work.
+        let m2 = engine.step(&sc.prob, &mut router);
+        assert!(m2.completed > 0, "repaired plan must keep routing work");
     }
 }

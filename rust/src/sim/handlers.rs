@@ -13,7 +13,7 @@ use crate::flow::graph::{FlowPath, FlowProblem};
 
 use super::engine::Ev;
 use super::events::{EventQueue, Slots, Time};
-use super::training::{IterationMetrics, RecoveryPolicy, Router, TrainingSim};
+use super::training::{IterationMetrics, RecoveryPolicy, RoutingPolicy, TrainingSim};
 
 /// Phase of a microbatch's journey.
 #[derive(Debug, Clone, Copy)]
@@ -79,7 +79,7 @@ impl TrainingSim {
         hop: usize,
         is_fwd: bool,
         prob: &FlowProblem,
-        router: &mut dyn Router,
+        router: &mut dyn RoutingPolicy,
         slots: &mut [Slots],
         inflight: &mut [usize],
         mbs: &mut Vec<MicrobatchState>,
@@ -135,7 +135,7 @@ impl TrainingSim {
                 })
                 .copied()
                 .collect();
-            match router.choose_replacement(prev, next, hop, sink, &candidates) {
+            match router.choose_replacement(prev, next, &candidates) {
                 Some(m) => {
                     let dt = self.transfer_s(prev, m, t);
                     metrics.comm_s += dt;
@@ -224,7 +224,7 @@ impl TrainingSim {
             } else {
                 (with_memory, 0.0)
             };
-            match router.choose_replacement(prev, next, stage, sink, &candidates) {
+            match router.choose_replacement(prev, next, &candidates) {
                 Some(m) => {
                     // prev resends its stored activation to m.
                     let dt = self.transfer_s(prev, m, detect + wait);
@@ -269,7 +269,7 @@ impl TrainingSim {
                     } else {
                         (with_memory, 0.0)
                     };
-                    match router.choose_replacement(prev, next, stage, sink, &candidates) {
+                    match router.choose_replacement(prev, next, &candidates) {
                         Some(m) => {
                             // fetch activation from the fwd-side neighbour +
                             // recompute fwd at m, then continue bwd at m.
@@ -319,8 +319,6 @@ impl TrainingSim {
                             match router.choose_replacement(
                                 if s == 0 { sink } else { newpath.relays[s - 1] },
                                 if s + 1 < n_stages { newpath.relays[s + 1] } else { sink },
-                                s,
-                                sink,
                                 &candidates,
                             ) {
                                 Some(m) => newpath.relays[s] = m,

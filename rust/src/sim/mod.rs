@@ -22,8 +22,9 @@
 //!   every other source.
 //! - [`churn_process`] — the exact exponential inter-arrival sampler
 //!   behind [`churn::ChurnModel::Poisson`].
-//! - [`training`] — the [`training::Router`] policy trait, configuration,
-//!   metrics, and the physical model.
+//! - [`training`] — the [`training::RoutingPolicy`] plan-lifecycle
+//!   contract (request -> rounds on the clock -> commit at convergence),
+//!   configuration, metrics, and the physical model.
 //! - [`scenario`] — builders for the paper's experiment setups.
 
 pub mod churn;
@@ -37,6 +38,11 @@ pub mod training;
 
 pub use churn::{ChurnModel, ChurnProcess};
 pub use churn_process::PoissonChurn;
-pub use engine::{Engine, EventSource, JitterWindow, Slowdown, WorldSchedule};
+pub use engine::{
+    Engine, EventSource, JitterWindow, PlanLifecycle, PlanSession, Slowdown, WorldSchedule,
+};
 pub use events::EventQueue;
-pub use training::{IterationMetrics, RecoveryPolicy, Router, TrainingSim, TrainingSimConfig};
+pub use training::{
+    BlockingPlanAdapter, BlockingPlanner, IterationMetrics, PlanOutcome, PlanRequest, PlanTicket,
+    RecoveryPolicy, RoutingPolicy, TrainingSim, TrainingSimConfig,
+};

@@ -47,6 +47,14 @@ pub struct ScenarioConfig {
     /// keeps the legacy global-visibility planner (the paper-table
     /// scenarios, bit-for-bit stable).
     pub overlay_fanout: Option<usize>,
+    /// Virtual seconds per flow-planning protocol round.  `Some(rtt)`
+    /// puts the plan lifecycle on the continuous clock
+    /// ([`super::engine::PlanLifecycle::RoundLatency`] plus a
+    /// [`super::sources::PlanningSource`]): iterations run on the
+    /// previous committed plan while the next converges, and planning
+    /// that outlasts an iteration stalls the next one.  `None` keeps the
+    /// degenerate commit-at-request lifecycle (bit-for-bit stable).
+    pub plan_round_rtt_s: Option<f64>,
     pub seed: u64,
 }
 
@@ -64,6 +72,7 @@ impl ScenarioConfig {
             churn_model: ChurnModel::Bernoulli,
             base_compute_s: 8.0,
             overlay_fanout: None,
+            plan_round_rtt_s: None,
             seed,
         }
     }
@@ -92,6 +101,7 @@ impl ScenarioConfig {
             churn_model: ChurnModel::Bernoulli,
             base_compute_s: 8.0,
             overlay_fanout: None,
+            plan_round_rtt_s: None,
             seed,
         }
     }
@@ -113,6 +123,7 @@ impl ScenarioConfig {
             churn_model: ChurnModel::Poisson,
             base_compute_s: 8.0,
             overlay_fanout: Some(DEFAULT_OVERLAY_FANOUT),
+            plan_round_rtt_s: None,
             seed,
         }
     }
@@ -189,7 +200,7 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
     let payload = act.bytes();
 
     let demand = vec![cfg.microbatches_per_data; cfg.n_data];
-    let graph = StageGraph { stages, data_nodes: data_nodes.clone() };
+    let graph = std::sync::Arc::new(StageGraph { stages, data_nodes: data_nodes.clone() });
     let topo_for_cost = topo.clone();
     let prob = FlowProblem {
         graph,
@@ -296,6 +307,18 @@ mod tests {
         assert_eq!(s.engine(1).sources.len(), 1);
         let legacy = build(&ScenarioConfig::table2(true, 0.1, 8));
         assert!(legacy.engine(1).sources.is_empty());
+    }
+
+    #[test]
+    fn plan_round_rtt_knob_wires_the_lifecycle() {
+        use super::super::engine::PlanLifecycle;
+        let mut cfg = ScenarioConfig::table2(true, 0.0, 11);
+        cfg.plan_round_rtt_s = Some(2.5);
+        let s = build(&cfg);
+        let engine = s.engine(1);
+        assert_eq!(engine.plan_lifecycle, PlanLifecycle::RoundLatency { rtt_s: 2.5 });
+        assert_eq!(engine.sources.len(), 1, "planning cadence source attached");
+        assert_eq!(engine.sources[0].name(), crate::sim::sources::PLANNING_SOURCE_NAME);
     }
 
     #[test]

@@ -5,11 +5,13 @@
 //! sources onto a single virtual timeline.  These cover the event kinds
 //! the iteration-synchronous simulator could not express: link-latency
 //! jitter, time-varying stragglers, crashes *inside* the aggregation
-//! barrier, and nodes joining mid-iteration.  Churn itself goes through
-//! the same contract: [`crate::sim::ChurnProcess`] implements
-//! [`EventSource`] (Bernoulli or continuous-clock Poisson) and holds the
-//! engine's dedicated liveness-authority slot rather than living in the
-//! extra-sources list.
+//! barrier, nodes joining mid-iteration, and the protocol cadences that
+//! put gossip failure detection ([`GossipCadenceSource`]) and flow-plan
+//! convergence ([`PlanningSource`]) on the engine clock.  Churn itself
+//! goes through the same contract: [`crate::sim::ChurnProcess`]
+//! implements [`EventSource`] (Bernoulli or continuous-clock Poisson) and
+//! holds the engine's dedicated liveness-authority slot rather than
+//! living in the extra-sources list.
 
 use crate::cost::NodeId;
 use crate::util::Rng;
@@ -167,6 +169,45 @@ impl EventSource for GossipCadenceSource {
     }
 }
 
+/// Flow-planning protocol rounds on the continuous clock: one
+/// `plan_rounds` tick every `rtt_s` of virtual time (the §V-C
+/// control-message round trip across the slowest participating link),
+/// covering the same 4x-horizon span as the other sources so a slow plan
+/// keeps converging while straggling microbatches drain.  The engine's
+/// in-flight [`crate::sim::engine::PlanSession`] advances one protocol
+/// round per tick and the plan commits at the tick its rounds converge —
+/// this is the clock that decides where warm-replan overlap stops hiding
+/// planning cost (`gwtf bench planlag`).  Stateless and identical every
+/// iteration, so it perturbs no RNG stream.
+pub struct PlanningSource {
+    pub rtt_s: f64,
+}
+
+impl PlanningSource {
+    pub fn new(rtt_s: f64) -> Self {
+        assert!(rtt_s > 0.0, "plan-round RTT must be positive");
+        PlanningSource { rtt_s }
+    }
+}
+
+/// [`EventSource::name`] of the planning-round cadence, used by
+/// [`crate::sim::engine::Engine::set_plan_round_rtt`] to replace a
+/// previously attached instance instead of stacking cadences.
+pub const PLANNING_SOURCE_NAME: &str = "plan-rounds";
+
+impl EventSource for PlanningSource {
+    fn name(&self) -> &str {
+        PLANNING_SOURCE_NAME
+    }
+
+    fn sample(&mut self, _iter: usize, horizon: Time) -> WorldSchedule {
+        let span = horizon * SPAN_FACTOR;
+        let n_ticks = ((span / self.rtt_s).ceil() as usize).clamp(1, 4096);
+        let plan_rounds: Vec<Time> = (1..=n_ticks).map(|k| k as f64 * self.rtt_s).collect();
+        WorldSchedule { plan_rounds, ..Default::default() }
+    }
+}
+
 /// A node joining mid-iteration (§V-B): invisible to the planner this
 /// iteration, but crash recovery can route onto it from its join instant,
 /// and it is full membership from the next iteration on.
@@ -252,6 +293,20 @@ mod tests {
             }
             assert!(!sched.is_empty());
             assert!(sched.crashes.is_empty() && sched.joins.is_empty());
+        }
+    }
+
+    #[test]
+    fn plan_rounds_tile_the_span_every_iteration() {
+        let mut s = PlanningSource::new(10.0);
+        for iter in 0..3 {
+            let sched = s.sample(iter, 100.0);
+            assert_eq!(sched.plan_rounds.len(), 40, "4x span / 10s RTT");
+            for (k, &t) in sched.plan_rounds.iter().enumerate() {
+                assert!((t - (k + 1) as f64 * 10.0).abs() < 1e-9);
+            }
+            assert!(!sched.is_empty());
+            assert!(sched.crashes.is_empty() && sched.gossip_ticks.is_empty());
         }
     }
 

@@ -1,5 +1,6 @@
-//! Training-simulation surface: routing policy trait, configuration,
-//! per-iteration metrics, and the [`TrainingSim`] physical model.
+//! Training-simulation surface: the plan-lifecycle routing contract,
+//! configuration, per-iteration metrics, and the [`TrainingSim`] physical
+//! model.
 //!
 //! Reproduces the paper's measurement methodology (§VI): each iteration,
 //! every data node pushes its microbatches along the routed flows; the
@@ -7,6 +8,39 @@
 //! aggregation barrier with per-node concurrency slots (`cap_i`), link
 //! delays from the topology, node crashes mid-iteration, and the recovery
 //! protocols (GWTF path repair vs SWARM full-pipeline restart).
+//!
+//! # The plan lifecycle ([`RoutingPolicy`])
+//!
+//! The paper's §V-C efficiency claim is that flow planning "converges ...
+//! significantly faster than a training iteration" while running *in
+//! parallel* with training.  The routing contract therefore models
+//! planning as a **lifecycle on the engine's continuous clock** rather
+//! than a synchronous call:
+//!
+//! 1. the engine *requests* a plan at iteration start —
+//!    [`RoutingPolicy::request_plan`] returns a [`PlanTicket`] naming the
+//!    protocol rounds the session needs to converge;
+//! 2. planning rounds are delivered as engine events
+//!    (`WorldSchedule::plan_rounds`, emitted by
+//!    [`crate::sim::sources::PlanningSource`] at the configured
+//!    round-RTT) and tracked by a [`crate::sim::engine::PlanSession`];
+//! 3. the plan *commits* at the virtual time its rounds actually converge
+//!    — [`RoutingPolicy::commit_plan`] returns the [`PlanOutcome`].  A
+//!    crash landing while the session is in flight marks the ticket
+//!    *stale*: the policy performs a §V-D local repair of the in-flight
+//!    plan at commit instead of silently restarting.
+//!
+//! Cold-start charge (no previous plan: the iteration blocks until the
+//! commit), warm-replan overlap (the session converges while training
+//! runs) and mid-planning churn invalidation all fall out of the
+//! timeline.  The degenerate configuration —
+//! [`crate::sim::engine::PlanLifecycle::CommitAtRequest`], the default —
+//! commits at the request instant with the ticket's blocking charge and
+//! reproduces the pre-lifecycle simulator bit for bit.
+//!
+//! Single-shot planners (SWARM's greedy wiring, DT-FM's GA) implement the
+//! narrower [`BlockingPlanner`] hook and ride the lifecycle through
+//! [`BlockingPlanAdapter`], which stays one-commit-per-request.
 //!
 //! The continuous-time event kernel that executes an iteration lives in
 //! [`super::engine`] (the dispatch loop over the [`super::events`] queue)
@@ -23,7 +57,10 @@
 //! - *throughput* — microbatches completing both passes in the iteration,
 //! - *communication time* — total payload transfer seconds,
 //! - *wasted GPU time* — compute spent on work excluded from aggregation
-//!   (crashed mid-task, orphaned by a broken flow, or recomputed).
+//!   (crashed mid-task, orphaned by a broken flow, or recomputed),
+//! plus the lifecycle diagnostics `plan_overlap_s` (planning seconds
+//! hidden behind training) and `stale_replans` (tickets invalidated by
+//! mid-planning churn).
 
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
@@ -44,32 +81,99 @@ pub enum RecoveryPolicy {
     RestartPipeline,
 }
 
-/// Routing policy plugged into the simulator (GWTF, SWARM, DT-FM, ...).
-pub trait Router {
+/// A plan request issued by the engine at virtual time `requested_at`.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanRequest<'a> {
+    /// Start-of-iteration liveness (`alive[n.0]`), the planner's view.
+    pub alive: &'a [bool],
+    /// Invalidation set carried over from the previous plan: nodes that
+    /// died since it was requested.  Flows through them must be torn down
+    /// and repaired; surviving flows should be kept.  Seeds the ticket's
+    /// invalidation set ([`PlanTicket::invalidated`]).
+    pub dirty: &'a [NodeId],
+    /// Whether a warm start from the previous plan's surviving chains is
+    /// requested (§V-A Request Flow / Change / Redirect re-run locally
+    /// around the crash sites).  Single-shot planners ignore this and
+    /// cold-plan — the SWARM/DT-FM baseline behavior.
+    pub warm: bool,
+    /// Virtual time of the request on the iteration timeline.
+    pub requested_at: Time,
+    /// Engine iteration issuing the request (diagnostics).
+    pub iter: usize,
+}
+
+/// Handle to an in-flight planning session, returned by
+/// [`RoutingPolicy::request_plan`].
+#[derive(Debug, Clone)]
+pub struct PlanTicket {
+    /// Session id; strictly increasing per policy.  Exactly one
+    /// [`RoutingPolicy::commit_plan`] per ticket, in request order.
+    pub id: u64,
+    /// Protocol rounds the session needs to converge.  `0` marks a
+    /// single-shot planner with no round-based protocol (the engine then
+    /// commits at the request using `ready_after_s`).
+    pub rounds: usize,
+    /// Blocking-mode convergence latency after the request: the wall-time
+    /// the plan costs when nothing overlaps it (GWTF charges the cold
+    /// start's control rounds here, DT-FM its GA compute; warm re-plans
+    /// and SWARM's on-the-fly wiring claim `0.0`).
+    pub ready_after_s: f64,
+    /// Echo of [`PlanRequest::requested_at`].
+    pub requested_at: Time,
+    /// The request-time half of the ticket's invalidation set: a copy of
+    /// [`PlanRequest::dirty`], already incorporated by the planner at
+    /// request time.  Crashes landing while the session is in flight are
+    /// tracked engine-side (by the
+    /// [`PlanSession`](crate::sim::engine::PlanSession)) and arrive as
+    /// [`RoutingPolicy::commit_plan`]'s separate `invalidated` argument —
+    /// do not expect them here.
+    pub invalidated: Vec<NodeId>,
+}
+
+/// The committed outcome of a planning session.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    /// The routed flows (one per microbatch).
+    pub paths: Vec<FlowPath>,
+    /// Virtual time the plan became usable.  Blocking policies claim
+    /// `requested_at + ready_after_s`; when a
+    /// [`PlanSession`](crate::sim::engine::PlanSession) drives the rounds
+    /// on the engine clock, the session overwrites this with the instant
+    /// the last round converged.
+    pub committed_at: Time,
+    /// Total protocol rounds consumed, including any commit-time §V-D
+    /// repair rounds.
+    pub rounds: usize,
+    /// True iff churn invalidated the ticket while the session was in
+    /// flight: the delivered paths went through a commit-time local
+    /// repair rather than a clean convergence.
+    pub stale: bool,
+}
+
+/// Routing policy plugged into the simulator (GWTF, SWARM, DT-FM, ...):
+/// the plan lifecycle (see the module docs) plus the mid-iteration
+/// recovery hooks.
+pub trait RoutingPolicy {
     fn name(&self) -> String;
 
-    /// (Re)plan flows from scratch at iteration start. `alive[n]` is
-    /// current liveness.  Returns the routed paths and the planning
-    /// wall-time to charge.
-    fn plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64);
+    /// Open a planning session for `req` and return its ticket.  The
+    /// policy computes the candidate plan here (planning is CPU work; the
+    /// *timeline* cost is modeled by when the commit lands), stashing it
+    /// until [`commit_plan`](RoutingPolicy::commit_plan).
+    fn request_plan(&mut self, req: &PlanRequest) -> PlanTicket;
 
-    /// Incrementally re-plan after membership changes.  `dirty` lists the
-    /// nodes that died since the previous plan; flows through them must
-    /// be torn down and repaired, surviving flows should be kept.
-    ///
-    /// The default cold-starts via [`Router::plan`] — that is the
-    /// SWARM/DT-FM baseline behavior.  GWTF overrides this with a warm
-    /// start from its surviving chains (§V-A Request Flow / Change /
-    /// Redirect re-run locally around the crash sites).
-    fn replan(&mut self, alive: &[bool], dirty: &[NodeId]) -> (Vec<FlowPath>, f64) {
-        let _ = dirty;
-        self.plan(alive)
-    }
+    /// Close the session opened by `ticket` and deliver its outcome.
+    /// `invalidated` lists nodes that crashed *after* the request while
+    /// the session was in flight (beyond `ticket.invalidated`, which the
+    /// request already incorporated); a non-empty set obliges the policy
+    /// to locally repair the in-flight plan (§V-D) and mark the outcome
+    /// stale.  Exactly one commit per ticket, in request order.
+    fn commit_plan(&mut self, ticket: &PlanTicket, invalidated: &[NodeId]) -> PlanOutcome;
 
-    /// Protocol rounds consumed by the most recent [`Router::plan`] /
-    /// [`Router::replan`] call, for the warm-replan diagnostics column in
-    /// the experiment tables.  Routers without a round-based protocol
-    /// (SWARM's greedy wiring, DT-FM's GA) report 0.
+    /// Protocol rounds consumed by the most recent planning session, for
+    /// the warm-replan diagnostics column in the experiment tables.
+    /// Policies without a round-based protocol (SWARM's greedy wiring,
+    /// DT-FM's GA) report 0.
     fn last_plan_rounds(&self) -> usize {
         0
     }
@@ -80,24 +184,121 @@ pub trait Router {
     /// A gossip-overlay round fires at virtual time `t`
     /// (`WorldSchedule::gossip_ticks`, emitted by
     /// [`crate::sim::sources::GossipCadenceSource`]): probe peers,
-    /// escalate suspicion, repair views.  Routers without an overlay
+    /// escalate suspicion, repair views.  Policies without an overlay
     /// ignore it.
     fn on_gossip(&mut self, t: Time) {
         let _ = t;
     }
 
-    /// Choose a replacement relay at `stage` for a flow `prev -> X -> next`
-    /// whose X crashed. `candidates` are alive nodes with a free slot.
+    /// Choose a replacement relay for a flow `prev -> X -> next` whose X
+    /// crashed. `candidates` are alive same-stage nodes with a free slot;
+    /// the pick must come from them.
     fn choose_replacement(
         &mut self,
         prev: NodeId,
         next: NodeId,
-        stage: usize,
-        sink: NodeId,
         candidates: &[NodeId],
     ) -> Option<NodeId>;
 
     fn recovery(&self) -> RecoveryPolicy;
+}
+
+/// Single-shot planner hook for policies with no incremental or
+/// round-based protocol: one fresh plan per call, no session state.
+/// Wrap in a [`BlockingPlanAdapter`] to plug into the engine.
+pub trait BlockingPlanner {
+    fn name(&self) -> String;
+
+    /// Plan from scratch over `alive`.  Returns the routed paths and the
+    /// blocking wall-time the plan costs (0.0 for on-the-fly wiring).
+    fn plan_once(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64);
+
+    fn on_crash(&mut self, node: NodeId);
+
+    fn choose_replacement(
+        &mut self,
+        prev: NodeId,
+        next: NodeId,
+        candidates: &[NodeId],
+    ) -> Option<NodeId>;
+
+    fn recovery(&self) -> RecoveryPolicy;
+}
+
+/// Adapts a [`BlockingPlanner`] to the [`RoutingPolicy`] plan lifecycle:
+/// every request runs the single-shot planner immediately and the commit
+/// delivers that result — one commit per request, `rounds = 0`, never
+/// stale (there is no in-flight window for churn to invalidate).  The
+/// engine treats `rounds == 0` tickets as blocking even under
+/// [`crate::sim::engine::PlanLifecycle::RoundLatency`], so baselines keep
+/// their paper semantics in every lifecycle mode.
+pub struct BlockingPlanAdapter<P: BlockingPlanner> {
+    inner: P,
+    next_ticket: u64,
+    pending: Option<(u64, Vec<FlowPath>, f64)>,
+}
+
+impl<P: BlockingPlanner> BlockingPlanAdapter<P> {
+    pub fn new(inner: P) -> Self {
+        BlockingPlanAdapter { inner, next_ticket: 0, pending: None }
+    }
+
+    pub fn inner(&self) -> &P {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut P {
+        &mut self.inner
+    }
+}
+
+impl<P: BlockingPlanner> RoutingPolicy for BlockingPlanAdapter<P> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn request_plan(&mut self, req: &PlanRequest) -> PlanTicket {
+        let (paths, charge) = self.inner.plan_once(req.alive);
+        let id = self.next_ticket;
+        self.next_ticket += 1;
+        self.pending = Some((id, paths, charge));
+        PlanTicket {
+            id,
+            rounds: 0,
+            ready_after_s: charge,
+            requested_at: req.requested_at,
+            invalidated: req.dirty.to_vec(),
+        }
+    }
+
+    fn commit_plan(&mut self, ticket: &PlanTicket, _invalidated: &[NodeId]) -> PlanOutcome {
+        let (id, paths, charge) =
+            self.pending.take().expect("commit_plan without a matching request_plan");
+        assert_eq!(id, ticket.id, "plan tickets must commit in request order");
+        PlanOutcome {
+            paths,
+            committed_at: ticket.requested_at + charge,
+            rounds: 0,
+            stale: false,
+        }
+    }
+
+    fn on_crash(&mut self, node: NodeId) {
+        self.inner.on_crash(node)
+    }
+
+    fn choose_replacement(
+        &mut self,
+        prev: NodeId,
+        next: NodeId,
+        candidates: &[NodeId],
+    ) -> Option<NodeId> {
+        self.inner.choose_replacement(prev, next, candidates)
+    }
+
+    fn recovery(&self) -> RecoveryPolicy {
+        self.inner.recovery()
+    }
 }
 
 /// Simulation configuration.
@@ -160,9 +361,19 @@ pub struct IterationMetrics {
     /// continuous-time schedule (`WorldSchedule::agg_crashes`).
     pub agg_recoveries: usize,
     /// Flow-protocol rounds the iteration's (re)plan took
-    /// ([`Router::last_plan_rounds`]); warm re-plans resume surviving
-    /// chains and should need far fewer rounds than a cold plan.
+    /// ([`RoutingPolicy::last_plan_rounds`]); warm re-plans resume
+    /// surviving chains and should need far fewer rounds than a cold plan.
     pub replan_rounds: usize,
+    /// Planning seconds hidden behind training: the part of the plan
+    /// session's convergence window that overlapped the iteration
+    /// (`min(committed_at, makespan)`).  0 under the degenerate
+    /// commit-at-request lifecycle, which does not put planning on the
+    /// timeline.
+    pub plan_overlap_s: f64,
+    /// Plan tickets invalidated by churn while in flight this iteration
+    /// ([`PlanOutcome::stale`]): the plan went through a commit-time
+    /// §V-D local repair instead of a clean convergence.
+    pub stale_replans: usize,
 }
 
 impl IterationMetrics {
@@ -279,7 +490,7 @@ impl TrainingSim {
     pub fn run_iteration(
         &mut self,
         prob: &FlowProblem,
-        router: &mut dyn Router,
+        router: &mut dyn RoutingPolicy,
         churn: &ChurnEvents,
         churn_state: &ChurnProcess,
         planning_s: f64,
@@ -287,7 +498,7 @@ impl TrainingSim {
         rng: &mut Rng,
     ) -> IterationMetrics {
         let schedule = self.schedule_from_churn(churn);
-        self.run_schedule(prob, router, &schedule, churn_state, planning_s, paths, rng)
+        self.run_schedule(prob, router, &schedule, churn_state, planning_s, paths, None, rng)
     }
 
     /// §V-E training/aggregation synchronization barrier duration, plus
@@ -381,25 +592,26 @@ mod tests {
     use crate::net::TopologyConfig;
     use crate::sim::engine::{JitterWindow, Slowdown, WorldSchedule};
 
-    /// Trivial fixed router for tests: static paths, first-candidate reroute.
+    /// Trivial fixed single-shot planner for tests: static paths,
+    /// first-candidate reroute; exercises the [`BlockingPlanAdapter`] on
+    /// every engine path.
     struct FixedRouter {
         paths: Vec<FlowPath>,
         policy: RecoveryPolicy,
         plans: usize,
-        replans: usize,
     }
 
     impl FixedRouter {
-        fn new(paths: Vec<FlowPath>, policy: RecoveryPolicy) -> Self {
-            FixedRouter { paths, policy, plans: 0, replans: 0 }
+        fn new(paths: Vec<FlowPath>, policy: RecoveryPolicy) -> BlockingPlanAdapter<FixedRouter> {
+            BlockingPlanAdapter::new(FixedRouter { paths, policy, plans: 0 })
         }
     }
 
-    impl Router for FixedRouter {
+    impl BlockingPlanner for FixedRouter {
         fn name(&self) -> String {
             "fixed".into()
         }
-        fn plan(&mut self, _alive: &[bool]) -> (Vec<FlowPath>, f64) {
+        fn plan_once(&mut self, _alive: &[bool]) -> (Vec<FlowPath>, f64) {
             self.plans += 1;
             (self.paths.clone(), 0.0)
         }
@@ -408,8 +620,6 @@ mod tests {
             &mut self,
             _prev: NodeId,
             _next: NodeId,
-            _stage: usize,
-            _sink: NodeId,
             candidates: &[NodeId],
         ) -> Option<NodeId> {
             candidates.first().copied()
@@ -429,10 +639,10 @@ mod tests {
         for i in 0..5 {
             topo.set_profile(NodeId(i), NodeProfile::new(2.0, 2));
         }
-        let graph = StageGraph {
+        let graph = std::sync::Arc::new(StageGraph {
             stages: vec![vec![NodeId(1), NodeId(2)], vec![NodeId(3), NodeId(4)]],
             data_nodes: vec![NodeId(0)],
-        };
+        });
         let prob = FlowProblem {
             graph,
             cap: vec![4, 2, 2, 2, 2],
@@ -474,7 +684,7 @@ mod tests {
         let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
         let churn_state = ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
         let mut rng = Rng::new(0);
-        sim.run_schedule(&prob, &mut router, sched, &churn_state, 0.0, paths, &mut rng)
+        sim.run_schedule(&prob, &mut router, sched, &churn_state, 0.0, paths, None, &mut rng)
     }
 
     #[test]
@@ -553,14 +763,30 @@ mod tests {
     }
 
     #[test]
-    fn replan_default_falls_back_to_cold_plan() {
+    fn blocking_adapter_is_one_commit_per_request() {
         let (_, _, paths) = setup();
         let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
         let alive = vec![true; 5];
-        let (p, _) = router.replan(&alive, &[NodeId(3)]);
-        assert_eq!(p, paths);
-        assert_eq!(router.plans, 1, "trait default must delegate to plan()");
-        assert_eq!(router.replans, 0);
+        let req = PlanRequest {
+            alive: &alive,
+            dirty: &[NodeId(3)],
+            warm: true, // single-shot planners ignore the warm hint
+            requested_at: 0.0,
+            iter: 0,
+        };
+        let t0 = router.request_plan(&req);
+        assert_eq!(t0.rounds, 0, "single-shot planners have no round protocol");
+        assert_eq!(t0.invalidated, vec![NodeId(3)], "dirty seeds the ticket");
+        let out = router.commit_plan(&t0, &[]);
+        assert_eq!(out.paths, paths);
+        assert!(!out.stale);
+        assert_eq!(out.committed_at, 0.0, "zero charge commits at the request");
+        assert_eq!(router.inner().plans, 1, "one plan_once per request");
+
+        let t1 = router.request_plan(&req);
+        assert!(t1.id > t0.id, "ticket ids strictly increase");
+        assert_eq!(router.inner().plans, 2, "every request re-plans from scratch");
+        router.commit_plan(&t1, &[]);
     }
 
     #[test]
@@ -646,7 +872,7 @@ mod tests {
 
         let stuck = WorldSchedule { crashes: vec![(NodeId(3), 0.0)], ..Default::default() };
         let m_stuck = sim.run_schedule(
-            &prob, &mut router, &stuck, &churn_state, 0.0, paths.clone(), &mut rng,
+            &prob, &mut router, &stuck, &churn_state, 0.0, paths.clone(), None, &mut rng,
         );
         assert_eq!(m_stuck.completed, 0, "no stage-1 node available");
 
@@ -656,7 +882,7 @@ mod tests {
             ..Default::default()
         };
         let m_joined = sim.run_schedule(
-            &prob, &mut router, &rejoined, &churn_state, 0.0, paths, &mut rng,
+            &prob, &mut router, &rejoined, &churn_state, 0.0, paths, None, &mut rng,
         );
         assert_eq!(m_joined.completed, 2, "joiner must absorb the rerouted flows");
         assert!(m_joined.fwd_recoveries >= 1);

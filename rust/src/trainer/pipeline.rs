@@ -12,7 +12,7 @@ use crate::runtime::{
 };
 use crate::coordinator::GwtfRouter;
 use crate::sim::scenario::{build, Scenario, ScenarioConfig};
-use crate::sim::training::{Router, TrainingSim};
+use crate::sim::training::TrainingSim;
 use crate::sim::IterationMetrics;
 use crate::util::Rng;
 

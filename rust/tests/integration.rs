@@ -13,11 +13,13 @@ use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::metrics::MetricsTable;
 use gwtf::sim::engine::Engine;
 use gwtf::sim::scenario::{build, ScenarioConfig};
-use gwtf::sim::training::Router;
+use gwtf::sim::training::{
+    BlockingPlanAdapter, PlanOutcome, PlanRequest, PlanTicket, RoutingPolicy,
+};
 
 fn run_system(
     sc: &gwtf::sim::scenario::Scenario,
-    router: &mut dyn Router,
+    router: &mut dyn RoutingPolicy,
     iters: usize,
     seed: u64,
 ) -> Vec<gwtf::sim::IterationMetrics> {
@@ -26,7 +28,7 @@ fn run_system(
 
 fn run_engine(
     sc: &gwtf::sim::scenario::Scenario,
-    router: &mut dyn Router,
+    router: &mut dyn RoutingPolicy,
     iters: usize,
     seed: u64,
     warm_replan: bool,
@@ -67,7 +69,7 @@ fn swarm_pays_denies_under_capacity_pressure() {
     let topo = sc.topo.clone();
     let payload = sc.sim_cfg.payload_bytes;
     let comm: CostFn = Arc::new(move |i, j| topo.comm(i, j, payload));
-    let mut router = SwarmRouter::from_problem(&sc.prob, comm, 5);
+    let mut router = BlockingPlanAdapter::new(SwarmRouter::from_problem(&sc.prob, comm, 5));
     let ms = run_system(&sc, &mut router, 3, 5);
     let denies: usize = ms.iter().map(|m| m.denies).sum();
     assert!(denies > 0, "capacity-oblivious wiring must hit memory DENYs");
@@ -91,12 +93,19 @@ fn repair_policy_beats_restart_policy_under_churn() {
     // DESIGN.md §7 ablation: same scenario/churn, only the backward
     // recovery policy differs.  Wasted GPU time must favour path repair.
     struct Restarting(GwtfRouter);
-    impl Router for Restarting {
+    impl RoutingPolicy for Restarting {
         fn name(&self) -> String {
             "gwtf-restart".into()
         }
-        fn plan(&mut self, alive: &[bool]) -> (Vec<gwtf::flow::graph::FlowPath>, f64) {
-            self.0.plan(alive)
+        fn request_plan(&mut self, req: &PlanRequest) -> PlanTicket {
+            self.0.request_plan(req)
+        }
+        fn commit_plan(
+            &mut self,
+            ticket: &PlanTicket,
+            invalidated: &[gwtf::cost::NodeId],
+        ) -> PlanOutcome {
+            self.0.commit_plan(ticket, invalidated)
         }
         fn on_crash(&mut self, n: gwtf::cost::NodeId) {
             self.0.on_crash(n)
@@ -105,18 +114,9 @@ fn repair_policy_beats_restart_policy_under_churn() {
             &mut self,
             prev: gwtf::cost::NodeId,
             next: gwtf::cost::NodeId,
-            stage: usize,
-            sink: gwtf::cost::NodeId,
             c: &[gwtf::cost::NodeId],
         ) -> Option<gwtf::cost::NodeId> {
-            self.0.choose_replacement(prev, next, stage, sink, c)
-        }
-        fn replan(
-            &mut self,
-            alive: &[bool],
-            dirty: &[gwtf::cost::NodeId],
-        ) -> (Vec<gwtf::flow::graph::FlowPath>, f64) {
-            self.0.replan(alive, dirty)
+            self.0.choose_replacement(prev, next, c)
         }
         fn recovery(&self) -> gwtf::sim::RecoveryPolicy {
             gwtf::sim::RecoveryPolicy::RestartPipeline

@@ -23,7 +23,7 @@ use gwtf::flow::decentralized::DecentralizedFlow;
 use gwtf::flow::FlowParams;
 use gwtf::net::{GossipConfig, Overlay};
 use gwtf::sim::scenario::{build, ScenarioConfig, DEFAULT_OVERLAY_FANOUT};
-use gwtf::sim::training::Router;
+use gwtf::sim::training::RoutingPolicy;
 use gwtf::sim::{ChurnModel, ChurnProcess, Engine, EventSource};
 
 /// A GwtfRouter over `sc` with a full-fanout overlay attached (fanout =

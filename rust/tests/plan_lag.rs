@@ -1,0 +1,89 @@
+//! Test-sized plan-lag sweep + acceptance gate (ISSUE 4).
+//!
+//! Runs the plan-lifecycle round-RTT sweep with tiny rep/iteration
+//! counts, asserts the tentpole's acceptance property — **monotone
+//! makespan growth as the round-RTT approaches the iteration length**
+//! (overlap hides planning until `rounds x RTT` stops fitting inside an
+//! iteration, then every iteration pays a growing stall) — and maintains
+//! the `test_sized` profile of `BENCH_planlag.json` at the repo root.
+//! The full-size sweep is `gwtf bench planlag`, which fills the `full`
+//! profile of the same file.
+//!
+//! The CI scale-guard step runs this test alongside `scale_guard` so the
+//! plan-lifecycle property is gated on every push, and the
+//! `arm-baselines` job commits the captured profile on `main`.
+
+use gwtf::experiments::{
+    plan_lag_json_path, read_plan_lag_profile, run_plan_lag, update_plan_lag_json, PlanLagCase,
+    PlanLagOpts,
+};
+
+fn opts() -> PlanLagOpts {
+    PlanLagOpts {
+        rtts_s: vec![0.0, 0.5, 8.0, 30.0, 120.0],
+        reps: 1,
+        iters_per_rep: 5,
+        seed: 7,
+        churn_p: 0.2,
+    }
+}
+
+#[test]
+fn planlag_makespan_grows_monotonically_with_round_rtt() {
+    let (table, report) = run_plan_lag(&opts()).unwrap();
+
+    // Every (churn, rtt) cell produced samples.
+    assert_eq!(table.cells.len(), 2 * 5, "2 churn rows x 5 RTTs");
+    for acc in table.cells.values() {
+        assert_eq!(acc.throughput.len(), 5, "1 rep x 5 iterations");
+    }
+
+    // Acceptance: at 0% churn, makespan is monotone non-decreasing along
+    // the on-the-clock RTTs, and the slowest RTT visibly beats the
+    // blocking (rtt = 0) reference — the point where overlap stops
+    // hiding planning cost.
+    let clocked: Vec<&PlanLagCase> =
+        report.cases.iter().filter(|c| c.churn_p == 0.0 && c.rtt_s > 0.0).collect();
+    assert!(clocked.len() >= 3);
+    for w in clocked.windows(2) {
+        assert!(
+            w[1].makespan_mean_s >= w[0].makespan_mean_s - 1e-6,
+            "makespan regressed as RTT grew: {} @ {}s vs {} @ {}s",
+            w[0].makespan_mean_s,
+            w[0].rtt_s,
+            w[1].makespan_mean_s,
+            w[1].rtt_s
+        );
+    }
+    let blocking = report.case(0.0, 0.0).expect("blocking reference case");
+    let slowest = clocked.last().unwrap();
+    assert!(
+        slowest.makespan_mean_s > blocking.makespan_mean_s,
+        "{}s round-RTT must stop hiding behind the iteration ({} vs {})",
+        slowest.rtt_s,
+        slowest.makespan_mean_s,
+        blocking.makespan_mean_s
+    );
+    // A small RTT is fully hidden: overlap recorded, no steady-state
+    // stall (the only planning charge is iteration 0's cold start).
+    let fast = report.case(0.0, 0.5).unwrap();
+    assert!(fast.overlap_mean_s > 0.0, "warm sessions must overlap training");
+    assert!(
+        fast.stall_mean_s <= blocking.makespan_mean_s,
+        "a hidden plan must not stall more than an iteration"
+    );
+
+    // Capture the test_sized profile when it is still null/missing (or
+    // on explicit request); an armed profile is left untouched so plain
+    // `cargo test` runs never dirty the committed file.
+    let path = plan_lag_json_path();
+    let update = std::env::var("GWTF_UPDATE_PLANLAG").is_ok();
+    if update || read_plan_lag_profile(&path, "test_sized").is_none() {
+        update_plan_lag_json(&path, "test_sized", &report).unwrap();
+        eprintln!(
+            "planlag test_sized profile {} at {} — commit BENCH_planlag.json to record it",
+            if update { "re-captured (GWTF_UPDATE_PLANLAG)" } else { "was null/missing; captured" },
+            path.display()
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Shared conformance suite for the [`RoutingPolicy`] contract (ISSUE 4
+//! satellite): one generic body run against GWTF, SWARM and DT-FM, so
+//! the contract's invariants are asserted once instead of re-implemented
+//! ad hoc per router:
+//!
+//! - **plan validity** — every committed plan routes stage-valid paths
+//!   sourced at data nodes, within the per-source demand;
+//! - **dead-node exclusion** — a node dead at request time never appears
+//!   in the committed paths, and `choose_replacement` only ever picks
+//!   from the offered candidates;
+//! - **determinism per seed** — same seed, same request sequence =>
+//!   identical paths;
+//! - **ticket/commit ordering** — ticket ids strictly increase, the
+//!   request's `dirty` set seeds the ticket's invalidation set, and a
+//!   commit with no mid-flight invalidation is clean (`stale == false`,
+//!   blocking claim `committed_at == requested_at + ready_after_s`).
+
+use gwtf::baselines::{DtfmRouter, GaParams, SwarmRouter};
+use gwtf::coordinator::GwtfRouter;
+use gwtf::cost::NodeId;
+use gwtf::flow::graph::FlowPath;
+use gwtf::flow::FlowParams;
+use gwtf::sim::scenario::{build, Scenario, ScenarioConfig};
+use gwtf::sim::training::{BlockingPlanAdapter, PlanRequest, RoutingPolicy};
+use std::sync::Arc;
+
+fn scenario(seed: u64) -> Scenario {
+    build(&ScenarioConfig::table2(true, 0.0, seed))
+}
+
+fn request_commit<R: RoutingPolicy>(
+    r: &mut R,
+    alive: &[bool],
+    dirty: &[NodeId],
+    warm: bool,
+) -> (gwtf::sim::training::PlanTicket, gwtf::sim::training::PlanOutcome) {
+    let req = PlanRequest { alive, dirty, warm, requested_at: 0.0, iter: 0 };
+    let ticket = r.request_plan(&req);
+    let out = r.commit_plan(&ticket, &[]);
+    (ticket, out)
+}
+
+fn assert_plan_valid(sc: &Scenario, paths: &[FlowPath], alive: &[bool], label: &str) {
+    assert!(!paths.is_empty(), "{label}: empty plan with everyone alive");
+    let total_demand: usize = sc.prob.demand.iter().sum();
+    assert!(paths.len() <= total_demand, "{label}: routed more than the demand");
+    for p in paths {
+        assert!(sc.prob.graph.is_data_node(p.source), "{label}: source not a data node");
+        assert_eq!(p.relays.len(), sc.prob.graph.n_stages(), "{label}: wrong path length");
+        for (s, relay) in p.relays.iter().enumerate() {
+            assert!(
+                sc.prob.graph.stages[s].contains(relay),
+                "{label}: relay {relay} not in stage {s}"
+            );
+            assert!(alive[relay.0], "{label}: dead relay {relay} routed");
+        }
+    }
+}
+
+/// The conformance body.  `mk` builds a fresh policy for a policy seed
+/// over the given scenario.
+fn conformance<R: RoutingPolicy>(label: &str, sc: &Scenario, mk: impl Fn(&Scenario, u64) -> R) {
+    let n = sc.topo.n();
+    let all_alive = vec![true; n];
+
+    // --- plan validity + ticket/commit ordering ---
+    let mut r = mk(sc, 7);
+    let (t0, out0) = request_commit(&mut r, &all_alive, &[], false);
+    assert_plan_valid(sc, &out0.paths, &all_alive, label);
+    assert!(!out0.stale, "{label}: clean commit marked stale");
+    assert_eq!(out0.rounds, r.last_plan_rounds(), "{label}: rounds out of sync");
+    assert_eq!(
+        out0.committed_at, t0.ready_after_s,
+        "{label}: blocking claim must be request + charge"
+    );
+
+    // --- dead-node exclusion (a re-plan after a kill) ---
+    let victim = out0.paths[0].relays[0];
+    let mut alive = all_alive.clone();
+    alive[victim.0] = false;
+    let (t1, out1) = request_commit(&mut r, &alive, &[victim], true);
+    assert!(t1.id > t0.id, "{label}: ticket ids must strictly increase");
+    assert_eq!(t1.invalidated, vec![victim], "{label}: dirty must seed the ticket");
+    assert_plan_valid(sc, &out1.paths, &alive, label);
+    for p in &out1.paths {
+        assert!(!p.relays.contains(&victim), "{label}: dead node {victim} still routed");
+    }
+
+    // --- choose_replacement picks from the offered candidates only ---
+    let stage = 0;
+    let cands: Vec<NodeId> = sc.prob.graph.stages[stage]
+        .iter()
+        .filter(|&&m| m != victim)
+        .copied()
+        .collect();
+    let prev = sc.prob.graph.data_nodes[0];
+    let next = sc.prob.graph.stages[stage + 1][0];
+    let pick = r.choose_replacement(prev, next, &cands);
+    assert!(
+        pick.map(|m| cands.contains(&m)).unwrap_or(false),
+        "{label}: replacement must come from the candidate list"
+    );
+    assert_eq!(
+        r.choose_replacement(prev, next, &[]),
+        None,
+        "{label}: no candidates, no replacement"
+    );
+
+    // --- determinism per seed: same seed + same request sequence ---
+    let run = |seed: u64| {
+        let mut r = mk(sc, seed);
+        let (_, a) = request_commit(&mut r, &all_alive, &[], false);
+        let mut alive = all_alive.clone();
+        let victim = a.paths[0].relays[0];
+        alive[victim.0] = false;
+        let (_, b) = request_commit(&mut r, &alive, &[victim], true);
+        (a.paths, b.paths)
+    };
+    assert_eq!(run(21), run(21), "{label}: plans diverged across identical runs");
+}
+
+#[test]
+fn gwtf_conforms_to_the_routing_policy_contract() {
+    let sc = scenario(41);
+    conformance("gwtf", &sc, |sc, seed| {
+        GwtfRouter::from_scenario(sc, FlowParams::default(), seed)
+    });
+}
+
+#[test]
+fn swarm_adapter_conforms_to_the_routing_policy_contract() {
+    let sc = scenario(42);
+    conformance("swarm", &sc, |sc, seed| {
+        let topo = sc.topo.clone();
+        let payload = sc.sim_cfg.payload_bytes;
+        let comm: gwtf::baselines::CostFn = Arc::new(move |i, j| topo.comm(i, j, payload));
+        BlockingPlanAdapter::new(SwarmRouter::from_problem(&sc.prob, comm, seed))
+    });
+}
+
+#[test]
+fn dtfm_adapter_conforms_to_the_routing_policy_contract() {
+    let sc = scenario(43);
+    conformance("dtfm", &sc, |sc, seed| {
+        let topo = sc.topo.clone();
+        let payload = sc.sim_cfg.payload_bytes;
+        let cost: gwtf::baselines::CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
+        BlockingPlanAdapter::new(DtfmRouter::new(
+            sc.prob.graph.clone(),
+            sc.prob.demand.clone(),
+            cost,
+            GaParams { generations: 40, ..Default::default() },
+            seed,
+        ))
+    });
+}
