@@ -130,11 +130,24 @@ impl GwtfRouter {
     /// Build from a scenario (shares its Eq. 1 cost closure).  Scenarios
     /// with `overlay_fanout` set get a gossip overlay attached, seeded
     /// from the scenario seed so every router over the same scenario
-    /// bootstraps identical views.
+    /// bootstraps identical views.  Scenarios with
+    /// `congestion_aware_planning` route the closure through
+    /// [`crate::net::Topology::congestion_cost`]: every edge additionally
+    /// charges the expected NIC-queueing term derived from the same
+    /// shared-capacity substrate parameters (`ScenarioConfig::nic`) the
+    /// simulator executes — the planner prices fan-in backlogs instead of
+    /// discovering them at runtime.
     pub fn from_scenario(sc: &Scenario, params: FlowParams, seed: u64) -> Self {
         let topo = sc.topo.clone();
         let payload = sc.sim_cfg.payload_bytes;
-        let cost: CostFn = Arc::new(move |i, j| topo.cost(i, j, payload));
+        let cost: CostFn = if sc.cfg.congestion_aware_planning {
+            // The cloned topology carries `ScenarioConfig::nic`: the
+            // queueing term reads the very parameters the engine's
+            // substrate executes.
+            Arc::new(move |i, j| topo.congestion_cost(i, j, payload))
+        } else {
+            Arc::new(move |i, j| topo.cost(i, j, payload))
+        };
         let mut router = GwtfRouter::new(
             sc.prob.graph.clone(),
             sc.prob.cap.clone(),
@@ -660,6 +673,52 @@ mod tests {
         assert!(t1.id > t0.id, "ticket ids strictly increase");
         assert_eq!(t1.ready_after_s, 0.0, "only the cold start is charged");
         r.commit_plan(&t1, &[]);
+    }
+
+    #[test]
+    fn congestion_aware_router_parity_under_unlimited_nics() {
+        // ISSUE 5: unlimited-NIC mode must pin the congestion-aware
+        // closure to the legacy Eq. 1 planner bit for bit (router level).
+        let blind = build(&ScenarioConfig::congestion(None, false, 31));
+        let aware = build(&ScenarioConfig::congestion(None, true, 31));
+        let mut rb = GwtfRouter::from_scenario(&blind, FlowParams::default(), 31);
+        let mut ra = GwtfRouter::from_scenario(&aware, FlowParams::default(), 31);
+        let alive = vec![true; blind.topo.n()];
+        let (pb, chb) = rb.plan(&alive);
+        let (pa, cha) = ra.plan(&alive);
+        assert_eq!(pb, pa, "identical plans under the degenerate substrate");
+        assert_eq!(chb.to_bits(), cha.to_bits(), "identical cold-start charge");
+        assert_eq!(rb.last_rounds, ra.last_rounds);
+    }
+
+    #[test]
+    fn congestion_aware_router_spreads_off_the_hub() {
+        // At WAN concurrency 1 the expected-queueing term must price the
+        // fan-in hub's backlog high enough that the aware plan books less
+        // of the demand through it than the capacity-oblivious plan.
+        let blind_sc = build(&ScenarioConfig::congestion(Some(1), false, 31));
+        let aware_sc = build(&ScenarioConfig::congestion(Some(1), true, 31));
+        let mut rb = GwtfRouter::from_scenario(&blind_sc, FlowParams::default(), 31);
+        let mut ra = GwtfRouter::from_scenario(&aware_sc, FlowParams::default(), 31);
+        let alive = vec![true; blind_sc.topo.n()];
+        let (pb, _) = rb.plan(&alive);
+        let (pa, _) = ra.plan(&alive);
+        assert_eq!(pb.len(), 8, "full demand routed");
+        assert_eq!(pa.len(), 8, "aware planning must still route the full demand");
+        let hub_hops = |paths: &[crate::flow::graph::FlowPath],
+                        sc: &crate::sim::scenario::Scenario| {
+            paths
+                .iter()
+                .flat_map(|p| p.relays.iter().enumerate())
+                .filter(|&(s, &r)| sc.prob.graph.stages[s][0] == r)
+                .count()
+        };
+        let blind_hub = hub_hops(&pb, &blind_sc);
+        let aware_hub = hub_hops(&pa, &aware_sc);
+        assert!(
+            aware_hub < blind_hub,
+            "aware plan must shift load off the hubs: {aware_hub} vs {blind_hub} hub hops"
+        );
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The paper's cost model (§IV, Eq. 1).
+//! The paper's cost model (§IV, Eq. 1) and its shared-capacity extension.
 //!
 //! The cost of exchanging one microbatch between nodes *i* and *j* is
 //!
@@ -11,6 +11,33 @@
 //! are asymmetric (λ_ij ≠ λ_ji in general) but each link is used once per
 //! direction per iteration (forward + backward), so the paper averages the
 //! two directions — Eq. 1 does exactly that.
+//!
+//! # Where the contention-free assumption is relaxed
+//!
+//! Eq. 1's transfer term charges each microbatch as if it had the link to
+//! itself: eight microbatches fanning into one relay all "transmit"
+//! simultaneously at full bandwidth.  Since the shared-capacity network
+//! substrate landed, that fiction holds only in the *degenerate*
+//! configuration ([`NicConfig::is_unlimited`], the default, bit-for-bit
+//! the legacy model).  With finite NIC concurrency:
+//!
+//! - **Execution** serializes transmissions per NIC — the simulator books
+//!   every payload transfer through per-node uplink/downlink queues
+//!   ([`crate::sim::events::NicQueues`], the bandwidth analog of the
+//!   compute `Slots`).  Transmission time queues; propagation latency
+//!   still pipelines.
+//! - **Planning** can stay honest about it — [`expected_queue_s`] is the
+//!   expected-queueing term a congestion-aware planner adds per edge
+//!   (`ScenarioConfig::congestion_aware_planning` routes the Eq. 1 cost
+//!   closure through it), derived from the *same* substrate parameters
+//!   ([`NicConfig`]) the simulator executes, so capacity-aware routing
+//!   and the physical model never disagree about what a NIC can carry.
+//!
+//! The rate mapping from β to NIC capacity: β stays the per-transmission
+//! bandwidth; the NIC concurrency cap `c` bounds how many transmissions
+//! share the interface at once, so a NIC's aggregate drain rate is at
+//! most `c·β` and a backlog of `k` queued transfers waits
+//! `⌈k/c⌉ · size/β`.
 
 pub mod activation;
 
@@ -64,6 +91,75 @@ impl LinkParams {
     pub fn one_way_s(&self, size_bytes: f64) -> f64 {
         self.latency_s + size_bytes / self.bandwidth_bps
     }
+}
+
+/// Per-node NIC concurrency: how many transmissions one network
+/// interface sustains at once, by link class (intra-region LAN vs
+/// inter-region WAN — geo-distributed nodes typically have a fat local
+/// interface and a thin WAN uplink).  `None` = unlimited, the legacy
+/// contention-free model; the simulator and the congestion-aware cost
+/// term both read their capacity law from this one struct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NicConfig {
+    /// Max concurrent inter-region (WAN) transmissions per NIC direction.
+    pub wan_concurrency: Option<usize>,
+    /// Max concurrent intra-region (LAN) transmissions per NIC direction.
+    pub lan_concurrency: Option<usize>,
+}
+
+impl NicConfig {
+    /// The legacy contention-free model (both classes unlimited).
+    pub const UNLIMITED: NicConfig =
+        NicConfig { wan_concurrency: None, lan_concurrency: None };
+
+    /// Same finite concurrency for both link classes.
+    pub fn uniform(concurrency: usize) -> Self {
+        assert!(concurrency > 0, "NIC concurrency must be >= 1");
+        NicConfig {
+            wan_concurrency: Some(concurrency),
+            lan_concurrency: Some(concurrency),
+        }
+    }
+
+    /// True iff no class is capped — every transfer site then takes the
+    /// legacy code path, bit for bit.
+    pub fn is_unlimited(&self) -> bool {
+        self.wan_concurrency.is_none() && self.lan_concurrency.is_none()
+    }
+
+    /// Concurrency cap for a transfer's link class.
+    ///
+    /// Panics on a configured cap of 0 (the fields are public, so a
+    /// literal can bypass [`NicConfig::uniform`]'s check): a zero cap
+    /// would silently turn every queueing term into inf/NaN and wedge
+    /// the substrate, so it is rejected at the single lookup chokepoint
+    /// every consumer goes through.
+    pub fn cap(&self, same_region: bool) -> Option<usize> {
+        let cap = if same_region {
+            self.lan_concurrency
+        } else {
+            self.wan_concurrency
+        };
+        assert!(cap != Some(0), "NIC concurrency must be >= 1 (use None for unlimited)");
+        cap
+    }
+}
+
+/// Expected NIC-queueing seconds a planner should charge on edge
+/// `i -> j` on top of Eq. 1, given the substrate's concurrency cap.
+///
+/// Rationale: node capacity `cap_i` bounds how many microbatches can be
+/// resident at once, so up to `cap_i - 1` other transfers contend for
+/// `i`'s uplink and `cap_j - 1` for `j`'s downlink; on average half of
+/// them are ahead of a new arrival, served `nic_concurrency` at a time,
+/// each occupying the NIC for the edge's transmission time `tx_s`
+/// (Eq. 1's `2·size/(β_ij+β_ji)` term).  Zero when nothing else can
+/// contend (`cap == 1`); grows linearly as the concurrency shrinks —
+/// which is exactly what makes fan-in hotspots expensive to a
+/// congestion-aware planner and invisible to a capacity-oblivious one.
+pub fn expected_queue_s(cap_i: usize, cap_j: usize, tx_s: f64, nic_concurrency: usize) -> f64 {
+    let contenders = (cap_i.saturating_sub(1) + cap_j.saturating_sub(1)) as f64;
+    tx_s * contenders / (2.0 * nic_concurrency as f64)
 }
 
 /// Eq. 1: averaged bidirectional microbatch-exchange cost between two nodes.
@@ -145,5 +241,41 @@ mod tests {
     fn backward_is_double_forward() {
         let p = NodeProfile::new(1.5, 2);
         assert_eq!(p.backward_s(), 3.0);
+    }
+
+    #[test]
+    fn nic_config_class_lookup() {
+        assert!(NicConfig::default().is_unlimited());
+        assert!(NicConfig::UNLIMITED.is_unlimited());
+        let nic = NicConfig { wan_concurrency: Some(2), lan_concurrency: None };
+        assert!(!nic.is_unlimited());
+        assert_eq!(nic.cap(false), Some(2), "inter-region uses the WAN cap");
+        assert_eq!(nic.cap(true), None, "intra-region stays unlimited");
+        let u = NicConfig::uniform(3);
+        assert_eq!(u.cap(true), Some(3));
+        assert_eq!(u.cap(false), Some(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "NIC concurrency must be >= 1")]
+    fn zero_nic_cap_rejected_at_lookup() {
+        // The fields are public: a literal can bypass uniform()'s check,
+        // but the class lookup every consumer routes through rejects it
+        // before a zero cap can poison queueing terms with inf/NaN.
+        NicConfig { wan_concurrency: Some(0), lan_concurrency: None }.cap(false);
+    }
+
+    #[test]
+    fn expected_queue_term_scales_with_contenders_and_concurrency() {
+        // cap 1 on both ends: nothing else can contend.
+        assert_eq!(expected_queue_s(1, 1, 10.0, 1), 0.0);
+        // (4-1) + (8-1) = 10 contenders, half ahead, served 1 at a time.
+        let q1 = expected_queue_s(4, 8, 10.0, 1);
+        assert!((q1 - 50.0).abs() < 1e-12, "{q1}");
+        // Doubling the NIC concurrency halves the expected wait.
+        let q2 = expected_queue_s(4, 8, 10.0, 2);
+        assert!((q2 - 25.0).abs() < 1e-12, "{q2}");
+        // No transmission time, no queueing (latency pipelines).
+        assert_eq!(expected_queue_s(4, 8, 0.0, 1), 0.0);
     }
 }

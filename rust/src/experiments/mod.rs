@@ -17,9 +17,9 @@
 //! Beyond the paper, [`scenarios`] holds continuous-time experiments the
 //! old per-iteration churn model could not express (mid-aggregation
 //! crashes, link-latency jitter, continuous-clock Poisson churn, the
-//! gossip-overlay scale sweep at 100+ relays, and the plan-lifecycle
-//! round-RTT sweep) —
-//! `gwtf bench midagg|jitter|poissonchurn|scale|planlag`.
+//! gossip-overlay scale sweep at 100+ relays, the plan-lifecycle
+//! round-RTT sweep, and the shared-capacity NIC congestion sweep) —
+//! `gwtf bench midagg|jitter|poissonchurn|scale|planlag|congestion`.
 
 pub mod figures;
 pub mod scenarios;
@@ -27,10 +27,11 @@ pub mod tables;
 
 pub use figures::{fig5_summary, run_fig5, run_fig6, run_fig7, Fig6Opts};
 pub use scenarios::{
-    plan_lag_json_path, read_plan_lag_profile, read_scale_profile, run_link_jitter,
-    run_mid_agg_crash, run_plan_lag, run_poisson_churn, run_scale, scale_json_path,
-    update_plan_lag_json, update_scale_json, PlanLagCase, PlanLagOpts, PlanLagReport, ScaleOpts,
-    ScaleReport, ScenarioOpts,
+    congestion_json_path, plan_lag_json_path, read_congestion_profile, read_plan_lag_profile,
+    read_scale_profile, run_congestion, run_link_jitter, run_mid_agg_crash, run_plan_lag,
+    run_poisson_churn, run_scale, scale_json_path, update_congestion_json, update_plan_lag_json,
+    update_scale_json, CongestionCase, CongestionOpts, CongestionReport, PlanLagCase, PlanLagOpts,
+    PlanLagReport, ScaleOpts, ScaleReport, ScenarioOpts,
 };
 pub use tables::{run_table2, run_table3, run_table6, TableOpts};
 

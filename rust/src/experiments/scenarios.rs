@@ -33,6 +33,16 @@
 //!   pays a growing stall — makespan grows monotonically with the RTT.
 //!   Results land in `BENCH_planlag.json` (`test_sized` profile via
 //!   `rust/tests/plan_lag.rs`, `full` via the CLI bench).
+//! - [`run_congestion`] — the shared-capacity network substrate
+//!   (`gwtf bench congestion`): a bandwidth-starved WAN with a fan-in
+//!   hub per stage (`ScenarioConfig::congestion`), swept over the NIC
+//!   transmission-concurrency cap.  Columns compare capacity-oblivious
+//!   GWTF, congestion-aware GWTF (Eq. 1 + expected NIC queueing), SWARM
+//!   and DT-FM.  Makespan must grow monotonically as the NIC cap
+//!   shrinks, and at tight caps congestion-aware routing must beat
+//!   SWARM's nearest-peer funnel — both gated by
+//!   `rust/tests/congestion_guard.rs` over the `test_sized` profile of
+//!   `BENCH_congestion.json` (`full` via the CLI bench).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -668,6 +678,250 @@ pub fn update_plan_lag_json(path: &Path, profile: &str, report: &PlanLagReport) 
     Ok(())
 }
 
+/// Options for the shared-capacity congestion sweep
+/// (`gwtf bench congestion`).
+#[derive(Debug, Clone)]
+pub struct CongestionOpts {
+    /// WAN NIC concurrency caps to sweep; `0` means unlimited — the
+    /// contention-free reference every other column must dominate.
+    pub nic_caps: Vec<usize>,
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub seed: u64,
+}
+
+impl Default for CongestionOpts {
+    fn default() -> Self {
+        CongestionOpts { nic_caps: vec![0, 8, 4, 2, 1], reps: 3, iters_per_rep: 3, seed: 1 }
+    }
+}
+
+/// One (NIC cap, system) cell of the congestion sweep, averaged over
+/// reps and iterations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CongestionCase {
+    /// WAN NIC concurrency; 0 = unlimited (legacy contention-free).
+    pub nic: usize,
+    pub system: String,
+    /// Mean iteration makespan, seconds (the monotonicity gate for
+    /// capacity-oblivious GWTF: queueing only ever delays fixed paths).
+    pub makespan_mean_s: f64,
+    /// Mean NIC-queueing seconds per iteration (0 at `nic = 0`).
+    pub queue_mean_s: f64,
+    /// Mean transfer seconds per iteration (transmission + propagation).
+    pub comm_mean_s: f64,
+    /// Mean peak per-node NIC load (busiest node's demanded tx seconds
+    /// over the makespan; >1 = oversubscribed under unlimited
+    /// concurrency — not a wall-clock busy fraction).
+    pub nic_util_max_mean: f64,
+    /// Microbatches completed, total.
+    pub throughput_total: f64,
+}
+
+/// The `BENCH_congestion.json` payload for one profile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CongestionReport {
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub cases: Vec<CongestionCase>,
+}
+
+impl CongestionReport {
+    pub fn case(&self, nic: usize, system: &str) -> Option<&CongestionCase> {
+        self.cases.iter().find(|c| c.nic == nic && c.system == system)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let case_json = |c: &CongestionCase| {
+            let mut o = BTreeMap::new();
+            o.insert("nic".into(), Json::Num(c.nic as f64));
+            o.insert("system".into(), Json::Str(c.system.clone()));
+            o.insert("makespan_mean_s".into(), Json::Num(c.makespan_mean_s));
+            o.insert("queue_mean_s".into(), Json::Num(c.queue_mean_s));
+            o.insert("comm_mean_s".into(), Json::Num(c.comm_mean_s));
+            o.insert("nic_util_max_mean".into(), Json::Num(c.nic_util_max_mean));
+            o.insert("throughput_total".into(), Json::Num(c.throughput_total));
+            Json::Obj(o)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("reps".into(), Json::Num(self.reps as f64));
+        root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
+        root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Option<CongestionReport> {
+        let num = |o: &Json, k: &str| o.get(k).and_then(Json::as_f64);
+        let cases = match j.get("cases")? {
+            Json::Arr(v) => v
+                .iter()
+                .map(|c| {
+                    Some(CongestionCase {
+                        nic: num(c, "nic")? as usize,
+                        system: c.get("system")?.as_str()?.to_string(),
+                        makespan_mean_s: num(c, "makespan_mean_s")?,
+                        queue_mean_s: num(c, "queue_mean_s")?,
+                        comm_mean_s: num(c, "comm_mean_s")?,
+                        nic_util_max_mean: num(c, "nic_util_max_mean")?,
+                        throughput_total: num(c, "throughput_total")?,
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?,
+            _ => return None,
+        };
+        Some(CongestionReport {
+            reps: num(j, "reps")? as usize,
+            iters_per_rep: num(j, "iters_per_rep")? as usize,
+            cases,
+        })
+    }
+}
+
+/// Canonical location of `BENCH_congestion.json` (same convention as
+/// [`scale_json_path`]): the repo root of the build tree, overridable via
+/// `GWTF_CONGESTION_JSON` for relocated binaries.
+pub fn congestion_json_path() -> std::path::PathBuf {
+    std::env::var("GWTF_CONGESTION_JSON").map(std::path::PathBuf::from).unwrap_or_else(|_| {
+        std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_congestion.json"))
+    })
+}
+
+/// Read one profile (`"test_sized"` / `"full"`) from
+/// `BENCH_congestion.json`.
+pub fn read_congestion_profile(path: &Path, profile: &str) -> Option<CongestionReport> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(text.trim()).ok()?;
+    CongestionReport::from_json(j.get(profile)?)
+}
+
+/// Write one profile into `BENCH_congestion.json`, preserving the other
+/// profile; a present-but-corrupt file is an error, not a reset (same
+/// rationale as [`update_scale_json`]).
+pub fn update_congestion_json(
+    path: &Path,
+    profile: &str,
+    report: &CongestionReport,
+) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Err(_) => BTreeMap::new(), // no file yet: fresh capture
+        Ok(text) => match Json::parse(text.trim()) {
+            Ok(Json::Obj(o)) => o,
+            _ => bail!(
+                "{} exists but is not a JSON object; refusing to overwrite \
+                 (fix or delete it to re-capture)",
+                path.display()
+            ),
+        },
+    };
+    root.insert("bench".into(), Json::Str("congestion".into()));
+    root.insert(
+        "source".into(),
+        Json::Str("rust/src/experiments/scenarios.rs::run_congestion".into()),
+    );
+    root.entry("test_sized".to_string()).or_insert(Json::Null);
+    root.entry("full".to_string()).or_insert(Json::Null);
+    root.insert(profile.to_string(), report.to_json());
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+/// Row label for one NIC cap of the congestion sweep.
+fn nic_row(cap: usize) -> String {
+    if cap == 0 {
+        "nic unlimited".into()
+    } else {
+        format!("nic {cap:>2}")
+    }
+}
+
+/// The shared-capacity congestion sweep: the fan-in-hub scenario
+/// ([`crate::sim::scenario::ScenarioConfig::congestion`]) swept over the
+/// WAN NIC concurrency cap.  Four systems per cap: capacity-oblivious
+/// GWTF (fixed paths — the pure-queueing monotonicity column),
+/// congestion-aware GWTF (Eq. 1 + expected NIC queueing, same substrate
+/// parameters the simulator executes), SWARM (nearest-peer funnel,
+/// capacity-oblivious by design) and DT-FM.  Returns the metrics table
+/// plus the report that lands in `BENCH_congestion.json`.
+pub fn run_congestion(opts: &CongestionOpts) -> Result<(MetricsTable, CongestionReport)> {
+    let mut table = MetricsTable::new(
+        "Congestion — shared-capacity NICs over a bandwidth-starved WAN with fan-in hubs",
+    );
+    /// Raw per-iteration samples for one (cap, system) cell.
+    #[derive(Default)]
+    struct CaseAcc {
+        makespan: Vec<f64>,
+        queue: Vec<f64>,
+        comm: Vec<f64>,
+        util: Vec<f64>,
+        throughput: f64,
+    }
+    let mut cases: BTreeMap<(usize, String), CaseAcc> = BTreeMap::new();
+    for &cap in &opts.nic_caps {
+        let nic_wan = if cap == 0 { None } else { Some(cap) };
+        let row = nic_row(cap);
+        for rep in 0..opts.reps {
+            let seed = opts.seed + rep as u64 * 6113;
+            let sc = build(&ScenarioConfig::congestion(nic_wan, false, seed));
+            let sc_aware = build(&ScenarioConfig::congestion(nic_wan, true, seed));
+            let mut measure = |system: &str,
+                               sc: &crate::sim::scenario::Scenario,
+                               router: &mut dyn RoutingPolicy| {
+                let mut engine = sc.engine(seed ^ 0x1);
+                let cell = table.cell(&row, system);
+                let acc = cases.entry((cap, system.to_string())).or_default();
+                for _ in 0..opts.iters_per_rep {
+                    let m = engine.step(&sc.prob, router);
+                    acc.makespan.push(m.makespan_s);
+                    acc.queue.push(m.queue_s);
+                    acc.comm.push(m.comm_s);
+                    acc.util.push(m.nic_util_max);
+                    acc.throughput += m.completed as f64;
+                    cell.push(&m);
+                }
+            };
+            measure(
+                "gwtf",
+                &sc,
+                &mut GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA),
+            );
+            measure(
+                "gwtf-aware",
+                &sc_aware,
+                &mut GwtfRouter::from_scenario(&sc_aware, FlowParams::default(), seed ^ 0xA),
+            );
+            measure("swarm", &sc, &mut swarm_router(&sc, seed ^ 0xB));
+            measure(
+                "dtfm",
+                &sc,
+                &mut dtfm_router(
+                    &sc,
+                    GaParams { generations: 20, ..Default::default() },
+                    seed ^ 0xC,
+                ),
+            );
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let report = CongestionReport {
+        reps: opts.reps,
+        iters_per_rep: opts.iters_per_rep,
+        cases: cases
+            .into_iter()
+            .map(|((nic, system), acc)| CongestionCase {
+                nic,
+                system,
+                makespan_mean_s: mean(&acc.makespan),
+                queue_mean_s: mean(&acc.queue),
+                comm_mean_s: mean(&acc.comm),
+                nic_util_max_mean: mean(&acc.util),
+                throughput_total: acc.throughput,
+            })
+            .collect(),
+    };
+    Ok((table, report))
+}
+
 /// The plan-lifecycle round-RTT sweep: GWTF with warm re-plans on the
 /// Table II scenario, planning rounds riding the engine clock
 /// ([`crate::sim::engine::PlanLifecycle::RoundLatency`]).  Rows sweep
@@ -912,6 +1166,65 @@ mod tests {
         update_plan_lag_json(&path, "full", &report).unwrap();
         assert_eq!(read_plan_lag_profile(&path, "test_sized").unwrap(), report);
         assert_eq!(read_plan_lag_profile(&path, "full").unwrap(), report);
+    }
+
+    #[test]
+    fn congestion_sweep_shapes_table_and_report() {
+        // Shape checks only — the acceptance properties (monotone
+        // makespan growth as the NIC cap shrinks, congestion-aware GWTF
+        // beating SWARM at tight caps) are gated by
+        // rust/tests/congestion_guard.rs, which CI runs in the dedicated
+        // guard step.
+        let opts = CongestionOpts { nic_caps: vec![0, 1], reps: 1, iters_per_rep: 2, seed: 5 };
+        let (t, report) = run_congestion(&opts).unwrap();
+        assert_eq!(t.cells.len(), 2 * 4, "2 caps x 4 systems");
+        for ((row, col), acc) in &t.cells {
+            assert_eq!(acc.throughput.len(), 2, "{row}/{col}: 1 rep x 2 iterations");
+        }
+        assert_eq!(report.cases.len(), 8);
+        for sys in ["gwtf", "gwtf-aware", "swarm", "dtfm"] {
+            let free = report.case(0, sys).expect("unlimited case");
+            assert_eq!(free.queue_mean_s, 0.0, "{sys}: unlimited NICs never queue");
+            assert!(free.throughput_total > 0.0, "{sys}");
+            assert!(report.case(1, sys).is_some(), "{sys}: cap-1 case present");
+        }
+        // The hub-funnelling systems must queue at concurrency 1 (DT-FM's
+        // GA may spread enough to dodge it in a run this small).
+        for sys in ["gwtf", "gwtf-aware", "swarm"] {
+            let tight = report.case(1, sys).unwrap();
+            assert!(tight.queue_mean_s > 0.0, "{sys}: cap 1 must queue");
+        }
+    }
+
+    #[test]
+    fn congestion_report_json_roundtrip_and_profile_update() {
+        let report = CongestionReport {
+            reps: 2,
+            iters_per_rep: 3,
+            cases: vec![CongestionCase {
+                nic: 2,
+                system: "gwtf-aware".into(),
+                makespan_mean_s: 812.5,
+                queue_mean_s: 113.25,
+                comm_mean_s: 640.0,
+                nic_util_max_mean: 0.62,
+                throughput_total: 48.0,
+            }],
+        };
+        let back = CongestionReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+
+        let dir = std::env::temp_dir().join("gwtf_congestion_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_congestion.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_congestion_profile(&path, "test_sized").is_none(), "missing file");
+        update_congestion_json(&path, "test_sized", &report).unwrap();
+        assert_eq!(read_congestion_profile(&path, "test_sized").unwrap(), report);
+        assert!(read_congestion_profile(&path, "full").is_none(), "other profile null");
+        update_congestion_json(&path, "full", &report).unwrap();
+        assert_eq!(read_congestion_profile(&path, "test_sized").unwrap(), report);
+        assert_eq!(read_congestion_profile(&path, "full").unwrap(), report);
     }
 
     #[test]

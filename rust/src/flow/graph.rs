@@ -57,7 +57,12 @@ pub struct FlowProblem {
     pub cap: Vec<usize>,
     /// Microbatches each data node pushes per iteration.
     pub demand: Vec<usize>,
-    /// Eq. 1 edge cost between two adjacent-stage nodes.
+    /// Eq. 1 edge cost between two adjacent-stage nodes.  Congestion-aware
+    /// scenarios route this through
+    /// [`crate::net::Topology::congestion_cost`], which adds the expected
+    /// NIC-queueing term derived from the same shared-capacity substrate
+    /// parameters ([`crate::cost::NicConfig`]) the simulator executes;
+    /// under unlimited NICs that variant is plain Eq. 1 bit for bit.
     pub cost: Box<dyn Fn(NodeId, NodeId) -> f64 + Send + Sync>,
 }
 

@@ -23,10 +23,10 @@ use gwtf::coordinator::join::{utilization_query, JoinPolicy, Leader};
 use gwtf::coordinator::GwtfRouter;
 use gwtf::cost::NodeId;
 use gwtf::experiments::{
-    results_dir, run_fig5, run_fig6, run_fig7, run_link_jitter, run_mid_agg_crash,
-    run_plan_lag, run_poisson_churn, run_scale, run_table2, run_table3, run_table6,
-    update_plan_lag_json, update_scale_json, Fig6Opts, PlanLagOpts, ScaleOpts, ScenarioOpts,
-    TableOpts,
+    results_dir, run_congestion, run_fig5, run_fig6, run_fig7, run_link_jitter,
+    run_mid_agg_crash, run_plan_lag, run_poisson_churn, run_scale, run_table2, run_table3,
+    run_table6, update_congestion_json, update_plan_lag_json, update_scale_json,
+    CongestionOpts, Fig6Opts, PlanLagOpts, ScaleOpts, ScenarioOpts, TableOpts,
 };
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::flow::FlowParams;
@@ -41,7 +41,7 @@ use gwtf::util::Rng;
 /// text and the `gwtf bench` error message (they drifted apart once
 /// already — new targets go here and nowhere else).
 const BENCH_TARGETS: &str =
-    "table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|scale|planlag|all";
+    "table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|scale|planlag|congestion|all";
 
 fn usage() -> String {
     format!(
@@ -56,6 +56,8 @@ fn usage() -> String {
              writes BENCH_scale.json at the repo root)
             (planlag: --rtts \"0,0.5,2,8,30,120\" --churn P — plan-lifecycle
              round-RTT sweep, writes BENCH_planlag.json at the repo root)
+            (congestion: --nics \"0,8,4,2,1\" — shared-capacity NIC sweep
+             over a fan-in hotspot, writes BENCH_congestion.json)
   join-demo                      Fig. 3 walkthrough"
     )
 }
@@ -295,6 +297,24 @@ fn bench(args: &Args) -> Result<()> {
         emit(&t, "planlag")?;
         let json_path = gwtf::experiments::plan_lag_json_path();
         update_plan_lag_json(&json_path, "full", &report)?;
+        println!("-> {}", json_path.display());
+        ran = true;
+    }
+    if target == "congestion" || target == "all" {
+        let nic_caps: Vec<usize> = args
+            .str_or("nics", "0,8,4,2,1")
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow!("--nics expects integers (0 = unlimited)"))
+            })
+            .collect::<Result<_>>()?;
+        let copts = CongestionOpts { nic_caps, reps: reps.min(5), iters_per_rep: iters, seed };
+        let (t, report) = run_congestion(&copts)?;
+        emit(&t, "congestion")?;
+        let json_path = gwtf::experiments::congestion_json_path();
+        update_congestion_json(&json_path, "full", &report)?;
         println!("-> {}", json_path.display());
         ran = true;
     }

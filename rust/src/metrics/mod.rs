@@ -36,6 +36,13 @@ pub struct CellAccumulator {
     /// Plan tickets invalidated by mid-planning churn per iteration
     /// (commit-time §V-D repairs instead of clean convergences).
     pub stale_replans: Vec<f64>,
+    /// Minutes transfers spent queued for a NIC transmission slot per
+    /// iteration (shared-capacity substrate; 0 under unlimited NICs).
+    pub queue_min: Vec<f64>,
+    /// Busiest NIC's demanded-transmission load per iteration (its
+    /// busier direction's tx seconds over the makespan, max over nodes;
+    /// >1 = oversubscribed under unlimited concurrency).
+    pub nic_util_max: Vec<f64>,
 }
 
 impl CellAccumulator {
@@ -55,6 +62,8 @@ impl CellAccumulator {
         self.replan_rounds.push(m.replan_rounds as f64);
         self.plan_overlap_min.push(m.plan_overlap_s / 60.0);
         self.stale_replans.push(m.stale_replans as f64);
+        self.queue_min.push(m.queue_s / 60.0);
+        self.nic_util_max.push(m.nic_util_max);
     }
 
     pub fn row(&self) -> BTreeMap<&'static str, Summary> {
@@ -68,6 +77,8 @@ impl CellAccumulator {
         r.insert("replan_rounds", Summary::of(&self.replan_rounds));
         r.insert("plan_overlap_min", Summary::of(&self.plan_overlap_min));
         r.insert("stale_replans", Summary::of(&self.stale_replans));
+        r.insert("queue_min", Summary::of(&self.queue_min));
+        r.insert("nic_util_max", Summary::of(&self.nic_util_max));
         r
     }
 }
@@ -114,6 +125,8 @@ impl MetricsTable {
             ("replan_rounds", "Flow re-plan rounds (#/iteration)"),
             ("plan_overlap_min", "Plan overlap (min, hidden behind training)"),
             ("stale_replans", "Stale re-plans (#/iteration)"),
+            ("queue_min", "NIC queueing time (min)"),
+            ("nic_util_max", "Peak NIC load (tx-s per makespan-s; >1 = oversubscribed)"),
         ];
         let rows = self.rows();
         let cols = self.cols();
@@ -262,6 +275,8 @@ mod tests {
             replan_rounds: 7,
             plan_overlap_s: 180.0,
             stale_replans: 1,
+            queue_s: 120.0,
+            nic_util_max: 0.75,
             ..metric(4, 100.0)
         };
         t.cell("poisson 10%", "gwtf").push(&m);
@@ -270,6 +285,9 @@ mod tests {
         assert!(md.contains("Flow re-plan rounds"), "{md}");
         assert!(md.contains("Plan overlap"), "{md}");
         assert!(md.contains("Stale re-plans"), "{md}");
+        assert!(md.contains("NIC queueing time"), "{md}");
+        assert!(md.contains("Peak NIC load"), "{md}");
+        assert!(md.contains("0.75 ± 0.00"), "{md}");
         assert!(md.contains("2.00 ± 0.00"), "{md}");
         assert!(md.contains("7.00 ± 0.00"), "{md}");
         assert!(md.contains("3.00 ± 0.00"), "{md}"); // 180s overlap = 3 min
@@ -278,6 +296,8 @@ mod tests {
         assert!(csv.contains("poisson 10%,gwtf,replan_rounds,7.0"), "{csv}");
         assert!(csv.contains("poisson 10%,gwtf,plan_overlap_min,3.0"), "{csv}");
         assert!(csv.contains("poisson 10%,gwtf,stale_replans,1.0"), "{csv}");
+        assert!(csv.contains("poisson 10%,gwtf,queue_min,2.0"), "{csv}"); // 120 s = 2 min
+        assert!(csv.contains("poisson 10%,gwtf,nic_util_max,0.75"), "{csv}");
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Topology generator: nodes in geographic regions, asymmetric links.
 
-use crate::cost::{comm_cost, edge_cost, LinkParams, NodeId, NodeProfile};
+use crate::cost::{
+    comm_cost, edge_cost, expected_queue_s, LinkParams, NicConfig, NodeId, NodeProfile,
+};
 use crate::util::Rng;
 
 /// Parameters of the generated network.
@@ -18,6 +20,11 @@ pub struct TopologyConfig {
     pub inter_lat_s: (f64, f64),
     /// Intra-region one-way latency range, seconds.
     pub intra_lat_s: (f64, f64),
+    /// Per-node NIC transmission concurrency by link class (intra-region
+    /// vs WAN).  Unlimited (the default) is the legacy contention-free
+    /// model; finite caps make the simulator serialize transmissions per
+    /// NIC (`sim::events::NicQueues`).
+    pub nic: NicConfig,
 }
 
 impl Default for TopologyConfig {
@@ -29,6 +36,7 @@ impl Default for TopologyConfig {
             intra_bw_mbps: (700.0, 1000.0),
             inter_lat_s: (0.020, 0.200),
             intra_lat_s: (0.001, 0.005),
+            nic: NicConfig::UNLIMITED,
         }
     }
 }
@@ -40,6 +48,9 @@ pub struct Topology {
     /// `links[i][j]` = params of the directed link i -> j.
     pub links: Vec<Vec<LinkParams>>,
     pub profiles: Vec<NodeProfile>,
+    /// NIC transmission-concurrency caps the simulator's shared-capacity
+    /// substrate enforces (unlimited = legacy contention-free model).
+    pub nic: NicConfig,
 }
 
 impl Topology {
@@ -64,7 +75,7 @@ impl Topology {
             }
         }
         let profiles = vec![NodeProfile::new(1.0, 1); n];
-        Topology { region, links, profiles }
+        Topology { region, links, profiles, nic: cfg.nic }
     }
 
     pub fn n(&self) -> usize {
@@ -85,6 +96,29 @@ impl Topology {
     /// Communication-only cost (compute accounted separately).
     pub fn comm(&self, i: NodeId, j: NodeId, size_bytes: f64) -> f64 {
         comm_cost(&self.links[i.0][j.0], &self.links[j.0][i.0], size_bytes)
+    }
+
+    /// Congestion-aware Eq. 1: the base cost plus the expected
+    /// NIC-queueing term ([`expected_queue_s`]) for the edge's link
+    /// class.  Reads `self.nic` — the *same* substrate parameters the
+    /// simulator executes — so a planner charging this can never
+    /// disagree with the physical model about what an interface carries
+    /// (one source of truth, no caller-supplied copy to drift).  With an
+    /// unlimited class this *is* [`Topology::cost`], bit for bit.
+    pub fn congestion_cost(&self, i: NodeId, j: NodeId, size_bytes: f64) -> f64 {
+        let base = self.cost(i, j, size_bytes);
+        let same_region = self.region[i.0] == self.region[j.0];
+        let Some(cap) = self.nic.cap(same_region) else {
+            return base;
+        };
+        let tx = 2.0 * size_bytes
+            / (self.links[i.0][j.0].bandwidth_bps + self.links[j.0][i.0].bandwidth_bps);
+        base + expected_queue_s(
+            self.profiles[i.0].capacity,
+            self.profiles[j.0].capacity,
+            tx,
+            cap,
+        )
     }
 
     /// One-way message delay i -> j for `size_bytes`.
@@ -174,6 +208,32 @@ mod tests {
             }
         }
         assert!(any_asym);
+    }
+
+    #[test]
+    fn congestion_cost_unlimited_is_eq1_bit_for_bit() {
+        let t = topo(6); // default TopologyConfig: unlimited NICs
+        let (i, j) = (NodeId(0), NodeId(2));
+        assert_eq!(t.congestion_cost(i, j, 1e6).to_bits(), t.cost(i, j, 1e6).to_bits());
+    }
+
+    #[test]
+    fn congestion_cost_penalizes_tight_nics_and_fat_endpoints() {
+        let mut t = topo(6);
+        let (i, j) = (NodeId(0), NodeId(1));
+        t.set_profile(i, NodeProfile::new(1.0, 4));
+        t.set_profile(j, NodeProfile::new(1.0, 8));
+        let base = t.cost(i, j, 1e6);
+        t.nic = NicConfig::uniform(2);
+        let c2 = t.congestion_cost(i, j, 1e6);
+        t.nic = NicConfig::uniform(1);
+        let c1 = t.congestion_cost(i, j, 1e6);
+        assert!(c2 > base, "finite NICs must add a queueing term");
+        assert!(c1 > c2, "halving the concurrency must raise the penalty");
+        // Capacity-1 endpoints cannot contend: penalty vanishes.
+        t.set_profile(i, NodeProfile::new(1.0, 1));
+        t.set_profile(j, NodeProfile::new(1.0, 1));
+        assert_eq!(t.congestion_cost(i, j, 1e6).to_bits(), t.cost(i, j, 1e6).to_bits());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Deterministic virtual-time event queue.
+//! Deterministic virtual-time event queue, compute slots and the
+//! shared-capacity NIC substrate ([`NicQueues`]).
 //!
 //! Ties are broken by insertion sequence so simulation runs are exactly
 //! reproducible regardless of float equality quirks.  Timestamps must be
@@ -9,6 +10,8 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+use crate::cost::{NicConfig, NodeId};
 
 /// Virtual timestamp in seconds.
 pub type Time = f64;
@@ -129,7 +132,11 @@ impl Slots {
         if active.len() < self.cap {
             return ready;
         }
-        active.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // `total_cmp` for NaN-safety, consistent with the queue's key
+        // comparator: a NaN booking would already have tripped the
+        // schedule-time assert upstream, but sorting must never panic or
+        // silently mis-order on one.
+        active.sort_by(|a, b| a.total_cmp(b));
         // need (active.len() - cap + 1) slots to free up
         active[active.len() - self.cap]
     }
@@ -148,6 +155,169 @@ impl Slots {
 
     pub fn in_use_at(&self, t: Time) -> usize {
         self.busy_until.iter().filter(|&&b| b > t + 1e-9).count()
+    }
+}
+
+/// One NIC direction's transmission bookings: `[start, end)` intervals
+/// plus the class concurrency cap.
+///
+/// Unlike the compute [`Slots`] (which tracks only finish times — fine
+/// there, because compute is always acquired at the current event
+/// instant), a NIC booking can start in the *future*: the remote end may
+/// clear later than the local one.  Idle gaps before such a booking must
+/// stay usable — overlap is therefore counted against the actual
+/// intervals, never from booking time.
+#[derive(Debug, Clone, Default)]
+struct NicSlots {
+    bookings: Vec<(Time, Time)>,
+    cap: usize,
+}
+
+impl NicSlots {
+    fn new(cap: usize) -> NicSlots {
+        NicSlots { bookings: Vec::new(), cap }
+    }
+
+    /// Concurrent transmissions at instant `t` (half-open `[start, end)`
+    /// with the same 1e-9 guard as [`Slots`]).
+    fn overlap_at(&self, t: Time) -> usize {
+        self.bookings.iter().filter(|&&(s, e)| s <= t + 1e-9 && e > t + 1e-9).count()
+    }
+
+    /// True iff one more transmission can hold a slot for the whole
+    /// window `[t, t + tx_s)`.  Overlap is piecewise-constant and only
+    /// rises at booking starts, so checking `t` plus every start inside
+    /// the window is exact.
+    fn window_fits(&self, t: Time, tx_s: f64) -> bool {
+        if self.overlap_at(t) >= self.cap {
+            return false;
+        }
+        self.bookings
+            .iter()
+            .filter(|&&(s, _)| s > t + 1e-9 && s < t + tx_s - 1e-9)
+            .all(|&(s, _)| self.overlap_at(s) < self.cap)
+    }
+
+    fn book(&mut self, start: Time, end: Time) {
+        self.bookings.push((start, end.max(start)));
+    }
+}
+
+/// Shared-capacity network substrate: per-node uplink/downlink
+/// transmission queues — the bandwidth analog of [`Slots`].
+///
+/// A payload transfer `i -> j` occupies `i`'s uplink NIC and `j`'s
+/// downlink NIC for its *transmission* time (`size/β`, jitter applied);
+/// propagation latency pipelines and occupies nothing.  Each NIC
+/// direction sustains at most `cap` concurrent transmissions for its
+/// link class ([`NicConfig`]: intra-region LAN vs inter-region WAN);
+/// excess transfers queue until a slot frees.  An unlimited class is the
+/// degenerate legacy model: [`NicQueues::acquire`] returns the ready
+/// instant untouched, so every existing trace reproduces bit for bit.
+#[derive(Debug)]
+pub struct NicQueues {
+    cfg: NicConfig,
+    region: Vec<usize>,
+    up_wan: Vec<NicSlots>,
+    down_wan: Vec<NicSlots>,
+    up_lan: Vec<NicSlots>,
+    down_lan: Vec<NicSlots>,
+    /// Per-node uplink transmission-busy seconds, kept even in unlimited
+    /// mode so link-load metrics always populate.  This is demanded
+    /// transmission work, not wall-clock occupancy: under unlimited
+    /// concurrency a node's busy seconds can exceed the makespan
+    /// (oversubscription).
+    pub busy_up_s: Vec<f64>,
+    /// Per-node downlink transmission-busy seconds (see `busy_up_s`).
+    pub busy_down_s: Vec<f64>,
+}
+
+impl NicQueues {
+    pub fn new(cfg: NicConfig, region: Vec<usize>) -> Self {
+        let n = region.len();
+        let slots = |cap: Option<usize>| -> Vec<NicSlots> {
+            let cap = cap.unwrap_or(usize::MAX);
+            assert!(cap >= 1, "NIC concurrency must be >= 1");
+            (0..n).map(|_| NicSlots::new(cap)).collect()
+        };
+        NicQueues {
+            up_wan: slots(cfg.wan_concurrency),
+            down_wan: slots(cfg.wan_concurrency),
+            up_lan: slots(cfg.lan_concurrency),
+            down_lan: slots(cfg.lan_concurrency),
+            cfg,
+            region,
+            busy_up_s: vec![0.0; n],
+            busy_down_s: vec![0.0; n],
+        }
+    }
+
+    /// True iff some link class has a finite concurrency cap (the
+    /// substrate actually books transmissions).
+    pub fn enabled(&self) -> bool {
+        !self.cfg.is_unlimited()
+    }
+
+    /// A node's busier interface direction, transmission-seconds (the
+    /// per-node link-load metric).
+    pub fn node_load_s(&self, node: usize) -> f64 {
+        self.busy_up_s[node].max(self.busy_down_s[node])
+    }
+
+    /// Book a transmission of `tx_s` seconds on `from`'s uplink and
+    /// `to`'s downlink, earliest-start >= `ready`.  Returns the start
+    /// instant (`== ready` when both NICs can hold the whole window —
+    /// and always, in unlimited mode).  The caller's transfer then
+    /// arrives at `start + tx_s + propagation`.
+    pub fn acquire(&mut self, from: NodeId, to: NodeId, ready: Time, tx_s: f64) -> Time {
+        self.busy_up_s[from.0] += tx_s;
+        self.busy_down_s[to.0] += tx_s;
+        let same_region = self.region[from.0] == self.region[to.0];
+        if self.cfg.cap(same_region).is_none() {
+            return ready;
+        }
+        let (up, down) = if same_region {
+            (&mut self.up_lan, &mut self.down_lan)
+        } else {
+            (&mut self.up_wan, &mut self.down_wan)
+        };
+        // Both end NICs must hold a slot for the whole `[t, t + tx)`
+        // window.  Candidate starts: the ready instant and every booked
+        // end after it on either interface — overlap only ever falls at
+        // ends, and past the last end everything is free, so the scan
+        // always terminates with a fit.
+        let start = {
+            let (u, d) = (&up[from.0], &down[to.0]);
+            let mut candidates: Vec<Time> = vec![ready];
+            candidates.extend(
+                u.bookings
+                    .iter()
+                    .chain(d.bookings.iter())
+                    .map(|&(_, e)| e)
+                    .filter(|&e| e > ready),
+            );
+            candidates.sort_by(|a, b| a.total_cmp(b));
+            candidates
+                .into_iter()
+                .find(|&t| u.window_fits(t, tx_s) && d.window_fits(t, tx_s))
+                .expect("a start past the last booked end always fits")
+        };
+        up[from.0].book(start, start + tx_s);
+        down[to.0].book(start, start + tx_s);
+        start
+    }
+
+    /// Concurrent transmissions on `node`'s NIC at `t` for a direction
+    /// and link class (`up`, `same_region`) — test/diagnostic hook for
+    /// the cap invariant.
+    pub fn in_use_at(&self, node: NodeId, up: bool, same_region: bool, t: Time) -> usize {
+        let q = match (up, same_region) {
+            (true, true) => &self.up_lan,
+            (true, false) => &self.up_wan,
+            (false, true) => &self.down_lan,
+            (false, false) => &self.down_wan,
+        };
+        q[node.0].overlap_at(t)
     }
 }
 
@@ -220,5 +390,81 @@ mod tests {
         assert_eq!(s.earliest_start(6.0), 6.0);
         s.book(6.0, 7.0);
         assert_eq!(s.in_use_at(6.5), 1);
+    }
+
+    #[test]
+    fn nic_unlimited_never_queues() {
+        // 3 nodes, 2 regions; no caps: acquire is the identity on `ready`.
+        let mut nq = NicQueues::new(NicConfig::UNLIMITED, vec![0, 0, 1]);
+        assert!(!nq.enabled());
+        for k in 0..8 {
+            let t = nq.acquire(NodeId(0), NodeId(2), 1.0, 10.0);
+            assert_eq!(t, 1.0, "transfer {k} queued in unlimited mode");
+        }
+        // busy accounting still runs (link-load metrics) — per direction.
+        assert!((nq.busy_up_s[0] - 80.0).abs() < 1e-9);
+        assert_eq!(nq.busy_down_s[0], 0.0);
+        assert!((nq.busy_down_s[2] - 80.0).abs() < 1e-9);
+        assert!((nq.node_load_s(0) - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nic_serializes_uplink_fanout() {
+        // node 0 (region 0) sends to 1 and 2 (region 1): WAN cap 1 means
+        // the second transmission waits for the first to clear 0's uplink.
+        let nic = NicConfig { wan_concurrency: Some(1), lan_concurrency: None };
+        let mut nq = NicQueues::new(nic, vec![0, 1, 1]);
+        assert!(nq.enabled());
+        let a = nq.acquire(NodeId(0), NodeId(1), 0.0, 5.0);
+        let b = nq.acquire(NodeId(0), NodeId(2), 0.0, 5.0);
+        assert_eq!(a, 0.0);
+        assert_eq!(b, 5.0, "uplink must serialize the fan-out");
+        assert_eq!(nq.in_use_at(NodeId(0), true, false, 2.0), 1);
+    }
+
+    #[test]
+    fn nic_serializes_downlink_fanin_and_pipelines_classes() {
+        // nodes 1 and 2 both send into node 0's downlink (WAN cap 1), but
+        // a LAN transfer rides its own interface untouched.
+        let nic = NicConfig { wan_concurrency: Some(1), lan_concurrency: Some(4) };
+        let mut nq = NicQueues::new(nic, vec![0, 1, 2, 0]);
+        let a = nq.acquire(NodeId(1), NodeId(0), 0.0, 4.0);
+        let b = nq.acquire(NodeId(2), NodeId(0), 1.0, 4.0);
+        assert_eq!(a, 0.0);
+        assert_eq!(b, 4.0, "downlink fan-in must queue behind the first arrival");
+        // Intra-region 3 -> 0 uses the LAN class: no WAN contention.
+        let c = nq.acquire(NodeId(3), NodeId(0), 1.0, 4.0);
+        assert_eq!(c, 1.0, "LAN transfer must not queue behind WAN traffic");
+    }
+
+    #[test]
+    fn nic_both_endpoints_must_be_free() {
+        // 0 -> 1 busy until 6; a 2 -> 1 transfer at t=2 waits for 1's
+        // downlink even though 2's uplink is idle.
+        let nic = NicConfig { wan_concurrency: Some(1), lan_concurrency: None };
+        let mut nq = NicQueues::new(nic, vec![0, 1, 2]);
+        nq.acquire(NodeId(0), NodeId(1), 0.0, 6.0);
+        let t = nq.acquire(NodeId(2), NodeId(1), 2.0, 3.0);
+        assert_eq!(t, 6.0);
+    }
+
+    #[test]
+    fn nic_backfills_idle_gap_before_future_booking() {
+        // A transfer delayed by the *remote* end books its local uplink
+        // in the future; the idle gap before that booking must stay
+        // usable (regression: interval-aware overlap, not
+        // blocks-from-booking-time).  Nodes A B C D in distinct regions,
+        // WAN cap 1.
+        let nic = NicConfig { wan_concurrency: Some(1), lan_concurrency: None };
+        let mut nq = NicQueues::new(nic, vec![0, 1, 2, 3]);
+        // A -> B occupies B's downlink [0, 5).
+        assert_eq!(nq.acquire(NodeId(0), NodeId(1), 0.0, 5.0), 0.0);
+        // C -> B waits for B's downlink: C's uplink booked [5, 10).
+        assert_eq!(nq.acquire(NodeId(2), NodeId(1), 0.0, 5.0), 5.0);
+        // C -> D (tx 1) fits C's idle uplink gap [0, 5) — no phantom wait.
+        assert_eq!(nq.acquire(NodeId(2), NodeId(3), 0.0, 1.0), 0.0);
+        // A tx that cannot finish inside the gap waits for the future
+        // booking to clear instead (whole-window fit).
+        assert_eq!(nq.acquire(NodeId(2), NodeId(3), 0.0, 30.0), 10.0);
     }
 }

@@ -12,7 +12,7 @@ use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
 
 use super::engine::Ev;
-use super::events::{EventQueue, Slots, Time};
+use super::events::{EventQueue, NicQueues, Slots, Time};
 use super::training::{IterationMetrics, RecoveryPolicy, RoutingPolicy, TrainingSim};
 
 /// Phase of a microbatch's journey.
@@ -81,6 +81,7 @@ impl TrainingSim {
         prob: &FlowProblem,
         router: &mut dyn RoutingPolicy,
         slots: &mut [Slots],
+        net: &mut NicQueues,
         inflight: &mut [usize],
         mbs: &mut Vec<MicrobatchState>,
         q: &mut EventQueue<Ev>,
@@ -137,12 +138,11 @@ impl TrainingSim {
                 .collect();
             match router.choose_replacement(prev, next, &candidates) {
                 Some(m) => {
-                    let dt = self.transfer_s(prev, m, t);
-                    metrics.comm_s += dt;
+                    let arrive = self.send(net, prev, m, t, metrics);
                     let mut newpath = path.clone();
                     newpath.relays[hop] = m;
                     mbs[mi].path = newpath;
-                    q.schedule(t + dt, Ev::Micro(mi, Phase::Fwd { hop }));
+                    q.schedule(arrive, Ev::Micro(mi, Phase::Fwd { hop }));
                 }
                 None => {
                     // DENY propagates to the source; deferred to next iter.
@@ -169,9 +169,7 @@ impl TrainingSim {
                     mbs[mi].resident.remove(pos);
                     inflight[node.0] = inflight[node.0].saturating_sub(1);
                 }
-                let dt = self.transfer_s(node, next, end);
-                metrics.comm_s += dt;
-                let arrive = end + dt;
+                let arrive = self.send(net, node, next, end, metrics);
                 let next_phase = if is_fwd {
                     if hop + 1 < n_stages { Phase::Fwd { hop: hop + 1 } } else { Phase::Loss }
                 } else if hop == 0 {
@@ -227,12 +225,11 @@ impl TrainingSim {
             match router.choose_replacement(prev, next, &candidates) {
                 Some(m) => {
                     // prev resends its stored activation to m.
-                    let dt = self.transfer_s(prev, m, detect + wait);
-                    metrics.comm_s += dt;
+                    let arrive = self.send(net, prev, m, detect + wait, metrics);
                     let mut newpath = path.clone();
                     newpath.relays[hop] = m;
                     mbs[mi].path = newpath;
-                    q.schedule(detect + wait + dt, Ev::Micro(mi, Phase::Fwd { hop }));
+                    q.schedule(arrive, Ev::Micro(mi, Phase::Fwd { hop }));
                 }
                 None => {
                     // DENY up to the source; batch deferred to next iteration.
@@ -273,10 +270,9 @@ impl TrainingSim {
                         Some(m) => {
                             // fetch activation from the fwd-side neighbour +
                             // recompute fwd at m, then continue bwd at m.
-                            let dt_act = self.transfer_s(prev, m, detect + wait);
+                            let act_arrive = self.send(net, prev, m, detect + wait, metrics);
                             let refwd = self.fwd_compute_s(m, detect + wait);
                             mbs[mi].compute_spent += refwd;
-                            metrics.comm_s += dt_act;
                             // residency moves from the dead node to m
                             if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
                                 mbs[mi].resident.remove(pos);
@@ -287,7 +283,7 @@ impl TrainingSim {
                             let mut newpath = path.clone();
                             newpath.relays[hop] = m;
                             mbs[mi].path = newpath;
-                            q.schedule(detect + wait + dt_act + refwd, Ev::Micro(mi, Phase::Bwd { hop }));
+                            q.schedule(act_arrive + refwd, Ev::Micro(mi, Phase::Bwd { hop }));
                         }
                         None => {
                             mbs[mi].release_all(inflight);
@@ -333,9 +329,8 @@ impl TrainingSim {
                     mbs[mi].path = newpath;
                     let d = mbs[mi].path.source;
                     let first = mbs[mi].path.relays[0];
-                    let dt = self.transfer_s(d, first, detect);
-                    metrics.comm_s += dt;
-                    q.schedule(detect + dt, Ev::Micro(mi, Phase::Fwd { hop: 0 }));
+                    let arrive = self.send(net, d, first, detect, metrics);
+                    q.schedule(arrive, Ev::Micro(mi, Phase::Fwd { hop: 0 }));
                 }
             }
         }

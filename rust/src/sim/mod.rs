@@ -9,7 +9,10 @@
 //! protocols, and the training/aggregation synchronization barrier.
 //!
 //! Layering:
-//! - [`events`]   — the deterministic virtual-time queue and slot model.
+//! - [`events`]   — the deterministic virtual-time queue, the compute
+//!   slot model, and the shared-capacity NIC substrate
+//!   ([`events::NicQueues`]: per-node uplink/downlink transmission
+//!   queues; unlimited concurrency = the legacy contention-free model).
 //! - [`engine`]   — the continuous-time kernel (dispatch loop + the
 //!   [`engine::EventSource`] plugin contract) and the multi-iteration
 //!   [`engine::Engine`] driver with cold-plan / warm-replan dispatch.
@@ -41,7 +44,7 @@ pub use churn_process::PoissonChurn;
 pub use engine::{
     Engine, EventSource, JitterWindow, PlanLifecycle, PlanSession, Slowdown, WorldSchedule,
 };
-pub use events::EventQueue;
+pub use events::{EventQueue, NicQueues};
 pub use training::{
     BlockingPlanAdapter, BlockingPlanner, IterationMetrics, PlanOutcome, PlanRequest, PlanTicket,
     RecoveryPolicy, RoutingPolicy, TrainingSim, TrainingSimConfig,

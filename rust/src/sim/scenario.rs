@@ -6,7 +6,7 @@
 //! homogeneous (cap 4) or heterogeneous (cap U(1,3)) relays, join-leave
 //! probability 0/10/20%.
 
-use crate::cost::{ActivationProfile, NodeId, NodeProfile};
+use crate::cost::{ActivationProfile, LinkParams, NicConfig, NodeId, NodeProfile};
 use crate::flow::graph::{FlowProblem, StageGraph};
 use crate::net::{Topology, TopologyConfig};
 use crate::util::Rng;
@@ -55,6 +55,32 @@ pub struct ScenarioConfig {
     /// that outlasts an iteration stalls the next one.  `None` keeps the
     /// degenerate commit-at-request lifecycle (bit-for-bit stable).
     pub plan_round_rtt_s: Option<f64>,
+    /// Per-node NIC transmission concurrency by link class (intra-region
+    /// LAN vs inter-region WAN).  Unlimited (the default) is the legacy
+    /// contention-free network — bit-for-bit stable; finite caps enable
+    /// the shared-capacity substrate ([`crate::sim::events::NicQueues`]):
+    /// transmissions serialize per NIC, propagation pipelines.
+    pub nic: NicConfig,
+    /// Route the planner's Eq. 1 cost closure through
+    /// [`crate::net::Topology::congestion_cost`]: each edge additionally
+    /// charges the expected NIC-queueing term derived from the *same*
+    /// substrate parameters (`nic`) the simulator executes.  Off (the
+    /// default, and a no-op under unlimited NICs) = the paper's
+    /// contention-blind Eq. 1.
+    pub congestion_aware_planning: bool,
+    /// Override for the topology's inter-region bandwidth envelope, Mb/s
+    /// (paper default 50–500).  The congestion scenario starves it.
+    pub wan_bw_mbps: Option<(f64, f64)>,
+    /// Shape a fan-in hotspot: stage `s`'s first relay becomes a "hub" —
+    /// residency capacity for the full demand, fast compute, and links
+    /// that look great *per transfer* — so capacity-oblivious wiring
+    /// (SWARM's nearest-peer greedy) funnels every flow through one NIC.
+    pub fanin_hub: bool,
+    /// Override [`TrainingSimConfig::deadline_factor`] (congestion runs
+    /// stretch iterations far past the contention-free estimate).
+    pub deadline_factor: Option<f64>,
+    /// Override [`TrainingSimConfig::initial_iter_estimate_s`].
+    pub iter_estimate_s: Option<f64>,
     pub seed: u64,
 }
 
@@ -73,6 +99,12 @@ impl ScenarioConfig {
             base_compute_s: 8.0,
             overlay_fanout: None,
             plan_round_rtt_s: None,
+            nic: NicConfig::UNLIMITED,
+            congestion_aware_planning: false,
+            wan_bw_mbps: None,
+            fanin_hub: false,
+            deadline_factor: None,
+            iter_estimate_s: None,
             seed,
         }
     }
@@ -91,18 +123,10 @@ impl ScenarioConfig {
     /// 18 (DESIGN.md SSubstitutions).
     pub fn table6(seed: u64) -> Self {
         ScenarioConfig {
-            family: Family::Llama,
             n_data: 3,
             n_relays: 18,
-            n_stages: 6,
-            microbatches_per_data: 4,
-            homogeneous: true,
             churn_p: 0.0,
-            churn_model: ChurnModel::Bernoulli,
-            base_compute_s: 8.0,
-            overlay_fanout: None,
-            plan_round_rtt_s: None,
-            seed,
+            ..Self::table2(true, 0.0, seed)
         }
     }
 
@@ -113,18 +137,41 @@ impl ScenarioConfig {
     /// shape pushed to the 100+ relay regime the overlay exists for.
     pub fn scale(n_relays: usize, churn_p: f64, seed: u64) -> Self {
         ScenarioConfig {
-            family: Family::Llama,
-            n_data: 2,
             n_relays,
-            n_stages: 6,
             microbatches_per_data: 8,
-            homogeneous: true,
-            churn_p,
             churn_model: ChurnModel::Poisson,
-            base_compute_s: 8.0,
             overlay_fanout: Some(DEFAULT_OVERLAY_FANOUT),
-            plan_round_rtt_s: None,
-            seed,
+            ..Self::table2(true, churn_p, seed)
+        }
+    }
+
+    /// Congestion setting (`gwtf bench congestion`): Table II's shape
+    /// over a bandwidth-starved WAN (20–60 Mb/s) with a fan-in hub in
+    /// every stage, no churn.  `nic_wan = None` is the contention-free
+    /// reference; `Some(c)` caps every node's WAN NIC at `c` concurrent
+    /// transmissions (LAN gets 4x — local interfaces are fat).
+    /// `congestion_aware` routes GWTF's Eq. 1 closure through the
+    /// expected-queueing term so the planner prices the hub's NIC
+    /// backlog instead of funnelling into it.
+    pub fn congestion(nic_wan: Option<usize>, congestion_aware: bool, seed: u64) -> Self {
+        ScenarioConfig {
+            nic: NicConfig {
+                wan_concurrency: nic_wan,
+                lan_concurrency: nic_wan.map(|c| c * 4),
+            },
+            congestion_aware_planning: congestion_aware,
+            wan_bw_mbps: Some((20.0, 60.0)),
+            fanin_hub: true,
+            // 16 relays over 4 stages: every stage keeps enough lean
+            // peers (3 x cap 2) that a congestion-aware plan can push
+            // most of the demand around its hub.
+            n_stages: 4,
+            // Queueing stretches iterations far past the contention-free
+            // 240 s estimate: keep the aggregation-cutoff deadline out of
+            // the way so contention delays work instead of dropping it.
+            deadline_factor: Some(8.0),
+            iter_estimate_s: Some(1500.0),
+            ..Self::table2(true, 0.0, seed)
         }
     }
 }
@@ -159,8 +206,15 @@ impl Scenario {
 pub fn build(cfg: &ScenarioConfig) -> Scenario {
     let mut rng = Rng::new(cfg.seed);
     let n = cfg.n_data + cfg.n_relays;
+    let topo_defaults = TopologyConfig::default();
     let mut topo = Topology::generate(
-        &TopologyConfig { n_nodes: n, n_regions: 10, ..Default::default() },
+        &TopologyConfig {
+            n_nodes: n,
+            n_regions: 10,
+            inter_bw_mbps: cfg.wan_bw_mbps.unwrap_or(topo_defaults.inter_bw_mbps),
+            nic: cfg.nic,
+            ..topo_defaults
+        },
         &mut rng,
     );
 
@@ -192,6 +246,36 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
         topo.set_profile(r, NodeProfile::new(compute, c));
     }
 
+    // Fan-in hotspot: one hub per stage with residency capacity for the
+    // whole demand, fast compute, and links that beat the starved WAN
+    // per transfer (80 Mb/s, low latency) — so capacity-oblivious
+    // nearest-peer wiring funnels every flow through one NIC, and only a
+    // congestion-aware planner prices the serialized backlog that
+    // creates.  Link edits draw nothing from the RNG: the non-hub
+    // topology stays identical across knob settings at a fixed seed.
+    if cfg.fanin_hub {
+        let total_demand = cfg.n_data * cfg.microbatches_per_data;
+        let hub_link = LinkParams::new(0.005, 80.0 * 1e6 / 8.0);
+        for stage in &stages {
+            let hub = stage[0];
+            cap[hub.0] = total_demand;
+            topo.set_profile(hub, NodeProfile::new(cfg.base_compute_s * 0.5, total_demand));
+            // Lean peers: only the hub can absorb the whole demand, so
+            // capacity-oblivious wiring funnels into its NIC while the
+            // peers' own interfaces stay nearly idle.
+            for &r in &stage[1..] {
+                cap[r.0] = 2;
+                topo.set_profile(r, NodeProfile::new(cfg.base_compute_s, 2));
+            }
+            for x in 0..n {
+                if x != hub.0 {
+                    topo.links[x][hub.0] = hub_link;
+                    topo.links[hub.0][x] = hub_link;
+                }
+            }
+        }
+    }
+
     // Activation payload (GPT ships more bytes — paper §VI).
     let act = match cfg.family {
         Family::Llama => ActivationProfile::paper_llama(),
@@ -202,12 +286,18 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
     let demand = vec![cfg.microbatches_per_data; cfg.n_data];
     let graph = std::sync::Arc::new(StageGraph { stages, data_nodes: data_nodes.clone() });
     let topo_for_cost = topo.clone();
-    let prob = FlowProblem {
-        graph,
-        cap: cap.clone(),
-        demand,
-        cost: Box::new(move |i, j| topo_for_cost.cost(i, j, payload)),
-    };
+    // The planner's Eq. 1 closure derives from the same substrate
+    // parameters the simulator executes (the cloned topology carries
+    // `nic`): congestion-aware scenarios add the expected NIC-queueing
+    // term per edge, everything else keeps the contention-blind paper
+    // cost (identical closure under unlimited NICs either way).
+    let cost: Box<dyn Fn(NodeId, NodeId) -> f64 + Send + Sync> =
+        if cfg.congestion_aware_planning {
+            Box::new(move |i, j| topo_for_cost.congestion_cost(i, j, payload))
+        } else {
+            Box::new(move |i, j| topo_for_cost.cost(i, j, payload))
+        };
+    let prob = FlowProblem { graph, cap: cap.clone(), demand, cost };
 
     let churn = ChurnProcess::with_model(
         cfg.churn_model,
@@ -222,9 +312,9 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
         stage_param_bytes: 75e6 * 4.0 / cfg.n_stages as f64, // ~300M params split over stages
         timeout_s: 5.0,
         max_restarts: 3,
-        initial_iter_estimate_s: 240.0,
+        initial_iter_estimate_s: cfg.iter_estimate_s.unwrap_or(240.0),
         bwd_factor: 2.0,
-        deadline_factor: 2.0,
+        deadline_factor: cfg.deadline_factor.unwrap_or(2.0),
     };
 
     Scenario { cfg: cfg.clone(), topo, prob, churn, sim_cfg, relays, data_nodes }
@@ -319,6 +409,72 @@ mod tests {
         assert_eq!(engine.plan_lifecycle, PlanLifecycle::RoundLatency { rtt_s: 2.5 });
         assert_eq!(engine.sources.len(), 1, "planning cadence source attached");
         assert_eq!(engine.sources[0].name(), crate::sim::sources::PLANNING_SOURCE_NAME);
+    }
+
+    #[test]
+    fn congestion_scenario_shapes_hub_nic_and_deadline() {
+        let sc = build(&ScenarioConfig::congestion(Some(2), false, 9));
+        assert_eq!(sc.cfg.nic.wan_concurrency, Some(2));
+        assert_eq!(sc.cfg.nic.lan_concurrency, Some(8), "LAN gets 4x the WAN cap");
+        assert_eq!(sc.topo.nic, sc.cfg.nic, "substrate params reach the topology");
+        assert!((sc.sim_cfg.deadline_factor - 8.0).abs() < 1e-12);
+        assert!((sc.sim_cfg.initial_iter_estimate_s - 1500.0).abs() < 1e-12);
+        let total_demand = sc.cfg.n_data * sc.cfg.microbatches_per_data;
+        assert_eq!(sc.prob.graph.n_stages(), 4, "16 relays over 4 fan-in stages");
+        for stage in &sc.prob.graph.stages {
+            let hub = stage[0];
+            assert_eq!(sc.prob.cap[hub.0], total_demand, "hub holds the whole demand");
+            for &r in &stage[1..] {
+                assert_eq!(sc.prob.cap[r.0], 2, "non-hub peers are lean");
+            }
+            // The hub's links beat the starved 20-60 Mb/s WAN per transfer.
+            let bw = sc.topo.links[0][hub.0].bandwidth_bps * 8.0 / 1e6;
+            assert!((bw - 80.0).abs() < 1e-9, "{bw}");
+        }
+        // Starved WAN on non-hub inter-region links.
+        let hubs: Vec<NodeId> = sc.prob.graph.stages.iter().map(|s| s[0]).collect();
+        for i in 0..sc.topo.n() {
+            for j in 0..sc.topo.n() {
+                if i == j
+                    || sc.topo.region[i] == sc.topo.region[j]
+                    || hubs.contains(&NodeId(i))
+                    || hubs.contains(&NodeId(j))
+                {
+                    continue;
+                }
+                let mbps = sc.topo.links[i][j].bandwidth_bps * 8.0 / 1e6;
+                assert!((20.0..=60.0).contains(&mbps), "{mbps}");
+            }
+        }
+    }
+
+    #[test]
+    fn congestion_aware_knob_prices_hub_edges_higher() {
+        // Same seed: identical topology; only the planner closure moves.
+        let blind = build(&ScenarioConfig::congestion(Some(1), false, 11));
+        let aware = build(&ScenarioConfig::congestion(Some(1), true, 11));
+        assert_eq!(blind.topo.region, aware.topo.region);
+        let hub = blind.prob.graph.stages[0][0];
+        let other = *blind.prob.graph.stages[0]
+            .iter()
+            .find(|&&m| m != hub)
+            .expect("stage has a non-hub relay");
+        let data = blind.data_nodes[0];
+        assert_eq!(
+            blind.prob.cost(data, other).to_bits(),
+            blind.topo.cost(data, other, blind.sim_cfg.payload_bytes).to_bits(),
+            "blind closure is plain Eq. 1"
+        );
+        assert!(
+            aware.prob.cost(data, hub) > blind.prob.cost(data, hub),
+            "aware closure must charge the hub's expected queueing"
+        );
+        // Unlimited NICs: the aware closure degenerates to plain Eq. 1.
+        let unlimited = build(&ScenarioConfig::congestion(None, true, 11));
+        assert_eq!(
+            unlimited.prob.cost(data, hub).to_bits(),
+            blind.prob.cost(data, hub).to_bits()
+        );
     }
 
     #[test]

@@ -6,8 +6,12 @@
 //! every data node pushes its microbatches along the routed flows; the
 //! simulator executes forward hops, loss, backward hops and the
 //! aggregation barrier with per-node concurrency slots (`cap_i`), link
-//! delays from the topology, node crashes mid-iteration, and the recovery
-//! protocols (GWTF path repair vs SWARM full-pipeline restart).
+//! delays from the topology, per-NIC transmission queues when the
+//! shared-capacity substrate is enabled
+//! ([`crate::cost::NicConfig`]/[`super::events::NicQueues`] — unlimited
+//! NICs reproduce the contention-free model bit for bit), node crashes
+//! mid-iteration, and the recovery protocols (GWTF path repair vs SWARM
+//! full-pipeline restart).
 //!
 //! # The plan lifecycle ([`RoutingPolicy`])
 //!
@@ -55,7 +59,9 @@
 //! - *time per microbatch* — iteration makespan (slowest data node) divided
 //!   by microbatches processed,
 //! - *throughput* — microbatches completing both passes in the iteration,
-//! - *communication time* — total payload transfer seconds,
+//! - *communication time* — total payload transfer seconds (split into
+//!   transmission / propagation / NIC-queueing: `tx_s`/`prop_s`/`queue_s`,
+//!   plus per-node link-utilization aggregates),
 //! - *wasted GPU time* — compute spent on work excluded from aggregation
 //!   (crashed mid-task, orphaned by a broken flow, or recomputed),
 //! plus the lifecycle diagnostics `plan_overlap_s` (planning seconds
@@ -69,7 +75,7 @@ use crate::util::Rng;
 
 use super::churn::{ChurnEvents, ChurnProcess};
 use super::engine::{JitterWindow, Slowdown, WorldSchedule};
-use super::events::Time;
+use super::events::{NicQueues, Time};
 
 /// Backward-pass crash recovery policy (the paper's key GWTF/SWARM split).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -344,7 +350,27 @@ pub struct IterationMetrics {
     pub makespan_s: f64,
     pub completed: usize,
     pub scheduled: usize,
+    /// Total payload-transfer seconds (transmission + propagation — the
+    /// legacy communication-time column; queueing is *not* included, see
+    /// `queue_s`).
     pub comm_s: f64,
+    /// Seconds transfers spent queued for a NIC transmission slot
+    /// (shared-capacity substrate; exactly 0 under unlimited NICs and
+    /// whenever no two transmissions ever contend).
+    pub queue_s: f64,
+    /// Transmission component of `comm_s` (`size/β`, jitter applied) —
+    /// the part that occupies a NIC.
+    pub tx_s: f64,
+    /// Propagation component of `comm_s` (latency, jitter applied) —
+    /// pipelines, occupies nothing.
+    pub prop_s: f64,
+    /// Busiest NIC's demanded transmission seconds (the node's busier
+    /// direction) over the iteration makespan — per-node link load, max
+    /// over nodes.  Can exceed 1 under unlimited concurrency: it is
+    /// oversubscription, not wall-clock occupancy.
+    pub nic_util_max: f64,
+    /// Mean per-node NIC transmission-load fraction of the makespan.
+    pub nic_util_mean: f64,
     pub wasted_gpu_s: f64,
     pub agg_s: f64,
     pub planning_s: f64,
@@ -453,9 +479,50 @@ impl TrainingSim {
         1.0
     }
 
-    /// Payload transfer time for a hop starting at virtual time `t`.
+    /// Payload transfer time for a hop starting at virtual time `t`
+    /// (contention-free: propagation + transmission, jitter applied).
     pub(crate) fn transfer_s(&self, from: NodeId, to: NodeId, t: Time) -> f64 {
         self.topo.delay(from, to, self.cfg.payload_bytes) * self.link_factor_at(t)
+    }
+
+    /// One payload transfer `from -> to` with the data ready at `t`,
+    /// booked through the shared-capacity NIC substrate: the transmission
+    /// serializes through `from`'s uplink and `to`'s downlink
+    /// ([`NicQueues::acquire`]), propagation pipelines on top.  Returns
+    /// the arrival instant and accumulates the communication split
+    /// (`comm_s`/`tx_s`/`prop_s`/`queue_s`) into `metrics`.
+    ///
+    /// With unlimited NICs the start instant is `t` and the arrival is
+    /// `t + transfer_s(from, to, t)` — the exact legacy arithmetic, so
+    /// every pre-substrate trace reproduces bit for bit.
+    ///
+    /// Modeling choice: the jitter factor (and hence the transmission
+    /// duration) is sampled at the *ready* instant `t`, as the legacy
+    /// model did, even when queueing pushes the actual start later.
+    /// Sampling at the start would make the duration depend on the slot
+    /// found, which itself depends on the duration; jitter windows are
+    /// long (tens of seconds) relative to single transmissions, so the
+    /// frozen factor is a second-order inaccuracy.
+    pub(crate) fn send(
+        &self,
+        net: &mut NicQueues,
+        from: NodeId,
+        to: NodeId,
+        t: Time,
+        metrics: &mut IterationMetrics,
+    ) -> Time {
+        let dt = self.transfer_s(from, to, t);
+        // Propagation = the zero-byte delay: derived from the same
+        // LinkParams::one_way_s the total uses, so the tx/prop split
+        // tracks any future change to the delay formula.
+        let prop = self.topo.delay(from, to, 0.0) * self.link_factor_at(t);
+        let tx = (dt - prop).max(0.0);
+        let start = net.acquire(from, to, t, tx);
+        metrics.comm_s += dt;
+        metrics.queue_s += start - t;
+        metrics.tx_s += tx;
+        metrics.prop_s += prop;
+        start + dt
     }
 
     pub(crate) fn fwd_compute_s(&self, n: NodeId, t: Time) -> f64 {
@@ -501,6 +568,77 @@ impl TrainingSim {
         self.run_schedule(prob, router, &schedule, churn_state, planning_s, paths, None, rng)
     }
 
+    /// §V-E intra-stage weight-exchange duration among `members`.
+    ///
+    /// Legacy (unlimited NICs): pairs exchange fully in parallel, so the
+    /// barrier waits for the worst pairwise one-way delay — preserved bit
+    /// for bit.  With finite NIC concurrency the broadcast serializes:
+    /// each member pushes its shard to every peer through its uplink and
+    /// drains every peer's shard through its downlink, `cap`
+    /// transmissions at a time per link class; a member's exchange time
+    /// is its worst peer latency plus its largest serialized backlog, and
+    /// the stage waits for its slowest member.  The barrier stays
+    /// closed-form — it charges the *same* NIC capacity law
+    /// ([`crate::cost::NicConfig`]) the microbatch phase executes
+    /// event-by-event, just analytically.
+    fn stage_exchange_s(&self, members: &[NodeId]) -> f64 {
+        // Legacy pairwise worst (unlimited NICs: this IS the answer).
+        let mut worst: f64 = 0.0;
+        for &a in members {
+            for &b in members {
+                if a != b {
+                    worst = worst.max(self.topo.delay(a, b, self.cfg.stage_param_bytes));
+                }
+            }
+        }
+        let nic = self.topo.nic;
+        if nic.is_unlimited() {
+            return worst;
+        }
+        // Serialization overflow: each member's per-interface backlog
+        // (sum of its transmissions, drained `cap` at a time) beyond the
+        // single worst transmission already inside `worst`.  Exactly 0
+        // when no interface ever has to serialize — finite-but-ample caps
+        // stay bit-identical to the legacy barrier.
+        let mut overflow: f64 = 0.0;
+        for &a in members {
+            // (sum, max) transmission backlog per [WAN, LAN] class and
+            // direction; uplink and downlink are separate interfaces.
+            let mut out = [(0.0f64, 0.0f64); 2];
+            let mut inn = [(0.0f64, 0.0f64); 2];
+            for &b in members {
+                if a == b {
+                    continue;
+                }
+                let k = (self.topo.region[a.0] == self.topo.region[b.0]) as usize;
+                let tx_out =
+                    self.cfg.stage_param_bytes / self.topo.links[a.0][b.0].bandwidth_bps;
+                let tx_in =
+                    self.cfg.stage_param_bytes / self.topo.links[b.0][a.0].bandwidth_bps;
+                out[k].0 += tx_out;
+                out[k].1 = out[k].1.max(tx_out);
+                inn[k].0 += tx_in;
+                inn[k].1 = inn[k].1.max(tx_in);
+            }
+            let class_overflow = |(sum, max): (f64, f64), same: bool| -> f64 {
+                match nic.cap(same) {
+                    Some(c) => (sum / c as f64 - max).max(0.0),
+                    None => 0.0,
+                }
+            };
+            overflow = overflow
+                .max(class_overflow(out[0], false))
+                .max(class_overflow(out[1], true))
+                .max(class_overflow(inn[0], false))
+                .max(class_overflow(inn[1], true));
+        }
+        if overflow == 0.0 {
+            worst
+        } else {
+            worst + overflow
+        }
+    }
+
     /// §V-E training/aggregation synchronization barrier duration, plus
     /// the recovery count for crashes landing inside the barrier.
     ///
@@ -537,16 +675,9 @@ impl TrainingSim {
                 .fold(0.0f64, f64::max);
             fwd_ctrl += hop;
             back_ctrl += hop; // CAN TAKE travels the same boundary backwards
-            // Intra-stage weight broadcast (pairs exchange in parallel).
-            let mut worst: f64 = 0.0;
-            for &a in &members {
-                for &b in &members {
-                    if a != b {
-                        worst = worst.max(self.topo.delay(a, b, self.cfg.stage_param_bytes));
-                    }
-                }
-            }
-            exchange = exchange.max(worst);
+            // Intra-stage weight broadcast (pairs exchange in parallel
+            // under unlimited NICs; serialized per interface otherwise).
+            exchange = exchange.max(self.stage_exchange_s(&members));
             prev_stage = members;
         }
         let base = fwd_ctrl + exchange + back_ctrl;
@@ -568,15 +699,7 @@ impl TrainingSim {
                 .filter(|&&m| m != node && churn.is_alive(m))
                 .copied()
                 .collect();
-            let mut worst: f64 = 0.0;
-            for &a in &survivors {
-                for &b in &survivors {
-                    if a != b {
-                        worst =
-                            worst.max(self.topo.delay(a, b, self.cfg.stage_param_bytes));
-                    }
-                }
-            }
+            let worst = self.stage_exchange_s(&survivors);
             extra += self.cfg.timeout_s + frac.clamp(0.0, 1.0) * worst;
             recoveries += 1;
         }
@@ -854,6 +977,98 @@ mod tests {
         // the microbatch phase itself is untouched
         assert_eq!(crashed.completed, base.completed);
         assert_eq!(crashed.wasted_gpu_s, base.wasted_gpu_s);
+    }
+
+    #[test]
+    fn nic_zero_contention_conserves_comm_split_and_makespan() {
+        // Conservation (ISSUE 5 satellite): with NICs capped but ample
+        // (no two transmissions ever queue), queue_s is exactly 0, the
+        // makespan/comm numbers are bit-identical to the contention-free
+        // model, and comm_s decomposes into transmission + propagation.
+        let base = run_schedule_once(&WorldSchedule::default());
+        assert_eq!(base.queue_s, 0.0, "unlimited NICs never queue");
+
+        let (mut topo, prob, paths) = setup();
+        topo.nic = crate::cost::NicConfig::uniform(64);
+        let mut sim = TrainingSim::new(topo, small_cfg());
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+        let churn_state =
+            ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+        let mut rng = Rng::new(0);
+        let ample = sim.run_schedule(
+            &prob,
+            &mut router,
+            &WorldSchedule::default(),
+            &churn_state,
+            0.0,
+            paths,
+            None,
+            &mut rng,
+        );
+        assert_eq!(ample.queue_s, 0.0, "ample NICs must not queue");
+        assert_eq!(ample.makespan_s.to_bits(), base.makespan_s.to_bits());
+        assert_eq!(ample.comm_s.to_bits(), base.comm_s.to_bits());
+        assert_eq!(ample.agg_s.to_bits(), base.agg_s.to_bits());
+        assert!(
+            (ample.comm_s - (ample.tx_s + ample.prop_s)).abs() < 1e-9 * ample.comm_s.max(1.0),
+            "comm must decompose: {} vs tx {} + prop {}",
+            ample.comm_s,
+            ample.tx_s,
+            ample.prop_s
+        );
+        assert!(ample.nic_util_max > 0.0, "utilization columns must populate");
+        assert!(ample.nic_util_mean <= ample.nic_util_max);
+    }
+
+    #[test]
+    fn nic_contention_queues_and_stretches_makespan() {
+        let base = run_schedule_once(&WorldSchedule::default());
+        let (mut topo, prob, paths) = setup();
+        topo.nic = crate::cost::NicConfig::uniform(1);
+        // One region: every transfer shares the LAN interface class, so
+        // the data node's two t=0 sends must serialize regardless of how
+        // the generator scattered regions.  (Link params stay as drawn —
+        // only the class lookup changes, and the contention-free `base`
+        // run never consults it.)
+        topo.region = vec![0; topo.n()];
+        let mut sim = TrainingSim::new(topo, small_cfg());
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+        let churn_state =
+            ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+        let mut rng = Rng::new(0);
+        let tight = sim.run_schedule(
+            &prob,
+            &mut router,
+            &WorldSchedule::default(),
+            &churn_state,
+            0.0,
+            paths,
+            None,
+            &mut rng,
+        );
+        // Two microbatches leave data node 0 at t=0: concurrency 1 must
+        // serialize them through its uplink.
+        assert!(tight.queue_s > 0.0, "fan-out through one NIC must queue");
+        assert_eq!(tight.completed, base.completed, "contention delays, never drops here");
+        assert!(
+            tight.makespan_s > base.makespan_s,
+            "queueing must stretch the makespan: {} vs {}",
+            tight.makespan_s,
+            base.makespan_s
+        );
+        // comm_s counts transfer time only; waiting lands in queue_s.
+        // (Same per-hop delays, but event reordering can change the float
+        // summation order — compare up to rounding, not bitwise.)
+        assert!(
+            (tight.comm_s - base.comm_s).abs() < 1e-9 * base.comm_s.max(1.0),
+            "queueing must not inflate comm_s: {} vs {}",
+            tight.comm_s,
+            base.comm_s
+        );
+        assert!(
+            tight.agg_s >= base.agg_s,
+            "serialized weight exchange can only lengthen the barrier"
+        );
     }
 
     #[test]

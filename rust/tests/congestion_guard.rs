@@ -1,0 +1,130 @@
+//! Test-sized congestion sweep + acceptance gate (ISSUE 5).
+//!
+//! Runs the shared-capacity NIC sweep over the fan-in-hub scenario with
+//! tiny rep/iteration counts, asserts the tentpole's acceptance
+//! properties —
+//!
+//! - **monotone makespan growth as the NIC concurrency shrinks** for
+//!   capacity-oblivious GWTF (its planner ignores the cap, so its paths
+//!   are identical across the sweep and queueing is the only moving
+//!   part), and
+//! - **congestion-aware GWTF beating capacity-oblivious SWARM** under
+//!   the fan-in hotspot at the tightest cap (the expected-queueing term
+//!   prices the hub's serialized backlog; SWARM's nearest-peer greedy
+//!   funnels everything through it) —
+//!
+//! and maintains the `test_sized` profile of `BENCH_congestion.json` at
+//! the repo root (capture on first run / `GWTF_UPDATE_CONGESTION=1`,
+//! then a 2x regression gate on the tight-cap makespan).  The full-size
+//! sweep is `gwtf bench congestion`, which fills the `full` profile of
+//! the same file.  The CI scale-guard step runs this test alongside
+//! `scale_guard` and `plan_lag`, and the `arm-baselines` job commits the
+//! captured profile on `main`.
+
+use gwtf::experiments::{
+    congestion_json_path, read_congestion_profile, run_congestion, update_congestion_json,
+    CongestionCase, CongestionOpts,
+};
+
+fn opts() -> CongestionOpts {
+    CongestionOpts { nic_caps: vec![0, 4, 2, 1], reps: 2, iters_per_rep: 2, seed: 7 }
+}
+
+#[test]
+fn congestion_makespan_monotone_and_aware_beats_swarm() {
+    let (table, report) = run_congestion(&opts()).unwrap();
+
+    // Every (cap, system) cell produced samples and routed work.
+    assert_eq!(table.cells.len(), 4 * 4, "4 caps x 4 systems");
+    for ((row, col), acc) in &table.cells {
+        assert_eq!(acc.throughput.len(), 2 * 2, "{row}/{col}: 2 reps x 2 iterations");
+        assert!(acc.throughput.iter().sum::<f64>() > 0.0, "{row}/{col} routed nothing");
+    }
+
+    // Acceptance 1: capacity-oblivious GWTF's makespan grows
+    // monotonically as the NIC concurrency shrinks (unlimited -> 1).
+    // Same plans at every cap, so queueing is the only delta; greedy
+    // slot assignment under event reordering can produce classic
+    // small scheduling anomalies, hence the 2% slack — the cap-1 vs
+    // unlimited growth assert below is the real teeth.
+    let oblivious: Vec<&CongestionCase> = opts()
+        .nic_caps
+        .iter()
+        .map(|&cap| report.case(cap, "gwtf").expect("gwtf case"))
+        .collect();
+    assert_eq!(oblivious[0].nic, 0);
+    assert_eq!(oblivious[0].queue_mean_s, 0.0, "unlimited NICs never queue");
+    for w in oblivious.windows(2) {
+        assert!(
+            w[1].makespan_mean_s >= 0.98 * w[0].makespan_mean_s,
+            "makespan shrank as the NIC cap tightened: {} @ nic {} vs {} @ nic {}",
+            w[0].makespan_mean_s,
+            w[0].nic,
+            w[1].makespan_mean_s,
+            w[1].nic
+        );
+    }
+    let free = oblivious[0];
+    let tight = *oblivious.last().unwrap();
+    assert!(
+        tight.makespan_mean_s > 1.1 * free.makespan_mean_s,
+        "a concurrency-1 NIC must visibly stretch the fan-in makespan: {} vs {}",
+        tight.makespan_mean_s,
+        free.makespan_mean_s
+    );
+    assert!(tight.queue_mean_s > 0.0, "tight NICs must record queueing");
+    assert!(tight.nic_util_max_mean > 0.0, "utilization column populated");
+
+    // Acceptance 2: at the tightest cap, congestion-aware GWTF (Eq. 1 +
+    // expected NIC queueing from the same substrate parameters) beats
+    // SWARM's capacity-oblivious nearest-peer funnel.
+    let aware = report.case(1, "gwtf-aware").expect("gwtf-aware case");
+    let swarm = report.case(1, "swarm").expect("swarm case");
+    assert!(
+        aware.makespan_mean_s < swarm.makespan_mean_s,
+        "congestion-aware routing must beat the SWARM funnel at nic 1: {} vs {}",
+        aware.makespan_mean_s,
+        swarm.makespan_mean_s
+    );
+    assert!(
+        aware.queue_mean_s < swarm.queue_mean_s,
+        "spreading must cut the queueing SWARM pays: {} vs {}",
+        aware.queue_mean_s,
+        swarm.queue_mean_s
+    );
+    // The aware planner must not buy that with dropped work.
+    assert!(aware.throughput_total >= swarm.throughput_total);
+
+    // Baseline: capture when null/missing (or on explicit request),
+    // otherwise gate the tight-cap makespan at 2x (deterministic per
+    // seed; the headroom covers libm-level annealer drift across
+    // machines).
+    let path = congestion_json_path();
+    let update = std::env::var("GWTF_UPDATE_CONGESTION").is_ok();
+    match (update, read_congestion_profile(&path, "test_sized")) {
+        (false, Some(baseline)) => {
+            let base = baseline.case(1, "gwtf-aware").expect("baseline gwtf-aware case");
+            let fresh = report.case(1, "gwtf-aware").unwrap();
+            assert!(
+                fresh.makespan_mean_s <= 2.0 * base.makespan_mean_s,
+                "tight-cap congestion-aware makespan regressed >2x: {} vs baseline {} \
+                 (GWTF_UPDATE_CONGESTION=1 to re-baseline intentionally)",
+                fresh.makespan_mean_s,
+                base.makespan_mean_s
+            );
+        }
+        (update, _) => {
+            update_congestion_json(&path, "test_sized", &report).unwrap();
+            eprintln!(
+                "congestion test_sized profile {} at {} — commit BENCH_congestion.json \
+                 to arm the regression gate",
+                if update {
+                    "re-captured (GWTF_UPDATE_CONGESTION)"
+                } else {
+                    "was null/missing; captured"
+                },
+                path.display()
+            );
+        }
+    }
+}

@@ -472,3 +472,115 @@ fn prop_leader_placement_total_and_in_range() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_nic_transmissions_never_exceed_concurrency() {
+    // Shared-capacity substrate invariant (ISSUE 5): however transfers
+    // arrive, no NIC direction ever carries more concurrent
+    // transmissions than its class cap, and no transfer starts before
+    // its payload is ready.
+    use gwtf::cost::NicConfig;
+    use gwtf::sim::NicQueues;
+
+    type Case = (Vec<usize>, NicConfig, Vec<(usize, usize, f64, f64)>);
+    fn arb_case(rng: &mut Rng) -> Case {
+        let n = 3 + rng.index(4);
+        let region: Vec<usize> = (0..n).map(|_| rng.index(3)).collect();
+        let nic = NicConfig {
+            wan_concurrency: Some(1 + rng.index(3)),
+            lan_concurrency: if rng.chance(0.3) { None } else { Some(1 + rng.index(4)) },
+        };
+        let transfers: Vec<(usize, usize, f64, f64)> = (0..30)
+            .map(|_| {
+                let from = rng.index(n);
+                let mut to = rng.index(n);
+                if to == from {
+                    to = (to + 1) % n;
+                }
+                (from, to, rng.uniform(0.0, 50.0), rng.uniform(0.1, 20.0))
+            })
+            .collect();
+        (region, nic, transfers)
+    }
+
+    forall_res("nic-cap-invariant", 40, arb_case, |(region, nic, transfers)| {
+        let mut nq = NicQueues::new(*nic, region.clone());
+        // (node, is_up, same_region, start, end) per booked transmission
+        let mut booked: Vec<(usize, bool, bool, f64, f64)> = Vec::new();
+        for &(from, to, ready, tx) in transfers {
+            let same = region[from] == region[to];
+            let start = nq.acquire(NodeId(from), NodeId(to), ready, tx);
+            if start < ready - 1e-9 {
+                return Err(format!("transfer started before ready: {start} < {ready}"));
+            }
+            if nic.cap(same).is_some() {
+                booked.push((from, true, same, start, start + tx));
+                booked.push((to, false, same, start, start + tx));
+            }
+        }
+        // At every transmission start, the overlapping count per NIC
+        // (node, direction, class) must respect the class cap (same
+        // overlap semantics as Slots: a booking occupies [start, end)
+        // with a 1e-9 guard).
+        for &(node, up, same, s, _) in &booked {
+            let cap = nic.cap(same).expect("only capped classes are booked");
+            let concurrent = booked
+                .iter()
+                .filter(|&&(n2, up2, same2, s2, e2)| {
+                    n2 == node && up2 == up && same2 == same && s2 <= s + 1e-9 && e2 > s + 1e-9
+                })
+                .count();
+            if concurrent > cap {
+                return Err(format!(
+                    "NIC (node {node}, up {up}, lan {same}) carried {concurrent} > cap {cap} at t={s}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nic_unlimited_is_identity_and_ample_caps_never_queue() {
+    // Unlimited mode returns the ready instant untouched; finite caps at
+    // least as large as the transfer count behave identically (nothing
+    // ever queues) — the degenerate-substrate guarantee behind the
+    // engine-level bit-for-bit parity tests.
+    use gwtf::cost::NicConfig;
+    use gwtf::sim::NicQueues;
+
+    forall_res(
+        "nic-ample-identity",
+        30,
+        |rng: &mut Rng| {
+            let n = 2 + rng.index(4);
+            let region: Vec<usize> = (0..n).map(|_| rng.index(2)).collect();
+            let transfers: Vec<(usize, usize, f64, f64)> = (0..16)
+                .map(|_| {
+                    let from = rng.index(n);
+                    let mut to = rng.index(n);
+                    if to == from {
+                        to = (to + 1) % n;
+                    }
+                    (from, to, rng.uniform(0.0, 10.0), rng.uniform(0.1, 5.0))
+                })
+                .collect();
+            (region, transfers)
+        },
+        |(region, transfers)| {
+            let mut unlimited = NicQueues::new(NicConfig::UNLIMITED, region.clone());
+            let mut ample = NicQueues::new(NicConfig::uniform(64), region.clone());
+            for &(from, to, ready, tx) in transfers {
+                let a = unlimited.acquire(NodeId(from), NodeId(to), ready, tx);
+                let b = ample.acquire(NodeId(from), NodeId(to), ready, tx);
+                if a.to_bits() != ready.to_bits() {
+                    return Err(format!("unlimited acquire moved the clock: {a} vs {ready}"));
+                }
+                if b.to_bits() != a.to_bits() {
+                    return Err(format!("ample caps queued where unlimited did not: {b} vs {a}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
