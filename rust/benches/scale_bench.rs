@@ -1,21 +1,58 @@
 //! `cargo bench --bench scale_bench` — the full-size scale sweep
-//! (ISSUE 3 tentpole): 100 and 200 relays across 10 regions under 20%
-//! Poisson churn, gossip-overlay GWTF (warm re-plans over bounded
-//! neighbor views) vs SWARM vs DT-FM.  Writes the `full` profile of
+//! (ISSUE 3 tentpole, extended by ISSUE 6): 100 and 200 relays across
+//! 10 regions under 20% Poisson churn, gossip-overlay GWTF (warm
+//! re-plans over bounded neighbor views) vs SWARM vs DT-FM, plus the
+//! GWTF-only 1000-relay raw-speed case.  Writes the `full` profile of
 //! `BENCH_scale.json` at the repo root; the test-sized version of the
 //! same measurement runs in `rust/tests/scale_guard.rs` on every
 //! `cargo test` and gates planner-round regressions in CI.
+//!
+//! After the sweep a planner-only microbench times the cold flow plan
+//! (no engine, no baselines) at 100/200/1000 relays with 1 worker
+//! thread vs the machine's parallelism — plans are bit-identical at
+//! any thread count, so the rounds column must not move between the
+//! two, only the wall clock.
 
+use std::time::Instant;
+
+use gwtf::coordinator::GwtfRouter;
 use gwtf::experiments::{run_scale, scale_json_path, update_scale_json, ScaleOpts};
+use gwtf::flow::FlowParams;
+use gwtf::sim::scenario::{build, ScenarioConfig};
+
+fn planner_microbench(n_threads: usize) {
+    println!("\n# planner-only microbench — cold plan, threads 1 vs {n_threads}");
+    for &relays in &[100usize, 200, 1000] {
+        let sc = build(&ScenarioConfig::scale(relays, 0.2, 7));
+        let alive = vec![true; sc.topo.n()];
+        print!("{relays:>5} relays:");
+        for &threads in &[1usize, n_threads] {
+            let params = FlowParams { threads, ..FlowParams::default() };
+            let mut router = GwtfRouter::from_scenario(&sc, params, 7 ^ 0xA);
+            let t0 = Instant::now();
+            let (paths, _) = router.plan(&alive);
+            let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+            assert!(!paths.is_empty(), "cold plan routed nothing");
+            print!(
+                "  [t={threads}] {} rounds / {:>7.1} ms = {:>6.1} rounds/s",
+                router.last_rounds,
+                wall_s * 1e3,
+                router.last_rounds as f64 / wall_s,
+            );
+        }
+        println!();
+    }
+}
 
 fn main() {
-    let opts = ScaleOpts::default();
+    let n_threads = std::thread::available_parallelism().map_or(4, |p| p.get().min(8));
+    let opts = ScaleOpts { planner_threads: n_threads, ..ScaleOpts::default() };
     let (table, report) = run_scale(&opts).expect("scale sweep");
     println!("{}", table.to_markdown());
     for c in &report.cases {
         println!(
             "{:>5} relays {:<6} plans {:>3}  rounds {:>5} (cold {:>4})  wall {:>9.1} ms  \
-             completed {:>6}",
+             completed {:>6}  events {:>8} ({:>9.0} ev/s)",
             c.relays,
             c.system,
             c.plan_calls,
@@ -23,9 +60,13 @@ fn main() {
             c.cold_rounds,
             c.plan_wall_ms,
             c.throughput_total,
+            c.events_total,
+            c.events_per_sec(),
         );
     }
     let path = scale_json_path();
     update_scale_json(&path, "full", &report).expect("write BENCH_scale.json");
     println!("\nwrote {}", path.display());
+
+    planner_microbench(n_threads);
 }

@@ -22,7 +22,7 @@ fn main() {
     // one full simulated iteration (plan + events + recovery + aggregation)
     {
         let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 7);
-        let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+        let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg);
         let mut churn = sc.churn.clone();
         let mut rng = Rng::new(9);
         results.push(bench("sim/iteration (gwtf, 18 nodes, 10% churn)", budget, || {

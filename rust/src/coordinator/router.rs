@@ -79,6 +79,9 @@ pub struct GwtfRouter {
     /// Liveness at the most recent (re)plan — the ground truth gossip
     /// probes run against (refined by `dead` as crashes land).
     last_alive: Vec<bool>,
+    /// Scratch edge list reused across (re)plans when streaming the
+    /// overlay's planning edges into the flow optimizer.
+    edge_buf: Vec<(NodeId, NodeId)>,
     /// Ticket-id source for the plan lifecycle.
     next_ticket: u64,
     /// The open planning session: result computed at request, delivered
@@ -122,6 +125,7 @@ impl GwtfRouter {
             last_cost: f64::NAN,
             overlay: None,
             last_alive: Vec::new(),
+            edge_buf: Vec::new(),
             next_ticket: 0,
             pending: None,
         }
@@ -131,20 +135,24 @@ impl GwtfRouter {
     /// with `overlay_fanout` set get a gossip overlay attached, seeded
     /// from the scenario seed so every router over the same scenario
     /// bootstraps identical views.  Scenarios with
-    /// `congestion_aware_planning` route the closure through
+    /// `congestion_aware_planning` route the closure through the
+    /// scenario's shared [`crate::net::CongestionCache`] over
     /// [`crate::net::Topology::congestion_cost`]: every edge additionally
     /// charges the expected NIC-queueing term derived from the same
     /// shared-capacity substrate parameters (`ScenarioConfig::nic`) the
     /// simulator executes — the planner prices fan-in backlogs instead of
-    /// discovering them at runtime.
+    /// discovering them at runtime, and repeated planner probes of the
+    /// same edge hit the memo instead of re-deriving the queueing series.
     pub fn from_scenario(sc: &Scenario, params: FlowParams, seed: u64) -> Self {
         let topo = sc.topo.clone();
         let payload = sc.sim_cfg.payload_bytes;
-        let cost: CostFn = if sc.cfg.congestion_aware_planning {
-            // The cloned topology carries `ScenarioConfig::nic`: the
+        let cost: CostFn = if let Some(cache) = &sc.cost_cache {
+            // The shared topology carries `ScenarioConfig::nic`: the
             // queueing term reads the very parameters the engine's
-            // substrate executes.
-            Arc::new(move |i, j| topo.congestion_cost(i, j, payload))
+            // substrate executes.  The memo serves identical bits to a
+            // direct `congestion_cost` call, so plans are unchanged.
+            let cache = cache.clone();
+            Arc::new(move |i, j| cache.cost(i, j))
         } else {
             Arc::new(move |i, j| topo.cost(i, j, payload))
         };
@@ -178,17 +186,30 @@ impl GwtfRouter {
         self.overlay.as_ref()
     }
 
-    /// Reconcile the overlay with `alive` and return the planner's
-    /// neighbor map (None without an overlay = global visibility).
-    fn reconciled_neighbors(
-        &mut self,
-        alive: &[bool],
-    ) -> Option<std::collections::BTreeMap<NodeId, Vec<NodeId>>> {
-        self.last_alive = alive.to_vec();
-        self.overlay.as_mut().map(|ov| {
-            ov.reconcile(alive);
-            ov.neighbor_map()
-        })
+    /// Reconcile the overlay with `alive`; returns whether planning is
+    /// neighbor-scoped (false without an overlay = global visibility).
+    fn reconcile_overlay(&mut self, alive: &[bool]) -> bool {
+        self.last_alive.clear();
+        self.last_alive.extend_from_slice(alive);
+        match self.overlay.as_mut() {
+            Some(ov) => {
+                ov.reconcile(alive);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stream the reconciled overlay's planning edges into the flow
+    /// optimizer's visibility bitmap — no per-plan `BTreeMap` of
+    /// neighbor `Vec`s on the hot path (scale scenarios re-plan every
+    /// iteration).
+    fn scope_to_overlay(&mut self, flow: &mut DecentralizedFlow<'_>) {
+        let ov = self.overlay.as_ref().expect("scoped plan requires an overlay");
+        let edges = &mut self.edge_buf;
+        edges.clear();
+        ov.for_each_planning_edge(|v, p| edges.push((v, p)));
+        flow.set_neighbor_edges(self.edge_buf.drain(..));
     }
 
     fn problem_with_liveness(&self, alive: &[bool]) -> FlowProblem {
@@ -214,11 +235,11 @@ impl GwtfRouter {
     /// §V-C overlaps everything later).
     fn cold_plan(&mut self, alive: &[bool]) -> (Vec<FlowPath>, f64) {
         self.dead.clear();
-        let neighbors = self.reconciled_neighbors(alive);
+        let scoped = self.reconcile_overlay(alive);
         let prob = self.problem_with_liveness(alive);
         let mut flow = DecentralizedFlow::new(&prob, self.params.clone(), self.seed ^ self.plans);
-        if let Some(map) = neighbors {
-            flow.set_neighbors(map);
+        if scoped {
+            self.scope_to_overlay(&mut flow);
         }
         let stats = flow.run(self.max_rounds, 8);
         self.last_rounds = stats.len();
@@ -253,7 +274,7 @@ impl GwtfRouter {
         self.dead.clear();
         // Views are reconciled before the warm start so crash repair and
         // refinement below already negotiate over the post-churn overlay.
-        let neighbors = self.reconciled_neighbors(alive);
+        let scoped = self.reconcile_overlay(alive);
         let prob = self.problem_with_liveness(alive);
         let mut flow = DecentralizedFlow::warm_start(
             &prob,
@@ -262,8 +283,8 @@ impl GwtfRouter {
             chains,
             temperature,
         );
-        if let Some(map) = neighbors {
-            flow.set_neighbors(map);
+        if scoped {
+            self.scope_to_overlay(&mut flow);
         }
         debug_assert!(
             dirty.iter().all(|d| !alive.get(d.0).copied().unwrap_or(false)),

@@ -212,6 +212,11 @@ pub fn run_poisson_churn(opts: &ScenarioOpts) -> Result<MetricsTable> {
 pub struct ScaleOpts {
     /// Relay counts to sweep (the paper's Table II stops at 16).
     pub sizes: Vec<usize>,
+    /// Relay counts measured with GWTF only — the 1000-relay raw-speed
+    /// gate.  The baselines' global O(n²) scans would dominate the sweep's
+    /// wall time there without informing the gate (which compares GWTF
+    /// against its own committed baseline, not against SWARM/DT-FM).
+    pub gwtf_only_sizes: Vec<usize>,
     pub reps: usize,
     pub iters_per_rep: usize,
     pub seed: u64,
@@ -220,17 +225,22 @@ pub struct ScaleOpts {
     /// GA budget for the DT-FM baseline (its cost is what the paper
     /// criticizes; keep it affordable at 200 relays).
     pub dtfm_generations: usize,
+    /// Worker threads for GWTF's candidate evaluation
+    /// ([`FlowParams::threads`]); plans are bit-identical at any value.
+    pub planner_threads: usize,
 }
 
 impl Default for ScaleOpts {
     fn default() -> Self {
         ScaleOpts {
             sizes: vec![100, 200],
+            gwtf_only_sizes: vec![1000],
             reps: 3,
             iters_per_rep: 4,
             seed: 1,
             churn_p: 0.2,
             dtfm_generations: 30,
+            planner_threads: 1,
         }
     }
 }
@@ -254,6 +264,25 @@ pub struct ScaleCase {
     pub plan_wall_ms: f64,
     /// Microbatches completed across all measured iterations.
     pub throughput_total: f64,
+    /// Kernel events dispatched across all measured iterations
+    /// (deterministic per seed — a second quantity the gate can compare).
+    pub events_total: usize,
+    /// Wall-clock spent inside `Engine::step` across all measured
+    /// iterations, milliseconds, planning included (machine-dependent;
+    /// informational — the events/sec numerator's denominator).
+    pub engine_wall_ms: f64,
+}
+
+impl ScaleCase {
+    /// Engine event throughput over the measured iterations
+    /// (machine-dependent; informational).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.engine_wall_ms > 0.0 {
+            self.events_total as f64 / (self.engine_wall_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
 }
 
 /// The `BENCH_scale.json` payload for one profile (test-sized or full).
@@ -263,6 +292,9 @@ pub struct ScaleReport {
     pub churn_p: f64,
     pub reps: usize,
     pub iters_per_rep: usize,
+    /// Planner candidate-evaluation threads the sweep ran with
+    /// (informational — plans are thread-count invariant).
+    pub planner_threads: usize,
     pub cases: Vec<ScaleCase>,
 }
 
@@ -281,6 +313,12 @@ impl ScaleReport {
             o.insert("cold_rounds".into(), Json::Num(c.cold_rounds as f64));
             o.insert("plan_wall_ms".into(), Json::Num((c.plan_wall_ms * 1e3).round() / 1e3));
             o.insert("throughput_total".into(), Json::Num(c.throughput_total));
+            o.insert("events_total".into(), Json::Num(c.events_total as f64));
+            o.insert("engine_wall_ms".into(), Json::Num((c.engine_wall_ms * 1e3).round() / 1e3));
+            o.insert(
+                "events_per_sec".into(),
+                Json::Num(c.events_per_sec().round()), // derived; not parsed back
+            );
             Json::Obj(o)
         };
         let mut root = BTreeMap::new();
@@ -288,6 +326,7 @@ impl ScaleReport {
         root.insert("churn_p".into(), Json::Num(self.churn_p));
         root.insert("reps".into(), Json::Num(self.reps as f64));
         root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
+        root.insert("planner_threads".into(), Json::Num(self.planner_threads as f64));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
         Json::Obj(root)
     }
@@ -306,6 +345,11 @@ impl ScaleReport {
                         cold_rounds: num(c, "cold_rounds")? as usize,
                         plan_wall_ms: num(c, "plan_wall_ms")?,
                         throughput_total: num(c, "throughput_total")?,
+                        // Leniently absent in pre-raw-speed baselines: a
+                        // committed report without engine columns still
+                        // parses (the gate treats 0 as "no baseline").
+                        events_total: num(c, "events_total").unwrap_or(0.0) as usize,
+                        engine_wall_ms: num(c, "engine_wall_ms").unwrap_or(0.0),
                     })
                 })
                 .collect::<Option<Vec<_>>>()?,
@@ -316,6 +360,7 @@ impl ScaleReport {
             churn_p: num(j, "churn_p")?,
             reps: num(j, "reps")? as usize,
             iters_per_rep: num(j, "iters_per_rep")? as usize,
+            planner_threads: num(j, "planner_threads").map_or(1, |t| t as usize),
             cases,
         })
     }
@@ -462,12 +507,16 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
             let mut engine = self.sc.engine(self.engine_seed);
             engine.warm_replan = warm_replan;
             let mut throughput = 0.0;
+            let mut events = 0usize;
             let cell = self.table.cell(&format!("scale {}", self.relays), system);
+            let t0 = Instant::now();
             for _ in 0..self.iters {
                 let m = engine.step(&self.sc.prob, &mut router);
                 throughput += m.completed as f64;
+                events += m.events;
                 cell.push(&m);
             }
+            let engine_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
             let c = self
                 .cases
                 .entry((self.relays, system.to_string()))
@@ -481,10 +530,19 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
             c.plan_rounds_total += router.rounds_total;
             c.cold_rounds += router.cold_rounds;
             c.throughput_total += throughput;
+            c.events_total += events;
+            c.engine_wall_ms += engine_wall_ms;
         }
     }
 
-    for &relays in &opts.sizes {
+    let gwtf_params =
+        || FlowParams { threads: opts.planner_threads.max(1), ..FlowParams::default() };
+    let all_sizes = opts
+        .sizes
+        .iter()
+        .map(|&r| (r, false))
+        .chain(opts.gwtf_only_sizes.iter().map(|&r| (r, true)));
+    for (relays, gwtf_only) in all_sizes {
         for rep in 0..opts.reps {
             let seed = opts.seed + rep as u64 * 8369;
             let cfg = ScenarioConfig::scale(relays, opts.churn_p, seed);
@@ -502,8 +560,11 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
             run.measure(
                 "gwtf",
                 true,
-                GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA),
+                GwtfRouter::from_scenario(&sc, gwtf_params(), seed ^ 0xA),
             );
+            if gwtf_only {
+                continue;
+            }
             // SWARM: greedy comm-only wiring, global view.
             run.measure("swarm", false, swarm_router(&sc, seed ^ 0xB));
             // DT-FM: centralized GA, recomputed whenever churn breaks a
@@ -525,6 +586,7 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
         churn_p: opts.churn_p,
         reps: opts.reps,
         iters_per_rep: opts.iters_per_rep,
+        planner_threads: opts.planner_threads.max(1),
         cases: cases.into_values().collect(),
     };
     Ok((table, report))
@@ -1039,14 +1101,16 @@ mod tests {
     fn scale_sweep_produces_cells_and_planner_report() {
         let opts = ScaleOpts {
             sizes: vec![60],
+            gwtf_only_sizes: vec![72],
             reps: 1,
             iters_per_rep: 2,
             seed: 5,
             churn_p: 0.2,
             dtfm_generations: 8,
+            planner_threads: 2,
         };
         let (t, report) = run_scale(&opts).unwrap();
-        assert_eq!(t.cells.len(), 3, "1 size x 3 systems");
+        assert_eq!(t.cells.len(), 4, "1 size x 3 systems + 1 gwtf-only size");
         for col in ["gwtf", "swarm", "dtfm"] {
             let acc = &t.cells[&("scale 60".to_string(), col.to_string())];
             assert_eq!(acc.throughput.len(), 2, "{col}");
@@ -1056,7 +1120,13 @@ mod tests {
         assert!(gwtf.plan_rounds_total > 0, "protocol rounds recorded");
         assert!(gwtf.cold_rounds > 0 && gwtf.cold_rounds <= gwtf.plan_rounds_total);
         assert!(gwtf.throughput_total > 0.0, "overlay planning must route work");
+        assert!(gwtf.events_total > 0, "kernel events counted");
+        assert!(gwtf.engine_wall_ms > 0.0 && gwtf.events_per_sec() > 0.0);
         assert!(report.case(60, "swarm").is_some() && report.case(60, "dtfm").is_some());
+        // The gwtf-only size runs GWTF and skips both baselines.
+        assert!(report.case(72, "gwtf").is_some(), "gwtf-only size measured");
+        assert!(report.case(72, "swarm").is_none() && report.case(72, "dtfm").is_none());
+        assert_eq!(report.planner_threads, 2);
     }
 
     #[test]
@@ -1066,6 +1136,7 @@ mod tests {
             churn_p: 0.2,
             reps: 1,
             iters_per_rep: 2,
+            planner_threads: 4,
             cases: vec![ScaleCase {
                 relays: 100,
                 system: "gwtf".into(),
@@ -1074,10 +1145,31 @@ mod tests {
                 cold_rounds: 41,
                 plan_wall_ms: 12.5,
                 throughput_total: 30.0,
+                events_total: 4096,
+                engine_wall_ms: 250.125,
             }],
         };
         let back = ScaleReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);
+        // Pre-raw-speed baselines lack the engine columns and the thread
+        // count; they must still parse (the guard's capture mode).
+        let mut legacy = report.to_json();
+        if let Json::Obj(root) = &mut legacy {
+            root.remove("planner_threads");
+            if let Some(Json::Arr(cases)) = root.get_mut("cases") {
+                for c in cases {
+                    if let Json::Obj(o) = c {
+                        o.remove("events_total");
+                        o.remove("engine_wall_ms");
+                        o.remove("events_per_sec");
+                    }
+                }
+            }
+        }
+        let old = ScaleReport::from_json(&legacy).expect("legacy report parses");
+        assert_eq!(old.planner_threads, 1);
+        assert_eq!(old.cases[0].events_total, 0);
+        assert_eq!(old.cases[0].engine_wall_ms, 0.0);
 
         let dir = std::env::temp_dir().join("gwtf_scale_json_test");
         std::fs::create_dir_all(&dir).unwrap();

@@ -23,14 +23,31 @@
 //! synchronous rendering of the asynchronous gossip the paper describes;
 //! each round corresponds to one "iteration of the algorithm" on Fig. 7's
 //! x-axis.
+//!
+//! # Hot paths
+//!
+//! `NodeId(pub usize)` is a dense index, so the per-round state is laid
+//! out as flat arenas instead of ordered maps: sink/source budgets are
+//! `Vec<usize>`, liveness is a [`BitSet`] and overlay visibility a
+//! [`BitMatrix`] (one shift+mask per `sees`).  Chains open for extension
+//! are indexed per head stage in round-persistent sorted lists
+//! (`open_at`), updated on seed/extend/complete and rebuilt on chain
+//! removal.  Refinement moves borrow chains in place and mutate only on
+//! acceptance, so a rejected candidate allocates nothing.  Candidate
+//! *costs* — pure functions of the problem — are precomputed into flat
+//! matrices, optionally across scoped worker threads
+//! ([`FlowParams::threads`]); every *decision* that consumes them (RNG
+//! draws, tie-breaks, capacity checks) replays sequentially on the
+//! caller's thread, which is why results are bit-for-bit identical at any
+//! thread count.
 
 use std::collections::BTreeMap;
 
 use crate::cost::NodeId;
-use crate::util::Rng;
+use crate::util::{BitMatrix, BitSet, Rng};
 
 use super::annealing::Annealer;
-use super::graph::{FlowPath, FlowProblem};
+use super::graph::{max_edge_cost_over, FlowPath, FlowProblem};
 
 /// Tunables (paper §VI Setup).
 #[derive(Debug, Clone)]
@@ -44,6 +61,10 @@ pub struct FlowParams {
     /// Objective for Change/Redirect: true = min-max edge cost (paper),
     /// false = sum of edge costs (ablation).
     pub minmax_objective: bool,
+    /// Worker threads for the pure candidate-cost precompute (0 and 1
+    /// both mean sequential).  Never changes results: workers only fill
+    /// f64 matrices, all decisions replay on the calling thread.
+    pub threads: usize,
 }
 
 impl Default for FlowParams {
@@ -54,6 +75,7 @@ impl Default for FlowParams {
             enable_change: true,
             enable_redirect: true,
             minmax_objective: true,
+            threads: 1,
         }
     }
 }
@@ -95,6 +117,101 @@ pub struct RoundStats {
     pub change_scans: usize,
 }
 
+/// A snapshotted Request Redirect site: position `pi` of chain `ci`,
+/// currently held by `x`, between `prev` and `next` at `stage`.
+#[derive(Debug, Clone, Copy)]
+struct RedirPos {
+    ci: usize,
+    pi: usize,
+    x: NodeId,
+    prev: NodeId,
+    next: NodeId,
+    stage: usize,
+}
+
+/// Cell count below which a threaded matrix fill is pure spawn overhead.
+const PAR_MIN_CELLS: usize = 2048;
+
+/// Fill `out` (a rows x cols row-major matrix, `out.len() == rows*cols`)
+/// with `f(row, col)`, fanning contiguous row bands across scoped worker
+/// threads.  `f` must be pure: workers only precompute f64s, and every
+/// decision that consumes them stays on the caller's thread — the
+/// planner's results cannot depend on `threads`.
+fn par_fill(out: &mut [f64], cols: usize, threads: usize, f: impl Fn(usize, usize) -> f64 + Sync) {
+    if cols == 0 || out.is_empty() {
+        return;
+    }
+    if threads <= 1 || out.len() < PAR_MIN_CELLS {
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = f(i / cols, i % cols);
+        }
+        return;
+    }
+    let rows = out.len() / cols;
+    let band = rows.div_ceil(threads).max(1);
+    std::thread::scope(|scope| {
+        for (t, chunk) in out.chunks_mut(band * cols).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * band;
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = f(base + i / cols, i % cols);
+                }
+            });
+        }
+    });
+}
+
+/// Ragged variant of [`par_fill`]: row `r` occupies
+/// `offsets[r]..offsets[r+1]` of `out` and is filled with
+/// `f(r, col_in_row)`.  Same purity/determinism contract.
+fn par_fill_ragged(
+    out: &mut [f64],
+    offsets: &[usize],
+    threads: usize,
+    f: impl Fn(usize, usize) -> f64 + Sync,
+) {
+    let rows = offsets.len().saturating_sub(1);
+    // Fills rows r0..r1 into a slice whose first cell is flat `base`.
+    let fill = |slice: &mut [f64], r0: usize, r1: usize, base: usize| {
+        for r in r0..r1 {
+            let (lo, hi) = (offsets[r] - base, offsets[r + 1] - base);
+            for (c, v) in slice[lo..hi].iter_mut().enumerate() {
+                *v = f(r, c);
+            }
+        }
+    };
+    if threads <= 1 || out.len() < PAR_MIN_CELLS || rows == 0 {
+        fill(out, 0, rows, 0);
+        return;
+    }
+    let band = rows.div_ceil(threads).max(1);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let r1 = (r0 + band).min(rows);
+            let (chunk, tail) = rest.split_at_mut(offsets[r1] - offsets[r0]);
+            rest = tail;
+            let fill = &fill;
+            scope.spawn(move || fill(chunk, r0, r1, offsets[r0]));
+            r0 = r1;
+        }
+    });
+}
+
+fn sorted_insert(v: &mut Vec<usize>, x: usize) {
+    if let Err(i) = v.binary_search(&x) {
+        v.insert(i, x);
+    }
+}
+
+fn sorted_remove(v: &mut Vec<usize>, x: usize) {
+    if let Ok(i) = v.binary_search(&x) {
+        v.remove(i);
+    }
+}
+
 /// The decentralized optimizer state.
 pub struct DecentralizedFlow<'p> {
     pub prob: &'p FlowProblem,
@@ -102,34 +219,47 @@ pub struct DecentralizedFlow<'p> {
     pub chains: Vec<Chain>,
     /// Remaining capacity per node (node.0-indexed).
     cap_left: Vec<usize>,
-    /// Remaining sink acceptances per data node.
-    sink_left: BTreeMap<NodeId, usize>,
-    /// Remaining source pairings per data node.
-    source_left: BTreeMap<NodeId, usize>,
+    /// Remaining sink acceptances per data node (node.0-indexed arena;
+    /// only data-node slots are ever touched).
+    sink_left: Vec<usize>,
+    /// Remaining source pairings per data node (node.0-indexed arena).
+    source_left: Vec<usize>,
     annealer: Annealer,
     rng: Rng,
     round: usize,
-    /// Per-node overlay neighbor lists (sorted; see
-    /// [`set_neighbors`](Self::set_neighbors)).  None = legacy global
-    /// adjacent-stage visibility.
-    neighbors: Option<BTreeMap<NodeId, Vec<NodeId>>>,
+    /// Overlay visibility as a dense bit matrix (`viewer.0, peer.0`).
+    /// None = legacy global adjacent-stage visibility.
+    neighbors: Option<BitMatrix>,
     /// Nodes currently dead (crashed); they take part in nothing.
-    dead: Vec<bool>,
+    dead: BitSet,
     /// Candidate-scan counters for the round in flight (RoundStats).
     scans: usize,
     change_scans: usize,
+    /// Round-persistent extension index: `open_at[s]` = indices of
+    /// incomplete chains whose head sits at stage `s`, ascending.
+    /// Maintained on seed/extend/complete; rebuilt when `chains` indices
+    /// shift (stall reclaim, crash teardown).
+    open_at: Vec<Vec<usize>>,
+    /// Scratch buffers reused across rounds (no per-round allocation).
+    shuffle_buf: Vec<NodeId>,
+    cand_buf: Vec<(usize, NodeId, f64)>,
+    cost_buf: Vec<f64>,
+    redir_buf: Vec<RedirPos>,
+    redir_off: Vec<usize>,
 }
 
 impl<'p> DecentralizedFlow<'p> {
     pub fn new(prob: &'p FlowProblem, params: FlowParams, seed: u64) -> Self {
+        let n = prob.cap.len();
         let cap_left = prob.cap.clone();
-        let mut sink_left = BTreeMap::new();
-        let mut source_left = BTreeMap::new();
+        let mut sink_left = vec![0usize; n];
+        let mut source_left = vec![0usize; n];
         for (di, &d) in prob.graph.data_nodes.iter().enumerate() {
-            sink_left.insert(d, prob.demand[di]);
-            source_left.insert(d, prob.demand[di]);
+            sink_left[d.0] = prob.demand[di];
+            source_left[d.0] = prob.demand[di];
         }
         let annealer = Annealer::new(params.temperature, params.alpha);
+        let n_stages = prob.graph.n_stages();
         DecentralizedFlow {
             prob,
             params,
@@ -141,29 +271,46 @@ impl<'p> DecentralizedFlow<'p> {
             rng: Rng::new(seed),
             round: 0,
             neighbors: None,
-            dead: vec![false; prob.cap.len()],
+            dead: BitSet::new(n),
             scans: 0,
             change_scans: 0,
+            open_at: vec![Vec::new(); n_stages],
+            shuffle_buf: Vec::new(),
+            cand_buf: Vec::new(),
+            cost_buf: Vec::new(),
+            redir_buf: Vec::new(),
+            redir_off: Vec::new(),
         }
     }
 
     /// Restrict every node's candidate pool to its overlay neighbor list
     /// (`NodeId -> visible peers`, typically
-    /// [`crate::net::Overlay::neighbor_map`]).  Lists are sorted and
-    /// deduplicated here so [`sees`](Self::sees) can binary-search on the
-    /// planner's hottest path.  A node absent from the map sees no one
-    /// (data nodes never act as viewers, so they need no entry).
+    /// [`crate::net::Overlay::neighbor_map`]).  Lists are flattened into
+    /// a dense [`BitMatrix`] so [`sees`](Self::sees) is one shift+mask on
+    /// the planner's hottest path.  A node absent from the map sees no
+    /// one (data nodes never act as viewers, so they need no entry).
     ///
     /// With lists covering the full adjacent stages (overlay fanout
     /// `k >= n-1`) every decision — including RNG draws and tie-breaks —
     /// matches the global-visibility planner bit for bit; the parity
     /// test in `rust/tests/overlay.rs` holds this invariant.
-    pub fn set_neighbors(&mut self, mut map: BTreeMap<NodeId, Vec<NodeId>>) {
-        for peers in map.values_mut() {
-            peers.sort_unstable();
-            peers.dedup();
+    pub fn set_neighbors(&mut self, map: BTreeMap<NodeId, Vec<NodeId>>) {
+        self.set_neighbor_edges(
+            map.iter().flat_map(|(&v, ps)| ps.iter().map(move |&p| (v, p))),
+        );
+    }
+
+    /// [`set_neighbors`](Self::set_neighbors) without the intermediate
+    /// map: stream `(viewer, peer)` edges straight into the visibility
+    /// bits (e.g. from
+    /// [`crate::net::Overlay::for_each_planning_edge`]).  Order and
+    /// duplicates are irrelevant — a bit is a bit.
+    pub fn set_neighbor_edges(&mut self, edges: impl IntoIterator<Item = (NodeId, NodeId)>) {
+        let mut m = BitMatrix::new(self.prob.cap.len());
+        for (v, p) in edges {
+            m.set(v.0, p.0);
         }
-        self.neighbors = Some(map);
+        self.neighbors = Some(m);
     }
 
     /// Warm-start construction (§V-A/§V-D): adopt the surviving chains of
@@ -206,21 +353,22 @@ impl<'p> DecentralizedFlow<'p> {
                     .nodes
                     .iter()
                     .all(|&n| prob.cap[n.0] == 0 || f.cap_left[n.0] > 0)
-                && f.sink_left[&ch.sink] > 0
-                && (!ch.complete || f.source_left[&ch.sink] > 0);
+                && f.sink_left[ch.sink.0] > 0
+                && (!ch.complete || f.source_left[ch.sink.0] > 0);
             if !budget_ok {
                 continue;
             }
             for &n in &ch.nodes {
                 f.cap_left[n.0] = f.cap_left[n.0].saturating_sub(1);
             }
-            *f.sink_left.get_mut(&ch.sink).unwrap() -= 1;
+            f.sink_left[ch.sink.0] -= 1;
             if ch.complete {
-                *f.source_left.get_mut(&ch.sink).unwrap() -= 1;
+                f.source_left[ch.sink.0] -= 1;
             }
             ch.last_progress = 0;
             f.chains.push(ch);
         }
+        f.rebuild_open_index();
         f
     }
 
@@ -234,16 +382,29 @@ impl<'p> DecentralizedFlow<'p> {
     }
 
     fn alive(&self, n: NodeId) -> bool {
-        !self.dead[n.0]
+        !self.dead.contains(n.0)
     }
 
-    /// Can `viewer` see `peer`? (partial-membership restriction; lists
-    /// are sorted by [`set_neighbors`](Self::set_neighbors))
+    /// Can `viewer` see `peer`? (partial-membership restriction; one bit
+    /// test on the dense matrix built by
+    /// [`set_neighbors`](Self::set_neighbors))
     fn sees(&self, viewer: NodeId, peer: NodeId) -> bool {
         match &self.neighbors {
             None => true,
-            Some(v) => {
-                v.get(&viewer).map(|ps| ps.binary_search(&peer).is_ok()).unwrap_or(false)
+            Some(m) => m.get(viewer.0, peer.0),
+        }
+    }
+
+    /// Rebuild `open_at` from scratch — required whenever a
+    /// `chains.remove` shifts the indices the sorted lists point at.
+    /// Cheap: the chain count is bounded by total demand, not fleet size.
+    fn rebuild_open_index(&mut self) {
+        for v in &mut self.open_at {
+            v.clear();
+        }
+        for (ci, ch) in self.chains.iter().enumerate() {
+            if !ch.complete {
+                self.open_at[ch.head_stage].push(ci);
             }
         }
     }
@@ -298,19 +459,18 @@ impl<'p> DecentralizedFlow<'p> {
     }
 
     fn stats(&self, moves: usize) -> RoundStats {
-        let complete: Vec<&Chain> = self.chains.iter().filter(|c| c.complete).collect();
-        let avg = if complete.is_empty() {
-            f64::INFINITY
-        } else {
-            complete.iter().map(|c| self.full_cost(c)).sum::<f64>() / complete.len() as f64
-        };
-        let max_edge = complete
-            .iter()
-            .map(|c| self.path_of(c).max_edge_cost(self.prob))
-            .fold(0.0f64, f64::max);
+        let mut complete = 0usize;
+        let mut cost_sum = 0.0f64;
+        let mut max_edge = 0.0f64;
+        for c in self.chains.iter().filter(|c| c.complete) {
+            complete += 1;
+            cost_sum += self.full_cost(c);
+            max_edge = max_edge.max(max_edge_cost_over(self.prob, c.sink, &c.nodes));
+        }
+        let avg = if complete == 0 { f64::INFINITY } else { cost_sum / complete as f64 };
         RoundStats {
             round: self.round,
-            complete_flows: complete.len(),
+            complete_flows: complete,
             avg_cost_per_microbatch: avg,
             max_edge_cost: max_edge,
             moves_applied: moves,
@@ -323,29 +483,35 @@ impl<'p> DecentralizedFlow<'p> {
     /// Stage-(S-1) relays with spare capacity request flow to a data node
     /// (seeding a new chain at the sink side).
     fn seed_chains(&mut self) -> usize {
+        let prob = self.prob;
         let last = self.n_stages() - 1;
-        let mut members = self.prob.graph.stages[last].clone();
+        // Shuffle a scratch copy of the *pristine* stage order — reusing
+        // a previously shuffled buffer would compose permutations and
+        // change every RNG-dependent decision downstream.
+        let mut members = std::mem::take(&mut self.shuffle_buf);
+        members.clear();
+        members.extend_from_slice(&prob.graph.stages[last]);
         self.rng.shuffle(&mut members);
         let mut moves = 0;
-        for r in members {
+        for &r in &members {
             if !self.alive(r) || self.cap_left[r.0] == 0 {
                 continue;
             }
             // Cheapest data node with remaining sink budget this relay can
             // see (first minimal wins, as `Iterator::min_by` would pick).
             let mut best: Option<(NodeId, f64)> = None;
-            for &d in &self.prob.graph.data_nodes {
-                if self.sink_left[&d] == 0 || !self.sees(r, d) {
+            for &d in &prob.graph.data_nodes {
+                if self.sink_left[d.0] == 0 || !self.sees(r, d) {
                     continue;
                 }
                 self.scans += 1;
-                let c = self.prob.cost(r, d);
+                let c = prob.cost(r, d);
                 if best.map(|(_, bc)| c < bc).unwrap_or(true) {
                     best = Some((d, c));
                 }
             }
             if let Some((d, _)) = best {
-                *self.sink_left.get_mut(&d).unwrap() -= 1;
+                self.sink_left[d.0] -= 1;
                 self.cap_left[r.0] -= 1;
                 let round = self.round;
                 self.chains.push(Chain {
@@ -355,76 +521,79 @@ impl<'p> DecentralizedFlow<'p> {
                     complete: false,
                     last_progress: round,
                 });
+                // chains.len()-1 exceeds every index already listed, so a
+                // plain push keeps open_at[last] ascending.
+                self.open_at[last].push(self.chains.len() - 1);
                 moves += 1;
             }
         }
+        self.shuffle_buf = members;
         moves
     }
 
     /// Relays with spare capacity extend chains whose head sits one stage
     /// after them (Request Flow towards the head).
     ///
-    /// Chains open at each stage boundary are indexed by their head node,
-    /// so a relay only evaluates the chains headed by its overlay
-    /// neighbors — O(k·chains) per round instead of every relay scanning
-    /// every chain.  Candidates are always visited in ascending chain
-    /// order (first minimal wins), which keeps partial and global views
-    /// on identical tie-breaks: full neighbor lists reproduce the legacy
-    /// global scan bit for bit.
+    /// Chains open at each boundary come from the round-persistent
+    /// `open_at` index (ascending chain order — first minimal wins, which
+    /// keeps partial and global views on identical tie-breaks).  Each
+    /// candidate's `cost_to_sink` is relay-independent and advertised by
+    /// the head, so it is hoisted and computed once per chain per
+    /// boundary; the member x candidate cost matrix is precomputed (and
+    /// optionally threaded) before the sequential claim loop.
     fn extend_chains(&mut self) -> usize {
+        let prob = self.prob;
+        let threads = self.params.threads;
         let mut moves = 0;
         for s in (0..self.n_stages() - 1).rev() {
-            // Index the chains open for extension at this boundary:
-            // incomplete, head at stage s+1.  `open` is ascending by
-            // construction; `by_head` serves the neighbor-scoped lookups.
-            let mut open: Vec<usize> = Vec::new();
-            let mut by_head: BTreeMap<NodeId, Vec<usize>> = BTreeMap::new();
-            for (ci, ch) in self.chains.iter().enumerate() {
-                if !ch.complete && ch.head_stage == s + 1 {
-                    open.push(ci);
-                    by_head.entry(ch.nodes[0]).or_default().push(ci);
-                }
+            // Snapshot this boundary's open chains: (index, head,
+            // advertised cost-to-sink).
+            let mut cand = std::mem::take(&mut self.cand_buf);
+            cand.clear();
+            for &ci in &self.open_at[s + 1] {
+                let ch = &self.chains[ci];
+                cand.push((ci, ch.nodes[0], self.cost_to_sink(ch)));
             }
-            let mut members = self.prob.graph.stages[s].clone();
+            let mut members = std::mem::take(&mut self.shuffle_buf);
+            members.clear();
+            members.extend_from_slice(&prob.graph.stages[s]);
             self.rng.shuffle(&mut members);
-            for i in members {
+            // Pure cost rows: cost(member, head) + cost_to_sink(head).
+            let cols = cand.len();
+            let mut costs = std::mem::take(&mut self.cost_buf);
+            costs.clear();
+            costs.resize(members.len() * cols, 0.0);
+            {
+                let (cand, members) = (&cand[..], &members[..]);
+                par_fill(&mut costs, cols, threads, move |r, c| {
+                    prob.cost(members[r], cand[c].1) + cand[c].2
+                });
+            }
+            for (mi, &i) in members.iter().enumerate() {
                 if !self.alive(i) || self.cap_left[i.0] == 0 {
                     continue;
                 }
-                // Global mode iterates the shared `open` index in place;
-                // neighbor mode materializes the (small) per-relay set.
-                let scoped: Option<Vec<usize>> = match &self.neighbors {
-                    None => None,
-                    Some(map) => {
-                        let Some(peers) = map.get(&i) else { continue };
-                        let mut v: Vec<usize> = peers
-                            .iter()
-                            .filter_map(|p| by_head.get(p))
-                            .flatten()
-                            .copied()
-                            .collect();
-                        v.sort_unstable();
-                        Some(v)
+                let row = &costs[mi * cols..(mi + 1) * cols];
+                let mut best: Option<(usize, usize, f64)> = None;
+                for (slot, &(ci, head, _)) in cand.iter().enumerate() {
+                    if ci == usize::MAX {
+                        continue; // claimed earlier in this boundary pass
                     }
-                };
-                let cand: &[usize] = scoped.as_deref().unwrap_or(&open);
-                let mut best: Option<(usize, f64)> = None;
-                for &ci in cand {
+                    if !self.sees(i, head) {
+                        continue; // outside the relay's view: no candidate
+                    }
                     self.scans += 1;
-                    let ch = &self.chains[ci];
-                    let c = self.prob.cost(i, ch.nodes[0]) + self.cost_to_sink(ch);
-                    if best.map(|(_, bc)| c < bc).unwrap_or(true) {
-                        best = Some((ci, c));
+                    let c = row[slot];
+                    if best.map(|(_, _, bc)| c < bc).unwrap_or(true) {
+                        best = Some((slot, ci, c));
                     }
                 }
-                if let Some((ci, _)) = best {
-                    // The chain's head moves to stage s: drop it from this
-                    // boundary's index so later relays skip it.
-                    let head = self.chains[ci].nodes[0];
-                    open.retain(|&x| x != ci);
-                    if let Some(v) = by_head.get_mut(&head) {
-                        v.retain(|&x| x != ci);
-                    }
+                if let Some((slot, ci, _)) = best {
+                    // The chain's head moves to stage s: claim its slot so
+                    // later relays skip it, and migrate the open index.
+                    cand[slot].0 = usize::MAX;
+                    sorted_remove(&mut self.open_at[s + 1], ci);
+                    sorted_insert(&mut self.open_at[s], ci);
                     self.chains[ci].nodes.insert(0, i);
                     self.chains[ci].head_stage = s;
                     self.chains[ci].last_progress = self.round;
@@ -432,22 +601,28 @@ impl<'p> DecentralizedFlow<'p> {
                     moves += 1;
                 }
             }
+            self.cand_buf = cand;
+            self.shuffle_buf = members;
+            self.cost_buf = costs;
         }
         moves
     }
 
     /// Data nodes pair their microbatch budget with stage-0 chain heads.
     fn pair_sources(&mut self) -> usize {
+        let prob = self.prob;
         let mut moves = 0;
-        let data_nodes = self.prob.graph.data_nodes.clone();
-        for d in data_nodes {
-            while self.source_left[&d] > 0 {
+        for &d in &prob.graph.data_nodes {
+            while self.source_left[d.0] > 0 {
+                // Only stage-0 incomplete chains qualify — exactly what
+                // `open_at[0]` lists, in ascending chain order.
                 let mut best: Option<(usize, f64)> = None;
-                for (ci, ch) in self.chains.iter().enumerate() {
-                    if ch.complete || ch.head_stage != 0 || ch.sink != d {
+                for &ci in &self.open_at[0] {
+                    let ch = &self.chains[ci];
+                    if ch.sink != d {
                         continue;
                     }
-                    let c = self.prob.cost(d, ch.nodes[0]) + self.cost_to_sink(ch);
+                    let c = prob.cost(d, ch.nodes[0]) + self.cost_to_sink(ch);
                     if best.map(|(_, bc)| c < bc).unwrap_or(true) {
                         best = Some((ci, c));
                     }
@@ -455,7 +630,8 @@ impl<'p> DecentralizedFlow<'p> {
                 match best {
                     Some((ci, _)) => {
                         self.chains[ci].complete = true;
-                        *self.source_left.get_mut(&d).unwrap() -= 1;
+                        sorted_remove(&mut self.open_at[0], ci);
+                        self.source_left[d.0] -= 1;
                         moves += 1;
                     }
                     None => break,
@@ -481,12 +657,15 @@ impl<'p> DecentralizedFlow<'p> {
                 for &n in &ch.nodes {
                     self.cap_left[n.0] += 1;
                 }
-                *self.sink_left.get_mut(&ch.sink).unwrap() += 1;
+                self.sink_left[ch.sink.0] += 1;
                 self.chains.remove(ci);
                 moves += 1;
             } else {
                 ci += 1;
             }
+        }
+        if moves > 0 {
+            self.rebuild_open_index();
         }
         moves
     }
@@ -502,6 +681,7 @@ impl<'p> DecentralizedFlow<'p> {
 
     /// Request Change: same-stage pairs swap successors for the same sink.
     fn request_change(&mut self) -> usize {
+        let prob = self.prob;
         let mut moves = 0;
         // Consider every stage boundary: edge from position p to p+1 within
         // chains (position 0 edge is data->head, handled by Redirect).
@@ -516,20 +696,27 @@ impl<'p> DecentralizedFlow<'p> {
             if a == b {
                 continue;
             }
-            let (ca, cb) = (self.chains[a].clone(), self.chains[b].clone());
-            if ca.sink != cb.sink || !ca.complete || !cb.complete {
+            let (sink_a, complete_a, len_a) = {
+                let ca = &self.chains[a];
+                (ca.sink, ca.complete, ca.nodes.len())
+            };
+            let (sink_b, complete_b, len_b) = {
+                let cb = &self.chains[b];
+                (cb.sink, cb.complete, cb.nodes.len())
+            };
+            if sink_a != sink_b || !complete_a || !complete_b {
                 continue;
             }
             // pick a random boundary: edge leaving stage s
-            if ca.nodes.len() < 2 {
+            if len_a < 2 {
                 continue;
             }
-            let pos = self.rng.index(ca.nodes.len() - 1);
-            if cb.nodes.len() != ca.nodes.len() {
+            let pos = self.rng.index(len_a - 1);
+            if len_b != len_a {
                 continue;
             }
-            let (i1, j1) = (ca.nodes[pos], ca.nodes[pos + 1]);
-            let (i2, j2) = (cb.nodes[pos], cb.nodes[pos + 1]);
+            let (i1, j1) = (self.chains[a].nodes[pos], self.chains[a].nodes[pos + 1]);
+            let (i2, j2) = (self.chains[b].nodes[pos], self.chains[b].nodes[pos + 1]);
             if i1 == i2 || j1 == j2 {
                 continue;
             }
@@ -540,14 +727,18 @@ impl<'p> DecentralizedFlow<'p> {
             if !self.sees(i1, j2) || !self.sees(i2, j1) {
                 continue;
             }
-            let cur = self.pair_objective(self.prob.cost(i1, j1), self.prob.cost(i2, j2));
-            let new = self.pair_objective(self.prob.cost(i1, j2), self.prob.cost(i2, j1));
+            let cur = self.pair_objective(prob.cost(i1, j1), prob.cost(i2, j2));
+            let new = self.pair_objective(prob.cost(i1, j2), prob.cost(i2, j1));
             if self.annealer.accept(cur, new, &mut self.rng) && new != cur {
-                // Swap suffixes after `pos`.
-                let tail_a: Vec<NodeId> = self.chains[a].nodes.split_off(pos + 1);
-                let tail_b: Vec<NodeId> = self.chains[b].nodes.split_off(pos + 1);
-                self.chains[a].nodes.extend(tail_b);
-                self.chains[b].nodes.extend(tail_a);
+                // Swap the suffixes after `pos` element-wise: the chains
+                // have equal length, so this is the old split_off/extend
+                // swap without its two Vec allocations.
+                let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+                let (left, right) = self.chains.split_at_mut(hi);
+                let (ta, tb) = (&mut left[lo].nodes, &mut right[0].nodes);
+                for k in pos + 1..len_a {
+                    std::mem::swap(&mut ta[k], &mut tb[k]);
+                }
                 moves += 1;
             }
         }
@@ -555,11 +746,24 @@ impl<'p> DecentralizedFlow<'p> {
     }
 
     /// Request Redirect: spare node m replaces node x inside a chain.
+    ///
+    /// Runs in two phases.  Phase 1 snapshots every (chain, position)
+    /// site of the complete chains and precomputes the pure candidate
+    /// costs `d(prev,m) + d(m,next)` into flat rows (optionally across
+    /// scoped threads) — chains only self-modify during redirect and then
+    /// break out of their own position loop, so prev/x/next per site are
+    /// fixed here.  Phase 2 replays the decisions sequentially in the
+    /// original order with the live capacity state and the main RNG.
     fn request_redirect(&mut self) -> usize {
+        let prob = self.prob;
+        let threads = self.params.threads;
         let mut moves = 0;
-        let n_chains = self.chains.len();
-        for ci in 0..n_chains {
-            let ch = self.chains[ci].clone();
+        let mut sites = std::mem::take(&mut self.redir_buf);
+        let mut off = std::mem::take(&mut self.redir_off);
+        sites.clear();
+        off.clear();
+        off.push(0);
+        for (ci, ch) in self.chains.iter().enumerate() {
             if !ch.complete {
                 continue;
             }
@@ -567,38 +771,63 @@ impl<'p> DecentralizedFlow<'p> {
                 let stage = ch.head_stage + pi;
                 let prev = if pi == 0 { ch.sink } else { ch.nodes[pi - 1] };
                 let next = if pi + 1 < ch.nodes.len() { ch.nodes[pi + 1] } else { ch.sink };
-                // Candidate replacements with spare capacity in the same stage.
-                let mut scans = 0usize;
-                let cand: Vec<NodeId> = self.prob.graph.stages[stage]
-                    .iter()
-                    .filter(|&&m| {
-                        if m == x || !self.alive(m) || self.cap_left[m.0] == 0 {
-                            return false;
-                        }
-                        scans += 1;
-                        self.sees(m, prev) && self.sees(m, next)
-                    })
-                    .copied()
-                    .collect();
-                self.scans += scans;
-                let Some(&m) = cand.iter().min_by(|&&p, &&q| {
-                    let cp = self.prob.cost(prev, p) + self.prob.cost(p, next);
-                    let cq = self.prob.cost(prev, q) + self.prob.cost(q, next);
-                    cp.partial_cmp(&cq).unwrap()
-                }) else {
+                sites.push(RedirPos { ci, pi, x, prev, next, stage });
+                off.push(off.last().unwrap() + prob.graph.stages[stage].len());
+            }
+        }
+        let mut costs = std::mem::take(&mut self.cost_buf);
+        costs.clear();
+        costs.resize(*off.last().unwrap(), 0.0);
+        {
+            let sites = &sites[..];
+            par_fill_ragged(&mut costs, &off, threads, move |r, c| {
+                let p = &sites[r];
+                let m = prob.graph.stages[p.stage][c];
+                prob.cost(p.prev, m) + prob.cost(m, p.next)
+            });
+        }
+        let mut r = 0;
+        while r < sites.len() {
+            let p = sites[r];
+            let row = &costs[off[r]..off[r + 1]];
+            r += 1;
+            // Candidate replacements with spare capacity in the same
+            // stage; first minimal wins (what `min_by` returned).
+            let mut scans = 0usize;
+            let mut best: Option<(NodeId, f64)> = None;
+            for (c, &m) in prob.graph.stages[p.stage].iter().enumerate() {
+                if m == p.x || !self.alive(m) || self.cap_left[m.0] == 0 {
                     continue;
-                };
-                let cur = self.pair_objective(self.prob.cost(prev, x), self.prob.cost(x, next));
-                let new = self.pair_objective(self.prob.cost(prev, m), self.prob.cost(m, next));
-                if new != cur && self.annealer.accept(cur, new, &mut self.rng) {
-                    self.cap_left[m.0] -= 1;
-                    self.cap_left[x.0] += 1;
-                    self.chains[ci].nodes[pi] = m;
-                    moves += 1;
-                    break; // one redirect per chain per round
+                }
+                scans += 1;
+                if !self.sees(m, p.prev) || !self.sees(m, p.next) {
+                    continue;
+                }
+                let cm = row[c];
+                if best.map(|(_, bc)| cm < bc).unwrap_or(true) {
+                    best = Some((m, cm));
+                }
+            }
+            self.scans += scans;
+            let Some((m, _)) = best else {
+                continue;
+            };
+            let cur = self.pair_objective(prob.cost(p.prev, p.x), prob.cost(p.x, p.next));
+            let new = self.pair_objective(prob.cost(p.prev, m), prob.cost(m, p.next));
+            if new != cur && self.annealer.accept(cur, new, &mut self.rng) {
+                self.cap_left[m.0] -= 1;
+                self.cap_left[p.x.0] += 1;
+                self.chains[p.ci].nodes[p.pi] = m;
+                moves += 1;
+                // one redirect per chain per round
+                while r < sites.len() && sites[r].ci == p.ci {
+                    r += 1;
                 }
             }
         }
+        self.redir_buf = sites;
+        self.redir_off = off;
+        self.cost_buf = costs;
         moves
     }
 
@@ -608,7 +837,7 @@ impl<'p> DecentralizedFlow<'p> {
     /// dead flow neighbour regardless of removal order (the dead-endpoint
     /// exemption in the candidate filter depends on it).
     pub fn mark_dead(&mut self, x: NodeId) {
-        self.dead[x.0] = true;
+        self.dead.insert(x.0);
         self.cap_left[x.0] = 0;
     }
 
@@ -618,6 +847,7 @@ impl<'p> DecentralizedFlow<'p> {
     /// peer exists, the whole chain is torn down (capacity refunded).
     pub fn remove_node(&mut self, x: NodeId) -> (usize, usize) {
         self.mark_dead(x);
+        let prob = self.prob;
         let mut repaired = 0;
         let mut destroyed = 0;
         let mut ci = 0;
@@ -626,33 +856,36 @@ impl<'p> DecentralizedFlow<'p> {
                 ci += 1;
                 continue;
             };
-            let ch = self.chains[ci].clone();
-            let stage = ch.head_stage + pi;
-            let prev = if pi == 0 { ch.sink } else { ch.nodes[pi - 1] };
-            let next = if pi + 1 < ch.nodes.len() { ch.nodes[pi + 1] } else { ch.sink };
+            let (stage, prev, next) = {
+                let ch = &self.chains[ci];
+                let stage = ch.head_stage + pi;
+                let prev = if pi == 0 { ch.sink } else { ch.nodes[pi - 1] };
+                let next = if pi + 1 < ch.nodes.len() { ch.nodes[pi + 1] } else { ch.sink };
+                (stage, prev, next)
+            };
             // §V-D repair is a local negotiation too: the stand-in must be
             // able to see its *living* flow neighbours (a dead endpoint is
             // itself pending removal — its own repair re-links that side,
             // so requiring visibility towards it would veto repairs the
             // global planner performs and break k = n-1 parity).
-            let cand: Vec<NodeId> = self.prob.graph.stages[stage]
-                .iter()
-                .filter(|&&m| {
-                    m != x
-                        && self.alive(m)
-                        && self.cap_left[m.0] > 0
-                        && (!self.alive(prev) || self.sees(m, prev))
-                        && (!self.alive(next) || self.sees(m, next))
-                })
-                .copied()
-                .collect();
-            let best = cand.iter().min_by(|&&p, &&q| {
-                let cp = self.prob.cost(prev, p) + self.prob.cost(p, next);
-                let cq = self.prob.cost(prev, q) + self.prob.cost(q, next);
-                cp.partial_cmp(&cq).unwrap()
-            });
+            let mut best: Option<(NodeId, f64)> = None;
+            for &m in &prob.graph.stages[stage] {
+                if m == x || !self.alive(m) || self.cap_left[m.0] == 0 {
+                    continue;
+                }
+                if self.alive(prev) && !self.sees(m, prev) {
+                    continue;
+                }
+                if self.alive(next) && !self.sees(m, next) {
+                    continue;
+                }
+                let c = prob.cost(prev, m) + prob.cost(m, next);
+                if best.map(|(_, bc)| c < bc).unwrap_or(true) {
+                    best = Some((m, c));
+                }
+            }
             match best {
-                Some(&m) => {
+                Some((m, _)) => {
                     self.cap_left[m.0] -= 1;
                     self.chains[ci].nodes[pi] = m;
                     repaired += 1;
@@ -660,19 +893,26 @@ impl<'p> DecentralizedFlow<'p> {
                 }
                 None => {
                     // refund all other relays and the budgets
-                    for (qi, &n) in ch.nodes.iter().enumerate() {
-                        if qi != pi {
-                            self.cap_left[n.0] += 1;
+                    let (sink, complete) = {
+                        let ch = &self.chains[ci];
+                        for (qi, &n) in ch.nodes.iter().enumerate() {
+                            if qi != pi {
+                                self.cap_left[n.0] += 1;
+                            }
                         }
-                    }
-                    *self.sink_left.get_mut(&ch.sink).unwrap() += 1;
-                    if ch.complete {
-                        *self.source_left.get_mut(&ch.sink).unwrap() += 1;
+                        (ch.sink, ch.complete)
+                    };
+                    self.sink_left[sink.0] += 1;
+                    if complete {
+                        self.source_left[sink.0] += 1;
                     }
                     self.chains.remove(ci);
                     destroyed += 1;
                 }
             }
+        }
+        if destroyed > 0 {
+            self.rebuild_open_index();
         }
         (repaired, destroyed)
     }
@@ -680,7 +920,7 @@ impl<'p> DecentralizedFlow<'p> {
     /// A node (re)joins with capacity `cap` at stage `stage` (assumes the
     /// graph already lists it there).
     pub fn revive_node(&mut self, n: NodeId, cap: usize) {
-        self.dead[n.0] = false;
+        self.dead.remove(n.0);
         self.cap_left[n.0] = cap;
     }
 
@@ -947,7 +1187,9 @@ mod tests {
     }
 
     /// Full neighbor lists must reproduce the global-visibility planner
-    /// bit for bit — same RNG draws, same tie-breaks, same chains.
+    /// bit for bit — same RNG draws, same tie-breaks, same chains, and
+    /// (the dense-state refactor's guard) the same per-round candidate
+    /// and Request Change scan counts.
     #[test]
     fn full_neighbor_lists_match_global_scan_bitwise() {
         let mut rng = Rng::new(55);
@@ -964,6 +1206,8 @@ mod tests {
         assert_eq!(sa.len(), sb.len(), "same convergence trajectory");
         for (x, y) in sa.iter().zip(&sb) {
             assert_eq!(x.moves_applied, y.moves_applied, "round {}", x.round);
+            assert_eq!(x.candidate_scans, y.candidate_scans, "round {}", x.round);
+            assert_eq!(x.change_scans, y.change_scans, "round {}", x.round);
             assert_eq!(
                 x.avg_cost_per_microbatch.to_bits(),
                 y.avg_cost_per_microbatch.to_bits(),
@@ -973,6 +1217,38 @@ mod tests {
         }
         assert_eq!(a.established_paths(), b.established_paths());
         assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+    }
+
+    /// Worker threads only precompute pure cost matrices; every decision
+    /// replays sequentially, so any thread count must produce the same
+    /// bits.  400 relays x 4 stages pushes the Redirect rows past the
+    /// `PAR_MIN_CELLS` threshold, so threads > 1 genuinely exercises the
+    /// scoped-thread fill.
+    #[test]
+    fn threaded_candidate_evaluation_matches_sequential_bitwise() {
+        let mut rng = Rng::new(71);
+        let prob = random_problem(2, 400, 4, (2.0, 4.0), (1.0, 20.0), &mut rng);
+        let run = |threads: usize| {
+            let params = FlowParams { threads, ..FlowParams::default() };
+            let mut f = DecentralizedFlow::new(&prob, params, 71);
+            let stats = f.run(60, 8);
+            let trace: Vec<(usize, usize, usize, u64)> = stats
+                .iter()
+                .map(|s| {
+                    (
+                        s.moves_applied,
+                        s.candidate_scans,
+                        s.change_scans,
+                        s.avg_cost_per_microbatch.to_bits(),
+                    )
+                })
+                .collect();
+            (trace, f.established_paths(), f.total_cost().to_bits())
+        };
+        let base = run(1);
+        for threads in [2, 4, 8] {
+            assert_eq!(run(threads), base, "threads={threads} diverged from sequential");
+        }
     }
 
     #[test]

@@ -131,14 +131,20 @@ impl FlowPath {
 
     /// Maximum single-edge cost along the path (the min-max objective).
     pub fn max_edge_cost(&self, prob: &FlowProblem) -> f64 {
-        let mut m: f64 = 0.0;
-        let mut prev = self.source;
-        for &r in &self.relays {
-            m = m.max(prob.cost(prev, r));
-            prev = r;
-        }
-        m.max(prob.cost(prev, self.source))
+        max_edge_cost_over(prob, self.source, &self.relays)
     }
+}
+
+/// [`FlowPath::max_edge_cost`] over a borrowed relay slice — lets the
+/// planner score an established chain without materializing a `FlowPath`.
+pub fn max_edge_cost_over(prob: &FlowProblem, source: NodeId, relays: &[NodeId]) -> f64 {
+    let mut m: f64 = 0.0;
+    let mut prev = source;
+    for &r in relays {
+        m = m.max(prob.cost(prev, r));
+        prev = r;
+    }
+    m.max(prob.cost(prev, source))
 }
 
 /// Check a set of paths respects stage structure and node capacities.

@@ -52,8 +52,10 @@ fn usage() -> String {
   train     --family llama|gpt   --steps N --churn P --lr X --microbatches M
   bench     {BENCH_TARGETS}
             --reps N --iters N --full --warm-replan
-            (scale: --relays \"100,200\" --churn P — overlay GWTF vs baselines,
-             writes BENCH_scale.json at the repo root)
+            (scale: --relays \"100,200\" --gwtf-relays \"1000\" --churn P
+             --threads T — overlay GWTF vs baselines (the --gwtf-relays
+             sizes run GWTF only, T planner worker threads), writes
+             BENCH_scale.json at the repo root)
             (planlag: --rtts \"0,0.5,2,8,30,120\" --churn P — plan-lifecycle
              round-RTT sweep, writes BENCH_planlag.json at the repo root)
             (congestion: --nics \"0,8,4,2,1\" — shared-capacity NIC sweep
@@ -260,17 +262,24 @@ fn bench(args: &Args) -> Result<()> {
         ran = true;
     }
     if target == "scale" || target == "all" {
-        let sizes: Vec<usize> = args
-            .str_or("relays", "100,200")
-            .split(',')
-            .map(|s| s.trim().parse().map_err(|_| anyhow!("--relays expects integers")))
-            .collect::<Result<_>>()?;
+        let parse_sizes = |csv: String, flag: &str| -> Result<Vec<usize>> {
+            csv.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().map_err(|_| anyhow!("{flag} expects integers")))
+                .collect()
+        };
+        let sizes = parse_sizes(args.str_or("relays", "100,200"), "--relays")?;
+        let gwtf_only_sizes =
+            parse_sizes(args.str_or("gwtf-relays", "1000"), "--gwtf-relays")?;
         let sopts = ScaleOpts {
             sizes,
+            gwtf_only_sizes,
             reps: reps.min(3),
             iters_per_rep: iters,
             seed,
             churn_p: args.f64_or("churn", 0.2)?,
+            planner_threads: args.usize_or("threads", 1)?,
             ..Default::default()
         };
         let (t, report) = run_scale(&sopts)?;

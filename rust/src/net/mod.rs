@@ -16,4 +16,4 @@ pub mod topology;
 pub use dht::Dht;
 pub use gossip::{DirectedView, GossipConfig, NodeViews};
 pub use overlay::Overlay;
-pub use topology::{Topology, TopologyConfig};
+pub use topology::{CongestionCache, Topology, TopologyConfig};

@@ -201,6 +201,25 @@ impl Overlay {
         map
     }
 
+    /// Stream every `(viewer, peer)` planning edge of
+    /// [`neighbor_map`](Self::neighbor_map) — same viewers, same peers —
+    /// without materializing the map or the per-relay peer vectors.
+    /// Feeds [`crate::flow::DecentralizedFlow::set_neighbor_edges`]
+    /// directly on every (re)plan.
+    pub fn for_each_planning_edge(&self, mut f: impl FnMut(NodeId, NodeId)) {
+        for (&r, v) in &self.views {
+            for &p in v.fwd.active.iter().chain(&v.bwd.active) {
+                f(r, p);
+            }
+            if let Some(p) = v.ring {
+                f(r, p);
+            }
+            for &d in &self.data_nodes {
+                f(r, d);
+            }
+        }
+    }
+
     /// Active view of one relay (tests / diagnostics).
     pub fn views_of(&self, r: NodeId) -> Option<&NodeViews> {
         self.views.get(&r)

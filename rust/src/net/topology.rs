@@ -1,5 +1,8 @@
 //! Topology generator: nodes in geographic regions, asymmetric links.
 
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
+
 use crate::cost::{
     comm_cost, edge_cost, expected_queue_s, LinkParams, NicConfig, NodeId, NodeProfile,
 };
@@ -140,6 +143,97 @@ impl Topology {
     }
 }
 
+/// Memo over [`Topology::congestion_cost`] for one fixed payload size —
+/// the planner's cost closure evaluates the same edges thousands of
+/// times per round, and `expected_queue_s` is by far the most expensive
+/// term in them.
+///
+/// The memo stores the *full* edge value: the queueing term does not
+/// decompose per endpoint bit-exactly in IEEE arithmetic, so splitting
+/// it would change cost bits and break the golden traces.  Entries are
+/// keyed by `(i, j)` and stamped with the pair of per-(endpoint,
+/// link-class) generation counters they were computed at; the booking
+/// path ([`crate::sim::TrainingSim`]) bumps an endpoint's class
+/// generation whenever a transmission actually queues behind its NIC
+/// cap, forcing affected edges to recompute.  Today every recompute
+/// returns identical bits — the topology behind the `Arc` is immutable —
+/// so the invalidation rule is a correctness-neutral hook for future
+/// measured-backlog cost terms; it is also exactly why the cache is
+/// race-benign under `Relaxed` atomics: any interleaving of stores
+/// writes the same value.
+#[derive(Debug)]
+pub struct CongestionCache {
+    topo: Arc<Topology>,
+    size_bytes: f64,
+    n: usize,
+    /// Cached edge-cost bit patterns, row-major by `(i, j)`.
+    vals: Vec<AtomicU64>,
+    /// `(gen_i << 32) | gen_j` at which `vals[k]` was computed; 0 = never
+    /// (generations start at 1).
+    stamps: Vec<AtomicU64>,
+    /// Per-(node, link-class) generations: `gens[2 * node + class]`,
+    /// class 0 = intra-region, 1 = WAN.
+    gens: Vec<AtomicU32>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CongestionCache {
+    pub fn new(topo: Arc<Topology>, size_bytes: f64) -> CongestionCache {
+        let n = topo.n();
+        CongestionCache {
+            topo,
+            size_bytes,
+            n,
+            vals: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
+            stamps: (0..n * n).map(|_| AtomicU64::new(0)).collect(),
+            gens: (0..2 * n).map(|_| AtomicU32::new(1)).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn topo(&self) -> &Arc<Topology> {
+        &self.topo
+    }
+
+    fn class(&self, i: NodeId, j: NodeId) -> usize {
+        usize::from(self.topo.region[i.0] != self.topo.region[j.0])
+    }
+
+    /// [`Topology::congestion_cost`] for the cache's payload size —
+    /// bit-identical to the uncached call, served from the memo when the
+    /// entry's generation stamp is current.
+    pub fn cost(&self, i: NodeId, j: NodeId) -> f64 {
+        let cls = self.class(i, j);
+        let gi = self.gens[2 * i.0 + cls].load(Relaxed) as u64;
+        let gj = self.gens[2 * j.0 + cls].load(Relaxed) as u64;
+        let want = (gi << 32) | gj;
+        let k = i.0 * self.n + j.0;
+        if self.stamps[k].load(Relaxed) == want {
+            self.hits.fetch_add(1, Relaxed);
+            return f64::from_bits(self.vals[k].load(Relaxed));
+        }
+        self.misses.fetch_add(1, Relaxed);
+        let v = self.topo.congestion_cost(i, j, self.size_bytes);
+        self.vals[k].store(v.to_bits(), Relaxed);
+        self.stamps[k].store(want, Relaxed);
+        v
+    }
+
+    /// Booking-path invalidation: a transmission on `node`'s NIC queued
+    /// behind the given link class, so every cached edge touching that
+    /// (endpoint, class) must recompute on next read.
+    pub fn invalidate(&self, node: NodeId, same_region: bool) {
+        self.gens[2 * node.0 + usize::from(!same_region)].fetch_add(1, Relaxed);
+    }
+
+    /// (hits, misses) observed so far — the scale bench reports these.
+    pub fn hit_miss(&self) -> (u64, u64) {
+        (self.hits.load(Relaxed), self.misses.load(Relaxed))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +328,61 @@ mod tests {
         t.set_profile(i, NodeProfile::new(1.0, 1));
         t.set_profile(j, NodeProfile::new(1.0, 1));
         assert_eq!(t.congestion_cost(i, j, 1e6).to_bits(), t.cost(i, j, 1e6).to_bits());
+    }
+
+    #[test]
+    fn congestion_cache_serves_identical_bits_and_counts() {
+        let mut t = topo(6);
+        t.nic = NicConfig::uniform(2);
+        t.set_profile(NodeId(0), NodeProfile::new(1.0, 4));
+        t.set_profile(NodeId(1), NodeProfile::new(1.0, 8));
+        let t = Arc::new(t);
+        let cache = CongestionCache::new(t.clone(), 1e6);
+        for _ in 0..3 {
+            for i in 0..t.n() {
+                for j in 0..t.n() {
+                    if i == j {
+                        continue;
+                    }
+                    let (i, j) = (NodeId(i), NodeId(j));
+                    assert_eq!(
+                        cache.cost(i, j).to_bits(),
+                        t.congestion_cost(i, j, 1e6).to_bits(),
+                        "{i}->{j}"
+                    );
+                }
+            }
+        }
+        let pairs = (t.n() * (t.n() - 1)) as u64;
+        let (hits, misses) = cache.hit_miss();
+        assert_eq!(misses, pairs, "each pair computed exactly once");
+        assert_eq!(hits, 2 * pairs, "passes 2 and 3 fully served from the memo");
+    }
+
+    #[test]
+    fn congestion_cache_invalidation_is_per_endpoint_and_class() {
+        let mut t = topo(7);
+        t.nic = NicConfig::uniform(2);
+        let t = Arc::new(t);
+        // pick a WAN pair and a pair not touching node 0
+        let i = NodeId(0);
+        let j = NodeId((1..t.n()).find(|&j| t.region[j] != t.region[0]).unwrap());
+        let k = NodeId((1..t.n()).find(|&k| k != j.0).unwrap());
+        let cache = CongestionCache::new(t.clone(), 1e6);
+        cache.cost(i, j);
+        cache.cost(k, j);
+        // invalidating i's WAN class recomputes (i, j) but not (k, j)
+        let (_, m0) = cache.hit_miss();
+        cache.invalidate(i, false);
+        cache.cost(i, j);
+        cache.cost(k, j);
+        let (_, m1) = cache.hit_miss();
+        assert_eq!(m1 - m0, 1, "only the touched endpoint's edge recomputes");
+        // invalidating the *other* class leaves the WAN entry warm
+        cache.invalidate(i, true);
+        cache.cost(i, j);
+        let (_, m2) = cache.hit_miss();
+        assert_eq!(m2, m1, "intra-region generation must not stamp WAN edges");
     }
 
     #[test]

@@ -319,19 +319,20 @@ impl Engine {
         }
     }
 
-    /// Build from a scenario (clones its topology, config and churn).
+    /// Build from a scenario (shares its topology behind the `Arc`,
+    /// copies the simulator config, clones the churn process).
     /// Overlay scenarios (`ScenarioConfig::overlay_fanout`) get the
     /// gossip cadence source; scenarios with
     /// `ScenarioConfig::plan_round_rtt_s` set get the round-latency plan
     /// lifecycle and its [`crate::sim::sources::PlanningSource`], so both
     /// failure detection and plan convergence run on the same continuous
-    /// clock as churn and jitter.
+    /// clock as churn and jitter.  Congestion-aware scenarios also share
+    /// the planner's [`crate::net::CongestionCache`], so NIC bookings
+    /// that queue invalidate the planner's memoized edge costs.
     pub fn from_scenario(sc: &Scenario, seed: u64) -> Engine {
-        let mut engine = Engine::new(
-            TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone()),
-            sc.churn.clone(),
-            seed,
-        );
+        let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg);
+        sim.set_cost_cache(sc.cost_cache.clone());
+        let mut engine = Engine::new(sim, sc.churn.clone(), seed);
         if sc.cfg.overlay_fanout.is_some() {
             engine.add_source(Box::new(super::sources::GossipCadenceSource::new(
                 super::scenario::GOSSIP_PERIOD_S,
@@ -529,11 +530,16 @@ impl TrainingSim {
                 self.birth_at[node.0] = t;
             }
         }
-        self.jitter = sched.jitter.clone();
+        // Reuse the retained window buffers across iterations: clearing a
+        // Vec keeps its allocation, so steady-state runs stop paying a
+        // pair of heap round-trips per schedule.
+        self.jitter.clear();
+        self.jitter.extend_from_slice(&sched.jitter);
         // Sorted by start so the per-transfer factor lookup can binary
         // search (merged sources may interleave windows).
         self.jitter.sort_by(|a, b| a.from.total_cmp(&b.from));
-        self.slowdowns = sched.slowdowns.clone();
+        self.slowdowns.clear();
+        self.slowdowns.extend_from_slice(&sched.slowdowns);
 
         let mut metrics =
             IterationMetrics { scheduled: paths.len(), planning_s, ..Default::default() };
@@ -579,6 +585,7 @@ impl TrainingSim {
         // Stragglers past the aggregation cutoff are excluded (wasted).
         let deadline = self.cfg.deadline_factor * self.iter_estimate;
         while let Some((t, ev)) = q.pop() {
+            metrics.events += 1;
             let (mi, phase) = match ev {
                 Ev::World(WorldEvent::Crash(node)) => {
                     router.on_crash(node);
@@ -727,7 +734,7 @@ mod tests {
         // legacy (churn-only, cold-plan) path: same seed => same metrics.
         let sc = build(&ScenarioConfig::table2(true, 0.0, 3));
         let mut manual_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 3);
-        let mut manual_sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+        let mut manual_sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg);
         let mut manual_churn = sc.churn.clone();
         let mut manual_rng = Rng::new(9);
         let mut engine_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 3);
@@ -755,7 +762,7 @@ mod tests {
         // rejoins and all — at the paper's 20% join-leave chance.
         let sc = build(&ScenarioConfig::table2(false, 0.2, 41));
         let mut manual_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 41);
-        let mut manual_sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg.clone());
+        let mut manual_sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg);
         let mut manual_churn = sc.churn.clone();
         let mut manual_rng = Rng::new(13);
         let mut engine_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 41);
@@ -794,7 +801,7 @@ mod tests {
         let mut legacy = Engine::from_scenario(&sc, 17);
 
         let mut nic_sc = build(&ScenarioConfig::table2(false, 0.2, 23));
-        nic_sc.topo.nic = crate::cost::NicConfig::uniform(512);
+        std::sync::Arc::make_mut(&mut nic_sc.topo).nic = crate::cost::NicConfig::uniform(512);
         let mut nic_router = GwtfRouter::from_scenario(&nic_sc, FlowParams::default(), 23);
         let mut nic_engine = Engine::from_scenario(&nic_sc, 17);
 

@@ -6,9 +6,11 @@
 //! homogeneous (cap 4) or heterogeneous (cap U(1,3)) relays, join-leave
 //! probability 0/10/20%.
 
+use std::sync::Arc;
+
 use crate::cost::{ActivationProfile, LinkParams, NicConfig, NodeId, NodeProfile};
 use crate::flow::graph::{FlowProblem, StageGraph};
-use crate::net::{Topology, TopologyConfig};
+use crate::net::{CongestionCache, Topology, TopologyConfig};
 use crate::util::Rng;
 
 use super::churn::{ChurnModel, ChurnProcess};
@@ -185,18 +187,26 @@ pub const GOSSIP_PERIOD_S: f64 = 30.0;
 /// Fully-instantiated scenario.
 pub struct Scenario {
     pub cfg: ScenarioConfig,
-    pub topo: Topology,
+    /// One shared topology: the planner's cost closure, the simulator and
+    /// every engine built from this scenario point at the *same*
+    /// allocation (a full `links` matrix is O(n²) — at 1k nodes deep
+    /// clones per run dominated setup time).
+    pub topo: Arc<Topology>,
     pub prob: FlowProblem,
     pub churn: ChurnProcess,
     pub sim_cfg: TrainingSimConfig,
+    /// Congestion-cost memo backing the planner closure when
+    /// `congestion_aware_planning` is set (None otherwise); the engine
+    /// hands it to the simulator so the booking path can invalidate.
+    pub cost_cache: Option<Arc<CongestionCache>>,
     pub relays: Vec<NodeId>,
     pub data_nodes: Vec<NodeId>,
 }
 
 impl Scenario {
-    /// A continuous-time engine over this scenario (clones the topology,
-    /// simulator config and churn process; attach extra event sources via
-    /// [`Engine::add_source`]).
+    /// A continuous-time engine over this scenario (shares the topology,
+    /// copies the simulator config and clones the churn process; attach
+    /// extra event sources via [`Engine::add_source`]).
     pub fn engine(&self, seed: u64) -> Engine {
         Engine::from_scenario(self, seed)
     }
@@ -284,18 +294,26 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
     let payload = act.bytes();
 
     let demand = vec![cfg.microbatches_per_data; cfg.n_data];
-    let graph = std::sync::Arc::new(StageGraph { stages, data_nodes: data_nodes.clone() });
-    let topo_for_cost = topo.clone();
+    let graph = Arc::new(StageGraph { stages, data_nodes: data_nodes.clone() });
+    // Topology mutation is done: freeze it behind one Arc shared by the
+    // planner closure, the scenario and every simulator built from it.
+    let topo = Arc::new(topo);
     // The planner's Eq. 1 closure derives from the same substrate
-    // parameters the simulator executes (the cloned topology carries
+    // parameters the simulator executes (the shared topology carries
     // `nic`): congestion-aware scenarios add the expected NIC-queueing
-    // term per edge, everything else keeps the contention-blind paper
-    // cost (identical closure under unlimited NICs either way).
+    // term per edge — served through the [`CongestionCache`] memo — and
+    // everything else keeps the contention-blind paper cost (identical
+    // closure under unlimited NICs either way, and the cache is
+    // bit-transparent over `congestion_cost`).
+    let mut cost_cache = None;
     let cost: Box<dyn Fn(NodeId, NodeId) -> f64 + Send + Sync> =
         if cfg.congestion_aware_planning {
-            Box::new(move |i, j| topo_for_cost.congestion_cost(i, j, payload))
+            let cache = Arc::new(CongestionCache::new(topo.clone(), payload));
+            cost_cache = Some(cache.clone());
+            Box::new(move |i, j| cache.cost(i, j))
         } else {
-            Box::new(move |i, j| topo_for_cost.cost(i, j, payload))
+            let topo = topo.clone();
+            Box::new(move |i, j| topo.cost(i, j, payload))
         };
     let prob = FlowProblem { graph, cap: cap.clone(), demand, cost };
 
@@ -317,7 +335,7 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
         deadline_factor: cfg.deadline_factor.unwrap_or(2.0),
     };
 
-    Scenario { cfg: cfg.clone(), topo, prob, churn, sim_cfg, relays, data_nodes }
+    Scenario { cfg: cfg.clone(), topo, prob, churn, sim_cfg, cost_cache, relays, data_nodes }
 }
 
 #[cfg(test)]

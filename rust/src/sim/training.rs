@@ -68,9 +68,11 @@
 //! hidden behind training) and `stale_replans` (tickets invalidated by
 //! mid-planning churn).
 
+use std::sync::Arc;
+
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
-use crate::net::Topology;
+use crate::net::{CongestionCache, Topology};
 use crate::util::Rng;
 
 use super::churn::{ChurnEvents, ChurnProcess};
@@ -307,8 +309,9 @@ impl<P: BlockingPlanner> RoutingPolicy for BlockingPlanAdapter<P> {
     }
 }
 
-/// Simulation configuration.
-#[derive(Debug, Clone)]
+/// Simulation configuration.  Plain scalars — `Copy`, so engines and
+/// benches pass it by value instead of cloning.
+#[derive(Debug, Clone, Copy)]
 pub struct TrainingSimConfig {
     /// Activation/gradient payload per hop, bytes (Eq. 1 `size`).
     pub payload_bytes: f64,
@@ -400,6 +403,9 @@ pub struct IterationMetrics {
     /// ([`PlanOutcome::stale`]): the plan went through a commit-time
     /// §V-D local repair instead of a clean convergence.
     pub stale_replans: usize,
+    /// Kernel events dispatched while executing this iteration's schedule
+    /// — the numerator of the scale bench's events/sec throughput column.
+    pub events: usize,
 }
 
 impl IterationMetrics {
@@ -415,8 +421,14 @@ impl IterationMetrics {
 /// The training simulator: physical model of the volunteer network over
 /// one iteration's virtual timeline.
 pub struct TrainingSim {
-    pub topo: Topology,
+    /// Shared, immutable network state (scenario, planner closure and
+    /// simulator all point at the same allocation — the `links` matrix is
+    /// O(n²) and used to be deep-cloned per engine).
+    pub topo: Arc<Topology>,
     pub cfg: TrainingSimConfig,
+    /// Planner-side congestion memo to invalidate from the booking path
+    /// (None when the scenario plans contention-blind).
+    cost_cache: Option<Arc<CongestionCache>>,
     /// Virtual availability window per node: usable while
     /// `birth_at <= t < death_at`.  A node alive at iteration start has
     /// `birth_at = 0`; one joining mid-iteration gets its join instant;
@@ -431,18 +443,28 @@ pub struct TrainingSim {
 }
 
 impl TrainingSim {
-    pub fn new(topo: Topology, cfg: TrainingSimConfig) -> Self {
+    /// Accepts an owned [`Topology`] (tests, standalone use) or an
+    /// already-shared `Arc<Topology>` (scenario/engine path — no clone).
+    pub fn new(topo: impl Into<Arc<Topology>>, cfg: TrainingSimConfig) -> Self {
+        let topo = topo.into();
         let n = topo.n();
         let iter_estimate = cfg.initial_iter_estimate_s;
         TrainingSim {
             topo,
             cfg,
+            cost_cache: None,
             death_at: vec![f64::INFINITY; n],
             birth_at: vec![0.0; n],
             jitter: Vec::new(),
             slowdowns: Vec::new(),
             iter_estimate,
         }
+    }
+
+    /// Attach the planner's congestion-cost memo so the booking path can
+    /// invalidate the (endpoint, link-class) generations it dirties.
+    pub fn set_cost_cache(&mut self, cache: Option<Arc<CongestionCache>>) {
+        self.cost_cache = cache;
     }
 
     /// The running iteration-length estimate (the crash-instant and
@@ -518,6 +540,16 @@ impl TrainingSim {
         let prop = self.topo.delay(from, to, 0.0) * self.link_factor_at(t);
         let tx = (dt - prop).max(0.0);
         let start = net.acquire(from, to, t, tx);
+        if start > t {
+            // The transmission queued behind a NIC cap: dirty both
+            // endpoints' link-class generation in the planner's
+            // congestion memo (the booking-path invalidation rule).
+            if let Some(cache) = &self.cost_cache {
+                let same = self.topo.region[from.0] == self.topo.region[to.0];
+                cache.invalidate(from, same);
+                cache.invalidate(to, same);
+            }
+        }
         metrics.comm_s += dt;
         metrics.queue_s += start - t;
         metrics.tx_s += tx;

@@ -185,7 +185,7 @@ pub struct ChurnTrainer {
 impl ChurnTrainer {
     pub fn new(trainer: PipelineTrainer, scenario_cfg: &ScenarioConfig) -> ChurnTrainer {
         let scenario = build(scenario_cfg);
-        let sim = TrainingSim::new(scenario.topo.clone(), scenario.sim_cfg.clone());
+        let sim = TrainingSim::new(scenario.topo.clone(), scenario.sim_cfg);
         let router =
             GwtfRouter::from_scenario(&scenario, FlowParams::default(), scenario_cfg.seed ^ 0xF1);
         let rng = Rng::new(scenario_cfg.seed ^ 0x51);

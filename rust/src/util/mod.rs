@@ -4,10 +4,12 @@
 //! (`criterion`) and a property-testing helper (`proptest`).
 
 pub mod bench;
+pub mod bitset;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
+pub use bitset::{BitMatrix, BitSet};
 pub use rng::Rng;
 pub use stats::Summary;

@@ -1,0 +1,119 @@
+//! Thread-count invariance of the dense-state planner (ISSUE 6).
+//!
+//! The planner's parallel candidate evaluation precomputes pure f64
+//! cost matrices on worker threads and replays every decision
+//! sequentially on the main thread with the main RNG, so the thread
+//! count must never move a single bit: same plans, same protocol
+//! rounds, same per-round scan counters, same engine metrics.  These
+//! tests pin that contract on the gossip-overlay scale scenario at 100
+//! relays (the ISSUE 3 acceptance shape) and at 200 relays, where the
+//! Request Redirect cost matrix crosses the parallel-dispatch
+//! threshold and the worker threads genuinely engage.
+
+use gwtf::coordinator::GwtfRouter;
+use gwtf::flow::decentralized::DecentralizedFlow;
+use gwtf::flow::graph::FlowPath;
+use gwtf::flow::FlowParams;
+use gwtf::net::{GossipConfig, Overlay};
+use gwtf::sim::scenario::{build, ScenarioConfig};
+
+const THREADS: [usize; 2] = [1, 4];
+
+fn params(threads: usize) -> FlowParams {
+    FlowParams { threads, ..FlowParams::default() }
+}
+
+/// Per-round planner trace: every deterministic counter plus the cost
+/// bits.
+fn planner_trace(relays: usize, threads: usize) -> Vec<(usize, usize, usize, usize, u64)> {
+    let sc = build(&ScenarioConfig::scale(relays, 0.2, 11));
+    let alive = vec![true; sc.topo.n()];
+    let mut ov = Overlay::build(&sc.prob.graph, sc.topo.n(), GossipConfig::default(), 11);
+    ov.reconcile(&alive);
+    let mut flow = DecentralizedFlow::new(&sc.prob, params(threads), 19);
+    flow.set_neighbors(ov.neighbor_map());
+    flow.run(40, 8)
+        .iter()
+        .map(|s| {
+            (
+                s.moves_applied,
+                s.candidate_scans,
+                s.change_scans,
+                s.complete_flows,
+                s.avg_cost_per_microbatch.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn planner_round_trace_is_thread_count_invariant() {
+    for &relays in &[100usize, 200] {
+        let base = planner_trace(relays, THREADS[0]);
+        assert!(!base.is_empty(), "{relays}-relay plan ran no rounds");
+        let threaded = planner_trace(relays, THREADS[1]);
+        assert_eq!(
+            base, threaded,
+            "{relays} relays: planner trace diverged between 1 and 4 threads"
+        );
+    }
+}
+
+/// Cold plan + warm re-plan through the router: paths and rounds.
+fn router_plans(relays: usize, threads: usize) -> (Vec<FlowPath>, usize, Vec<FlowPath>, usize) {
+    let sc = build(&ScenarioConfig::scale(relays, 0.2, 13));
+    let mut r = GwtfRouter::from_scenario(&sc, params(threads), 13 ^ 0xA);
+    let mut alive = vec![true; sc.topo.n()];
+    let (cold, _) = r.plan(&alive);
+    let cold_rounds = r.last_rounds;
+    let victim = cold[0].relays[1];
+    alive[victim.0] = false;
+    let (warm, _) = r.replan(&alive, &[victim]);
+    (cold, cold_rounds, warm, r.last_rounds)
+}
+
+#[test]
+fn router_plans_are_thread_count_invariant() {
+    for &relays in &[100usize, 200] {
+        let a = router_plans(relays, THREADS[0]);
+        let b = router_plans(relays, THREADS[1]);
+        assert_eq!(a.0, b.0, "{relays} relays: cold plans diverged");
+        assert_eq!(a.1, b.1, "{relays} relays: cold rounds diverged");
+        assert_eq!(a.2, b.2, "{relays} relays: warm re-plans diverged");
+        assert_eq!(a.3, b.3, "{relays} relays: warm rounds diverged");
+    }
+}
+
+/// Full engine iterations: metric bits and event counts.
+fn engine_trace(relays: usize, threads: usize) -> Vec<(usize, usize, u64, u64, usize, usize)> {
+    let sc = build(&ScenarioConfig::scale(relays, 0.2, 17));
+    let mut router = GwtfRouter::from_scenario(&sc, params(threads), 17 ^ 0xA);
+    let mut engine = sc.engine(17 ^ 0x1);
+    engine.warm_replan = true;
+    (0..3)
+        .map(|_| {
+            let m = engine.step(&sc.prob, &mut router);
+            (
+                m.completed,
+                m.dropped,
+                m.makespan_s.to_bits(),
+                m.comm_s.to_bits(),
+                m.replan_rounds,
+                m.events,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn engine_metrics_are_thread_count_invariant() {
+    for &relays in &[100usize, 200] {
+        let base = engine_trace(relays, THREADS[0]);
+        assert!(base.iter().any(|r| r.0 > 0), "{relays}-relay engine completed nothing");
+        let threaded = engine_trace(relays, THREADS[1]);
+        assert_eq!(
+            base, threaded,
+            "{relays} relays: engine metrics diverged between 1 and 4 threads"
+        );
+    }
+}

@@ -1,18 +1,22 @@
-//! Test-sized scale bench + planner-round regression gate (ISSUE 3).
+//! Test-sized scale bench + planner-round regression gate (ISSUE 3),
+//! extended with the 1000-relay raw-speed profile (ISSUE 6).
 //!
-//! Runs the 100/200-relay overlay scenario with tiny rep/iteration
-//! counts, records planner wall time and protocol rounds, and maintains
-//! the `test_sized` profile of `BENCH_scale.json` at the repo root:
+//! Runs the 100/200-relay overlay scenario plus a GWTF-only 1000-relay
+//! case with tiny rep/iteration counts, records planner wall time,
+//! protocol rounds and engine event throughput, and maintains the
+//! `test_sized` profile of `BENCH_scale.json` at the repo root:
 //!
-//! - When the committed profile is `null` (first run on a fresh
-//!   machine), the measurement is captured and written — **commit the
-//!   updated `BENCH_scale.json`** to arm the gate (the `arm-baselines`
-//!   CI job does this automatically on `main`).
-//! - When a baseline exists, the 100-relay GWTF planner rounds must stay
-//!   within 2x of it.  Rounds are deterministic per seed, so the gate is
-//!   stable across machines up to libm-level annealer differences —
-//!   hence the 2x headroom (wall time is recorded but never gated; CI
-//!   machines vary).
+//! - When the committed profile is `null` or predates the 1000-relay
+//!   case (first run on a fresh machine, or the first run after the
+//!   raw-speed change), the measurement is captured and written —
+//!   **commit the updated `BENCH_scale.json`** to arm the gate (the
+//!   `arm-baselines` CI job does this automatically on `main`).
+//! - When an armed baseline exists, the 100- and 1000-relay GWTF
+//!   planner rounds must stay within 2x of it.  Rounds are
+//!   deterministic per seed, so the gate is stable across machines up
+//!   to libm-level annealer differences — hence the 2x headroom (wall
+//!   time and events/sec are recorded but never gated; CI machines
+//!   vary).
 //! - `GWTF_UPDATE_SCALE_BASELINE=1` re-captures after an intentional
 //!   planner change.
 //!
@@ -26,16 +30,24 @@ use gwtf::experiments::{
 fn opts() -> ScaleOpts {
     ScaleOpts {
         sizes: vec![100, 200],
+        // The raw-speed gate: 1000 relays, GWTF only (the baselines'
+        // global O(n²) scans would dominate the test's wall time
+        // without informing a gate that compares GWTF to itself).
+        gwtf_only_sizes: vec![1000],
         reps: 1,
         iters_per_rep: 2,
         seed: 7,
         churn_p: 0.2,
         dtfm_generations: 10,
+        // Exercise the threaded candidate-evaluation path; plans (and
+        // so every gated counter) are bit-identical at any thread
+        // count — rust/tests/dense_parity.rs pins that.
+        planner_threads: 4,
     }
 }
 
 #[test]
-fn scale_completes_at_100_and_200_relays_and_gates_planner_rounds() {
+fn scale_completes_at_100_200_and_1000_relays_and_gates_planner_rounds() {
     let (table, report) = run_scale(&opts()).unwrap();
 
     // Acceptance: completes at 100 and 200 relays under 20% Poisson
@@ -54,43 +66,64 @@ fn scale_completes_at_100_and_200_relays_and_gates_planner_rounds() {
         assert_eq!(g.plan_calls, 2, "one (re)plan per iteration");
     }
 
+    // Raw-speed acceptance (ISSUE 6): the 1000-relay, 10-region,
+    // 20%-Poisson-churn scenario completes inside the test-sized run,
+    // GWTF only, with engine/planner throughput recorded.
+    let g1k = report.case(1000, "gwtf").expect("1000-relay gwtf case");
+    assert!(g1k.throughput_total > 0.0, "1000-relay overlay run routed nothing");
+    assert!(g1k.plan_rounds_total > 0, "1000-relay planner reported no rounds");
+    assert_eq!(g1k.plan_calls, 2, "one (re)plan per iteration");
+    assert!(g1k.events_total > 0, "engine events must be counted");
+    assert!(report.case(1000, "swarm").is_none(), "1000 relays is GWTF-only");
+    eprintln!(
+        "scale 1000/gwtf: {} engine events ({:.0} events/sec), planner {:.1} ms \
+         over {} rounds (informational; only rounds are gated)",
+        g1k.events_total,
+        g1k.events_per_sec(),
+        g1k.plan_wall_ms,
+        g1k.plan_rounds_total
+    );
+
     let path = scale_json_path();
     let update = std::env::var("GWTF_UPDATE_SCALE_BASELINE").is_ok();
-    match (update, read_scale_profile(&path, "test_sized")) {
-        (false, Some(baseline)) => {
-            let base = baseline.case(100, "gwtf").expect("baseline 100-relay gwtf case");
-            let fresh = report.case(100, "gwtf").unwrap();
+    let baseline = read_scale_profile(&path, "test_sized");
+    // Gate only against a baseline that covers the 1000-relay case; an
+    // older capture (pre-raw-speed format) is re-captured instead.
+    let armed = baseline.as_ref().is_some_and(|b| b.case(1000, "gwtf").is_some());
+    if !update && armed {
+        let baseline = baseline.unwrap();
+        for &n in &[100usize, 1000] {
+            let base = baseline.case(n, "gwtf").expect("armed baseline gwtf case");
+            let fresh = report.case(n, "gwtf").unwrap();
             assert!(
                 fresh.plan_rounds_total <= 2 * base.plan_rounds_total,
-                "100-relay planner rounds regressed >2x: {} vs baseline {} \
+                "{n}-relay planner rounds regressed >2x: {} vs baseline {} \
                  (GWTF_UPDATE_SCALE_BASELINE=1 to re-baseline intentionally)",
                 fresh.plan_rounds_total,
                 base.plan_rounds_total
             );
             assert!(
                 fresh.cold_rounds <= 2 * base.cold_rounds,
-                "100-relay cold-plan convergence regressed >2x: {} vs baseline {}",
+                "{n}-relay cold-plan convergence regressed >2x: {} vs baseline {}",
                 fresh.cold_rounds,
                 base.cold_rounds
             );
         }
-        (update, _) => {
-            update_scale_json(&path, "test_sized", &report).unwrap();
-            let where_ = if std::env::var("GITHUB_ACTIONS").is_ok() {
-                "NOTE: on a CI runner the capture is discarded with the checkout \
-                 unless the arm-baselines job commits it"
-            } else {
-                "commit BENCH_scale.json to arm the regression gate"
-            };
-            eprintln!(
-                "scale baseline {} at {} — {where_}",
-                if update {
-                    "re-captured (GWTF_UPDATE_SCALE_BASELINE)"
-                } else {
-                    "was null/missing; captured"
-                },
-                path.display()
-            );
-        }
+    } else {
+        update_scale_json(&path, "test_sized", &report).unwrap();
+        let where_ = if std::env::var("GITHUB_ACTIONS").is_ok() {
+            "NOTE: on a CI runner the capture is discarded with the checkout \
+             unless the arm-baselines job commits it"
+        } else {
+            "commit BENCH_scale.json to arm the regression gate"
+        };
+        let reason = if update {
+            "re-captured (GWTF_UPDATE_SCALE_BASELINE)"
+        } else if baseline.is_some() {
+            "predated the 1000-relay profile; re-captured"
+        } else {
+            "was null/missing; captured"
+        };
+        eprintln!("scale baseline {reason} at {} — {where_}", path.display());
     }
 }
