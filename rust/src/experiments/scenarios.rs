@@ -984,6 +984,229 @@ pub fn run_congestion(opts: &CongestionOpts) -> Result<(MetricsTable, Congestion
     Ok((table, report))
 }
 
+/// Options for the bounded-staleness asynchronous-training sweep
+/// (`gwtf bench async`).
+#[derive(Debug, Clone)]
+pub struct AsyncOpts {
+    /// Staleness bounds to sweep (each `>= 1`); the synchronous-barrier
+    /// reference arm is always measured alongside.
+    pub bounds: Vec<usize>,
+    /// Continuous-clock Poisson churn rate for every arm.
+    pub churn_p: f64,
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub seed: u64,
+}
+
+impl Default for AsyncOpts {
+    fn default() -> Self {
+        AsyncOpts { bounds: vec![1, 2, 4], churn_p: 0.2, reps: 3, iters_per_rep: 4, seed: 1 }
+    }
+}
+
+/// One arm of the async sweep, totalled over reps and iterations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AsyncCase {
+    /// Staleness bound; 0 = the synchronous §V-E barrier reference.
+    pub staleness: usize,
+    /// Summed iteration makespans, seconds (goodput denominator).
+    pub makespan_total_s: f64,
+    /// Mean aggregation seconds charged per iteration (barrier or
+    /// rolling exchanges + catch-up).
+    pub agg_mean_s: f64,
+    /// Mean weight staleness trained against (generations behind).
+    pub staleness_mean: f64,
+    /// Microbatches deferred by the admission rule, total.
+    pub deferred_total: f64,
+    /// Microbatches completed, total.
+    pub throughput_total: f64,
+}
+
+impl AsyncCase {
+    /// Completed microbatches per makespan second — the async guard's
+    /// monotone gate: removing the barrier must buy goodput.
+    pub fn goodput(&self) -> f64 {
+        if self.makespan_total_s > 0.0 {
+            self.throughput_total / self.makespan_total_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The `BENCH_async.json` payload for one profile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AsyncReport {
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub churn_p: f64,
+    pub cases: Vec<AsyncCase>,
+}
+
+impl AsyncReport {
+    pub fn case(&self, staleness: usize) -> Option<&AsyncCase> {
+        self.cases.iter().find(|c| c.staleness == staleness)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let case_json = |c: &AsyncCase| {
+            let mut o = BTreeMap::new();
+            o.insert("staleness".into(), Json::Num(c.staleness as f64));
+            o.insert("makespan_total_s".into(), Json::Num(c.makespan_total_s));
+            o.insert("agg_mean_s".into(), Json::Num(c.agg_mean_s));
+            o.insert("staleness_mean".into(), Json::Num(c.staleness_mean));
+            o.insert("deferred_total".into(), Json::Num(c.deferred_total));
+            o.insert("throughput_total".into(), Json::Num(c.throughput_total));
+            // Derived, for human readers of the JSON; not parsed back.
+            o.insert("goodput_mb_per_s".into(), Json::Num(c.goodput()));
+            Json::Obj(o)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("reps".into(), Json::Num(self.reps as f64));
+        root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
+        root.insert("churn_p".into(), Json::Num(self.churn_p));
+        root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Option<AsyncReport> {
+        let num = |o: &Json, k: &str| o.get(k).and_then(Json::as_f64);
+        let cases = match j.get("cases")? {
+            Json::Arr(v) => v
+                .iter()
+                .map(|c| {
+                    Some(AsyncCase {
+                        staleness: num(c, "staleness")? as usize,
+                        makespan_total_s: num(c, "makespan_total_s")?,
+                        agg_mean_s: num(c, "agg_mean_s")?,
+                        staleness_mean: num(c, "staleness_mean")?,
+                        deferred_total: num(c, "deferred_total")?,
+                        throughput_total: num(c, "throughput_total")?,
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?,
+            _ => return None,
+        };
+        Some(AsyncReport {
+            reps: num(j, "reps")? as usize,
+            iters_per_rep: num(j, "iters_per_rep")? as usize,
+            churn_p: num(j, "churn_p")?,
+            cases,
+        })
+    }
+}
+
+/// Canonical location of `BENCH_async.json` (same convention as
+/// [`congestion_json_path`]), overridable via `GWTF_ASYNC_JSON`.
+pub fn async_json_path() -> std::path::PathBuf {
+    std::env::var("GWTF_ASYNC_JSON").map(std::path::PathBuf::from).unwrap_or_else(|_| {
+        std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_async.json"))
+    })
+}
+
+/// Read one profile (`"test_sized"` / `"full"`) from `BENCH_async.json`.
+pub fn read_async_profile(path: &Path, profile: &str) -> Option<AsyncReport> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(text.trim()).ok()?;
+    AsyncReport::from_json(j.get(profile)?)
+}
+
+/// Write one profile into `BENCH_async.json`, preserving the other
+/// profile; a present-but-corrupt file is an error, not a reset (same
+/// rationale as [`update_congestion_json`]).
+pub fn update_async_json(path: &Path, profile: &str, report: &AsyncReport) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Err(_) => BTreeMap::new(), // no file yet: fresh capture
+        Ok(text) => match Json::parse(text.trim()) {
+            Ok(Json::Obj(o)) => o,
+            _ => bail!(
+                "{} exists but is not a JSON object; refusing to overwrite \
+                 (fix or delete it to re-capture)",
+                path.display()
+            ),
+        },
+    };
+    root.insert("bench".into(), Json::Str("async".into()));
+    root.insert(
+        "source".into(),
+        Json::Str("rust/src/experiments/scenarios.rs::run_async".into()),
+    );
+    root.entry("test_sized".to_string()).or_insert(Json::Null);
+    root.entry("full".to_string()).or_insert(Json::Null);
+    root.insert(profile.to_string(), report.to_json());
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+/// Row label for one arm of the async sweep.
+fn staleness_row(s: usize) -> String {
+    if s == 0 {
+        "sync".into()
+    } else {
+        format!("async s={s}")
+    }
+}
+
+/// The bounded-staleness sweep: GWTF with warm re-plans on the
+/// heterogeneous Table II shape under continuous-clock Poisson churn
+/// ([`ScenarioConfig::bounded_staleness`]), swept over the staleness
+/// bound with the synchronous barrier as the reference arm.  Every arm
+/// sees the same topologies and churn processes (same seeds; the bound
+/// does not consume randomness), so the sweep isolates the barrier-vs-
+/// rolling-aggregation difference.  Returns the metrics table plus the
+/// report that lands in `BENCH_async.json`.
+pub fn run_async(opts: &AsyncOpts) -> Result<(MetricsTable, AsyncReport)> {
+    let mut table = MetricsTable::new(
+        "Bounded staleness — rolling per-stage aggregation vs the synchronous §V-E barrier",
+    );
+    let mut arms: Vec<usize> = vec![0];
+    arms.extend(opts.bounds.iter().copied().filter(|&s| s >= 1));
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let mut cases = Vec::new();
+    for &s in &arms {
+        let row = staleness_row(s);
+        let bound = if s == 0 { None } else { Some(s) };
+        let mut makespan_total = 0.0;
+        let mut agg = Vec::new();
+        let mut stale = Vec::new();
+        let mut deferred_total = 0.0;
+        let mut throughput_total = 0.0;
+        for rep in 0..opts.reps {
+            let seed = opts.seed + rep as u64 * 104729;
+            let sc = build(&ScenarioConfig::bounded_staleness(bound, opts.churn_p, seed));
+            let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
+            let mut engine = sc.engine(seed ^ 0x1);
+            engine.warm_replan = true;
+            let cell = table.cell(&row, "gwtf");
+            for _ in 0..opts.iters_per_rep {
+                let m = engine.step(&sc.prob, &mut router);
+                makespan_total += m.makespan_s;
+                agg.push(m.agg_s);
+                stale.push(m.staleness_mean);
+                deferred_total += m.deferred as f64;
+                throughput_total += m.completed as f64;
+                cell.push(&m);
+            }
+        }
+        cases.push(AsyncCase {
+            staleness: s,
+            makespan_total_s: makespan_total,
+            agg_mean_s: mean(&agg),
+            staleness_mean: mean(&stale),
+            deferred_total,
+            throughput_total,
+        });
+    }
+    let report = AsyncReport {
+        reps: opts.reps,
+        iters_per_rep: opts.iters_per_rep,
+        churn_p: opts.churn_p,
+        cases,
+    };
+    Ok((table, report))
+}
+
 /// The plan-lifecycle round-RTT sweep: GWTF with warm re-plans on the
 /// Table II scenario, planning rounds riding the engine clock
 /// ([`crate::sim::engine::PlanLifecycle::RoundLatency`]).  Rows sweep
@@ -1317,6 +1540,61 @@ mod tests {
         update_congestion_json(&path, "full", &report).unwrap();
         assert_eq!(read_congestion_profile(&path, "test_sized").unwrap(), report);
         assert_eq!(read_congestion_profile(&path, "full").unwrap(), report);
+    }
+
+    #[test]
+    fn async_sweep_shapes_table_and_report() {
+        // Shape only; the goodput gates live in rust/tests/async_guard.rs
+        // (CI's dedicated guard step).
+        let opts =
+            AsyncOpts { bounds: vec![1, 2], churn_p: 0.0, reps: 1, iters_per_rep: 2, seed: 5 };
+        let (t, report) = run_async(&opts).unwrap();
+        assert_eq!(t.cells.len(), 3, "sync + 2 bounds");
+        for ((row, col), acc) in &t.cells {
+            assert_eq!(acc.throughput.len(), 2, "{row}/{col}: 1 rep x 2 iterations");
+        }
+        assert_eq!(report.cases.len(), 3);
+        let sync = report.case(0).expect("sync reference arm");
+        assert!(sync.throughput_total > 0.0);
+        assert!(sync.goodput() > 0.0);
+        assert_eq!(sync.staleness_mean, 0.0);
+        assert_eq!(sync.deferred_total, 0.0);
+        for s in [1, 2] {
+            let arm = report.case(s).expect("async arm");
+            assert!(arm.throughput_total > 0.0, "s={s}");
+            assert!(arm.agg_mean_s > 0.0, "s={s}: rolling exchanges still charged");
+        }
+    }
+
+    #[test]
+    fn async_report_json_roundtrip_and_profile_update() {
+        let report = AsyncReport {
+            reps: 2,
+            iters_per_rep: 4,
+            churn_p: 0.2,
+            cases: vec![AsyncCase {
+                staleness: 2,
+                makespan_total_s: 1900.5,
+                agg_mean_s: 14.25,
+                staleness_mean: 0.5,
+                deferred_total: 3.0,
+                throughput_total: 60.0,
+            }],
+        };
+        let back = AsyncReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+
+        let dir = std::env::temp_dir().join("gwtf_async_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_async.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_async_profile(&path, "test_sized").is_none(), "missing file");
+        update_async_json(&path, "test_sized", &report).unwrap();
+        assert_eq!(read_async_profile(&path, "test_sized").unwrap(), report);
+        assert!(read_async_profile(&path, "full").is_none(), "other profile null");
+        update_async_json(&path, "full", &report).unwrap();
+        assert_eq!(read_async_profile(&path, "test_sized").unwrap(), report);
+        assert_eq!(read_async_profile(&path, "full").unwrap(), report);
     }
 
     #[test]

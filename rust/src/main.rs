@@ -23,10 +23,11 @@ use gwtf::coordinator::join::{utilization_query, JoinPolicy, Leader};
 use gwtf::coordinator::GwtfRouter;
 use gwtf::cost::NodeId;
 use gwtf::experiments::{
-    results_dir, run_congestion, run_fig5, run_fig6, run_fig7, run_link_jitter,
+    results_dir, run_async, run_congestion, run_fig5, run_fig6, run_fig7, run_link_jitter,
     run_mid_agg_crash, run_plan_lag, run_poisson_churn, run_scale, run_table2, run_table3,
-    run_table6, update_congestion_json, update_plan_lag_json, update_scale_json,
-    CongestionOpts, Fig6Opts, PlanLagOpts, ScaleOpts, ScenarioOpts, TableOpts,
+    run_table6, update_async_json, update_congestion_json, update_plan_lag_json,
+    update_scale_json, AsyncOpts, CongestionOpts, Fig6Opts, PlanLagOpts, ScaleOpts, ScenarioOpts,
+    TableOpts,
 };
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::flow::FlowParams;
@@ -40,8 +41,8 @@ use gwtf::util::Rng;
 /// The canonical bench-target list: the single source for the usage
 /// text and the `gwtf bench` error message (they drifted apart once
 /// already — new targets go here and nowhere else).
-const BENCH_TARGETS: &str =
-    "table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|scale|planlag|congestion|all";
+const BENCH_TARGETS: &str = "table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|\
+                             scale|planlag|congestion|async|all";
 
 fn usage() -> String {
     format!(
@@ -60,6 +61,8 @@ fn usage() -> String {
              round-RTT sweep, writes BENCH_planlag.json at the repo root)
             (congestion: --nics \"0,8,4,2,1\" — shared-capacity NIC sweep
              over a fan-in hotspot, writes BENCH_congestion.json)
+            (async: --staleness \"1,2,4\" --churn P — bounded-staleness
+             sweep vs the synchronous barrier, writes BENCH_async.json)
   join-demo                      Fig. 3 walkthrough"
     )
 }
@@ -324,6 +327,30 @@ fn bench(args: &Args) -> Result<()> {
         emit(&t, "congestion")?;
         let json_path = gwtf::experiments::congestion_json_path();
         update_congestion_json(&json_path, "full", &report)?;
+        println!("-> {}", json_path.display());
+        ran = true;
+    }
+    if target == "async" || target == "all" {
+        let bounds: Vec<usize> = args
+            .str_or("staleness", "1,2,4")
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow!("--staleness expects integers >= 1"))
+            })
+            .collect::<Result<_>>()?;
+        let aopts = AsyncOpts {
+            bounds,
+            churn_p: args.f64_or("churn", 0.2)?,
+            reps: reps.min(5),
+            iters_per_rep: iters,
+            seed,
+        };
+        let (t, report) = run_async(&aopts)?;
+        emit(&t, "async")?;
+        let json_path = gwtf::experiments::async_json_path();
+        update_async_json(&json_path, "full", &report)?;
         println!("-> {}", json_path.display());
         ran = true;
     }

@@ -43,6 +43,13 @@ pub struct CellAccumulator {
     /// busier direction's tx seconds over the makespan, max over nodes;
     /// >1 = oversubscribed under unlimited concurrency).
     pub nic_util_max: Vec<f64>,
+    /// Mean weight staleness (generations behind) microbatches trained
+    /// against per iteration (bounded-staleness mode; 0 under the
+    /// synchronous barrier).
+    pub staleness_mean: Vec<f64>,
+    /// Microbatches deferred past t=0 by the staleness admission rule
+    /// per iteration.
+    pub deferred: Vec<f64>,
 }
 
 impl CellAccumulator {
@@ -64,6 +71,8 @@ impl CellAccumulator {
         self.stale_replans.push(m.stale_replans as f64);
         self.queue_min.push(m.queue_s / 60.0);
         self.nic_util_max.push(m.nic_util_max);
+        self.staleness_mean.push(m.staleness_mean);
+        self.deferred.push(m.deferred as f64);
     }
 
     pub fn row(&self) -> BTreeMap<&'static str, Summary> {
@@ -79,6 +88,8 @@ impl CellAccumulator {
         r.insert("stale_replans", Summary::of(&self.stale_replans));
         r.insert("queue_min", Summary::of(&self.queue_min));
         r.insert("nic_util_max", Summary::of(&self.nic_util_max));
+        r.insert("staleness_mean", Summary::of(&self.staleness_mean));
+        r.insert("deferred", Summary::of(&self.deferred));
         r
     }
 }
@@ -127,6 +138,8 @@ impl MetricsTable {
             ("stale_replans", "Stale re-plans (#/iteration)"),
             ("queue_min", "NIC queueing time (min)"),
             ("nic_util_max", "Peak NIC load (tx-s per makespan-s; >1 = oversubscribed)"),
+            ("staleness_mean", "Weight staleness (generations behind, mean)"),
+            ("deferred", "Deferred microbatches (#/iteration)"),
         ];
         let rows = self.rows();
         let cols = self.cols();
@@ -277,6 +290,8 @@ mod tests {
             stale_replans: 1,
             queue_s: 120.0,
             nic_util_max: 0.75,
+            staleness_mean: 1.5,
+            deferred: 3,
             ..metric(4, 100.0)
         };
         t.cell("poisson 10%", "gwtf").push(&m);
@@ -287,6 +302,9 @@ mod tests {
         assert!(md.contains("Stale re-plans"), "{md}");
         assert!(md.contains("NIC queueing time"), "{md}");
         assert!(md.contains("Peak NIC load"), "{md}");
+        assert!(md.contains("Weight staleness"), "{md}");
+        assert!(md.contains("Deferred microbatches"), "{md}");
+        assert!(md.contains("1.50 ± 0.00"), "{md}");
         assert!(md.contains("0.75 ± 0.00"), "{md}");
         assert!(md.contains("2.00 ± 0.00"), "{md}");
         assert!(md.contains("7.00 ± 0.00"), "{md}");
@@ -298,6 +316,8 @@ mod tests {
         assert!(csv.contains("poisson 10%,gwtf,stale_replans,1.0"), "{csv}");
         assert!(csv.contains("poisson 10%,gwtf,queue_min,2.0"), "{csv}"); // 120 s = 2 min
         assert!(csv.contains("poisson 10%,gwtf,nic_util_max,0.75"), "{csv}");
+        assert!(csv.contains("poisson 10%,gwtf,staleness_mean,1.5"), "{csv}");
+        assert!(csv.contains("poisson 10%,gwtf,deferred,3.0"), "{csv}");
     }
 
     #[test]

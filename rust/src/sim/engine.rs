@@ -59,7 +59,8 @@ use super::events::{EventQueue, NicQueues, Slots, Time};
 use super::handlers::{MicrobatchState, Phase};
 use super::scenario::Scenario;
 use super::training::{
-    IterationMetrics, PlanOutcome, PlanRequest, PlanTicket, RoutingPolicy, TrainingSim,
+    IterationMetrics, PlanOutcome, PlanRequest, PlanTicket, RoutingPolicy, StageAggTracker,
+    TrainingSim, VersionedWeights,
 };
 
 /// Piecewise-constant link-delay multiplier window.
@@ -165,6 +166,11 @@ pub(crate) enum WorldEvent {
     /// One flow-planning protocol round completes: the in-flight
     /// [`PlanSession`] (if any) advances and commits when converged.
     PlanRound,
+    /// Bounded-staleness mode: stage `st`'s rolling §V-E weight exchange
+    /// completes — its weights advance to the iteration's generation + 1.
+    /// Scheduled by the backward handler the moment the stage's last
+    /// expected gradient lands; never emitted on the synchronous path.
+    StageAgg(usize),
 }
 
 /// Everything the engine dispatches: microbatch progress or world events.
@@ -474,18 +480,29 @@ impl Engine {
         // Source-scheduled crashes/joins/rejoins update the liveness
         // authority *after* the iteration: the next plan sees them, this
         // one didn't.  (Churn-process entries are already applied; these
-        // writes are idempotent for them.)
-        for &(node, _) in &sched.crashes {
-            self.churn.alive[node.0] = false;
+        // writes are idempotent for them.)  Membership writes land in
+        // *timestamp order* — a node that joins at t=1 and crashes at t=9
+        // must end the iteration dead, and one that crashes at t=1 and
+        // joins at t=9 alive; at equal instants the join wins, mirroring
+        // the queue's delivery order (crashes enter the timeline first,
+        // so the join is dispatched after).  Rejoins carry no timestamp
+        // (they are iteration-start membership) and agg crashes happen
+        // inside the aggregation barrier, after every timestamped event.
+        for &node in &sched.rejoins {
+            self.churn.alive[node.0] = true;
+        }
+        let mut writes: Vec<(Time, bool, NodeId)> = sched
+            .crashes
+            .iter()
+            .map(|&(n, t)| (t, false, n))
+            .chain(sched.joins.iter().map(|&(n, t)| (t, true, n)))
+            .collect();
+        writes.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for &(_, up, node) in &writes {
+            self.churn.alive[node.0] = up;
         }
         for &(node, _) in &sched.agg_crashes {
             self.churn.alive[node.0] = false;
-        }
-        for &(node, _) in &sched.joins {
-            self.churn.alive[node.0] = true;
-        }
-        for &node in &sched.rejoins {
-            self.churn.alive[node.0] = true;
         }
         metrics
     }
@@ -574,11 +591,69 @@ impl TrainingSim {
         for &t in sched.plan_rounds.iter().take(plan_ticks) {
             q.schedule(t.max(0.0), Ev::World(WorldEvent::PlanRound));
         }
-        // Data nodes send out all their microbatches at t=0 (transfer to hop 0).
+        // Bounded-staleness asynchronous mode (staleness_bound >= 1):
+        // per-stage versioned weights and rolling per-stage aggregation on
+        // this queue.  `None`/`Some(0)` leave `agg_tracker` unset and every
+        // branch below degenerates to the synchronous simulator bit for
+        // bit (admit_at stays 0.0, no StageAgg events, the §V-E barrier
+        // runs after the drain).
+        let n_stages = prob.graph.n_stages();
+        let mut admit_at: Time = 0.0;
+        let mut agg_tracker: Option<StageAggTracker> = match self.cfg.staleness_bound {
+            Some(s) if s >= 1 => {
+                let v = self.versioned.get_or_insert_with(|| VersionedWeights {
+                    gen: vec![0; n_stages],
+                    iter_gen: 0,
+                });
+                if v.gen.len() != n_stages {
+                    v.gen.resize(n_stages, 0); // problem shape changed
+                }
+                let g = v.iter_gen;
+                // Per-stage §V-E exchange durations among the members
+                // alive at iteration start (the same NIC law the
+                // synchronous barrier charges).
+                let exchange: Vec<f64> = (0..n_stages)
+                    .map(|st| {
+                        let members: Vec<NodeId> = prob.graph.stages[st]
+                            .iter()
+                            .filter(|&&m| churn_state.is_alive(m))
+                            .copied()
+                            .collect();
+                        self.stage_exchange_s(&members)
+                    })
+                    .collect();
+                // Admission rule: a stage whose weights lag more than `s`
+                // generations behind this iteration's stamp must replay
+                // its missed exchanges (catch-up) before new microbatches
+                // may start; every microbatch's admission is deferred to
+                // the slowest catch-up.
+                let mut staleness_max: u64 = 0;
+                for st in 0..n_stages {
+                    let lag = g.saturating_sub(v.gen[st]);
+                    if lag > s as u64 {
+                        let catch_up = (lag - s as u64) as f64 * exchange[st];
+                        admit_at = admit_at.max(catch_up);
+                        metrics.agg_s += catch_up;
+                        v.gen[st] = g - s as u64;
+                    }
+                    staleness_max = staleness_max.max(g.saturating_sub(v.gen[st]));
+                }
+                if !mbs.is_empty() {
+                    metrics.staleness_mean = staleness_max as f64;
+                    if admit_at > 0.0 {
+                        metrics.deferred = mbs.len();
+                    }
+                }
+                Some(StageAggTracker::new(n_stages, mbs.len(), exchange))
+            }
+            _ => None,
+        };
+        // Data nodes send out all their microbatches at t=0 (transfer to
+        // hop 0) — or at the staleness catch-up instant in async mode.
         for (mi, mb) in mbs.iter().enumerate() {
             let d = mb.path.source;
             let first = mb.path.relays[0];
-            let arrive = self.send(&mut net, d, first, 0.0, &mut metrics);
+            let arrive = self.send(&mut net, d, first, admit_at, &mut metrics);
             q.schedule(arrive, Ev::Micro(mi, Phase::Fwd { hop: 0 }));
         }
 
@@ -607,6 +682,20 @@ impl TrainingSim {
                     }
                     continue;
                 }
+                Ev::World(WorldEvent::StageAgg(st)) => {
+                    // One stage's rolling weight exchange completes: its
+                    // weights advance past the iteration's generation.  No
+                    // other stage (and no in-flight microbatch) waited.
+                    if let Some(tr) = agg_tracker.as_mut() {
+                        tr.fired[st] = true;
+                        tr.done_at[st] = t;
+                        metrics.agg_s += tr.exchange[st];
+                        if let Some(v) = self.versioned.as_mut() {
+                            v.gen[st] = v.iter_gen + 1;
+                        }
+                    }
+                    continue;
+                }
                 Ev::Micro(mi, phase) => (mi, phase),
             };
             if mbs[mi].dropped {
@@ -621,7 +710,7 @@ impl TrainingSim {
                 Phase::Fwd { hop } => {
                     self.handle_relay_compute(
                         t, mi, hop, /*is_fwd=*/ true, prob, router, &mut slots, &mut net,
-                        &mut inflight, &mut mbs, &mut q, &mut metrics,
+                        &mut inflight, &mut mbs, &mut q, &mut agg_tracker, &mut metrics,
                     );
                 }
                 Phase::Loss => {
@@ -637,7 +726,7 @@ impl TrainingSim {
                 Phase::Bwd { hop } => {
                     self.handle_relay_compute(
                         t, mi, hop, /*is_fwd=*/ false, prob, router, &mut slots, &mut net,
-                        &mut inflight, &mut mbs, &mut q, &mut metrics,
+                        &mut inflight, &mut mbs, &mut q, &mut agg_tracker, &mut metrics,
                     );
                 }
                 Phase::Finish => {
@@ -665,12 +754,55 @@ impl TrainingSim {
             }
         }
 
-        // Aggregation barrier (§V-E), with mid-aggregation crash recovery.
-        let (agg, agg_recoveries) =
-            self.aggregation_time(prob, churn_state, &sched.agg_crashes);
-        metrics.agg_s = agg;
-        metrics.agg_recoveries = agg_recoveries;
-        metrics.makespan_s = makespan + agg + planning_s;
+        match agg_tracker {
+            None => {
+                // Aggregation barrier (§V-E), with mid-aggregation crash
+                // recovery — the synchronous path, bit for bit.
+                let (agg, agg_recoveries) =
+                    self.aggregation_time(prob, churn_state, &sched.agg_crashes);
+                metrics.agg_s = agg;
+                metrics.agg_recoveries = agg_recoveries;
+                metrics.makespan_s = makespan + agg + planning_s;
+            }
+            Some(mut tr) => {
+                // Rolling-aggregation residue: a stage whose expectation
+                // never filled (drops, deadline exclusions) aggregates the
+                // gradients it does hold once the microbatch phase ends —
+                // §V-E's deadline semantics already excluded the
+                // stragglers.  A stage with nothing home keeps its old
+                // weights and falls behind; that lag is exactly what the
+                // admission rule bounds next iteration.
+                let g = self.versioned.as_ref().map_or(0, |v| v.iter_gen);
+                let mut agg_end: f64 = 0.0;
+                for st in 0..n_stages {
+                    if !tr.fired[st] && tr.home[st] > 0 {
+                        tr.fired[st] = true;
+                        tr.done_at[st] = tr.last_home[st] + tr.exchange[st];
+                        metrics.agg_s += tr.exchange[st];
+                        if let Some(v) = self.versioned.as_mut() {
+                            v.gen[st] = g + 1;
+                        }
+                    }
+                    if tr.fired[st] {
+                        agg_end = agg_end.max(tr.done_at[st]);
+                    }
+                }
+                // Crashes landing inside a rolling exchange force the same
+                // §V-E redo among the survivors as inside the barrier.
+                let (extra, agg_recoveries) =
+                    self.agg_crash_extra(prob, churn_state, &sched.agg_crashes);
+                metrics.agg_s += extra;
+                metrics.agg_recoveries = agg_recoveries;
+                // No barrier: the iteration ends when the last microbatch
+                // *or* the last rolling exchange finishes, whichever is
+                // later — exchanges overlap the microbatch tail instead of
+                // extending it.
+                metrics.makespan_s = makespan.max(agg_end) + extra + planning_s;
+                if let Some(v) = self.versioned.as_mut() {
+                    v.iter_gen += 1;
+                }
+            }
+        }
         // Per-node link load: each node's busier NIC direction's
         // microbatch-phase transmission seconds over the full iteration
         // makespan.  Demanded work, not wall-clock occupancy — under
@@ -819,6 +951,65 @@ mod tests {
     }
 
     #[test]
+    fn staleness_zero_reproduces_synchronous_engine_bit_for_bit() {
+        // Tentpole degenerate case at the engine level: a `Some(0)` bound
+        // must leave every metric bit-identical to the synchronous
+        // scenario across churny engine steps (evolving iter_estimate,
+        // Bernoulli churn, warm replans untouched).
+        let sc = build(&ScenarioConfig::table2(false, 0.2, 31));
+        let mut sync_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 31);
+        let mut sync_engine = Engine::from_scenario(&sc, 13);
+
+        let mut zero_cfg = ScenarioConfig::table2(false, 0.2, 31);
+        zero_cfg.staleness_bound = Some(0);
+        let zc = build(&zero_cfg);
+        let mut zero_router = GwtfRouter::from_scenario(&zc, FlowParams::default(), 31);
+        let mut zero_engine = Engine::from_scenario(&zc, 13);
+
+        for _ in 0..4 {
+            let a = sync_engine.step(&sc.prob, &mut sync_router);
+            let b = zero_engine.step(&zc.prob, &mut zero_router);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits());
+            assert_eq!(a.agg_s.to_bits(), b.agg_s.to_bits());
+            assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits());
+            assert_eq!(b.deferred, 0);
+            assert_eq!(b.staleness_mean, 0.0);
+        }
+    }
+
+    #[test]
+    fn bounded_staleness_engine_beats_barrier_fault_free() {
+        // Fault-free async vs sync on the same scenario shape: rolling
+        // exchanges overlap the microbatch tail, the barrier does not.
+        let sc = build(&ScenarioConfig::table2(false, 0.0, 41));
+        let mut sync_router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 41);
+        let mut sync_engine = Engine::from_scenario(&sc, 19);
+        let a = sync_engine.step(&sc.prob, &mut sync_router);
+
+        let ac = build(&ScenarioConfig {
+            staleness_bound: Some(2),
+            ..ScenarioConfig::table2(false, 0.0, 41)
+        });
+        let mut async_router = GwtfRouter::from_scenario(&ac, FlowParams::default(), 41);
+        let mut async_engine = Engine::from_scenario(&ac, 19);
+        let b = async_engine.step(&ac.prob, &mut async_router);
+
+        assert_eq!(a.completed, b.completed, "fault-free: same microbatches complete");
+        assert!(b.agg_s > 0.0);
+        assert_eq!(b.deferred, 0);
+        assert!(
+            b.makespan_s < a.makespan_s,
+            "rolling aggregation must beat the barrier: async {} vs sync {}",
+            b.makespan_s,
+            a.makespan_s
+        );
+    }
+
+    #[test]
     fn engine_applies_source_crashes_to_liveness_after_iteration() {
         struct OneShotCrash {
             victim: NodeId,
@@ -849,6 +1040,60 @@ mod tests {
         assert!(m.completed > 0);
         assert!(!engine.churn.is_alive(victim), "source crash must persist");
         assert_eq!(engine.iterations(), 1);
+    }
+
+    #[test]
+    fn source_membership_writes_apply_in_timestamp_order() {
+        // Regression: the post-iteration write-back used to apply all
+        // crashes before all joins regardless of virtual time, so a node
+        // that joined at t=0.1h and crashed at t=0.9h ended the
+        // iteration alive.
+        struct JoinAndCrash {
+            victim: NodeId,
+            join_frac: f64,
+            crash_frac: f64,
+            fired: bool,
+        }
+        impl EventSource for JoinAndCrash {
+            fn name(&self) -> &str {
+                "join-and-crash"
+            }
+            fn sample(&mut self, _iter: usize, horizon: Time) -> WorldSchedule {
+                if self.fired {
+                    return WorldSchedule::default();
+                }
+                self.fired = true;
+                WorldSchedule {
+                    joins: vec![(self.victim, self.join_frac * horizon)],
+                    crashes: vec![(self.victim, self.crash_frac * horizon)],
+                    ..Default::default()
+                }
+            }
+        }
+        let run = |join_frac: f64, crash_frac: f64| -> bool {
+            let sc = build(&ScenarioConfig::table2(true, 0.0, 5));
+            let victim = sc.relays[0];
+            let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), 5);
+            let mut engine = Engine::from_scenario(&sc, 5);
+            engine.add_source(Box::new(JoinAndCrash {
+                victim,
+                join_frac,
+                crash_frac,
+                fired: false,
+            }));
+            assert!(engine.churn.is_alive(victim));
+            let m = engine.step(&sc.prob, &mut router);
+            assert!(m.completed > 0);
+            engine.churn.is_alive(victim)
+        };
+        assert!(
+            !run(0.1, 0.9),
+            "crash at 0.9h postdates the join at 0.1h: the node must end dead"
+        );
+        assert!(
+            run(0.9, 0.1),
+            "join at 0.9h postdates the crash at 0.1h: the node must end alive"
+        );
     }
 
     /// Drive `iters` iterations of a fresh table2 scenario under the

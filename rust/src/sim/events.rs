@@ -126,19 +126,34 @@ impl Slots {
 
     /// Earliest start time >= `ready` given concurrency cap: the moment the
     /// number of still-active bookings drops below `cap`.
+    ///
+    /// Allocation-free: `book` keeps `busy_until.len() <= cap` (finished
+    /// bookings are dropped there), so when every slot is active the
+    /// answer is simply the earliest active finish — one cap-sized scan,
+    /// no scratch `Vec`, no sort.  This sits on the relay-compute hot
+    /// path (every Fwd/Bwd event books a slot).
     pub fn earliest_start(&self, ready: Time) -> Time {
-        let mut active: Vec<Time> =
-            self.busy_until.iter().copied().filter(|&b| b > ready + 1e-9).collect();
-        if active.len() < self.cap {
-            return ready;
+        // Count still-active bookings and track the k-th finish we would
+        // need: with `active < cap` a slot is free at `ready`; otherwise
+        // `active == cap` (the book-time invariant caps the length) and
+        // the first slot frees at the minimum active finish.  `total_cmp`
+        // keeps the selection NaN-safe, consistent with the queue's key
+        // comparator.
+        let mut active = 0usize;
+        let mut kth = f64::INFINITY;
+        for &b in &self.busy_until {
+            if b > ready + 1e-9 {
+                active += 1;
+                if b.total_cmp(&kth) == std::cmp::Ordering::Less {
+                    kth = b;
+                }
+            }
         }
-        // `total_cmp` for NaN-safety, consistent with the queue's key
-        // comparator: a NaN booking would already have tripped the
-        // schedule-time assert upstream, but sorting must never panic or
-        // silently mis-order on one.
-        active.sort_by(|a, b| a.total_cmp(b));
-        // need (active.len() - cap + 1) slots to free up
-        active[active.len() - self.cap]
+        if active < self.cap {
+            ready
+        } else {
+            kth
+        }
     }
 
     /// Book a slot for [start, end). Caller must use start >= earliest_start.
@@ -381,6 +396,22 @@ mod tests {
         s.book(10.0, 15.0);
         assert_eq!(s.in_use_at(12.0), 2);
         assert_eq!(s.earliest_start(12.0), 15.0);
+    }
+
+    #[test]
+    fn slots_earliest_start_scans_unsorted_bookings() {
+        // The allocation-free scan must find the *minimum* active finish
+        // regardless of booking order (the old implementation sorted a
+        // scratch Vec; the scan has no order to lean on).
+        let mut s = Slots::new(3);
+        s.book(0.0, 30.0);
+        s.book(0.0, 10.0);
+        s.book(0.0, 20.0);
+        assert_eq!(s.earliest_start(0.0), 10.0);
+        // A booking finishing exactly at `ready` (within the 1e-9 guard)
+        // no longer counts as active: a slot is free immediately.
+        assert_eq!(s.earliest_start(10.0), 10.0);
+        assert_eq!(s.in_use_at(10.0), 2);
     }
 
     #[test]

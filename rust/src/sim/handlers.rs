@@ -11,9 +11,11 @@
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
 
-use super::engine::Ev;
+use super::engine::{Ev, WorldEvent};
 use super::events::{EventQueue, NicQueues, Slots, Time};
-use super::training::{IterationMetrics, RecoveryPolicy, RoutingPolicy, TrainingSim};
+use super::training::{
+    IterationMetrics, RecoveryPolicy, RoutingPolicy, StageAggTracker, TrainingSim,
+};
 
 /// Phase of a microbatch's journey.
 #[derive(Debug, Clone, Copy)]
@@ -85,6 +87,7 @@ impl TrainingSim {
         inflight: &mut [usize],
         mbs: &mut Vec<MicrobatchState>,
         q: &mut EventQueue<Ev>,
+        agg: &mut Option<StageAggTracker>,
         metrics: &mut IterationMetrics,
     ) {
         let path = mbs[mi].path.clone();
@@ -127,7 +130,13 @@ impl TrainingSim {
             // DENYs; it retries the next-best peer it knows, which may be
             // full too ("this process can continue recursively", SV-D).
             // It has NO global memory view, so candidates are filtered only
-            // by received DENYs, not by actual residency.
+            // by received DENYs, not by actual residency.  A DENY excludes
+            // the peer only "until they free memory" (§V-D): entries for
+            // this stage whose peer has observable residency headroom
+            // again drop out of the exclusion set — re-probing a peer
+            // that freed up would succeed, and one that refilled would
+            // just DENY again and re-enter the set.
+            mbs[mi].denied.retain(|&(h, m)| h != hop || inflight[m.0] >= prob.cap[m.0]);
             let denied = &mbs[mi].denied;
             let candidates: Vec<NodeId> = prob.graph.stages[hop]
                 .iter()
@@ -169,6 +178,17 @@ impl TrainingSim {
                     mbs[mi].resident.remove(pos);
                     inflight[node.0] = inflight[node.0].saturating_sub(1);
                 }
+                // Bounded-staleness mode: a backward compute clearing this
+                // stage is the stage's gradient contribution for the
+                // microbatch — when the last expected one lands, the
+                // stage's rolling weight exchange goes on the queue.
+                if !is_fwd {
+                    if let Some(tr) = agg.as_mut() {
+                        if let Some(fire_at) = tr.grad_home(mi, hop, end) {
+                            q.schedule(fire_at, Ev::World(WorldEvent::StageAgg(hop)));
+                        }
+                    }
+                }
                 let arrive = self.send(net, node, next, end, metrics);
                 let next_phase = if is_fwd {
                     if hop + 1 < n_stages { Phase::Fwd { hop: hop + 1 } } else { Phase::Loss }
@@ -190,8 +210,12 @@ impl TrainingSim {
         }
 
         // --- crash handling ---
-        let death = self.death_at[node.0].min(t);
-        let detect = death.max(t) + self.cfg.timeout_s;
+        // Detection time is one COMPLETE timeout after the *event
+        // instant*: the upstream peer only notices the crash when the
+        // COMPLETE it expects fails to arrive, counted from when the work
+        // was handed over — not from the (earlier) death instant.  The
+        // old `death.min(t)`/`.max(t)` dance always collapsed to `t`.
+        let detect = t + self.cfg.timeout_s;
         router.on_crash(node);
 
         let stage = hop;
@@ -270,8 +294,15 @@ impl TrainingSim {
                         Some(m) => {
                             // fetch activation from the fwd-side neighbour +
                             // recompute fwd at m, then continue bwd at m.
+                            // The recompute occupies one of m's compute
+                            // slots like every other stage compute: a
+                            // saturated replacement serializes repairs
+                            // instead of absorbing unboundedly many
+                            // concurrent recomputes for free.
                             let act_arrive = self.send(net, prev, m, detect + wait, metrics);
                             let refwd = self.fwd_compute_s(m, detect + wait);
+                            let start = slots[m.0].earliest_start(act_arrive);
+                            slots[m.0].book(start, start + refwd);
                             mbs[mi].compute_spent += refwd;
                             // residency moves from the dead node to m
                             if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
@@ -283,7 +314,7 @@ impl TrainingSim {
                             let mut newpath = path.clone();
                             newpath.relays[hop] = m;
                             mbs[mi].path = newpath;
-                            q.schedule(act_arrive + refwd, Ev::Micro(mi, Phase::Bwd { hop }));
+                            q.schedule(start + refwd, Ev::Micro(mi, Phase::Bwd { hop }));
                         }
                         None => {
                             mbs[mi].release_all(inflight);

@@ -27,7 +27,9 @@
 //!   behind [`churn::ChurnModel::Poisson`].
 //! - [`training`] — the [`training::RoutingPolicy`] plan-lifecycle
 //!   contract (request -> rounds on the clock -> commit at convergence),
-//!   configuration, metrics, and the physical model.
+//!   configuration, metrics, the physical model, and the
+//!   [`training::VersionedWeights`] store behind bounded-staleness
+//!   asynchronous aggregation.
 //! - [`scenario`] — builders for the paper's experiment setups.
 
 pub mod churn;
@@ -47,5 +49,5 @@ pub use engine::{
 pub use events::{EventQueue, NicQueues};
 pub use training::{
     BlockingPlanAdapter, BlockingPlanner, IterationMetrics, PlanOutcome, PlanRequest, PlanTicket,
-    RecoveryPolicy, RoutingPolicy, TrainingSim, TrainingSimConfig,
+    RecoveryPolicy, RoutingPolicy, TrainingSim, TrainingSimConfig, VersionedWeights,
 };

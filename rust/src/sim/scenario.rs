@@ -83,6 +83,11 @@ pub struct ScenarioConfig {
     pub deadline_factor: Option<f64>,
     /// Override [`TrainingSimConfig::initial_iter_estimate_s`].
     pub iter_estimate_s: Option<f64>,
+    /// Bounded-staleness asynchronous training
+    /// ([`TrainingSimConfig::staleness_bound`]): `Some(s >= 1)` replaces
+    /// the global §V-E barrier with rolling per-stage aggregation events;
+    /// `None`/`Some(0)` keep the synchronous simulator bit for bit.
+    pub staleness_bound: Option<usize>,
     pub seed: u64,
 }
 
@@ -107,7 +112,20 @@ impl ScenarioConfig {
             fanin_hub: false,
             deadline_factor: None,
             iter_estimate_s: None,
+            staleness_bound: None,
             seed,
+        }
+    }
+
+    /// Bounded-staleness setting (`gwtf bench async`): Table II's shape
+    /// under heavy heterogeneity (per-node caps and compute spread) and
+    /// continuous-clock Poisson churn, swept over the staleness bound.
+    /// `None` is the synchronous-barrier reference arm.
+    pub fn bounded_staleness(s: Option<usize>, churn_p: f64, seed: u64) -> Self {
+        ScenarioConfig {
+            churn_model: ChurnModel::Poisson,
+            staleness_bound: s,
+            ..Self::table2(false, churn_p, seed)
         }
     }
 
@@ -333,6 +351,7 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
         initial_iter_estimate_s: cfg.iter_estimate_s.unwrap_or(240.0),
         bwd_factor: 2.0,
         deadline_factor: cfg.deadline_factor.unwrap_or(2.0),
+        staleness_bound: cfg.staleness_bound,
     };
 
     Scenario { cfg: cfg.clone(), topo, prob, churn, sim_cfg, cost_cache, relays, data_nodes }
@@ -353,6 +372,15 @@ mod tests {
         for &r in &s.relays {
             assert_eq!(s.prob.cap[r.0], 4);
         }
+    }
+
+    #[test]
+    fn staleness_bound_knob_reaches_sim_config() {
+        let sync = build(&ScenarioConfig::table2(false, 0.1, 3));
+        assert_eq!(sync.sim_cfg.staleness_bound, None);
+        let s = build(&ScenarioConfig::bounded_staleness(Some(2), 0.1, 3));
+        assert_eq!(s.sim_cfg.staleness_bound, Some(2));
+        assert!(matches!(s.cfg.churn_model, ChurnModel::Poisson));
     }
 
     #[test]

@@ -331,6 +331,12 @@ pub struct TrainingSimConfig {
     /// from aggregation" (the paper's wasted-GPU definition) — data nodes
     /// do not stall the update phase for stragglers.
     pub deadline_factor: f64,
+    /// Bounded-staleness asynchronous training (ATOM-style): a microbatch
+    /// of generation `g` may train against stage weights from `g-s..=g`.
+    /// `Some(s >= 1)` replaces the global §V-E barrier with rolling
+    /// per-stage aggregation events on the engine clock; `None` or
+    /// `Some(0)` keep the synchronous simulator bit for bit.
+    pub staleness_bound: Option<usize>,
 }
 
 impl Default for TrainingSimConfig {
@@ -343,6 +349,7 @@ impl Default for TrainingSimConfig {
             initial_iter_estimate_s: 240.0,
             bwd_factor: 2.0,
             deadline_factor: 2.0,
+            staleness_bound: None,
         }
     }
 }
@@ -406,6 +413,15 @@ pub struct IterationMetrics {
     /// Kernel events dispatched while executing this iteration's schedule
     /// — the numerator of the scale bench's events/sec throughput column.
     pub events: usize,
+    /// Mean weight staleness (generations behind the iteration's stamp)
+    /// microbatches trained against, after any catch-up exchanges.  0
+    /// under the synchronous barrier and whenever every stage aggregated
+    /// last iteration.
+    pub staleness_mean: f64,
+    /// Microbatches whose admission was deferred past t=0 because some
+    /// stage's weights lagged beyond the staleness bound and had to
+    /// replay missed exchanges first.
+    pub deferred: usize,
 }
 
 impl IterationMetrics {
@@ -440,6 +456,83 @@ pub struct TrainingSim {
     /// Straggler windows: per-node compute multipliers (engine-supplied).
     pub(crate) slowdowns: Vec<Slowdown>,
     pub(crate) iter_estimate: f64,
+    /// Per-stage weight generations for bounded-staleness mode
+    /// ([`TrainingSimConfig::staleness_bound`]); lazily initialised on the
+    /// first asynchronous iteration and persisted across iterations so
+    /// stage lag carries over.  `None` on the synchronous path.
+    pub(crate) versioned: Option<VersionedWeights>,
+}
+
+/// Per-stage versioned weight store for bounded-staleness asynchronous
+/// training (ATOM-style, PAPERS.md): stage `st`'s weights sit at
+/// generation `gen[st]`, and every microbatch of an iteration carries the
+/// stamp `iter_gen`.  The admission rule in `run_schedule` keeps
+/// `iter_gen - gen[st] <= s` by replaying missed exchanges before
+/// admitting new work.
+#[derive(Debug, Clone)]
+pub struct VersionedWeights {
+    /// Weight generation currently installed on each pipeline stage.
+    pub gen: Vec<u64>,
+    /// Generation stamp the next iteration's microbatches carry.
+    pub iter_gen: u64,
+}
+
+/// One iteration's rolling per-stage aggregation state (bounded-staleness
+/// mode).  Tracks gradients home per stage and tells the caller when a
+/// stage's §V-E weight exchange should fire — no global barrier: each
+/// stage aggregates the moment its last expected gradient lands.
+pub(crate) struct StageAggTracker {
+    /// Microbatches admitted this iteration (each traverses every stage).
+    pub(crate) expected: usize,
+    /// Gradients home per stage so far.
+    pub(crate) home: Vec<usize>,
+    /// Latest gradient-home instant per stage.
+    pub(crate) last_home: Vec<Time>,
+    /// Per-stage §V-E exchange duration among the stage's alive members
+    /// (precomputed at iteration start via `stage_exchange_s`).
+    pub(crate) exchange: Vec<f64>,
+    /// Whether the stage's exchange event has been scheduled/completed.
+    pub(crate) fired: Vec<bool>,
+    /// Exchange completion instant per fired stage.
+    pub(crate) done_at: Vec<Time>,
+    /// (microbatch, stage) pairs already counted: a §V-D full-pipeline
+    /// restart re-clears stages its first backward pass already cleared,
+    /// but only the first clear contributes a gradient.
+    seen: Vec<bool>,
+}
+
+impl StageAggTracker {
+    pub(crate) fn new(n_stages: usize, expected: usize, exchange: Vec<f64>) -> Self {
+        StageAggTracker {
+            expected,
+            home: vec![0; n_stages],
+            last_home: vec![0.0; n_stages],
+            exchange,
+            fired: vec![false; n_stages],
+            done_at: vec![0.0; n_stages],
+            seen: vec![false; expected * n_stages],
+        }
+    }
+
+    /// Microbatch `mi`'s backward compute cleared stage `st` at `end`: its
+    /// gradient contribution is home.  Returns the exchange completion
+    /// instant to put on the event queue when this was the last expected
+    /// gradient for the stage.
+    pub(crate) fn grad_home(&mut self, mi: usize, st: usize, end: Time) -> Option<Time> {
+        let k = mi * self.home.len() + st;
+        if self.seen[k] {
+            return None;
+        }
+        self.seen[k] = true;
+        self.home[st] += 1;
+        if end > self.last_home[st] {
+            self.last_home[st] = end;
+        }
+        if self.home[st] == self.expected && !self.fired[st] {
+            return Some(end + self.exchange[st]);
+        }
+        None
+    }
 }
 
 impl TrainingSim {
@@ -458,6 +551,7 @@ impl TrainingSim {
             jitter: Vec::new(),
             slowdowns: Vec::new(),
             iter_estimate,
+            versioned: None,
         }
     }
 
@@ -613,7 +707,7 @@ impl TrainingSim {
     /// closed-form — it charges the *same* NIC capacity law
     /// ([`crate::cost::NicConfig`]) the microbatch phase executes
     /// event-by-event, just analytically.
-    fn stage_exchange_s(&self, members: &[NodeId]) -> f64 {
+    pub(crate) fn stage_exchange_s(&self, members: &[NodeId]) -> f64 {
         // Legacy pairwise worst (unlimited NICs: this IS the answer).
         let mut worst: f64 = 0.0;
         for &a in members {
@@ -689,8 +783,10 @@ impl TrainingSim {
         let mut fwd_ctrl: f64 = 0.0;
         let mut back_ctrl: f64 = 0.0;
         let mut exchange: f64 = 0.0;
-        let data = prob.graph.data_nodes[0];
-        let mut prev_stage: Vec<NodeId> = vec![data];
+        // BEGIN AGGREGATION floods forward from *every* data node (each
+        // initiates the barrier for its own microbatches; the barrier
+        // waits for the slowest initiator's control message).
+        let mut prev_stage: Vec<NodeId> = prob.graph.data_nodes.clone();
         for s in 0..prob.graph.n_stages() {
             let members: Vec<NodeId> = prob.graph.stages[s]
                 .iter()
@@ -701,12 +797,22 @@ impl TrainingSim {
                 continue;
             }
             // BEGIN AGGREGATION flood: worst link from any previous-stage node.
-            let hop = prev_stage
+            let fwd_hop = prev_stage
                 .iter()
                 .flat_map(|&p| members.iter().map(move |&m| self.topo.delay(p, m, CTRL_BYTES)))
                 .fold(0.0f64, f64::max);
-            fwd_ctrl += hop;
-            back_ctrl += hop; // CAN TAKE travels the same boundary backwards
+            // CAN TAKE answers across the same stage boundary, but the
+            // links matrix is directional: the backward control hop is
+            // the worst *reverse*-direction delay, not a reuse of the
+            // forward one.  (Symmetric links make the two coincide, so
+            // single-data-node symmetric topologies keep the old number
+            // bit for bit.)
+            let back_hop = prev_stage
+                .iter()
+                .flat_map(|&p| members.iter().map(move |&m| self.topo.delay(m, p, CTRL_BYTES)))
+                .fold(0.0f64, f64::max);
+            fwd_ctrl += fwd_hop;
+            back_ctrl += back_hop;
             // Intra-stage weight broadcast (pairs exchange in parallel
             // under unlimited NICs; serialized per interface otherwise).
             exchange = exchange.max(self.stage_exchange_s(&members));
@@ -716,9 +822,22 @@ impl TrainingSim {
         if agg_crashes.is_empty() {
             return (base, 0);
         }
-        // Mid-aggregation crashes: the victim's stage detects the failure
-        // (one COMPLETE timeout) and redoes the fraction of its weight
-        // exchange the crash invalidated, now among the survivors.
+        let (extra, recoveries) = self.agg_crash_extra(prob, churn, agg_crashes);
+        (base + extra, recoveries)
+    }
+
+    /// Mid-aggregation crashes: the victim's stage detects the failure
+    /// (one COMPLETE timeout) and redoes the fraction of its weight
+    /// exchange the crash invalidated, now among the survivors.  Shared
+    /// between the synchronous barrier and the rolling bounded-staleness
+    /// exchanges — a crash landing inside an exchange forces the same
+    /// §V-E redo either way.
+    pub(crate) fn agg_crash_extra(
+        &self,
+        prob: &FlowProblem,
+        churn: &ChurnProcess,
+        agg_crashes: &[(NodeId, f64)],
+    ) -> (f64, usize) {
         let mut extra = 0.0;
         let mut recoveries = 0usize;
         for &(node, frac) in agg_crashes {
@@ -735,7 +854,7 @@ impl TrainingSim {
             extra += self.cfg.timeout_s + frac.clamp(0.0, 1.0) * worst;
             recoveries += 1;
         }
-        (base + extra, recoveries)
+        (extra, recoveries)
     }
 }
 
@@ -820,6 +939,7 @@ mod tests {
             initial_iter_estimate_s: 30.0,
             bwd_factor: 2.0,
             deadline_factor: 4.0,
+            staleness_bound: None,
         }
     }
 
@@ -1104,6 +1224,182 @@ mod tests {
     }
 
     #[test]
+    fn repair_recompute_books_replacement_compute_slots() {
+        // Regression (§V-D backward repair): the replacement's forward
+        // recompute used to be charged as pure time without booking a
+        // compute slot, so a cap-1 replacement absorbed unboundedly many
+        // concurrent recomputes for free.  Two microbatches repairing
+        // onto a cap-1 node must serialize their ~50 s recomputes; the
+        // same repairs onto a cap-2 node run in parallel.
+        fn run(replacement_cap: usize) -> IterationMetrics {
+            let (mut topo, _, _) = setup();
+            // Slow data node: stretches the loss phase so the crash at
+            // t=20 lands cleanly between the forward pass clearing node 3
+            // (well under 10 s) and the gradients returning (past 40 s).
+            topo.set_profile(NodeId(0), NodeProfile::new(40.0, 8));
+            // The replacement's recompute dominates every other charge.
+            topo.set_profile(NodeId(4), NodeProfile::new(50.0, replacement_cap));
+            let graph = std::sync::Arc::new(StageGraph {
+                stages: vec![vec![NodeId(1), NodeId(2)], vec![NodeId(3), NodeId(4)]],
+                data_nodes: vec![NodeId(0)],
+            });
+            let prob = FlowProblem {
+                graph,
+                cap: vec![8, 2, 2, 2, replacement_cap],
+                demand: vec![2],
+                cost: Box::new(|_i, _j| 1.0),
+            };
+            // Both microbatches traverse node 3, which dies at t=20.
+            let paths = vec![
+                FlowPath { source: NodeId(0), relays: vec![NodeId(1), NodeId(3)] },
+                FlowPath { source: NodeId(0), relays: vec![NodeId(2), NodeId(3)] },
+            ];
+            let cfg = TrainingSimConfig {
+                payload_bytes: 1e6,
+                stage_param_bytes: 1e6,
+                timeout_s: 1.0,
+                max_restarts: 3,
+                initial_iter_estimate_s: 1000.0,
+                // Tiny backward factor: the recompute is the only large
+                // charge at the replacement, so slot contention there is
+                // what the makespan difference measures.
+                bwd_factor: 0.01,
+                deadline_factor: 4.0,
+                staleness_bound: None,
+            };
+            let mut sim = TrainingSim::new(topo, cfg);
+            let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+            let churn_state =
+                ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+            let sched =
+                WorldSchedule { crashes: vec![(NodeId(3), 20.0)], ..Default::default() };
+            let mut rng = Rng::new(0);
+            sim.run_schedule(&prob, &mut router, &sched, &churn_state, 0.0, paths, None, &mut rng)
+        }
+        let serial = run(1);
+        let parallel = run(2);
+        assert_eq!(serial.completed, 2);
+        assert_eq!(parallel.completed, 2);
+        assert_eq!(serial.bwd_recoveries, 2);
+        assert_eq!(parallel.bwd_recoveries, 2);
+        assert!(
+            serial.makespan_s > parallel.makespan_s + 25.0,
+            "a cap-1 replacement must serialize the two ~50 s recomputes: {} vs {}",
+            serial.makespan_s,
+            parallel.makespan_s
+        );
+    }
+
+    #[test]
+    fn aggregation_charges_reverse_direction_can_take_hop() {
+        // Regression: the CAN TAKE hop used to reuse the forward-direction
+        // delay although the links matrix is directional.  Slowing ONLY
+        // the reverse link 1 -> 0 (stage 0 answering the data node) must
+        // lengthen the barrier; the forward flood never touches it.
+        let (topo, prob, _) = setup();
+        let churn = ChurnProcess::new(5, vec![], 0.0, 7);
+        let base =
+            TrainingSim::new(topo.clone(), small_cfg()).aggregation_time(&prob, &churn, &[]).0;
+        let mut slowed_topo = topo;
+        slowed_topo.links[1][0] = crate::cost::LinkParams::new(30.0, 1e9);
+        let slowed =
+            TrainingSim::new(slowed_topo, small_cfg()).aggregation_time(&prob, &churn, &[]).0;
+        assert!(
+            slowed > base + 10.0,
+            "the slow reverse control link must gate CAN TAKE: {slowed} vs {base}"
+        );
+    }
+
+    #[test]
+    fn aggregation_floods_from_every_data_node() {
+        // Regression: BEGIN AGGREGATION used to flood only from
+        // data_nodes[0]; a second data node behind slow outbound links
+        // must now gate the first control hop.
+        let (topo, _, _) = setup();
+        let graph = std::sync::Arc::new(StageGraph {
+            stages: vec![vec![NodeId(2), NodeId(3)], vec![NodeId(4)]],
+            data_nodes: vec![NodeId(0), NodeId(1)],
+        });
+        let prob = FlowProblem {
+            graph,
+            cap: vec![4, 4, 2, 2, 2],
+            demand: vec![1, 1],
+            cost: Box::new(|_i, _j| 1.0),
+        };
+        let churn = ChurnProcess::new(5, vec![], 0.0, 7);
+        let base =
+            TrainingSim::new(topo.clone(), small_cfg()).aggregation_time(&prob, &churn, &[]).0;
+        let mut slowed_topo = topo;
+        slowed_topo.links[1][2] = crate::cost::LinkParams::new(30.0, 1e9);
+        slowed_topo.links[1][3] = crate::cost::LinkParams::new(30.0, 1e9);
+        let slowed =
+            TrainingSim::new(slowed_topo, small_cfg()).aggregation_time(&prob, &churn, &[]).0;
+        assert!(
+            slowed > base + 10.0,
+            "data node 1's slow outbound links must gate the flood: {slowed} vs {base}"
+        );
+    }
+
+    #[test]
+    fn deny_exclusion_clears_when_peer_frees_memory() {
+        // §V-D: a DENYing peer is excluded "until they free memory", not
+        // forever.  mb1 is DENYed at node 1 (mb0 resident), reroutes to
+        // node 2, and arrives there long after mb0's round trip has
+        // cleared node 1 — but node 2 is full (mb2 parked on it while
+        // node 4 grinds).  The second DENY must re-admit the freed node 1
+        // rather than exhaust the candidate set and drop the microbatch.
+        let (mut topo, _, _) = setup();
+        // Slow 0 -> 2: the rerouted mb1 reaches node 2 only after mb0
+        // has freed node 1 (~25 s round trip vs a 60 s control link).
+        topo.links[0][2] = crate::cost::LinkParams::new(60.0, 1e9);
+        // Node 4 is glacial, so mb2 stays resident at node 2 throughout.
+        topo.set_profile(NodeId(4), NodeProfile::new(200.0, 2));
+        let graph = std::sync::Arc::new(StageGraph {
+            stages: vec![vec![NodeId(1), NodeId(2)], vec![NodeId(3), NodeId(4)]],
+            data_nodes: vec![NodeId(0)],
+        });
+        let prob = FlowProblem {
+            graph,
+            cap: vec![8, 1, 1, 2, 2],
+            demand: vec![3],
+            cost: Box::new(|_i, _j| 1.0),
+        };
+        let paths = vec![
+            FlowPath { source: NodeId(0), relays: vec![NodeId(1), NodeId(3)] },
+            FlowPath { source: NodeId(0), relays: vec![NodeId(1), NodeId(3)] },
+            FlowPath { source: NodeId(0), relays: vec![NodeId(2), NodeId(4)] },
+        ];
+        let cfg = TrainingSimConfig {
+            payload_bytes: 1e6,
+            stage_param_bytes: 1e6,
+            timeout_s: 1.0,
+            max_restarts: 3,
+            initial_iter_estimate_s: 1000.0,
+            bwd_factor: 2.0,
+            deadline_factor: 4.0,
+            staleness_bound: None,
+        };
+        let mut sim = TrainingSim::new(topo, cfg);
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+        let churn_state =
+            ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+        let mut rng = Rng::new(0);
+        let m = sim.run_schedule(
+            &prob,
+            &mut router,
+            &WorldSchedule::default(),
+            &churn_state,
+            0.0,
+            paths,
+            None,
+            &mut rng,
+        );
+        assert_eq!(m.denies, 2, "mb1 must be DENYed at node 1 and again at node 2");
+        assert_eq!(m.dropped, 0, "the freed node 1 must be re-admitted");
+        assert_eq!(m.completed, 3);
+    }
+
+    #[test]
     fn mid_iteration_join_provides_recovery_candidate() {
         // Stage 1 = {3, 4}; node 4 starts dead, node 3 crashes at t=0.
         // Without the join the microbatches through stage 1 are stuck; a
@@ -1133,5 +1429,141 @@ mod tests {
         );
         assert_eq!(m_joined.completed, 2, "joiner must absorb the rerouted flows");
         assert!(m_joined.fwd_recoveries >= 1);
+    }
+
+    /// Tentpole degenerate case: `staleness_bound = Some(0)` must walk the
+    /// exact synchronous code path — every metric bit-identical to `None`,
+    /// across consecutive iterations (evolving iter_estimate) and under
+    /// churn.
+    #[test]
+    fn staleness_zero_and_none_are_bitwise_identical() {
+        let run_pair = |staleness: Option<usize>| -> Vec<IterationMetrics> {
+            let (topo, prob, paths) = setup();
+            let cfg = TrainingSimConfig { staleness_bound: staleness, ..small_cfg() };
+            let mut sim = TrainingSim::new(topo, cfg);
+            let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+            let churn_state =
+                ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+            let mut rng = Rng::new(0);
+            let crashy = WorldSchedule { crashes: vec![(NodeId(3), 4.0)], ..Default::default() };
+            vec![
+                sim.run_schedule(
+                    &prob, &mut router, &crashy, &churn_state, 0.0, paths.clone(), None, &mut rng,
+                ),
+                sim.run_schedule(
+                    &prob,
+                    &mut router,
+                    &WorldSchedule::default(),
+                    &churn_state,
+                    0.0,
+                    paths,
+                    None,
+                    &mut rng,
+                ),
+            ]
+        };
+        let none = run_pair(None);
+        let zero = run_pair(Some(0));
+        for (a, b) in none.iter().zip(&zero) {
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits());
+            assert_eq!(a.agg_s.to_bits(), b.agg_s.to_bits());
+            assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits());
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.staleness_mean.to_bits(), b.staleness_mean.to_bits());
+            assert_eq!(a.deferred, b.deferred);
+        }
+    }
+
+    /// Tentpole: with `s >= 1` the iteration has no global barrier — each
+    /// stage's weight exchange fires on the engine clock as its gradients
+    /// land and overlaps the microbatch tail, so the fault-free makespan
+    /// is strictly below the synchronous one (which appends the full
+    /// BEGIN-AGGREGATION / exchange / CAN-TAKE barrier), while the same
+    /// microbatches complete and nothing is deferred or stale.
+    #[test]
+    fn bounded_staleness_overlaps_rolling_aggregation() {
+        let sync = run_schedule_once(&WorldSchedule::default());
+        let (topo, prob, paths) = setup();
+        let cfg = TrainingSimConfig { staleness_bound: Some(1), ..small_cfg() };
+        let mut sim = TrainingSim::new(topo, cfg);
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+        let churn_state =
+            ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+        let mut rng = Rng::new(0);
+        let m = sim.run_schedule(
+            &prob,
+            &mut router,
+            &WorldSchedule::default(),
+            &churn_state,
+            0.0,
+            paths,
+            None,
+            &mut rng,
+        );
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.deferred, 0);
+        assert_eq!(m.staleness_mean, 0.0);
+        assert!(m.agg_s > 0.0, "rolling exchanges must still be charged");
+        assert!(
+            m.makespan_s < sync.makespan_s,
+            "rolling aggregation must beat the barrier: async {} vs sync {}",
+            m.makespan_s,
+            sync.makespan_s
+        );
+        // Both stages aggregated: weights advanced to generation 1.
+        let v = sim.versioned.as_ref().unwrap();
+        assert_eq!(v.iter_gen, 1);
+        assert_eq!(v.gen, vec![1, 1]);
+    }
+
+    /// Tentpole admission rule: a stage that keeps missing aggregation
+    /// (here: both its members are dead, so every microbatch drops) falls
+    /// behind the generation stamp; once its lag exceeds `s`, admission is
+    /// deferred behind the catch-up exchanges and the deferral shows up in
+    /// the metrics.
+    #[test]
+    fn stalled_stage_defers_and_catches_up() {
+        let (topo, prob, paths) = setup();
+        let cfg = TrainingSimConfig { staleness_bound: Some(1), ..small_cfg() };
+        let mut sim = TrainingSim::new(topo, cfg);
+        let mut router = FixedRouter::new(paths.clone(), RecoveryPolicy::RepairPath);
+        let mut churn_state =
+            ChurnProcess::new(5, vec![NodeId(1), NodeId(2), NodeId(3), NodeId(4)], 0.0, 7);
+        // Stage 1 = {3, 4}: both dead for the whole run, so every
+        // microbatch drops in the forward pass and no stage ever gets a
+        // gradient home — weight generations freeze at 0 while the
+        // iteration stamp advances.
+        churn_state.alive[3] = false;
+        churn_state.alive[4] = false;
+        let mut rng = Rng::new(0);
+        let mut run = |sim: &mut TrainingSim| {
+            sim.run_schedule(
+                &prob,
+                &mut router,
+                &WorldSchedule::default(),
+                &churn_state,
+                0.0,
+                paths.clone(),
+                None,
+                &mut rng,
+            )
+        };
+        let m1 = run(&mut sim); // g=0, lag 0: admitted immediately
+        let m2 = run(&mut sim); // g=1, lag 1 = s: still admitted
+        let m3 = run(&mut sim); // g=2, lag 2 > s: catch-up + deferral
+        assert_eq!((m1.deferred, m2.deferred), (0, 0));
+        assert_eq!(m1.staleness_mean, 0.0);
+        assert_eq!(m2.staleness_mean, 1.0, "one generation behind, within the bound");
+        assert_eq!(m3.deferred, 2, "every microbatch waits for the catch-up");
+        assert_eq!(m3.staleness_mean, 1.0, "catch-up pulls lag back to exactly s");
+        assert_eq!(m1.completed + m2.completed + m3.completed, 0);
+        // Stage 0 (alive members) replayed one missed exchange; its
+        // generation caught back up to g - s.
+        let v = sim.versioned.as_ref().unwrap();
+        assert_eq!(v.iter_gen, 3);
+        assert_eq!(v.gen[0], 1);
     }
 }

@@ -1,0 +1,108 @@
+//! Test-sized bounded-staleness sweep + acceptance gate (ISSUE 7).
+//!
+//! Runs the async sweep (heterogeneous Table II shape, continuous-clock
+//! Poisson churn) with tiny rep/iteration counts, asserts the tentpole's
+//! acceptance properties —
+//!
+//! - **every staleness bound beats the synchronous barrier on goodput**
+//!   (completed microbatches per makespan second): each arm sees the
+//!   same topologies and churn processes (the bound consumes no
+//!   randomness), and a rolling per-stage exchange overlaps the
+//!   microbatch tail while the barrier extends it, and
+//! - **goodput is monotone non-decreasing in the bound**: a larger `s`
+//!   can only defer less (deferral is the sole mechanism by which the
+//!   bound costs time) —
+//!
+//! and maintains the `test_sized` profile of `BENCH_async.json` at the
+//! repo root (capture on first run / `GWTF_UPDATE_ASYNC=1`, then a 2x
+//! regression gate on the sync-arm makespan).  The full-size sweep is
+//! `gwtf bench async`, which fills the `full` profile of the same file.
+//! CI runs this test in the guard step and the `arm-baselines` job
+//! commits the captured profile on `main`.
+
+use gwtf::experiments::{
+    async_json_path, read_async_profile, run_async, update_async_json, AsyncCase, AsyncOpts,
+};
+
+fn opts() -> AsyncOpts {
+    AsyncOpts { bounds: vec![1, 2, 4], churn_p: 0.2, reps: 2, iters_per_rep: 3, seed: 7 }
+}
+
+#[test]
+fn async_goodput_beats_sync_and_is_monotone_in_the_bound() {
+    let (table, report) = run_async(&opts()).unwrap();
+
+    // Every arm produced samples and completed work.
+    assert_eq!(table.cells.len(), 4, "sync + 3 bounds");
+    for ((row, col), acc) in &table.cells {
+        assert_eq!(acc.throughput.len(), 2 * 3, "{row}/{col}: 2 reps x 3 iterations");
+        assert!(acc.throughput.iter().sum::<f64>() > 0.0, "{row}/{col} completed nothing");
+    }
+
+    // Acceptance 1: every staleness bound beats the synchronous barrier
+    // on goodput.  Identical scenarios per rep; removing the barrier
+    // strictly shortens every fault-free iteration and the churn draws
+    // are shared, so the win must survive the averaging.
+    let sync = report.case(0).expect("sync reference arm");
+    assert!(sync.goodput() > 0.0);
+    assert_eq!(sync.staleness_mean, 0.0, "barrier mode trains on fresh weights");
+    assert_eq!(sync.deferred_total, 0.0, "no admission rule under the barrier");
+    let arms: Vec<&AsyncCase> =
+        opts().bounds.iter().map(|&s| report.case(s).expect("async arm")).collect();
+    for arm in &arms {
+        assert!(arm.agg_mean_s > 0.0, "s={}: rolling exchanges still charged", arm.staleness);
+        assert!(
+            arm.goodput() > sync.goodput(),
+            "s={}: rolling aggregation must out-goodput the barrier: {} vs {}",
+            arm.staleness,
+            arm.goodput(),
+            sync.goodput()
+        );
+    }
+
+    // Acceptance 2: goodput is monotone non-decreasing in the bound.
+    // Deferral is the only cost of a tighter bound; the 2% slack covers
+    // scheduling anomalies when the evolving iter_estimate shifts churn
+    // instants between arms.
+    for w in arms.windows(2) {
+        assert!(
+            w[1].goodput() >= 0.98 * w[0].goodput(),
+            "goodput fell as the bound loosened: {} @ s={} vs {} @ s={}",
+            w[0].goodput(),
+            w[0].staleness,
+            w[1].goodput(),
+            w[1].staleness
+        );
+    }
+
+    // Baseline: capture when null/missing (or on explicit request),
+    // otherwise gate the sync-arm total makespan at 2x (deterministic
+    // per seed; the headroom covers libm-level drift across machines).
+    let path = async_json_path();
+    let update = std::env::var("GWTF_UPDATE_ASYNC").is_ok();
+    match (update, read_async_profile(&path, "test_sized")) {
+        (false, Some(baseline)) => {
+            let base = baseline.case(0).expect("baseline sync arm");
+            assert!(
+                sync.makespan_total_s <= 2.0 * base.makespan_total_s,
+                "sync-arm makespan regressed >2x: {} vs baseline {} \
+                 (GWTF_UPDATE_ASYNC=1 to re-baseline intentionally)",
+                sync.makespan_total_s,
+                base.makespan_total_s
+            );
+        }
+        (update, _) => {
+            update_async_json(&path, "test_sized", &report).unwrap();
+            eprintln!(
+                "async test_sized profile {} at {} — commit BENCH_async.json to arm \
+                 the regression gate",
+                if update {
+                    "re-captured (GWTF_UPDATE_ASYNC)"
+                } else {
+                    "was null/missing; captured"
+                },
+                path.display()
+            );
+        }
+    }
+}
