@@ -33,8 +33,8 @@ pub use scenarios::{
     run_link_jitter, run_mid_agg_crash, run_plan_lag, run_poisson_churn, run_scale,
     scale_json_path, update_async_json, update_congestion_json, update_plan_lag_json,
     update_scale_json, AsyncCase, AsyncOpts, AsyncReport, CongestionCase, CongestionOpts,
-    CongestionReport, PlanLagCase, PlanLagOpts, PlanLagReport, ScaleOpts, ScaleReport,
-    ScenarioOpts,
+    CongestionReport, CritProfile, PlanLagCase, PlanLagOpts, PlanLagReport, ScaleOpts,
+    ScaleReport, ScenarioOpts,
 };
 pub use tables::{run_table2, run_table3, run_table6, TableOpts};
 

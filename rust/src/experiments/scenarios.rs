@@ -48,7 +48,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 use crate::baselines::GaParams;
 use crate::coordinator::GwtfRouter;
@@ -58,7 +58,7 @@ use crate::metrics::MetricsTable;
 use crate::sim::scenario::{build, ScenarioConfig, DEFAULT_OVERLAY_FANOUT};
 use crate::sim::sources::{LinkJitterSource, MidAggCrashSource};
 use crate::sim::training::{
-    PlanOutcome, PlanRequest, PlanTicket, RecoveryPolicy, RoutingPolicy,
+    IterationMetrics, PlanOutcome, PlanRequest, PlanTicket, RecoveryPolicy, RoutingPolicy,
 };
 use crate::sim::ChurnModel;
 use crate::util::json::Json;
@@ -245,6 +245,70 @@ impl Default for ScaleOpts {
     }
 }
 
+/// Aggregate critical-path attribution for one sweep profile: every
+/// measured iteration's [`crate::sim::CritPath`] buckets summed, plus
+/// the summed makespans they attribute.  Serialized as the `crit_path`
+/// block of every `BENCH_*.json` profile, so each committed baseline
+/// records not just *how fast* the sweep ran but *where its virtual
+/// time went*.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CritProfile {
+    pub compute_s: f64,
+    pub tx_s: f64,
+    pub prop_s: f64,
+    pub queue_s: f64,
+    pub plan_s: f64,
+    pub agg_s: f64,
+    pub stale_s: f64,
+    /// Sum of the attributed makespans (the buckets above sum to this
+    /// within float rounding).
+    pub makespan_s: f64,
+}
+
+impl CritProfile {
+    /// Fold one measured iteration into the profile.
+    pub fn add(&mut self, m: &IterationMetrics) {
+        self.compute_s += m.crit_path.compute_s;
+        self.tx_s += m.crit_path.tx_s;
+        self.prop_s += m.crit_path.prop_s;
+        self.queue_s += m.crit_path.queue_s;
+        self.plan_s += m.crit_path.plan_s;
+        self.agg_s += m.crit_path.agg_s;
+        self.stale_s += m.crit_path.stale_s;
+        self.makespan_s += m.makespan_s;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("compute_s".into(), Json::Num(self.compute_s));
+        o.insert("tx_s".into(), Json::Num(self.tx_s));
+        o.insert("prop_s".into(), Json::Num(self.prop_s));
+        o.insert("queue_s".into(), Json::Num(self.queue_s));
+        o.insert("plan_s".into(), Json::Num(self.plan_s));
+        o.insert("agg_s".into(), Json::Num(self.agg_s));
+        o.insert("stale_s".into(), Json::Num(self.stale_s));
+        o.insert("makespan_s".into(), Json::Num(self.makespan_s));
+        Json::Obj(o)
+    }
+
+    /// Lenient: a report without a `crit_path` block (pre-attribution
+    /// committed baselines) parses as all-zero rather than failing.
+    pub fn from_json(j: Option<&Json>) -> CritProfile {
+        let Some(j) = j else { return CritProfile::default() };
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        CritProfile {
+            compute_s: num("compute_s"),
+            tx_s: num("tx_s"),
+            prop_s: num("prop_s"),
+            queue_s: num("queue_s"),
+            plan_s: num("plan_s"),
+            agg_s: num("agg_s"),
+            stale_s: num("stale_s"),
+            makespan_s: num("makespan_s"),
+        }
+    }
+}
+
 /// Planner-cost instrumentation for one (relay count, system) cell of the
 /// scale sweep, summed over reps and iterations.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -296,6 +360,8 @@ pub struct ScaleReport {
     /// (informational — plans are thread-count invariant).
     pub planner_threads: usize,
     pub cases: Vec<ScaleCase>,
+    /// Where the sweep's virtual time went ([`CritProfile`]).
+    pub crit_path: CritProfile,
 }
 
 impl ScaleReport {
@@ -328,6 +394,7 @@ impl ScaleReport {
         root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
         root.insert("planner_threads".into(), Json::Num(self.planner_threads as f64));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        root.insert("crit_path".into(), self.crit_path.to_json());
         Json::Obj(root)
     }
 
@@ -362,6 +429,7 @@ impl ScaleReport {
             iters_per_rep: num(j, "iters_per_rep")? as usize,
             planner_threads: num(j, "planner_threads").map_or(1, |t| t as usize),
             cases,
+            crit_path: CritProfile::from_json(j.get("crit_path")),
         })
     }
 }
@@ -392,28 +460,13 @@ pub fn read_scale_profile(path: &Path, profile: &str) -> Option<ScaleReport> {
 /// silent rewrite would null the committed baseline and disarm the CI
 /// regression gate without anyone noticing.
 pub fn update_scale_json(path: &Path, profile: &str, report: &ScaleReport) -> Result<()> {
-    let mut root = match std::fs::read_to_string(path) {
-        Err(_) => BTreeMap::new(), // no file yet: fresh capture
-        Ok(text) => match Json::parse(text.trim()) {
-            Ok(Json::Obj(o)) => o,
-            _ => bail!(
-                "{} exists but is not a JSON object; refusing to overwrite \
-                 (fix or delete it to re-capture)",
-                path.display()
-            ),
-        },
-    };
-    root.insert("bench".into(), Json::Str("scale".into()));
-    root.insert(
-        "source".into(),
-        Json::Str("rust/src/experiments/scenarios.rs::run_scale".into()),
-    );
-    root.entry("test_sized".to_string()).or_insert(Json::Null);
-    root.entry("full".to_string()).or_insert(Json::Null);
-    root.insert(profile.to_string(), report.to_json());
-    std::fs::write(path, format!("{}\n", Json::Obj(root)))
-        .with_context(|| format!("writing {path:?}"))?;
-    Ok(())
+    crate::util::bench::update_profile_json(
+        path,
+        "scale",
+        "rust/src/experiments/scenarios.rs::run_scale",
+        profile,
+        report.to_json(),
+    )
 }
 
 /// Wall-time + protocol-round instrumentation around any
@@ -488,6 +541,7 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
         "Scale — 100+ relays, gossip-overlay GWTF vs SWARM vs DT-FM under Poisson churn",
     );
     let mut cases: BTreeMap<(usize, String), ScaleCase> = BTreeMap::new();
+    let mut crit = CritProfile::default();
 
     /// One (scenario, system) measurement: drive the engine, accumulate
     /// the metrics cell and fold the planner instrumentation into the
@@ -495,6 +549,7 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
     struct ScaleRun<'a> {
         table: &'a mut MetricsTable,
         cases: &'a mut BTreeMap<(usize, String), ScaleCase>,
+        crit: &'a mut CritProfile,
         sc: &'a crate::sim::scenario::Scenario,
         relays: usize,
         engine_seed: u64,
@@ -514,6 +569,7 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
                 let m = engine.step(&self.sc.prob, &mut router);
                 throughput += m.completed as f64;
                 events += m.events;
+                self.crit.add(&m);
                 cell.push(&m);
             }
             let engine_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -550,6 +606,7 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
             let mut run = ScaleRun {
                 table: &mut table,
                 cases: &mut cases,
+                crit: &mut crit,
                 sc: &sc,
                 relays,
                 engine_seed: seed ^ 0x1,
@@ -588,6 +645,7 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
         iters_per_rep: opts.iters_per_rep,
         planner_threads: opts.planner_threads.max(1),
         cases: cases.into_values().collect(),
+        crit_path: crit,
     };
     Ok((table, report))
 }
@@ -643,6 +701,8 @@ pub struct PlanLagReport {
     pub reps: usize,
     pub iters_per_rep: usize,
     pub cases: Vec<PlanLagCase>,
+    /// Where the sweep's virtual time went ([`CritProfile`]).
+    pub crit_path: CritProfile,
 }
 
 impl PlanLagReport {
@@ -666,6 +726,7 @@ impl PlanLagReport {
         root.insert("reps".into(), Json::Num(self.reps as f64));
         root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        root.insert("crit_path".into(), self.crit_path.to_json());
         Json::Obj(root)
     }
 
@@ -692,6 +753,7 @@ impl PlanLagReport {
             reps: num(j, "reps")? as usize,
             iters_per_rep: num(j, "iters_per_rep")? as usize,
             cases,
+            crit_path: CritProfile::from_json(j.get("crit_path")),
         })
     }
 }
@@ -716,28 +778,13 @@ pub fn read_plan_lag_profile(path: &Path, profile: &str) -> Option<PlanLagReport
 /// profile; a present-but-corrupt file is an error, not a reset (same
 /// rationale as [`update_scale_json`]).
 pub fn update_plan_lag_json(path: &Path, profile: &str, report: &PlanLagReport) -> Result<()> {
-    let mut root = match std::fs::read_to_string(path) {
-        Err(_) => BTreeMap::new(), // no file yet: fresh capture
-        Ok(text) => match Json::parse(text.trim()) {
-            Ok(Json::Obj(o)) => o,
-            _ => bail!(
-                "{} exists but is not a JSON object; refusing to overwrite \
-                 (fix or delete it to re-capture)",
-                path.display()
-            ),
-        },
-    };
-    root.insert("bench".into(), Json::Str("planlag".into()));
-    root.insert(
-        "source".into(),
-        Json::Str("rust/src/experiments/scenarios.rs::run_plan_lag".into()),
-    );
-    root.entry("test_sized".to_string()).or_insert(Json::Null);
-    root.entry("full".to_string()).or_insert(Json::Null);
-    root.insert(profile.to_string(), report.to_json());
-    std::fs::write(path, format!("{}\n", Json::Obj(root)))
-        .with_context(|| format!("writing {path:?}"))?;
-    Ok(())
+    crate::util::bench::update_profile_json(
+        path,
+        "planlag",
+        "rust/src/experiments/scenarios.rs::run_plan_lag",
+        profile,
+        report.to_json(),
+    )
 }
 
 /// Options for the shared-capacity congestion sweep
@@ -786,6 +833,8 @@ pub struct CongestionReport {
     pub reps: usize,
     pub iters_per_rep: usize,
     pub cases: Vec<CongestionCase>,
+    /// Where the sweep's virtual time went ([`CritProfile`]).
+    pub crit_path: CritProfile,
 }
 
 impl CongestionReport {
@@ -809,6 +858,7 @@ impl CongestionReport {
         root.insert("reps".into(), Json::Num(self.reps as f64));
         root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        root.insert("crit_path".into(), self.crit_path.to_json());
         Json::Obj(root)
     }
 
@@ -835,6 +885,7 @@ impl CongestionReport {
             reps: num(j, "reps")? as usize,
             iters_per_rep: num(j, "iters_per_rep")? as usize,
             cases,
+            crit_path: CritProfile::from_json(j.get("crit_path")),
         })
     }
 }
@@ -864,28 +915,13 @@ pub fn update_congestion_json(
     profile: &str,
     report: &CongestionReport,
 ) -> Result<()> {
-    let mut root = match std::fs::read_to_string(path) {
-        Err(_) => BTreeMap::new(), // no file yet: fresh capture
-        Ok(text) => match Json::parse(text.trim()) {
-            Ok(Json::Obj(o)) => o,
-            _ => bail!(
-                "{} exists but is not a JSON object; refusing to overwrite \
-                 (fix or delete it to re-capture)",
-                path.display()
-            ),
-        },
-    };
-    root.insert("bench".into(), Json::Str("congestion".into()));
-    root.insert(
-        "source".into(),
-        Json::Str("rust/src/experiments/scenarios.rs::run_congestion".into()),
-    );
-    root.entry("test_sized".to_string()).or_insert(Json::Null);
-    root.entry("full".to_string()).or_insert(Json::Null);
-    root.insert(profile.to_string(), report.to_json());
-    std::fs::write(path, format!("{}\n", Json::Obj(root)))
-        .with_context(|| format!("writing {path:?}"))?;
-    Ok(())
+    crate::util::bench::update_profile_json(
+        path,
+        "congestion",
+        "rust/src/experiments/scenarios.rs::run_congestion",
+        profile,
+        report.to_json(),
+    )
 }
 
 /// Row label for one NIC cap of the congestion sweep.
@@ -919,6 +955,7 @@ pub fn run_congestion(opts: &CongestionOpts) -> Result<(MetricsTable, Congestion
         throughput: f64,
     }
     let mut cases: BTreeMap<(usize, String), CaseAcc> = BTreeMap::new();
+    let mut crit = CritProfile::default();
     for &cap in &opts.nic_caps {
         let nic_wan = if cap == 0 { None } else { Some(cap) };
         let row = nic_row(cap);
@@ -939,6 +976,7 @@ pub fn run_congestion(opts: &CongestionOpts) -> Result<(MetricsTable, Congestion
                     acc.comm.push(m.comm_s);
                     acc.util.push(m.nic_util_max);
                     acc.throughput += m.completed as f64;
+                    crit.add(&m);
                     cell.push(&m);
                 }
             };
@@ -980,6 +1018,7 @@ pub fn run_congestion(opts: &CongestionOpts) -> Result<(MetricsTable, Congestion
                 throughput_total: acc.throughput,
             })
             .collect(),
+        crit_path: crit,
     };
     Ok((table, report))
 }
@@ -1041,6 +1080,8 @@ pub struct AsyncReport {
     pub iters_per_rep: usize,
     pub churn_p: f64,
     pub cases: Vec<AsyncCase>,
+    /// Where the sweep's virtual time went ([`CritProfile`]).
+    pub crit_path: CritProfile,
 }
 
 impl AsyncReport {
@@ -1066,6 +1107,7 @@ impl AsyncReport {
         root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
         root.insert("churn_p".into(), Json::Num(self.churn_p));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        root.insert("crit_path".into(), self.crit_path.to_json());
         Json::Obj(root)
     }
 
@@ -1092,6 +1134,7 @@ impl AsyncReport {
             iters_per_rep: num(j, "iters_per_rep")? as usize,
             churn_p: num(j, "churn_p")?,
             cases,
+            crit_path: CritProfile::from_json(j.get("crit_path")),
         })
     }
 }
@@ -1115,28 +1158,13 @@ pub fn read_async_profile(path: &Path, profile: &str) -> Option<AsyncReport> {
 /// profile; a present-but-corrupt file is an error, not a reset (same
 /// rationale as [`update_congestion_json`]).
 pub fn update_async_json(path: &Path, profile: &str, report: &AsyncReport) -> Result<()> {
-    let mut root = match std::fs::read_to_string(path) {
-        Err(_) => BTreeMap::new(), // no file yet: fresh capture
-        Ok(text) => match Json::parse(text.trim()) {
-            Ok(Json::Obj(o)) => o,
-            _ => bail!(
-                "{} exists but is not a JSON object; refusing to overwrite \
-                 (fix or delete it to re-capture)",
-                path.display()
-            ),
-        },
-    };
-    root.insert("bench".into(), Json::Str("async".into()));
-    root.insert(
-        "source".into(),
-        Json::Str("rust/src/experiments/scenarios.rs::run_async".into()),
-    );
-    root.entry("test_sized".to_string()).or_insert(Json::Null);
-    root.entry("full".to_string()).or_insert(Json::Null);
-    root.insert(profile.to_string(), report.to_json());
-    std::fs::write(path, format!("{}\n", Json::Obj(root)))
-        .with_context(|| format!("writing {path:?}"))?;
-    Ok(())
+    crate::util::bench::update_profile_json(
+        path,
+        "async",
+        "rust/src/experiments/scenarios.rs::run_async",
+        profile,
+        report.to_json(),
+    )
 }
 
 /// Row label for one arm of the async sweep.
@@ -1164,6 +1192,7 @@ pub fn run_async(opts: &AsyncOpts) -> Result<(MetricsTable, AsyncReport)> {
     arms.extend(opts.bounds.iter().copied().filter(|&s| s >= 1));
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
     let mut cases = Vec::new();
+    let mut crit = CritProfile::default();
     for &s in &arms {
         let row = staleness_row(s);
         let bound = if s == 0 { None } else { Some(s) };
@@ -1186,6 +1215,7 @@ pub fn run_async(opts: &AsyncOpts) -> Result<(MetricsTable, AsyncReport)> {
                 stale.push(m.staleness_mean);
                 deferred_total += m.deferred as f64;
                 throughput_total += m.completed as f64;
+                crit.add(&m);
                 cell.push(&m);
             }
         }
@@ -1203,6 +1233,7 @@ pub fn run_async(opts: &AsyncOpts) -> Result<(MetricsTable, AsyncReport)> {
         iters_per_rep: opts.iters_per_rep,
         churn_p: opts.churn_p,
         cases,
+        crit_path: crit,
     };
     Ok((table, report))
 }
@@ -1221,6 +1252,7 @@ pub fn run_plan_lag(opts: &PlanLagOpts) -> Result<(MetricsTable, PlanLagReport)>
         "Plan lag — flow-protocol round-RTT vs iteration length (plan lifecycle on the clock)",
     );
     let mut cases = Vec::new();
+    let mut crit = CritProfile::default();
     // 0% churn is always measured (the monotonicity gate); the churn row
     // is added on top unless it would duplicate it (`--churn 0`).
     let mut churn_rows = vec![0.0];
@@ -1258,6 +1290,7 @@ pub fn run_plan_lag(opts: &PlanLagOpts) -> Result<(MetricsTable, PlanLagReport)>
                     overlaps.push(m.plan_overlap_s);
                     stale_total += m.stale_replans;
                     throughput_total += m.completed as f64;
+                    crit.add(&m);
                     cell.push(&m);
                 }
             }
@@ -1273,8 +1306,12 @@ pub fn run_plan_lag(opts: &PlanLagOpts) -> Result<(MetricsTable, PlanLagReport)>
             });
         }
     }
-    let report =
-        PlanLagReport { reps: opts.reps, iters_per_rep: opts.iters_per_rep, cases };
+    let report = PlanLagReport {
+        reps: opts.reps,
+        iters_per_rep: opts.iters_per_rep,
+        cases,
+        crit_path: crit,
+    };
     Ok((table, report))
 }
 
@@ -1371,6 +1408,16 @@ mod tests {
                 events_total: 4096,
                 engine_wall_ms: 250.125,
             }],
+            crit_path: CritProfile {
+                compute_s: 10.5,
+                tx_s: 2.25,
+                prop_s: 1.5,
+                queue_s: 0.75,
+                plan_s: 3.0,
+                agg_s: 1.25,
+                stale_s: 0.5,
+                makespan_s: 19.75,
+            },
         };
         let back = ScaleReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);
@@ -1379,6 +1426,7 @@ mod tests {
         let mut legacy = report.to_json();
         if let Json::Obj(root) = &mut legacy {
             root.remove("planner_threads");
+            root.remove("crit_path");
             if let Some(Json::Arr(cases)) = root.get_mut("cases") {
                 for c in cases {
                     if let Json::Obj(o) = c {
@@ -1393,6 +1441,7 @@ mod tests {
         assert_eq!(old.planner_threads, 1);
         assert_eq!(old.cases[0].events_total, 0);
         assert_eq!(old.cases[0].engine_wall_ms, 0.0);
+        assert_eq!(old.crit_path, CritProfile::default(), "missing block is all-zero");
 
         let dir = std::env::temp_dir().join("gwtf_scale_json_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -1466,6 +1515,7 @@ mod tests {
                 stale_total: 1,
                 throughput_total: 32.0,
             }],
+            crit_path: CritProfile { compute_s: 400.5, plan_s: 3.5, ..Default::default() },
         };
         let back = PlanLagReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);
@@ -1525,6 +1575,7 @@ mod tests {
                 nic_util_max_mean: 0.62,
                 throughput_total: 48.0,
             }],
+            crit_path: CritProfile { tx_s: 320.25, queue_s: 113.5, ..Default::default() },
         };
         let back = CongestionReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);
@@ -1580,6 +1631,7 @@ mod tests {
                 deferred_total: 3.0,
                 throughput_total: 60.0,
             }],
+            crit_path: CritProfile { agg_s: 57.0, stale_s: 6.5, ..Default::default() },
         };
         let back = AsyncReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);

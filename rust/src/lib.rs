@@ -14,6 +14,9 @@
 //!   executes the AOT-lowered JAX/Pallas stage computations from Rust.
 //! - [`config`], [`metrics`], [`util`] — launcher/config system, metric
 //!   reporters, and offline-build substitutes for rand/serde/criterion.
+//! - [`trace`] — flight-recorder tracing of the continuous-time engine
+//!   (ambient `TraceSink`, Chrome-trace export via `gwtf bench --trace`,
+//!   CI flight-recorder dumps, critical-path attribution).
 #![allow(clippy::needless_range_loop)]
 pub mod baselines;
 pub mod config;
@@ -26,5 +29,6 @@ pub mod metrics;
 pub mod net;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod trainer;
 pub mod util;

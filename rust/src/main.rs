@@ -8,6 +8,7 @@
 //! gwtf train  [--family llama|gpt] [--steps N] [--churn P] [--lr X]
 //! gwtf bench  <TARGET>          (see BENCH_TARGETS: tables, figures, and the
 //!             [--reps N] [--full]  continuous-time scenario sweeps)
+//!             [--trace out.json]   (Chrome/Perfetto trace of every iteration)
 //! gwtf join-demo                      Fig. 3 walkthrough
 //! ```
 //!
@@ -53,6 +54,10 @@ fn usage() -> String {
   train     --family llama|gpt   --steps N --churn P --lr X --microbatches M
   bench     {BENCH_TARGETS}
             --reps N --iters N --full --warm-replan
+            --trace FILE         (record every simulated iteration and export
+             a Chrome/Perfetto trace-event JSON: one track per node, spans
+             per compute/transfer/wait, instants for churn + plan events;
+             open in chrome://tracing or ui.perfetto.dev)
             (scale: --relays \"100,200\" --gwtf-relays \"1000\" --churn P
              --threads T — overlay GWTF vs baselines (the --gwtf-relays
              sizes run GWTF only, T planner worker threads), writes
@@ -221,6 +226,15 @@ fn bench(args: &Args) -> Result<()> {
     let dir = results_dir();
     let mut ran = false;
 
+    // --trace FILE arms the ambient collector around every sweep below
+    // and exports the stream as Chrome trace-event JSON at the end.
+    let trace_out = match args.get("trace") {
+        None => None,
+        Some("true") => bail!("--trace expects an output path (e.g. --trace trace.json)"),
+        Some(p) => Some(std::path::PathBuf::from(p)),
+    };
+    let recording = trace_out.as_ref().map(|_| gwtf::trace::arm_collector());
+
     let emit = |t: &MetricsTable, name: &str| -> Result<()> {
         t.write(&dir, name)?;
         println!("{}", t.to_markdown());
@@ -378,6 +392,12 @@ fn bench(args: &Args) -> Result<()> {
     }
     if !ran {
         bail!("unknown bench target {target:?}");
+    }
+    if let (Some(path), Some((guard, records))) = (trace_out, recording) {
+        drop(guard); // disarm before touching the shared buffer
+        let records = records.borrow();
+        gwtf::trace::chrome::write_chrome_trace(&path, &records)?;
+        println!("-> {} ({} trace events)", path.display(), records.len());
     }
     Ok(())
 }

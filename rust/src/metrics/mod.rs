@@ -50,7 +50,143 @@ pub struct CellAccumulator {
     /// Microbatches deferred past t=0 by the staleness admission rule
     /// per iteration.
     pub deferred: Vec<f64>,
+    /// Kernel events dispatched per makespan second — the engine's
+    /// event throughput for the iteration.
+    pub events_per_s: Vec<f64>,
+    /// Critical-path attribution (minutes): where the makespan went,
+    /// bucket by bucket ([`crate::sim::CritPath`]; the seven buckets sum
+    /// to the makespan).
+    pub crit_compute_min: Vec<f64>,
+    pub crit_tx_min: Vec<f64>,
+    pub crit_prop_min: Vec<f64>,
+    pub crit_queue_min: Vec<f64>,
+    pub crit_plan_min: Vec<f64>,
+    pub crit_agg_min: Vec<f64>,
+    pub crit_stale_min: Vec<f64>,
 }
+
+/// One report column: the stable CSV key, the human Markdown label, and
+/// the accumulator series backing it.  [`CellAccumulator::row`],
+/// [`MetricsTable::to_markdown`] and [`MetricsTable::to_csv`] all derive
+/// from this one table, so the three surfaces cannot drift (the
+/// `columns_schema_covers_every_series_and_surface` test pins the
+/// schema against the accumulator's fields).
+pub struct Column {
+    pub key: &'static str,
+    pub label: &'static str,
+    pub samples: fn(&CellAccumulator) -> &Vec<f64>,
+}
+
+/// The shared column schema, in Markdown presentation order.
+pub const COLUMNS: &[Column] = &[
+    Column {
+        key: "time_per_microbatch_min",
+        label: "Time per microbatch (min)",
+        samples: |a| &a.time_per_microbatch_min,
+    },
+    Column {
+        key: "throughput",
+        label: "Throughput (#microb/iteration)",
+        samples: |a| &a.throughput,
+    },
+    Column {
+        key: "comm_time_min",
+        label: "Communication time (min)",
+        samples: |a| &a.comm_time_min,
+    },
+    Column {
+        key: "wasted_gpu_min",
+        label: "Wasted GPU time (min)",
+        samples: |a| &a.wasted_gpu_min,
+    },
+    Column { key: "makespan_min", label: "Iteration makespan (min)", samples: |a| &a.makespan_min },
+    Column {
+        key: "fwd_recoveries",
+        label: "Forward recoveries (#/iteration)",
+        samples: |a| &a.fwd_recoveries,
+    },
+    Column {
+        key: "bwd_recoveries",
+        label: "Backward recoveries (#/iteration)",
+        samples: |a| &a.bwd_recoveries,
+    },
+    Column {
+        key: "agg_recoveries",
+        label: "Aggregation-barrier recoveries (#/iteration)",
+        samples: |a| &a.agg_recoveries,
+    },
+    Column {
+        key: "replan_rounds",
+        label: "Flow re-plan rounds (#/iteration)",
+        samples: |a| &a.replan_rounds,
+    },
+    Column {
+        key: "plan_overlap_min",
+        label: "Plan overlap (min, hidden behind training)",
+        samples: |a| &a.plan_overlap_min,
+    },
+    Column {
+        key: "stale_replans",
+        label: "Stale re-plans (#/iteration)",
+        samples: |a| &a.stale_replans,
+    },
+    Column { key: "queue_min", label: "NIC queueing time (min)", samples: |a| &a.queue_min },
+    Column {
+        key: "nic_util_max",
+        label: "Peak NIC load (tx-s per makespan-s; >1 = oversubscribed)",
+        samples: |a| &a.nic_util_max,
+    },
+    Column {
+        key: "staleness_mean",
+        label: "Weight staleness (generations behind, mean)",
+        samples: |a| &a.staleness_mean,
+    },
+    Column {
+        key: "deferred",
+        label: "Deferred microbatches (#/iteration)",
+        samples: |a| &a.deferred,
+    },
+    Column {
+        key: "events_per_s",
+        label: "Kernel event throughput (events/sec)",
+        samples: |a| &a.events_per_s,
+    },
+    Column {
+        key: "crit_compute_min",
+        label: "Critical path: compute (min)",
+        samples: |a| &a.crit_compute_min,
+    },
+    Column {
+        key: "crit_tx_min",
+        label: "Critical path: transmission (min)",
+        samples: |a| &a.crit_tx_min,
+    },
+    Column {
+        key: "crit_prop_min",
+        label: "Critical path: propagation (min)",
+        samples: |a| &a.crit_prop_min,
+    },
+    Column {
+        key: "crit_queue_min",
+        label: "Critical path: waiting (min)",
+        samples: |a| &a.crit_queue_min,
+    },
+    Column {
+        key: "crit_plan_min",
+        label: "Critical path: planning (min)",
+        samples: |a| &a.crit_plan_min,
+    },
+    Column {
+        key: "crit_agg_min",
+        label: "Critical path: aggregation (min)",
+        samples: |a| &a.crit_agg_min,
+    },
+    Column {
+        key: "crit_stale_min",
+        label: "Critical path: staleness catch-up (min)",
+        samples: |a| &a.crit_stale_min,
+    },
+];
 
 impl CellAccumulator {
     /// Record one iteration's outcome (seconds are converted to minutes —
@@ -73,24 +209,20 @@ impl CellAccumulator {
         self.nic_util_max.push(m.nic_util_max);
         self.staleness_mean.push(m.staleness_mean);
         self.deferred.push(m.deferred as f64);
+        if m.makespan_s > 0.0 {
+            self.events_per_s.push(m.events as f64 / m.makespan_s);
+        }
+        self.crit_compute_min.push(m.crit_path.compute_s / 60.0);
+        self.crit_tx_min.push(m.crit_path.tx_s / 60.0);
+        self.crit_prop_min.push(m.crit_path.prop_s / 60.0);
+        self.crit_queue_min.push(m.crit_path.queue_s / 60.0);
+        self.crit_plan_min.push(m.crit_path.plan_s / 60.0);
+        self.crit_agg_min.push(m.crit_path.agg_s / 60.0);
+        self.crit_stale_min.push(m.crit_path.stale_s / 60.0);
     }
 
     pub fn row(&self) -> BTreeMap<&'static str, Summary> {
-        let mut r = BTreeMap::new();
-        r.insert("time_per_microbatch_min", Summary::of(&self.time_per_microbatch_min));
-        r.insert("throughput", Summary::of(&self.throughput));
-        r.insert("comm_time_min", Summary::of(&self.comm_time_min));
-        r.insert("wasted_gpu_min", Summary::of(&self.wasted_gpu_min));
-        r.insert("makespan_min", Summary::of(&self.makespan_min));
-        r.insert("agg_recoveries", Summary::of(&self.agg_recoveries));
-        r.insert("replan_rounds", Summary::of(&self.replan_rounds));
-        r.insert("plan_overlap_min", Summary::of(&self.plan_overlap_min));
-        r.insert("stale_replans", Summary::of(&self.stale_replans));
-        r.insert("queue_min", Summary::of(&self.queue_min));
-        r.insert("nic_util_max", Summary::of(&self.nic_util_max));
-        r.insert("staleness_mean", Summary::of(&self.staleness_mean));
-        r.insert("deferred", Summary::of(&self.deferred));
-        r
+        COLUMNS.iter().map(|c| (c.key, Summary::of((c.samples)(self)))).collect()
     }
 }
 
@@ -125,26 +257,13 @@ impl MetricsTable {
         v
     }
 
-    /// Paper-style Markdown: one block per metric, systems as columns.
+    /// Paper-style Markdown: one block per [`COLUMNS`] metric, systems
+    /// as columns.
     pub fn to_markdown(&self) -> String {
-        let metrics = [
-            ("time_per_microbatch_min", "Time per microbatch (min)"),
-            ("throughput", "Throughput (#microb/iteration)"),
-            ("comm_time_min", "Communication time (min)"),
-            ("wasted_gpu_min", "Wasted GPU time (min)"),
-            ("agg_recoveries", "Aggregation-barrier recoveries (#/iteration)"),
-            ("replan_rounds", "Flow re-plan rounds (#/iteration)"),
-            ("plan_overlap_min", "Plan overlap (min, hidden behind training)"),
-            ("stale_replans", "Stale re-plans (#/iteration)"),
-            ("queue_min", "NIC queueing time (min)"),
-            ("nic_util_max", "Peak NIC load (tx-s per makespan-s; >1 = oversubscribed)"),
-            ("staleness_mean", "Weight staleness (generations behind, mean)"),
-            ("deferred", "Deferred microbatches (#/iteration)"),
-        ];
         let rows = self.rows();
         let cols = self.cols();
         let mut s = format!("## {}\n\n", self.title);
-        for (key, label) in metrics {
+        for Column { key, label, .. } in COLUMNS {
             s.push_str(&format!("### {label}\n\n| setting |"));
             for c in &cols {
                 s.push_str(&format!(" {c} |"));
@@ -318,6 +437,89 @@ mod tests {
         assert!(csv.contains("poisson 10%,gwtf,nic_util_max,0.75"), "{csv}");
         assert!(csv.contains("poisson 10%,gwtf,staleness_mean,1.5"), "{csv}");
         assert!(csv.contains("poisson 10%,gwtf,deferred,3.0"), "{csv}");
+    }
+
+    #[test]
+    fn columns_schema_covers_every_series_and_surface() {
+        // Exhaustive destructuring: adding a CellAccumulator series
+        // without registering it in COLUMNS (or vice versa) fails the
+        // count below; two columns aliasing one series fail the pointer
+        // set.  This is the writer/accumulator field-parity guard.
+        let acc = CellAccumulator::default();
+        let CellAccumulator {
+            time_per_microbatch_min,
+            throughput,
+            comm_time_min,
+            wasted_gpu_min,
+            makespan_min,
+            fwd_recoveries,
+            bwd_recoveries,
+            agg_recoveries,
+            replan_rounds,
+            plan_overlap_min,
+            stale_replans,
+            queue_min,
+            nic_util_max,
+            staleness_mean,
+            deferred,
+            events_per_s,
+            crit_compute_min,
+            crit_tx_min,
+            crit_prop_min,
+            crit_queue_min,
+            crit_plan_min,
+            crit_agg_min,
+            crit_stale_min,
+        } = &acc;
+        let fields: Vec<*const Vec<f64>> = vec![
+            time_per_microbatch_min,
+            throughput,
+            comm_time_min,
+            wasted_gpu_min,
+            makespan_min,
+            fwd_recoveries,
+            bwd_recoveries,
+            agg_recoveries,
+            replan_rounds,
+            plan_overlap_min,
+            stale_replans,
+            queue_min,
+            nic_util_max,
+            staleness_mean,
+            deferred,
+            events_per_s,
+            crit_compute_min,
+            crit_tx_min,
+            crit_prop_min,
+            crit_queue_min,
+            crit_plan_min,
+            crit_agg_min,
+            crit_stale_min,
+        ]
+        .into_iter()
+        .map(|v| v as *const Vec<f64>)
+        .collect();
+        assert_eq!(COLUMNS.len(), fields.len(), "schema out of sync with the accumulator");
+        let keys: std::collections::BTreeSet<&str> = COLUMNS.iter().map(|c| c.key).collect();
+        assert_eq!(keys.len(), COLUMNS.len(), "duplicate column key");
+        let series: std::collections::BTreeSet<*const Vec<f64>> =
+            COLUMNS.iter().map(|c| (c.samples)(&acc) as *const Vec<f64>).collect();
+        let field_set: std::collections::BTreeSet<*const Vec<f64>> =
+            fields.into_iter().collect();
+        assert_eq!(series, field_set, "columns must map 1:1 onto series");
+
+        // Both writer surfaces carry every schema entry.
+        let mut t = MetricsTable::new("parity");
+        let m = IterationMetrics { events: 500, ..metric(4, 100.0) };
+        t.cell("r", "sys").push(&m);
+        let md = t.to_markdown();
+        let csv = t.to_csv();
+        for c in COLUMNS {
+            assert!(md.contains(c.label), "markdown lost {}", c.key);
+            assert!(csv.contains(&format!(",{},", c.key)), "csv lost {}", c.key);
+        }
+        // events/sec surfaces (satellite: IterationMetrics::events).
+        assert!(csv.contains("r,sys,events_per_s,5.0"), "{csv}");
     }
 
     #[test]

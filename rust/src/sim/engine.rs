@@ -52,6 +52,7 @@
 
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
+use crate::trace::{self, TraceKind, TraceRecord};
 use crate::util::Rng;
 
 use super::churn::ChurnProcess;
@@ -263,6 +264,14 @@ impl PlanSession {
         let mut out = router.commit_plan(&self.ticket, &self.invalidated);
         let extra = out.rounds.saturating_sub(self.rounds_done.max(self.ticket.rounds));
         out.committed_at = now + extra as f64 * self.rtt_s;
+        trace::emit(|| {
+            TraceRecord::instant(
+                out.committed_at,
+                None,
+                None,
+                TraceKind::PlanCommit { rounds: out.rounds, stale: out.stale },
+            )
+        });
         self.outcome = Some(out);
     }
 
@@ -379,6 +388,9 @@ impl Engine {
     pub fn step(&mut self, prob: &FlowProblem, router: &mut dyn RoutingPolicy) -> IterationMetrics {
         let horizon = self.sim.current_iter_estimate();
         let iter = self.iter;
+        // Stamp every record this iteration emits (no-op when no sink is
+        // armed; never read by the simulation itself).
+        trace::set_iter(iter);
         // The churn model speaks the same EventSource contract as every
         // other world-event generator; it is sampled first and held in a
         // dedicated slot because it is the liveness *authority*: its
@@ -407,12 +419,36 @@ impl Engine {
                 // block for the ticket's charge (bit-for-bit the
                 // pre-lifecycle behavior).
                 let ticket = router.request_plan(&req);
+                trace::emit(|| {
+                    TraceRecord::instant(
+                        0.0,
+                        None,
+                        None,
+                        TraceKind::PlanRequest { rounds: ticket.rounds },
+                    )
+                });
                 let charge = ticket.ready_after_s;
                 let out = router.commit_plan(&ticket, &[]);
+                trace::emit(|| {
+                    TraceRecord::instant(
+                        0.0,
+                        None,
+                        None,
+                        TraceKind::PlanCommit { rounds: out.rounds, stale: out.stale },
+                    )
+                });
                 (out.paths, charge, out.rounds)
             }
             PlanLifecycle::RoundLatency { rtt_s } => {
                 let ticket = router.request_plan(&req);
+                trace::emit(|| {
+                    TraceRecord::instant(
+                        0.0,
+                        None,
+                        None,
+                        TraceKind::PlanRequest { rounds: ticket.rounds },
+                    )
+                });
                 if self.committed.is_none() || ticket.rounds == 0 {
                     // Cold start (no plan to run on: the iteration blocks
                     // until the commit, charging the convergence window)
@@ -425,6 +461,14 @@ impl Engine {
                         ticket.rounds as f64 * rtt_s
                     };
                     let out = router.commit_plan(&ticket, &[]);
+                    trace::emit(|| {
+                        TraceRecord::instant(
+                            0.0,
+                            None,
+                            None,
+                            TraceKind::PlanCommit { rounds: out.rounds, stale: out.stale },
+                        )
+                    });
                     self.committed = Some(out.paths.clone());
                     (out.paths, charge, out.rounds)
                 } else {
@@ -560,6 +604,11 @@ impl TrainingSim {
 
         let mut metrics =
             IterationMetrics { scheduled: paths.len(), planning_s, ..Default::default() };
+        // Planning charge (blocking convergence window or carried stall):
+        // rendered at the virtual origin — it blocks the iteration start.
+        if planning_s > 0.0 {
+            trace::emit(|| TraceRecord::span(0.0, planning_s, None, None, TraceKind::PlanStall));
+        }
         let mut slots: Vec<Slots> = (0..n).map(|i| Slots::new(prob.cap[i].max(1))).collect();
         // Shared-capacity NIC substrate: every payload transfer books its
         // transmission through the sender's uplink and the receiver's
@@ -648,12 +697,20 @@ impl TrainingSim {
             }
             _ => None,
         };
+        if admit_at > 0.0 {
+            trace::emit(|| {
+                TraceRecord::span(0.0, admit_at, None, None, TraceKind::StalenessCatchUp)
+            });
+        }
         // Data nodes send out all their microbatches at t=0 (transfer to
         // hop 0) — or at the staleness catch-up instant in async mode.
-        for (mi, mb) in mbs.iter().enumerate() {
+        for (mi, mb) in mbs.iter_mut().enumerate() {
             let d = mb.path.source;
             let first = mb.path.relays[0];
-            let arrive = self.send(&mut net, d, first, admit_at, &mut metrics);
+            // The catch-up window is dead time on every microbatch's
+            // timeline: charge it so the critical path stays contiguous.
+            mb.crit.stale_s += admit_at;
+            let arrive = self.send(&mut net, d, first, admit_at, mi, &mut metrics, &mut mb.crit);
             q.schedule(arrive, Ev::Micro(mi, Phase::Fwd { hop: 0 }));
         }
 
@@ -663,6 +720,7 @@ impl TrainingSim {
             metrics.events += 1;
             let (mi, phase) = match ev {
                 Ev::World(WorldEvent::Crash(node)) => {
+                    trace::emit(|| TraceRecord::instant(t, Some(node), None, TraceKind::Crash));
                     router.on_crash(node);
                     // A crash while a plan is converging invalidates the
                     // in-flight ticket (§V-D repair at commit).
@@ -671,12 +729,17 @@ impl TrainingSim {
                     }
                     continue;
                 }
-                Ev::World(WorldEvent::Join(_)) => continue,
+                Ev::World(WorldEvent::Join(node)) => {
+                    trace::emit(|| TraceRecord::instant(t, Some(node), None, TraceKind::Join));
+                    continue;
+                }
                 Ev::World(WorldEvent::Gossip) => {
+                    trace::emit(|| TraceRecord::instant(t, None, None, TraceKind::GossipTick));
                     router.on_gossip(t);
                     continue;
                 }
                 Ev::World(WorldEvent::PlanRound) => {
+                    trace::emit(|| TraceRecord::instant(t, None, None, TraceKind::PlanRound));
                     if let Some(s) = session.as_deref_mut() {
                         s.on_round(t, router);
                     }
@@ -690,6 +753,17 @@ impl TrainingSim {
                         tr.fired[st] = true;
                         tr.done_at[st] = t;
                         metrics.agg_s += tr.exchange[st];
+                        // The exchange ran over [t - exchange, t] (it was
+                        // scheduled at last-gradient-home + exchange).
+                        trace::emit(|| {
+                            TraceRecord::span(
+                                t - tr.exchange[st],
+                                tr.exchange[st],
+                                None,
+                                None,
+                                TraceKind::StageAgg { stage: st },
+                            )
+                        });
                         if let Some(v) = self.versioned.as_mut() {
                             v.gen[st] = v.iter_gen + 1;
                         }
@@ -704,6 +778,7 @@ impl TrainingSim {
             if t > deadline && mbs[mi].done_at.is_none() {
                 mbs[mi].release_all(&mut inflight);
                 mbs[mi].dropped = true;
+                trace::emit(|| TraceRecord::instant(t, None, Some(mi), TraceKind::Drop));
                 continue;
             }
             match phase {
@@ -718,9 +793,14 @@ impl TrainingSim {
                     let d = mbs[mi].path.source;
                     let c = self.fwd_compute_s(d, t) + self.bwd_compute_s(d, t);
                     mbs[mi].compute_spent += c;
+                    mbs[mi].crit.compute_s += c;
+                    trace::emit(|| {
+                        TraceRecord::span(t, c, Some(d), Some(mi), TraceKind::LossCompute)
+                    });
                     let last = mbs[mi].path.relays.len() - 1;
                     let nxt = mbs[mi].path.relays[last];
-                    let arrive = self.send(&mut net, d, nxt, t + c, &mut metrics);
+                    let arrive =
+                        self.send(&mut net, d, nxt, t + c, mi, &mut metrics, &mut mbs[mi].crit);
                     q.schedule(arrive, Ev::Micro(mi, Phase::Bwd { hop: last }));
                 }
                 Phase::Bwd { hop } => {
@@ -734,18 +814,28 @@ impl TrainingSim {
                     let d = mbs[mi].path.source;
                     let c = self.bwd_compute_s(d, t);
                     mbs[mi].compute_spent += c;
+                    mbs[mi].crit.compute_s += c;
+                    trace::emit(|| {
+                        TraceRecord::span(t, c, Some(d), Some(mi), TraceKind::FinishCompute)
+                    });
                     mbs[mi].done_at = Some(t + c);
                 }
             }
         }
 
-        // Tally results.
+        // Tally results.  `ender` is the microbatch whose completion set
+        // the makespan: its per-bucket timeline *is* the critical path of
+        // the microbatch phase (see [`super::training::CritPath`]).
         let mut makespan: f64 = 0.0;
-        for mb in &mbs {
+        let mut ender: Option<usize> = None;
+        for (mi, mb) in mbs.iter().enumerate() {
             match mb.done_at {
                 Some(t) => {
                     metrics.completed += 1;
-                    makespan = makespan.max(t);
+                    if ender.is_none() || t > makespan {
+                        makespan = t;
+                        ender = Some(mi);
+                    }
                 }
                 None => {
                     metrics.dropped += 1;
@@ -762,6 +852,11 @@ impl TrainingSim {
                     self.aggregation_time(prob, churn_state, &sched.agg_crashes);
                 metrics.agg_s = agg;
                 metrics.agg_recoveries = agg_recoveries;
+                if agg > 0.0 {
+                    trace::emit(|| {
+                        TraceRecord::span(makespan, agg, None, None, TraceKind::AggBarrier)
+                    });
+                }
                 metrics.makespan_s = makespan + agg + planning_s;
             }
             Some(mut tr) => {
@@ -779,6 +874,15 @@ impl TrainingSim {
                         tr.fired[st] = true;
                         tr.done_at[st] = tr.last_home[st] + tr.exchange[st];
                         metrics.agg_s += tr.exchange[st];
+                        trace::emit(|| {
+                            TraceRecord::span(
+                                tr.last_home[st],
+                                tr.exchange[st],
+                                None,
+                                None,
+                                TraceKind::StageAgg { stage: st },
+                            )
+                        });
                         if let Some(v) = self.versioned.as_mut() {
                             v.gen[st] = g + 1;
                         }
@@ -803,6 +907,16 @@ impl TrainingSim {
                 }
             }
         }
+        // Critical-path attribution: promote the ending microbatch's
+        // bucket tiling of [0, done_at], charge the planning window, and
+        // book everything past the microbatch phase (barrier, rolling
+        // tail, crash redo) as aggregation by residual — so the seven
+        // buckets sum to the makespan by construction.
+        if let Some(mi) = ender {
+            metrics.crit_path = mbs[mi].crit;
+        }
+        metrics.crit_path.plan_s = metrics.planning_s;
+        metrics.crit_path.agg_s = metrics.makespan_s - metrics.planning_s - makespan;
         // Per-node link load: each node's busier NIC direction's
         // microbatch-phase transmission seconds over the full iteration
         // makespan.  Demanded work, not wall-clock occupancy — under

@@ -10,11 +10,12 @@
 
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
+use crate::trace::{self, TraceKind, TraceRecord};
 
 use super::engine::{Ev, WorldEvent};
 use super::events::{EventQueue, NicQueues, Slots, Time};
 use super::training::{
-    IterationMetrics, RecoveryPolicy, RoutingPolicy, StageAggTracker, TrainingSim,
+    CritPath, IterationMetrics, RecoveryPolicy, RoutingPolicy, StageAggTracker, TrainingSim,
 };
 
 /// Phase of a microbatch's journey.
@@ -47,6 +48,12 @@ pub(crate) struct MicrobatchState {
     /// (stage, node) pairs that DENYed this microbatch — "excluded until
     /// they free memory" (§V-D).
     pub denied: Vec<(usize, NodeId)>,
+    /// Per-microbatch critical-path buckets: the handlers charge every
+    /// segment of this microbatch's contiguous virtual timeline
+    /// (admission → gradient home) to a bucket as they advance it.  The
+    /// engine's tally promotes the makespan-ending microbatch's buckets
+    /// to `IterationMetrics::crit_path`.
+    pub crit: CritPath,
 }
 
 impl MicrobatchState {
@@ -60,6 +67,7 @@ impl MicrobatchState {
             resident: Vec::new(),
             overload_reroutes: 0,
             denied: Vec::new(),
+            crit: CritPath::default(),
         }
     }
 
@@ -119,11 +127,13 @@ impl TrainingSim {
         // capacity-oblivious wiring does.
         if is_fwd && self.is_up(node, t) && inflight[node.0] >= prob.cap[node.0] {
             metrics.denies += 1;
+            trace::emit(|| TraceRecord::instant(t, Some(node), Some(mi), TraceKind::Deny));
             mbs[mi].overload_reroutes += 1;
             mbs[mi].denied.push((hop, node));
             if mbs[mi].overload_reroutes > 4 * n_stages {
                 mbs[mi].release_all(inflight);
                 mbs[mi].dropped = true;
+                trace::emit(|| TraceRecord::instant(t, Some(node), Some(mi), TraceKind::Drop));
                 return;
             }
             // The upstream node only learns a peer is full when that peer
@@ -147,7 +157,7 @@ impl TrainingSim {
                 .collect();
             match router.choose_replacement(prev, next, &candidates) {
                 Some(m) => {
-                    let arrive = self.send(net, prev, m, t, metrics);
+                    let arrive = self.send(net, prev, m, t, mi, metrics, &mut mbs[mi].crit);
                     let mut newpath = path.clone();
                     newpath.relays[hop] = m;
                     mbs[mi].path = newpath;
@@ -157,6 +167,7 @@ impl TrainingSim {
                     // DENY propagates to the source; deferred to next iter.
                     mbs[mi].release_all(inflight);
                     mbs[mi].dropped = true;
+                    trace::emit(|| TraceRecord::instant(t, Some(node), Some(mi), TraceKind::Drop));
                 }
             }
             return;
@@ -170,6 +181,24 @@ impl TrainingSim {
                 // Success: book the slot, forward the payload.
                 slots[node.0].book(start, end);
                 mbs[mi].compute_spent += compute;
+                mbs[mi].crit.queue_s += start - t;
+                mbs[mi].crit.compute_s += compute;
+                if trace::enabled() {
+                    if start > t {
+                        trace::emit(|| {
+                            TraceRecord::span(t, start - t, Some(node), Some(mi), TraceKind::SlotWait)
+                        });
+                    }
+                    trace::emit(|| {
+                        TraceRecord::span(
+                            start,
+                            compute,
+                            Some(node),
+                            Some(mi),
+                            TraceKind::Compute { hop, fwd: is_fwd },
+                        )
+                    });
+                }
                 if is_fwd {
                     // activation stays resident until the backward clears
                     inflight[node.0] += 1;
@@ -189,7 +218,7 @@ impl TrainingSim {
                         }
                     }
                 }
-                let arrive = self.send(net, node, next, end, metrics);
+                let arrive = self.send(net, node, next, end, mi, metrics, &mut mbs[mi].crit);
                 let next_phase = if is_fwd {
                     if hop + 1 < n_stages { Phase::Fwd { hop: hop + 1 } } else { Phase::Loss }
                 } else if hop == 0 {
@@ -249,7 +278,23 @@ impl TrainingSim {
             match router.choose_replacement(prev, next, &candidates) {
                 Some(m) => {
                     // prev resends its stored activation to m.
-                    let arrive = self.send(net, prev, m, detect + wait, metrics);
+                    mbs[mi].crit.queue_s += detect + wait - t;
+                    if trace::enabled() {
+                        trace::emit(|| {
+                            TraceRecord::span(
+                                t,
+                                detect + wait - t,
+                                Some(node),
+                                Some(mi),
+                                TraceKind::RecoveryWait,
+                            )
+                        });
+                        trace::emit(|| {
+                            TraceRecord::instant(detect, Some(m), Some(mi), TraceKind::FwdRecovery)
+                        });
+                    }
+                    let arrive =
+                        self.send(net, prev, m, detect + wait, mi, metrics, &mut mbs[mi].crit);
                     let mut newpath = path.clone();
                     newpath.relays[hop] = m;
                     mbs[mi].path = newpath;
@@ -259,6 +304,9 @@ impl TrainingSim {
                     // DENY up to the source; batch deferred to next iteration.
                     mbs[mi].release_all(inflight);
                     mbs[mi].dropped = true;
+                    trace::emit(|| {
+                        TraceRecord::instant(detect, Some(node), Some(mi), TraceKind::Drop)
+                    });
                 }
             }
         } else {
@@ -299,11 +347,63 @@ impl TrainingSim {
                             // saturated replacement serializes repairs
                             // instead of absorbing unboundedly many
                             // concurrent recomputes for free.
-                            let act_arrive = self.send(net, prev, m, detect + wait, metrics);
+                            mbs[mi].crit.queue_s += detect + wait - t;
+                            if trace::enabled() {
+                                trace::emit(|| {
+                                    TraceRecord::span(
+                                        t,
+                                        detect + wait - t,
+                                        Some(node),
+                                        Some(mi),
+                                        TraceKind::RecoveryWait,
+                                    )
+                                });
+                                trace::emit(|| {
+                                    TraceRecord::instant(
+                                        detect,
+                                        Some(m),
+                                        Some(mi),
+                                        TraceKind::BwdRecovery { restart: false },
+                                    )
+                                });
+                            }
+                            let act_arrive = self.send(
+                                net,
+                                prev,
+                                m,
+                                detect + wait,
+                                mi,
+                                metrics,
+                                &mut mbs[mi].crit,
+                            );
                             let refwd = self.fwd_compute_s(m, detect + wait);
                             let start = slots[m.0].earliest_start(act_arrive);
                             slots[m.0].book(start, start + refwd);
                             mbs[mi].compute_spent += refwd;
+                            mbs[mi].crit.queue_s += start - act_arrive;
+                            mbs[mi].crit.compute_s += refwd;
+                            if trace::enabled() {
+                                if start > act_arrive {
+                                    trace::emit(|| {
+                                        TraceRecord::span(
+                                            act_arrive,
+                                            start - act_arrive,
+                                            Some(m),
+                                            Some(mi),
+                                            TraceKind::SlotWait,
+                                        )
+                                    });
+                                }
+                                trace::emit(|| {
+                                    TraceRecord::span(
+                                        start,
+                                        refwd,
+                                        Some(m),
+                                        Some(mi),
+                                        TraceKind::Compute { hop, fwd: true },
+                                    )
+                                });
+                            }
                             // residency moves from the dead node to m
                             if let Some(pos) = mbs[mi].resident.iter().position(|&r| r == node) {
                                 mbs[mi].resident.remove(pos);
@@ -319,6 +419,9 @@ impl TrainingSim {
                         None => {
                             mbs[mi].release_all(inflight);
                             mbs[mi].dropped = true;
+                            trace::emit(|| {
+                                TraceRecord::instant(detect, Some(node), Some(mi), TraceKind::Drop)
+                            });
                         }
                     }
                 }
@@ -329,8 +432,19 @@ impl TrainingSim {
                     metrics.wasted_gpu_s += mbs[mi].compute_spent;
                     mbs[mi].compute_spent = 0.0;
                     mbs[mi].release_all(inflight);
+                    trace::emit(|| {
+                        TraceRecord::instant(
+                            detect,
+                            Some(node),
+                            Some(mi),
+                            TraceKind::BwdRecovery { restart: true },
+                        )
+                    });
                     if mbs[mi].restarts + 1 > self.cfg.max_restarts {
                         mbs[mi].dropped = true;
+                        trace::emit(|| {
+                            TraceRecord::instant(detect, Some(node), Some(mi), TraceKind::Drop)
+                        });
                         return;
                     }
                     mbs[mi].restarts += 1;
@@ -352,6 +466,14 @@ impl TrainingSim {
                                 None => {
                                     mbs[mi].release_all(inflight);
                                     mbs[mi].dropped = true;
+                                    trace::emit(|| {
+                                        TraceRecord::instant(
+                                            detect,
+                                            Some(node),
+                                            Some(mi),
+                                            TraceKind::Drop,
+                                        )
+                                    });
                                     return;
                                 }
                             }
@@ -360,7 +482,19 @@ impl TrainingSim {
                     mbs[mi].path = newpath;
                     let d = mbs[mi].path.source;
                     let first = mbs[mi].path.relays[0];
-                    let arrive = self.send(net, d, first, detect, metrics);
+                    // The restart's wall segment [t, detect) is detection
+                    // wait on the microbatch's timeline.
+                    mbs[mi].crit.queue_s += detect - t;
+                    trace::emit(|| {
+                        TraceRecord::span(
+                            t,
+                            detect - t,
+                            Some(node),
+                            Some(mi),
+                            TraceKind::RecoveryWait,
+                        )
+                    });
+                    let arrive = self.send(net, d, first, detect, mi, metrics, &mut mbs[mi].crit);
                     q.schedule(arrive, Ev::Micro(mi, Phase::Fwd { hop: 0 }));
                 }
             }

@@ -31,6 +31,12 @@
 //!   [`training::VersionedWeights`] store behind bounded-staleness
 //!   asynchronous aggregation.
 //! - [`scenario`] — builders for the paper's experiment setups.
+//!
+//! Every layer also emits [`crate::trace`] records (spans for compute /
+//! transmission / waits, instants for churn and plan transitions) through
+//! the ambient sink — strictly observational: with no sink armed the
+//! emission closures are never evaluated and the simulation is
+//! bit-for-bit identical to a build without tracing.
 
 pub mod churn;
 pub mod churn_process;
@@ -48,6 +54,6 @@ pub use engine::{
 };
 pub use events::{EventQueue, NicQueues};
 pub use training::{
-    BlockingPlanAdapter, BlockingPlanner, IterationMetrics, PlanOutcome, PlanRequest, PlanTicket,
-    RecoveryPolicy, RoutingPolicy, TrainingSim, TrainingSimConfig, VersionedWeights,
+    BlockingPlanAdapter, BlockingPlanner, CritPath, IterationMetrics, PlanOutcome, PlanRequest,
+    PlanTicket, RecoveryPolicy, RoutingPolicy, TrainingSim, TrainingSimConfig, VersionedWeights,
 };

@@ -73,6 +73,7 @@ use std::sync::Arc;
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
 use crate::net::{CongestionCache, Topology};
+use crate::trace::{self, TraceKind, TraceRecord};
 use crate::util::Rng;
 
 use super::churn::{ChurnEvents, ChurnProcess};
@@ -422,6 +423,11 @@ pub struct IterationMetrics {
     /// stage's weights lagged beyond the staleness bound and had to
     /// replay missed exchanges first.
     pub deferred: usize,
+    /// Critical-path attribution: where the makespan went, bucket by
+    /// bucket (see [`CritPath`]).  The buckets sum to `makespan_s`
+    /// within float rounding (guarded at 1e-6 relative by
+    /// `rust/tests/trace_determinism.rs`).
+    pub crit_path: CritPath,
 }
 
 impl IterationMetrics {
@@ -431,6 +437,52 @@ impl IterationMetrics {
         } else {
             self.makespan_s / self.completed as f64
         }
+    }
+}
+
+/// Critical-path attribution buckets, in seconds.
+///
+/// Every microbatch's virtual timeline is contiguous — from admission
+/// to its gradient landing, each segment is compute, a transfer phase,
+/// or some form of waiting — so the handlers account each segment into
+/// a per-microbatch `CritPath` as they advance it.  At iteration tally
+/// the engine takes the chain of the *makespan-ending* microbatch
+/// (the argmax of `done_at`: the path the iteration actually waited
+/// for), adds the iteration-level planning charge, and attributes the
+/// post-tail residue (aggregation barrier / rolling-exchange overhang /
+/// §V-E crash recovery) to `agg_s` — by construction the buckets sum to
+/// the iteration makespan up to per-bucket float rounding.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CritPath {
+    /// Forward/backward/loss compute on the chain.
+    pub compute_s: f64,
+    /// NIC transmission occupancy on the chain.
+    pub tx_s: f64,
+    /// Pipelined propagation latency on the chain.
+    pub prop_s: f64,
+    /// All waiting: NIC queueing, compute-slot waits, crash-detection
+    /// timeouts and recovery candidate waits.
+    pub queue_s: f64,
+    /// Blocking planning charge + planning stalls (iteration-level).
+    pub plan_s: f64,
+    /// Aggregation residue past the microbatch tail: barrier control
+    /// floods + weight exchange, rolling-exchange overhang, §V-E crash
+    /// recovery (iteration-level).
+    pub agg_s: f64,
+    /// Bounded-staleness admission catch-up before the fan-out.
+    pub stale_s: f64,
+}
+
+impl CritPath {
+    /// Sum of every bucket — compare against `makespan_s`.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s
+            + self.tx_s
+            + self.prop_s
+            + self.queue_s
+            + self.plan_s
+            + self.agg_s
+            + self.stale_s
     }
 }
 
@@ -606,7 +658,10 @@ impl TrainingSim {
     /// serializes through `from`'s uplink and `to`'s downlink
     /// ([`NicQueues::acquire`]), propagation pipelines on top.  Returns
     /// the arrival instant and accumulates the communication split
-    /// (`comm_s`/`tx_s`/`prop_s`/`queue_s`) into `metrics`.
+    /// (`comm_s`/`tx_s`/`prop_s`/`queue_s`) into `metrics`, the same
+    /// split into microbatch `mb`'s critical-path buckets (`crit`), and
+    /// emits queue-wait/transmission/propagation trace spans when a
+    /// sink is armed (observation only — no timing changes).
     ///
     /// With unlimited NICs the start instant is `t` and the arrival is
     /// `t + transfer_s(from, to, t)` — the exact legacy arithmetic, so
@@ -619,13 +674,16 @@ impl TrainingSim {
     /// found, which itself depends on the duration; jitter windows are
     /// long (tens of seconds) relative to single transmissions, so the
     /// frozen factor is a second-order inaccuracy.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn send(
         &self,
         net: &mut NicQueues,
         from: NodeId,
         to: NodeId,
         t: Time,
+        mb: usize,
         metrics: &mut IterationMetrics,
+        crit: &mut CritPath,
     ) -> Time {
         let dt = self.transfer_s(from, to, t);
         // Propagation = the zero-byte delay: derived from the same
@@ -648,6 +706,22 @@ impl TrainingSim {
         metrics.queue_s += start - t;
         metrics.tx_s += tx;
         metrics.prop_s += prop;
+        crit.queue_s += start - t;
+        crit.tx_s += tx;
+        crit.prop_s += prop;
+        if trace::enabled() {
+            if start > t {
+                trace::emit(|| {
+                    TraceRecord::span(t, start - t, Some(from), Some(mb), TraceKind::NicQueueWait)
+                });
+            }
+            trace::emit(|| {
+                TraceRecord::span(start, tx, Some(from), Some(mb), TraceKind::Transmission)
+            });
+            trace::emit(|| {
+                TraceRecord::span(start + tx, prop, Some(to), Some(mb), TraceKind::Propagation)
+            });
+        }
         start + dt
     }
 

@@ -1,0 +1,152 @@
+//! Chrome-trace-event exporter (`chrome://tracing` / Perfetto).
+//!
+//! Maps the virtual-time record stream onto the trace-event JSON
+//! format: one *process* per engine iteration (`pid` = iteration), one
+//! *track* per node (`tid` = `NodeId.0 + 1`; track 0 is the engine
+//! itself — plan lifecycle, gossip, churn transitions, barriers), spans
+//! (`ph: "X"`) for compute/transfer/wait occupancy and instants
+//! (`ph: "i"`) for transitions.  Timestamps are virtual seconds scaled
+//! to the format's microseconds.  Events are sorted by
+//! `(pid, tid, ts)`, so per-track timestamps are monotone by
+//! construction — asserted by the shape test in
+//! `rust/tests/trace_determinism.rs`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::trace::{TraceKind, TraceRecord};
+use crate::util::json::Json;
+
+const US_PER_S: f64 = 1e6;
+
+/// Track id for a record: node tracks start at 1; 0 is the engine.
+fn tid(rec: &TraceRecord) -> usize {
+    rec.node.map_or(0, |n| n.0 + 1)
+}
+
+fn event(rec: &TraceRecord) -> Json {
+    let mut ev = BTreeMap::new();
+    ev.insert("name".into(), Json::Str(rec.kind.name().into()));
+    ev.insert("cat".into(), Json::Str("sim".into()));
+    ev.insert("pid".into(), Json::Num(rec.iter as f64));
+    ev.insert("tid".into(), Json::Num(tid(rec) as f64));
+    ev.insert("ts".into(), Json::Num(rec.t * US_PER_S));
+    if rec.dur > 0.0 {
+        ev.insert("ph".into(), Json::Str("X".into()));
+        ev.insert("dur".into(), Json::Num(rec.dur * US_PER_S));
+    } else {
+        ev.insert("ph".into(), Json::Str("i".into()));
+        ev.insert("s".into(), Json::Str("t".into()));
+    }
+    let mut args = BTreeMap::new();
+    if let Some(mb) = rec.mb {
+        args.insert("mb".into(), Json::Num(mb as f64));
+    }
+    match rec.kind {
+        TraceKind::Compute { hop, .. } => {
+            args.insert("hop".into(), Json::Num(hop as f64));
+        }
+        TraceKind::StageAgg { stage } => {
+            args.insert("stage".into(), Json::Num(stage as f64));
+        }
+        TraceKind::PlanRequest { rounds } | TraceKind::PlanCommit { rounds, .. } => {
+            args.insert("rounds".into(), Json::Num(rounds as f64));
+        }
+        _ => {}
+    }
+    if let TraceKind::PlanCommit { stale, .. } = rec.kind {
+        args.insert("stale".into(), Json::Bool(stale));
+    }
+    if !args.is_empty() {
+        ev.insert("args".into(), Json::Obj(args));
+    }
+    Json::Obj(ev)
+}
+
+/// Render records as a Chrome-trace JSON document
+/// (`{"traceEvents": [...]}`, the object form Perfetto ingests).
+pub fn chrome_trace_json(records: &[TraceRecord]) -> Json {
+    let mut sorted: Vec<&TraceRecord> = records.iter().collect();
+    sorted.sort_by(|a, b| {
+        (a.iter, tid(a)).cmp(&(b.iter, tid(b))).then(a.t.total_cmp(&b.t))
+    });
+    let events: Vec<Json> = sorted.into_iter().map(event).collect();
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(root)
+}
+
+/// Write the Chrome-trace document for `records` to `path`.
+pub fn write_chrome_trace(path: &Path, records: &[TraceRecord]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", chrome_trace_json(records)))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::NodeId;
+    use crate::trace::TraceKind;
+
+    #[test]
+    fn export_is_valid_sorted_trace_events() {
+        let mk = |iter, t, dur, node: Option<usize>, kind| TraceRecord {
+            iter,
+            t,
+            dur,
+            node: node.map(NodeId),
+            mb: Some(0),
+            kind,
+        };
+        // Deliberately out of order across tracks and time.
+        let recs = vec![
+            mk(0, 5.0, 1.0, Some(1), TraceKind::Compute { hop: 0, fwd: true }),
+            mk(0, 2.0, 0.5, Some(1), TraceKind::NicQueueWait),
+            mk(0, 1.0, 0.0, None, TraceKind::PlanRequest { rounds: 3 }),
+            mk(1, 0.0, 0.0, Some(2), TraceKind::Crash),
+        ];
+        let doc = chrome_trace_json(&recs);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        // Every event is a well-formed trace-event object.
+        for ev in events {
+            assert!(ev.get("name").unwrap().as_str().is_some());
+            let ph = ev.get("ph").unwrap().as_str().unwrap();
+            assert!(ph == "X" || ph == "i");
+            assert!(ev.get("ts").unwrap().as_f64().is_some());
+            assert!(ev.get("pid").unwrap().as_f64().is_some());
+            assert!(ev.get("tid").unwrap().as_f64().is_some());
+            if ph == "X" {
+                assert!(ev.get("dur").unwrap().as_f64().unwrap() > 0.0);
+            }
+        }
+        // Monotone per-(pid, tid) timestamps.
+        let key = |ev: &Json| {
+            (
+                ev.get("pid").unwrap().as_usize().unwrap(),
+                ev.get("tid").unwrap().as_usize().unwrap(),
+            )
+        };
+        for w in events.windows(2) {
+            if key(&w[0]) == key(&w[1]) {
+                let (a, b) = (
+                    w[0].get("ts").unwrap().as_f64().unwrap(),
+                    w[1].get("ts").unwrap().as_f64().unwrap(),
+                );
+                assert!(a <= b, "track timestamps must be monotone: {a} > {b}");
+            }
+        }
+        // The document survives a serialize/parse roundtrip.
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(back, doc);
+    }
+}

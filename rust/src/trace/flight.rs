@@ -1,0 +1,136 @@
+//! Bounded flight recorder: the last N trace records, dumped on panic.
+//!
+//! The CI guards (`scale_guard`, `plan_lag`, `congestion_guard`,
+//! `async_guard`) arm one of these around their gated sweeps.  While
+//! the run is healthy it costs a ring-buffer push per record; when a
+//! gate assertion fails, the guard's `Drop` observes
+//! `std::thread::panicking()` and dumps the tail to stderr *and* to
+//! `<results_dir>/flightrec_<name>.log`, which CI uploads as a workflow
+//! artifact — an unarmed-baseline mystery becomes a postmortem with the
+//! last seconds of virtual time attached.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::rc::Rc;
+
+use crate::trace::{arm, ArmGuard, TraceRecord, TraceSink};
+
+type Ring = Rc<RefCell<VecDeque<TraceRecord>>>;
+
+struct RingSink {
+    ring: Ring,
+    cap: usize,
+}
+
+impl TraceSink for RingSink {
+    fn record(&mut self, rec: &TraceRecord) {
+        let mut ring = self.ring.borrow_mut();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(*rec);
+    }
+}
+
+/// RAII flight recorder; see [`arm_flight_recorder`].
+pub struct FlightRecorder {
+    name: String,
+    cap: usize,
+    ring: Ring,
+    _arm: ArmGuard,
+}
+
+/// Arm a flight recorder named `name` keeping the last `cap` records.
+/// Nothing is written anywhere unless the arming thread panics while
+/// the recorder is live.
+pub fn arm_flight_recorder(name: &str, cap: usize) -> FlightRecorder {
+    let ring: Ring = Rc::new(RefCell::new(VecDeque::with_capacity(cap)));
+    let _arm = arm(Box::new(RingSink { ring: Rc::clone(&ring), cap }));
+    FlightRecorder { name: name.to_string(), cap, ring, _arm }
+}
+
+impl FlightRecorder {
+    /// Records currently in the ring (tail of the run), oldest first.
+    pub fn tail(&self) -> Vec<TraceRecord> {
+        self.ring.borrow().iter().copied().collect()
+    }
+
+    fn render(&self) -> String {
+        let ring = self.ring.borrow();
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "=== flight recorder '{}': last {} of up to {} records ===",
+            self.name,
+            ring.len(),
+            self.cap
+        );
+        for rec in ring.iter() {
+            let node = rec.node.map_or("engine".to_string(), |n| format!("n{}", n.0));
+            let mb = rec.mb.map_or(String::new(), |m| format!(" mb{m}"));
+            let _ = writeln!(
+                out,
+                "iter {:>3} t={:>12.6}s dur={:>10.6}s {:<9}{} {:?}",
+                rec.iter, rec.t, rec.dur, node, mb, rec.kind
+            );
+        }
+        out
+    }
+}
+
+impl Drop for FlightRecorder {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        let dump = self.render();
+        eprintln!("{dump}");
+        let dir = crate::experiments::results_dir();
+        // Best-effort inside a panic unwind: failing to persist the
+        // dump must not turn the gate failure into an abort.
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(dir.join(format!("flightrec_{}.log", self.name)), dump);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::NodeId;
+    use crate::trace::{emit, TraceKind};
+
+    #[test]
+    fn ring_keeps_only_the_tail() {
+        let rec = arm_flight_recorder("test", 3);
+        for i in 0..10 {
+            emit(|| TraceRecord::instant(i as f64, Some(NodeId(i)), None, TraceKind::Crash));
+        }
+        let tail = rec.tail();
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail[0].t, 7.0, "oldest surviving record");
+        assert_eq!(tail[2].t, 9.0, "newest record");
+    }
+
+    #[test]
+    fn clean_drop_disarms_without_dumping() {
+        let rec = arm_flight_recorder("clean_drop_test", 4);
+        emit(|| TraceRecord::instant(1.0, None, None, TraceKind::GossipTick));
+        assert_eq!(rec.tail().len(), 1);
+        drop(rec); // not panicking: must neither dump nor leave a sink armed
+        assert!(!crate::trace::enabled());
+        assert!(!crate::experiments::results_dir()
+            .join("flightrec_clean_drop_test.log")
+            .exists());
+    }
+
+    #[test]
+    fn render_names_the_recorder_and_rows() {
+        let rec = arm_flight_recorder("render_test", 2);
+        emit(|| TraceRecord::instant(2.5, Some(NodeId(4)), Some(1), TraceKind::Deny));
+        let text = rec.render();
+        assert!(text.contains("flight recorder 'render_test'"));
+        assert!(text.contains("n4"));
+        assert!(text.contains("Deny"));
+    }
+}

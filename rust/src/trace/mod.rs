@@ -1,0 +1,281 @@
+//! Flight-recorder tracing for the continuous-time engine.
+//!
+//! The simulator's scalar metrics (`IterationMetrics` → `mean ± std`
+//! table cells) answer *how slow*; this subsystem answers *where the
+//! time went*.  The engine, the microbatch handlers, the NIC substrate
+//! and the plan lifecycle emit typed [`TraceRecord`] span/instant
+//! events on the virtual clock; consumers turn the stream into a
+//! Chrome-trace timeline ([`chrome`]), a bounded postmortem ring
+//! ([`flight`]), or per-bucket critical-path seconds
+//! (`IterationMetrics::crit_path`, accounted inline by the handlers).
+//!
+//! **Zero-overhead contract.**  Tracing is strictly observational: no
+//! emission site draws randomness, mutates a timestamp, or reorders an
+//! event.  The sink is ambient (thread-local) so no simulator signature
+//! carries it, and [`emit`] takes a *closure* — when no sink is armed
+//! (the default, and the only state the parity tests and golden traces
+//! ever see) the closure is never evaluated, so the disabled path costs
+//! one thread-local flag load and moves no bits.  With a sink armed the
+//! record stream is a pure function of the run, hence deterministic per
+//! seed (asserted by `rust/tests/trace_determinism.rs`).
+//!
+//! Arming is scoped: [`arm`] / [`arm_collector`] /
+//! [`flight::arm_flight_recorder`] return RAII guards that restore the
+//! previous sink on drop, so nested scopes and `#[test]` bodies cannot
+//! leak a sink into later code on the same thread.
+
+pub mod chrome;
+pub mod flight;
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use crate::cost::NodeId;
+use crate::sim::events::Time;
+
+/// What a [`TraceRecord`] describes.  Payload-free by design (`Copy`,
+/// no heap): the record stream stays cheap to buffer and compare.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceKind {
+    /// A relay's forward/backward stage compute (span).
+    Compute { hop: usize, fwd: bool },
+    /// The data node's loss + head-gradient compute (span).
+    LossCompute,
+    /// Final backward hop landing the gradient at the data node (span).
+    FinishCompute,
+    /// NIC-serialized transmission occupancy (span).
+    Transmission,
+    /// Pipelined propagation latency (span).
+    Propagation,
+    /// Waiting for a NIC transmission slot (span; zero-length when the
+    /// interface was free).
+    NicQueueWait,
+    /// Waiting for a compute slot at a busy relay (span).
+    SlotWait,
+    /// Bounded-staleness admission catch-up before the fan-out (span).
+    StalenessCatchUp,
+    /// Plan session opened (instant; `rounds` = the ticket's estimate).
+    PlanRequest { rounds: usize },
+    /// One planning protocol round delivered on the clock (instant).
+    PlanRound,
+    /// Plan committed (instant; `stale` = mid-flight crash repaired).
+    PlanCommit { rounds: usize, stale: bool },
+    /// Planning seconds not hidden behind training (span).
+    PlanStall,
+    /// Gossip overlay cadence tick (instant).
+    GossipTick,
+    /// Node crash transition (instant).
+    Crash,
+    /// Node join/rejoin transition (instant).
+    Join,
+    /// Rolling per-stage weight exchange (span).
+    StageAgg { stage: usize },
+    /// Synchronous §V-E aggregation barrier (span).
+    AggBarrier,
+    /// §V-D forward recovery rerouted a microbatch (instant).
+    FwdRecovery,
+    /// §V-D backward recovery (instant; `restart` = whole pipeline).
+    BwdRecovery { restart: bool },
+    /// Crash-detection timeout + candidate wait (span).
+    RecoveryWait,
+    /// Relay refused residency (§V-D DENY; instant).
+    Deny,
+    /// Microbatch dropped (deadline or no candidate; instant).
+    Drop,
+}
+
+impl TraceKind {
+    /// Stable display name (Chrome-trace `name` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Compute { fwd: true, .. } => "compute_fwd",
+            TraceKind::Compute { fwd: false, .. } => "compute_bwd",
+            TraceKind::LossCompute => "loss",
+            TraceKind::FinishCompute => "finish",
+            TraceKind::Transmission => "tx",
+            TraceKind::Propagation => "prop",
+            TraceKind::NicQueueWait => "nic_queue",
+            TraceKind::SlotWait => "slot_wait",
+            TraceKind::StalenessCatchUp => "stale_catchup",
+            TraceKind::PlanRequest { .. } => "plan_request",
+            TraceKind::PlanRound => "plan_round",
+            TraceKind::PlanCommit { .. } => "plan_commit",
+            TraceKind::PlanStall => "plan_stall",
+            TraceKind::GossipTick => "gossip",
+            TraceKind::Crash => "crash",
+            TraceKind::Join => "join",
+            TraceKind::StageAgg { .. } => "stage_agg",
+            TraceKind::AggBarrier => "agg_barrier",
+            TraceKind::FwdRecovery => "fwd_recovery",
+            TraceKind::BwdRecovery { .. } => "bwd_recovery",
+            TraceKind::RecoveryWait => "recovery_wait",
+            TraceKind::Deny => "deny",
+            TraceKind::Drop => "drop",
+        }
+    }
+}
+
+/// One traced event on the virtual clock.  `dur == 0.0` is an instant;
+/// anything else is a span `[t, t + dur)`.  `iter` is stamped by
+/// [`emit`] from the ambient iteration counter (see [`set_iter`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub iter: usize,
+    pub t: Time,
+    pub dur: f64,
+    pub node: Option<NodeId>,
+    pub mb: Option<usize>,
+    pub kind: TraceKind,
+}
+
+impl TraceRecord {
+    /// Span helper (the common case at emission sites).
+    pub fn span(t: Time, dur: f64, node: Option<NodeId>, mb: Option<usize>, kind: TraceKind) -> Self {
+        TraceRecord { iter: 0, t, dur, node, mb, kind }
+    }
+
+    /// Instant helper (`dur = 0`).
+    pub fn instant(t: Time, node: Option<NodeId>, mb: Option<usize>, kind: TraceKind) -> Self {
+        TraceRecord { iter: 0, t, dur: 0.0, node, mb, kind }
+    }
+}
+
+/// A consumer of the record stream.  Sinks are thread-local (armed via
+/// [`arm`]) and must not observe anything but the records — emission
+/// sites hand them a finished `TraceRecord` and nothing else.
+pub trait TraceSink {
+    fn record(&mut self, rec: &TraceRecord);
+}
+
+thread_local! {
+    /// Fast-path flag: `emit` reads only this when tracing is off.
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static SINK: RefCell<Option<Box<dyn TraceSink>>> = const { RefCell::new(None) };
+    /// Ambient iteration counter stamped onto every record.
+    static ITER: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Is a sink armed on this thread?
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.with(|a| a.get())
+}
+
+/// Emit a record.  The closure is evaluated only when a sink is armed,
+/// so disabled tracing never constructs the record (one flag load).
+#[inline]
+pub fn emit(f: impl FnOnce() -> TraceRecord) {
+    if !enabled() {
+        return;
+    }
+    let mut rec = f();
+    rec.iter = ITER.with(|c| c.get());
+    SINK.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            sink.record(&rec);
+        }
+    });
+}
+
+/// Set the ambient iteration stamp (`Engine::step` calls this; a bare
+/// `run_schedule` leaves it at 0).  No-op when tracing is off.
+#[inline]
+pub fn set_iter(iter: usize) {
+    if enabled() {
+        ITER.with(|c| c.set(iter));
+    }
+}
+
+/// RAII scope for an armed sink; dropping restores whatever was armed
+/// before (usually nothing).
+pub struct ArmGuard {
+    prev_sink: Option<Box<dyn TraceSink>>,
+    prev_active: bool,
+    prev_iter: usize,
+}
+
+/// Arm `sink` on the current thread for the guard's lifetime.
+pub fn arm(sink: Box<dyn TraceSink>) -> ArmGuard {
+    let prev_sink = SINK.with(|s| s.borrow_mut().replace(sink));
+    let prev_active = ACTIVE.with(|a| a.replace(true));
+    let prev_iter = ITER.with(|c| c.replace(0));
+    ArmGuard { prev_sink, prev_active, prev_iter }
+}
+
+impl Drop for ArmGuard {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| a.set(self.prev_active));
+        ITER.with(|c| c.set(self.prev_iter));
+        SINK.with(|s| *s.borrow_mut() = self.prev_sink.take());
+    }
+}
+
+/// Shared handle to records collected by [`arm_collector`].
+pub type SharedRecords = Rc<RefCell<Vec<TraceRecord>>>;
+
+/// The simplest sink: append every record to a shared `Vec`.  Serves
+/// both the determinism tests and the Chrome exporter.
+pub struct VecSink {
+    out: SharedRecords,
+}
+
+impl TraceSink for VecSink {
+    fn record(&mut self, rec: &TraceRecord) {
+        self.out.borrow_mut().push(*rec);
+    }
+}
+
+/// Arm a collecting sink; the returned handle outlives the guard and
+/// holds everything recorded while it was armed.
+pub fn arm_collector() -> (ArmGuard, SharedRecords) {
+    let out: SharedRecords = Rc::new(RefCell::new(Vec::new()));
+    let guard = arm(Box::new(VecSink { out: Rc::clone(&out) }));
+    (guard, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_emit_never_builds_the_record() {
+        let mut built = false;
+        emit(|| {
+            built = true;
+            TraceRecord::instant(0.0, None, None, TraceKind::GossipTick)
+        });
+        assert!(!built, "disabled tracing must not evaluate the closure");
+    }
+
+    #[test]
+    fn collector_scopes_and_restores() {
+        assert!(!enabled());
+        {
+            let (_guard, recs) = arm_collector();
+            assert!(enabled());
+            set_iter(3);
+            emit(|| TraceRecord::instant(1.5, Some(NodeId(2)), Some(0), TraceKind::Crash));
+            let recs = recs.borrow();
+            assert_eq!(recs.len(), 1);
+            assert_eq!(recs[0].iter, 3, "emit stamps the ambient iteration");
+            assert_eq!(recs[0].node, Some(NodeId(2)));
+        }
+        assert!(!enabled(), "dropping the guard disarms");
+        emit(|| unreachable!("disarmed again"));
+    }
+
+    #[test]
+    fn nested_arms_restore_the_outer_sink() {
+        let (_outer, outer_recs) = arm_collector();
+        emit(|| TraceRecord::instant(0.0, None, None, TraceKind::GossipTick));
+        {
+            let (_inner, inner_recs) = arm_collector();
+            emit(|| TraceRecord::instant(1.0, None, None, TraceKind::Crash));
+            assert_eq!(inner_recs.borrow().len(), 1);
+        }
+        emit(|| TraceRecord::instant(2.0, None, None, TraceKind::Join));
+        let recs = outer_recs.borrow();
+        assert_eq!(recs.len(), 2, "inner scope must not swallow outer records");
+        assert_eq!(recs[1].kind, TraceKind::Join);
+    }
+}

@@ -1,11 +1,59 @@
 //! Micro benchmark harness (criterion is unavailable offline).
 //!
 //! Provides warmup, calibrated iteration counts, and mean/p50/p99 reporting.
-//! Used by the `rust/benches/*` targets (built with `harness = false`).
+//! Used by the `rust/benches/*` targets (built with `harness = false`),
+//! plus the shared `BENCH_*.json` profile writer every regression-gated
+//! sweep funnels through ([`update_profile_json`]).
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
 use super::stats::{percentile, Summary};
+
+/// Merge one profile payload into the `BENCH_<bench>.json` document at
+/// `path`, preserving every other key (notably the *other* profile:
+/// `test_sized` captures must not clobber a committed `full` baseline
+/// and vice versa).  Shared by all four gated sweeps (`scale`,
+/// `planlag`, `congestion`, `async`).
+///
+/// Semantics the gates rely on:
+/// - A missing file is a fresh capture.
+/// - A present-but-corrupt file is an **error**, not a reset — a silent
+///   rewrite would null the committed baseline and disarm the CI
+///   regression gate without anyone noticing.
+/// - Legacy documents parse leniently: unknown keys are preserved, the
+///   `test_sized`/`full` slots are created as `null` when absent.
+pub fn update_profile_json(
+    path: &Path,
+    bench: &str,
+    source: &str,
+    profile: &str,
+    payload: Json,
+) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Err(_) => BTreeMap::new(), // no file yet: fresh capture
+        Ok(text) => match Json::parse(text.trim()) {
+            Ok(Json::Obj(o)) => o,
+            _ => bail!(
+                "{} exists but is not a JSON object; refusing to overwrite \
+                 (fix or delete it to re-capture)",
+                path.display()
+            ),
+        },
+    };
+    root.insert("bench".into(), Json::Str(bench.into()));
+    root.insert("source".into(), Json::Str(source.into()));
+    root.entry("test_sized".to_string()).or_insert(Json::Null);
+    root.entry("full".to_string()).or_insert(Json::Null);
+    root.insert(profile.to_string(), payload);
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -104,6 +152,40 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.iters > 0);
         assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn profile_json_merges_preserves_and_refuses_corruption() {
+        let dir = std::env::temp_dir().join("gwtf_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_unit.json");
+        let _ = std::fs::remove_file(&path);
+
+        let payload = |v: f64| {
+            let mut o = BTreeMap::new();
+            o.insert("x".to_string(), Json::Num(v));
+            Json::Obj(o)
+        };
+        // Fresh capture: both profile slots exist, ours filled.
+        update_profile_json(&path, "unit", "tests::here", "test_sized", payload(1.0)).unwrap();
+        let doc = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(doc.get("full"), Some(&Json::Null));
+        assert_eq!(doc.get("test_sized").unwrap().get("x").unwrap().as_f64(), Some(1.0));
+
+        // Updating the other profile preserves the first.
+        update_profile_json(&path, "unit", "tests::here", "full", payload(2.0)).unwrap();
+        let doc = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        assert_eq!(doc.get("test_sized").unwrap().get("x").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("full").unwrap().get("x").unwrap().as_f64(), Some(2.0));
+
+        // A corrupt file refuses the update instead of resetting it.
+        std::fs::write(&path, "not json at all").unwrap();
+        let err = update_profile_json(&path, "unit", "tests::here", "full", payload(3.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("refusing to overwrite"), "{err}");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "not json at all");
     }
 
     #[test]

@@ -30,6 +30,9 @@ fn opts() -> AsyncOpts {
 
 #[test]
 fn async_goodput_beats_sync_and_is_monotone_in_the_bound() {
+    // Keep a bounded event ring armed: if any gate below fails, the tail
+    // of the simulated timeline lands on stderr + bench_results/.
+    let _flight = gwtf::trace::flight::arm_flight_recorder("async_guard", 4096);
     let (table, report) = run_async(&opts()).unwrap();
 
     // Every arm produced samples and completed work.

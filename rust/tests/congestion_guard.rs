@@ -32,6 +32,9 @@ fn opts() -> CongestionOpts {
 
 #[test]
 fn congestion_makespan_monotone_and_aware_beats_swarm() {
+    // Keep a bounded event ring armed: if any gate below fails, the tail
+    // of the simulated timeline lands on stderr + bench_results/.
+    let _flight = gwtf::trace::flight::arm_flight_recorder("congestion_guard", 4096);
     let (table, report) = run_congestion(&opts()).unwrap();
 
     // Every (cap, system) cell produced samples and routed work.

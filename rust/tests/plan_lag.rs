@@ -30,6 +30,9 @@ fn opts() -> PlanLagOpts {
 
 #[test]
 fn planlag_makespan_grows_monotonically_with_round_rtt() {
+    // Keep a bounded event ring armed: if any gate below fails, the tail
+    // of the simulated timeline lands on stderr + bench_results/.
+    let _flight = gwtf::trace::flight::arm_flight_recorder("plan_lag", 4096);
     let (table, report) = run_plan_lag(&opts()).unwrap();
 
     // Every (churn, rtt) cell produced samples.

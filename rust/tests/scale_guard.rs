@@ -48,6 +48,9 @@ fn opts() -> ScaleOpts {
 
 #[test]
 fn scale_completes_at_100_200_and_1000_relays_and_gates_planner_rounds() {
+    // Keep a bounded event ring armed: if any gate below fails, the tail
+    // of the simulated timeline lands on stderr + bench_results/.
+    let _flight = gwtf::trace::flight::arm_flight_recorder("scale_guard", 4096);
     let (table, report) = run_scale(&opts()).unwrap();
 
     // Acceptance: completes at 100 and 200 relays under 20% Poisson

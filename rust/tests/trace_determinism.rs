@@ -1,0 +1,207 @@
+//! Tracing acceptance gates (ISSUE 8).
+//!
+//! Three properties keep the flight recorder trustworthy:
+//!
+//! - **Zero overhead when disarmed**: running the engine with a sink
+//!   armed must not move a single bit of any metric — tracing is
+//!   strictly observational (no RNG draw, no time mutation), so armed
+//!   and disarmed runs are bit-for-bit identical.
+//! - **Determinism per seed**: with a sink armed, the record stream is
+//!   a pure function of the run — two identical runs produce identical
+//!   streams, record for record.
+//! - **Critical-path attribution is exhaustive**: the per-iteration
+//!   `crit_path` buckets tile the makespan — they sum to `makespan_s`
+//!   within 1e-6 relative on every scenario family (mid-aggregation
+//!   crashes, link jitter, NIC congestion, bounded staleness).
+//!
+//! Plus a shape gate on the Chrome exporter: a real engine stream must
+//! render as valid trace-event objects with monotone per-track
+//! timestamps.
+//!
+//! CI runs this test in the same release guard step as the bench gates.
+
+use gwtf::coordinator::GwtfRouter;
+use gwtf::flow::FlowParams;
+use gwtf::sim::scenario::{build, Scenario, ScenarioConfig};
+use gwtf::sim::sources::{LinkJitterSource, MidAggCrashSource};
+use gwtf::sim::training::IterationMetrics;
+use gwtf::sim::Engine;
+use gwtf::trace::{arm_collector, chrome, TraceRecord};
+use gwtf::util::json::Json;
+
+const ARMS: [&str; 4] = ["midagg", "jitter", "congestion", "async"];
+const ITERS: usize = 3;
+const SEED: u64 = 7;
+
+/// Run one named scenario arm for [`ITERS`] iterations.  Mirrors the
+/// constructions in `experiments/scenarios.rs` so the gates cover the
+/// event kinds each family exercises (barrier crashes, jitter windows,
+/// NIC queueing, rolling aggregation + admission catch-up).
+fn run_arm(arm: &str) -> Vec<IterationMetrics> {
+    type Hook = Box<dyn FnOnce(&mut Engine)>;
+    let (sc, hook, warm): (Scenario, Option<Hook>, bool) = match arm {
+        "midagg" => {
+            let sc = build(&ScenarioConfig::table2(true, 0.0, SEED));
+            let last_stage = sc.prob.graph.n_stages() - 1;
+            let victim = sc.prob.graph.stages[last_stage][0];
+            let hook: Hook = Box::new(move |e| {
+                e.add_source(Box::new(MidAggCrashSource::new(1, victim, 0.5)));
+            });
+            (sc, Some(hook), true)
+        }
+        "jitter" => {
+            let sc = build(&ScenarioConfig::table2(true, 0.0, SEED));
+            let hook: Hook = Box::new(|e| {
+                e.add_source(Box::new(LinkJitterSource::new(0.5, 30.0, SEED ^ 0x11)));
+            });
+            (sc, Some(hook), false)
+        }
+        "congestion" => (build(&ScenarioConfig::congestion(Some(1), true, SEED)), None, false),
+        "async" => (build(&ScenarioConfig::bounded_staleness(Some(2), 0.2, SEED)), None, true),
+        other => unreachable!("unknown arm {other}"),
+    };
+    let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), SEED ^ 0xA);
+    let mut engine = sc.engine(SEED ^ 0x1);
+    engine.warm_replan = warm;
+    if let Some(hook) = hook {
+        hook(&mut engine);
+    }
+    (0..ITERS).map(|_| engine.step(&sc.prob, &mut router)).collect()
+}
+
+/// Record stream of one armed run.
+fn stream(arm: &str) -> Vec<TraceRecord> {
+    let (guard, recs) = arm_collector();
+    let _metrics = run_arm(arm);
+    drop(guard);
+    let out = recs.borrow().clone();
+    out
+}
+
+#[test]
+fn record_stream_is_deterministic_per_seed() {
+    for arm in ARMS {
+        let a = stream(arm);
+        let b = stream(arm);
+        assert!(!a.is_empty(), "{arm}: an instrumented run must emit records");
+        assert_eq!(a.len(), b.len(), "{arm}: stream lengths diverged");
+        for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(ra, rb, "{arm}: record {i} diverged between identical runs");
+        }
+    }
+}
+
+#[test]
+fn armed_sink_never_moves_a_metric_bit() {
+    for arm in ARMS {
+        let plain = run_arm(arm);
+        let (guard, recs) = arm_collector();
+        let traced = run_arm(arm);
+        drop(guard);
+        assert!(!recs.borrow().is_empty(), "{arm}: sink saw no records");
+        for (i, (p, t)) in plain.iter().zip(&traced).enumerate() {
+            let pairs = [
+                ("makespan_s", p.makespan_s, t.makespan_s),
+                ("comm_s", p.comm_s, t.comm_s),
+                ("queue_s", p.queue_s, t.queue_s),
+                ("agg_s", p.agg_s, t.agg_s),
+                ("planning_s", p.planning_s, t.planning_s),
+                ("plan_overlap_s", p.plan_overlap_s, t.plan_overlap_s),
+                ("wasted_gpu_s", p.wasted_gpu_s, t.wasted_gpu_s),
+                ("staleness_mean", p.staleness_mean, t.staleness_mean),
+                ("crit.compute_s", p.crit_path.compute_s, t.crit_path.compute_s),
+                ("crit.tx_s", p.crit_path.tx_s, t.crit_path.tx_s),
+                ("crit.prop_s", p.crit_path.prop_s, t.crit_path.prop_s),
+                ("crit.queue_s", p.crit_path.queue_s, t.crit_path.queue_s),
+                ("crit.plan_s", p.crit_path.plan_s, t.crit_path.plan_s),
+                ("crit.agg_s", p.crit_path.agg_s, t.crit_path.agg_s),
+                ("crit.stale_s", p.crit_path.stale_s, t.crit_path.stale_s),
+            ];
+            for (name, a, b) in pairs {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{arm} iter {i}: {name} moved under tracing ({a} vs {b})"
+                );
+            }
+            assert_eq!(p.completed, t.completed, "{arm} iter {i}");
+            assert_eq!(p.events, t.events, "{arm} iter {i}");
+            assert_eq!(p.fwd_recoveries, t.fwd_recoveries, "{arm} iter {i}");
+            assert_eq!(p.bwd_recoveries, t.bwd_recoveries, "{arm} iter {i}");
+            assert_eq!(p.dropped, t.dropped, "{arm} iter {i}");
+        }
+    }
+}
+
+#[test]
+fn critical_path_buckets_sum_to_makespan() {
+    for arm in ARMS {
+        let mut attributed = false;
+        for (i, m) in run_arm(arm).iter().enumerate() {
+            let sum = m.crit_path.total_s();
+            let err = (sum - m.makespan_s).abs();
+            assert!(
+                err <= 1e-6 * m.makespan_s.abs().max(1.0),
+                "{arm} iter {i}: buckets sum to {sum}, makespan is {} \
+                 (compute {} tx {} prop {} queue {} plan {} agg {} stale {})",
+                m.makespan_s,
+                m.crit_path.compute_s,
+                m.crit_path.tx_s,
+                m.crit_path.prop_s,
+                m.crit_path.queue_s,
+                m.crit_path.plan_s,
+                m.crit_path.agg_s,
+                m.crit_path.stale_s,
+            );
+            if m.makespan_s > 0.0 {
+                attributed = true;
+                assert!(m.crit_path.compute_s > 0.0, "{arm} iter {i}: no compute attributed");
+            }
+        }
+        assert!(attributed, "{arm}: every iteration had zero makespan");
+    }
+}
+
+#[test]
+fn chrome_export_of_a_real_stream_is_well_shaped() {
+    let recs = stream("congestion");
+    let doc = chrome::chrome_trace_json(&recs);
+    let events = doc.get("traceEvents").expect("traceEvents array").as_arr().unwrap();
+    assert_eq!(events.len(), recs.len(), "every record exports exactly one event");
+    let key = |ev: &Json| {
+        (
+            ev.get("pid").unwrap().as_usize().unwrap(),
+            ev.get("tid").unwrap().as_usize().unwrap(),
+        )
+    };
+    for ev in events {
+        assert!(ev.get("name").unwrap().as_str().is_some());
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        assert!(ph == "X" || ph == "i", "unknown phase {ph:?}");
+        let ts = ev.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts.is_finite() && ts >= 0.0);
+        if ph == "X" {
+            assert!(ev.get("dur").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+    for w in events.windows(2) {
+        if key(&w[0]) == key(&w[1]) {
+            let (a, b) = (
+                w[0].get("ts").unwrap().as_f64().unwrap(),
+                w[1].get("ts").unwrap().as_f64().unwrap(),
+            );
+            assert!(a <= b, "per-track timestamps must be monotone: {a} > {b}");
+        }
+    }
+    // The full document survives serialize -> parse.
+    let text = doc.to_string();
+    assert_eq!(Json::parse(&text).unwrap(), doc);
+
+    // And the file writer produces the same document on disk.
+    let dir = std::env::temp_dir().join("gwtf_trace_export_test");
+    let path = dir.join("trace.json");
+    let _ = std::fs::remove_file(&path);
+    chrome::write_chrome_trace(&path, &recs).unwrap();
+    let back = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+    assert_eq!(back, doc);
+}
