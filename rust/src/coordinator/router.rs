@@ -43,9 +43,11 @@ use crate::flow::decentralized::{Chain, DecentralizedFlow, FlowParams};
 use crate::flow::graph::{FlowPath, FlowProblem, StageGraph};
 use crate::net::gossip::GossipConfig;
 use crate::net::overlay::Overlay;
+use crate::net::reputation::ReputationBook;
 use crate::sim::events::Time;
 use crate::sim::scenario::Scenario;
 use crate::sim::training::{PlanOutcome, PlanRequest, PlanTicket, RecoveryPolicy, RoutingPolicy};
+use crate::trace::{self, TraceKind, TraceRecord};
 
 /// Cost closure shared by router and rebuilt problems.
 pub type CostFn = Arc<dyn Fn(NodeId, NodeId) -> f64 + Send + Sync>;
@@ -82,6 +84,12 @@ pub struct GwtfRouter {
     /// Scratch edge list reused across (re)plans when streaming the
     /// overlay's planning edges into the flow optimizer.
     edge_buf: Vec<(NodeId, NodeId)>,
+    /// Shared reputation book (reputation-aware scenarios): scores are
+    /// charged by the simulator's handler sites and *published* here at
+    /// each gossip tick, piggybacked on the shuffle cadence.  The Eq. 1
+    /// penalty is already folded into `cost`, so planning and §V-D
+    /// replacement both price reputation automatically.
+    reputation: Option<Arc<ReputationBook>>,
     /// Ticket-id source for the plan lifecycle.
     next_ticket: u64,
     /// The open planning session: result computed at request, delivered
@@ -126,6 +134,7 @@ impl GwtfRouter {
             overlay: None,
             last_alive: Vec::new(),
             edge_buf: Vec::new(),
+            reputation: None,
             next_ticket: 0,
             pending: None,
         }
@@ -146,7 +155,7 @@ impl GwtfRouter {
     pub fn from_scenario(sc: &Scenario, params: FlowParams, seed: u64) -> Self {
         let topo = sc.topo.clone();
         let payload = sc.sim_cfg.payload_bytes;
-        let cost: CostFn = if let Some(cache) = &sc.cost_cache {
+        let base: CostFn = if let Some(cache) = &sc.cost_cache {
             // The shared topology carries `ScenarioConfig::nic`: the
             // queueing term reads the very parameters the engine's
             // substrate executes.  The memo serves identical bits to a
@@ -155,6 +164,19 @@ impl GwtfRouter {
             Arc::new(move |i, j| cache.cost(i, j))
         } else {
             Arc::new(move |i, j| topo.cost(i, j, payload))
+        };
+        // Reputation-aware scenarios multiply the Eq. 1 penalty into
+        // every edge.  The closure is only wrapped when the book exists:
+        // reputation-off scenarios keep the unwrapped closure, and on a
+        // clean fleet the all-honest prior makes the factor exactly 1.0
+        // (`x * 1.0` is bitwise `x`), so both arms reproduce the legacy
+        // planner bit for bit until someone actually misbehaves.
+        let cost: CostFn = match &sc.reputation {
+            Some(book) => {
+                let book = book.clone();
+                Arc::new(move |i, j| base(i, j) * book.penalty(i, j))
+            }
+            None => base,
         };
         let mut router = GwtfRouter::new(
             sc.prob.graph.clone(),
@@ -171,6 +193,13 @@ impl GwtfRouter {
                 GossipConfig { fanout, ..Default::default() },
                 sc.cfg.seed ^ 0x0E12_1AB5,
             ));
+        }
+        router.reputation = sc.reputation.clone();
+        // Eclipse attackers manipulate the overlay's shuffle; the hook
+        // is inert (and the lie buffer never allocated into) when the
+        // roster has no eclipse nodes or there is no overlay to poison.
+        if let (Some(roster), Some(ov)) = (&sc.adversary, router.overlay.as_mut()) {
+            ov.set_eclipse_liars(roster.eclipse_nodes());
         }
         router
     }
@@ -436,7 +465,14 @@ impl RoutingPolicy for GwtfRouter {
         }
     }
 
-    fn on_gossip(&mut self, _t: Time) {
+    fn on_gossip(&mut self, t: Time) {
+        // Reputation scores publish at the shuffle cadence (the
+        // piggyback: no extra protocol messages) — before the overlay
+        // early-returns, so overlay-free reputation scenarios still
+        // fold their pending observations.
+        if let Some(book) = &self.reputation {
+            book.publish(t);
+        }
         let Some(ov) = self.overlay.as_mut() else { return };
         if self.last_alive.is_empty() {
             return;
@@ -450,6 +486,13 @@ impl RoutingPolicy for GwtfRouter {
             }
         }
         ov.gossip_round(&truth);
+        if trace::enabled() {
+            for &(liar, victim) in ov.last_lies() {
+                trace::emit(|| {
+                    TraceRecord::instant(t, Some(liar), Some(victim.0), TraceKind::EclipseLie)
+                });
+            }
+        }
     }
 
     fn choose_replacement(

@@ -18,9 +18,10 @@
 //! old per-iteration churn model could not express (mid-aggregation
 //! crashes, link-latency jitter, continuous-clock Poisson churn, the
 //! gossip-overlay scale sweep at 100+ relays, the plan-lifecycle
-//! round-RTT sweep, the shared-capacity NIC congestion sweep, and the
-//! bounded-staleness asynchronous-training sweep) —
-//! `gwtf bench midagg|jitter|poissonchurn|scale|planlag|congestion|async`.
+//! round-RTT sweep, the shared-capacity NIC congestion sweep, the
+//! bounded-staleness asynchronous-training sweep, and the
+//! adversarial-relay reputation sweep) —
+//! `gwtf bench midagg|jitter|poissonchurn|scale|planlag|congestion|async|adversary`.
 
 pub mod figures;
 pub mod scenarios;
@@ -28,13 +29,14 @@ pub mod tables;
 
 pub use figures::{fig5_summary, run_fig5, run_fig6, run_fig7, Fig6Opts};
 pub use scenarios::{
-    async_json_path, congestion_json_path, plan_lag_json_path, read_async_profile,
-    read_congestion_profile, read_plan_lag_profile, read_scale_profile, run_async, run_congestion,
-    run_link_jitter, run_mid_agg_crash, run_plan_lag, run_poisson_churn, run_scale,
-    scale_json_path, update_async_json, update_congestion_json, update_plan_lag_json,
-    update_scale_json, AsyncCase, AsyncOpts, AsyncReport, CongestionCase, CongestionOpts,
-    CongestionReport, CritProfile, PlanLagCase, PlanLagOpts, PlanLagReport, ScaleOpts,
-    ScaleReport, ScenarioOpts,
+    adversary_json_path, async_json_path, congestion_json_path, plan_lag_json_path,
+    read_adversary_profile, read_async_profile, read_congestion_profile, read_plan_lag_profile,
+    read_scale_profile, run_adversary, run_async, run_congestion, run_link_jitter,
+    run_mid_agg_crash, run_plan_lag, run_poisson_churn, run_scale, scale_json_path,
+    update_adversary_json, update_async_json, update_congestion_json, update_plan_lag_json,
+    update_scale_json, AdversaryCase, AdversaryOpts, AdversaryReport, AsyncCase, AsyncOpts,
+    AsyncReport, CongestionCase, CongestionOpts, CongestionReport, CritProfile, PlanLagCase,
+    PlanLagOpts, PlanLagReport, ScaleOpts, ScaleReport, ScenarioOpts,
 };
 pub use tables::{run_table2, run_table3, run_table6, TableOpts};
 

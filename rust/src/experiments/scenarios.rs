@@ -43,6 +43,16 @@
 //!   SWARM's nearest-peer funnel — both gated by
 //!   `rust/tests/congestion_guard.rs` over the `test_sized` profile of
 //!   `BENCH_congestion.json` (`full` via the CLI bench).
+//! - [`run_adversary`] — adversarial relays (`gwtf bench adversary`):
+//!   the Table II shape with a fraction f of relays running Byzantine
+//!   service policies ([`crate::sim::adversary`]: free-riders, DENY
+//!   storms, deliberate stragglers, eclipse liars), swept over
+//!   f ∈ {0, 10%, 25%}.  Columns compare reputation-oblivious GWTF,
+//!   reputation-aware GWTF ([`crate::net::reputation`] feeding the Eq. 1
+//!   penalty) and SWARM.  The reputation-aware arm must retain goodput
+//!   under attack where the oblivious arm bleeds it — gated by
+//!   `rust/tests/adversary_guard.rs` over the `test_sized` profile of
+//!   `BENCH_adversary.json` (`full` via the CLI bench).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -787,6 +797,38 @@ pub fn update_plan_lag_json(path: &Path, profile: &str, report: &PlanLagReport) 
     )
 }
 
+/// Drive one measured arm of a sweep: build the scenario's engine from
+/// `engine_seed`, run `iters` iterations against `router`, and fold
+/// every measured iteration into the `(row, system)` metrics cell and
+/// the sweep-wide critical-path profile.  Each iteration is also handed
+/// to `on_iter` so the caller can accumulate its own per-case totals.
+/// This is the arm-iteration shape the congestion, async and adversary
+/// sweeps all share; keeping it here means a new sweep adds only its
+/// scenario wiring and case bookkeeping.
+#[allow(clippy::too_many_arguments)]
+fn measure_arm(
+    table: &mut MetricsTable,
+    crit: &mut CritProfile,
+    row: &str,
+    system: &str,
+    sc: &crate::sim::scenario::Scenario,
+    router: &mut dyn RoutingPolicy,
+    engine_seed: u64,
+    iters: usize,
+    warm_replan: bool,
+    mut on_iter: impl FnMut(&IterationMetrics),
+) {
+    let mut engine = sc.engine(engine_seed);
+    engine.warm_replan = warm_replan;
+    let cell = table.cell(row, system);
+    for _ in 0..iters {
+        let m = engine.step(&sc.prob, router);
+        crit.add(&m);
+        cell.push(&m);
+        on_iter(&m);
+    }
+}
+
 /// Options for the shared-capacity congestion sweep
 /// (`gwtf bench congestion`).
 #[derive(Debug, Clone)]
@@ -966,19 +1008,25 @@ pub fn run_congestion(opts: &CongestionOpts) -> Result<(MetricsTable, Congestion
             let mut measure = |system: &str,
                                sc: &crate::sim::scenario::Scenario,
                                router: &mut dyn RoutingPolicy| {
-                let mut engine = sc.engine(seed ^ 0x1);
-                let cell = table.cell(&row, system);
                 let acc = cases.entry((cap, system.to_string())).or_default();
-                for _ in 0..opts.iters_per_rep {
-                    let m = engine.step(&sc.prob, router);
-                    acc.makespan.push(m.makespan_s);
-                    acc.queue.push(m.queue_s);
-                    acc.comm.push(m.comm_s);
-                    acc.util.push(m.nic_util_max);
-                    acc.throughput += m.completed as f64;
-                    crit.add(&m);
-                    cell.push(&m);
-                }
+                measure_arm(
+                    &mut table,
+                    &mut crit,
+                    &row,
+                    system,
+                    sc,
+                    router,
+                    seed ^ 0x1,
+                    opts.iters_per_rep,
+                    false,
+                    |m| {
+                        acc.makespan.push(m.makespan_s);
+                        acc.queue.push(m.queue_s);
+                        acc.comm.push(m.comm_s);
+                        acc.util.push(m.nic_util_max);
+                        acc.throughput += m.completed as f64;
+                    },
+                );
             };
             measure(
                 "gwtf",
@@ -1205,19 +1253,24 @@ pub fn run_async(opts: &AsyncOpts) -> Result<(MetricsTable, AsyncReport)> {
             let seed = opts.seed + rep as u64 * 104729;
             let sc = build(&ScenarioConfig::bounded_staleness(bound, opts.churn_p, seed));
             let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
-            let mut engine = sc.engine(seed ^ 0x1);
-            engine.warm_replan = true;
-            let cell = table.cell(&row, "gwtf");
-            for _ in 0..opts.iters_per_rep {
-                let m = engine.step(&sc.prob, &mut router);
-                makespan_total += m.makespan_s;
-                agg.push(m.agg_s);
-                stale.push(m.staleness_mean);
-                deferred_total += m.deferred as f64;
-                throughput_total += m.completed as f64;
-                crit.add(&m);
-                cell.push(&m);
-            }
+            measure_arm(
+                &mut table,
+                &mut crit,
+                &row,
+                "gwtf",
+                &sc,
+                &mut router,
+                seed ^ 0x1,
+                opts.iters_per_rep,
+                true,
+                |m| {
+                    makespan_total += m.makespan_s;
+                    agg.push(m.agg_s);
+                    stale.push(m.staleness_mean);
+                    deferred_total += m.deferred as f64;
+                    throughput_total += m.completed as f64;
+                },
+            );
         }
         cases.push(AsyncCase {
             staleness: s,
@@ -1233,6 +1286,232 @@ pub fn run_async(opts: &AsyncOpts) -> Result<(MetricsTable, AsyncReport)> {
         iters_per_rep: opts.iters_per_rep,
         churn_p: opts.churn_p,
         cases,
+        crit_path: crit,
+    };
+    Ok((table, report))
+}
+
+/// Options for the adversarial-relay sweep (`gwtf bench adversary`).
+#[derive(Debug, Clone)]
+pub struct AdversaryOpts {
+    /// Adversarial fractions to sweep; `0.0` is the clean-fleet
+    /// reference every retention gate divides by.
+    pub fractions: Vec<f64>,
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub seed: u64,
+}
+
+impl Default for AdversaryOpts {
+    fn default() -> Self {
+        AdversaryOpts { fractions: vec![0.0, 0.10, 0.25], reps: 3, iters_per_rep: 4, seed: 1 }
+    }
+}
+
+/// One (adversarial fraction, system) cell of the adversary sweep,
+/// totalled over reps and iterations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdversaryCase {
+    /// Adversarial fraction as a percentage (0, 10, 25); stored as an
+    /// integer so JSON roundtrips and case lookups stay exact.
+    pub fraction_pct: usize,
+    pub system: String,
+    /// Summed iteration makespans, seconds (goodput denominator).
+    pub makespan_total_s: f64,
+    /// Microbatches completed, total (goodput numerator).
+    pub throughput_total: f64,
+    /// Memory-overload DENYs, total — DENY storms and phantom-capacity
+    /// bounces both land here.
+    pub denies_total: f64,
+}
+
+impl AdversaryCase {
+    /// Completed microbatches per makespan second — the retention
+    /// gate's unit: reputation-aware GWTF at f = 25% must keep >= 70% of
+    /// its clean-fleet goodput, and the oblivious arm must retain
+    /// strictly less.
+    pub fn goodput(&self) -> f64 {
+        if self.makespan_total_s > 0.0 {
+            self.throughput_total / self.makespan_total_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The `BENCH_adversary.json` payload for one profile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdversaryReport {
+    pub reps: usize,
+    pub iters_per_rep: usize,
+    pub cases: Vec<AdversaryCase>,
+    /// Where the sweep's virtual time went ([`CritProfile`]).
+    pub crit_path: CritProfile,
+}
+
+impl AdversaryReport {
+    pub fn case(&self, fraction_pct: usize, system: &str) -> Option<&AdversaryCase> {
+        self.cases.iter().find(|c| c.fraction_pct == fraction_pct && c.system == system)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let case_json = |c: &AdversaryCase| {
+            let mut o = BTreeMap::new();
+            o.insert("fraction_pct".into(), Json::Num(c.fraction_pct as f64));
+            o.insert("system".into(), Json::Str(c.system.clone()));
+            o.insert("makespan_total_s".into(), Json::Num(c.makespan_total_s));
+            o.insert("throughput_total".into(), Json::Num(c.throughput_total));
+            o.insert("denies_total".into(), Json::Num(c.denies_total));
+            // Derived, for human readers of the JSON; not parsed back.
+            o.insert("goodput_mb_per_s".into(), Json::Num(c.goodput()));
+            Json::Obj(o)
+        };
+        let mut root = BTreeMap::new();
+        root.insert("reps".into(), Json::Num(self.reps as f64));
+        root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
+        root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
+        root.insert("crit_path".into(), self.crit_path.to_json());
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Option<AdversaryReport> {
+        let num = |o: &Json, k: &str| o.get(k).and_then(Json::as_f64);
+        let cases = match j.get("cases")? {
+            Json::Arr(v) => v
+                .iter()
+                .map(|c| {
+                    Some(AdversaryCase {
+                        fraction_pct: num(c, "fraction_pct")? as usize,
+                        system: c.get("system")?.as_str()?.to_string(),
+                        makespan_total_s: num(c, "makespan_total_s")?,
+                        throughput_total: num(c, "throughput_total")?,
+                        denies_total: num(c, "denies_total")?,
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?,
+            _ => return None,
+        };
+        Some(AdversaryReport {
+            reps: num(j, "reps")? as usize,
+            iters_per_rep: num(j, "iters_per_rep")? as usize,
+            cases,
+            crit_path: CritProfile::from_json(j.get("crit_path")),
+        })
+    }
+}
+
+/// Canonical location of `BENCH_adversary.json` (same convention as
+/// [`congestion_json_path`]), overridable via `GWTF_ADVERSARY_JSON`.
+pub fn adversary_json_path() -> std::path::PathBuf {
+    std::env::var("GWTF_ADVERSARY_JSON").map(std::path::PathBuf::from).unwrap_or_else(|_| {
+        std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_adversary.json"))
+    })
+}
+
+/// Read one profile (`"test_sized"` / `"full"`) from
+/// `BENCH_adversary.json`.
+pub fn read_adversary_profile(path: &Path, profile: &str) -> Option<AdversaryReport> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(text.trim()).ok()?;
+    AdversaryReport::from_json(j.get(profile)?)
+}
+
+/// Write one profile into `BENCH_adversary.json`, preserving the other
+/// profile; a present-but-corrupt file is an error, not a reset (same
+/// rationale as [`update_congestion_json`]).
+pub fn update_adversary_json(path: &Path, profile: &str, report: &AdversaryReport) -> Result<()> {
+    crate::util::bench::update_profile_json(
+        path,
+        "adversary",
+        "rust/src/experiments/scenarios.rs::run_adversary",
+        profile,
+        report.to_json(),
+    )
+}
+
+/// Row label for one adversarial fraction of the adversary sweep.
+fn adversary_row(pct: usize) -> String {
+    format!("adv {pct:>2}%")
+}
+
+/// The adversarial-relay sweep: the Table II shape with a deterministic
+/// roster of Byzantine relays ([`ScenarioConfig::adversary`]), swept
+/// over the adversarial fraction.  Three systems per fraction:
+/// reputation-oblivious GWTF (plans into phantom capacity and re-routes
+/// only after DENY bounces), reputation-aware GWTF (the
+/// [`crate::net::reputation`] EWMA book feeds the Eq. 1 penalty, so
+/// re-plans price liars out), and SWARM (nearest-peer wiring, oblivious
+/// by design).  Both GWTF arms share seeds — the scenarios differ only
+/// in whether the reputation book exists, so the comparison isolates
+/// the routing policy from the draw of the topology.  Returns the
+/// metrics table plus the report that lands in `BENCH_adversary.json`.
+pub fn run_adversary(opts: &AdversaryOpts) -> Result<(MetricsTable, AdversaryReport)> {
+    let mut table = MetricsTable::new(
+        "Adversarial relays — oblivious GWTF vs reputation-aware GWTF vs SWARM",
+    );
+    /// Running totals for one (fraction, system) cell.
+    #[derive(Default)]
+    struct CaseAcc {
+        makespan: f64,
+        throughput: f64,
+        denies: f64,
+    }
+    let mut cases: BTreeMap<(usize, String), CaseAcc> = BTreeMap::new();
+    let mut crit = CritProfile::default();
+    for &f in &opts.fractions {
+        let pct = (f * 100.0).round() as usize;
+        let row = adversary_row(pct);
+        for rep in 0..opts.reps {
+            let seed = opts.seed + rep as u64 * 7457;
+            let sc_obl = build(&ScenarioConfig::adversary(f, false, seed));
+            let sc_rep = build(&ScenarioConfig::adversary(f, true, seed));
+            let mut run = |system: &str,
+                           sc: &crate::sim::scenario::Scenario,
+                           router: &mut dyn RoutingPolicy| {
+                let acc = cases.entry((pct, system.to_string())).or_default();
+                measure_arm(
+                    &mut table,
+                    &mut crit,
+                    &row,
+                    system,
+                    sc,
+                    router,
+                    seed ^ 0x1,
+                    opts.iters_per_rep,
+                    false,
+                    |m| {
+                        acc.makespan += m.makespan_s;
+                        acc.throughput += m.completed as f64;
+                        acc.denies += m.denies as f64;
+                    },
+                );
+            };
+            run(
+                "gwtf",
+                &sc_obl,
+                &mut GwtfRouter::from_scenario(&sc_obl, FlowParams::default(), seed ^ 0xA),
+            );
+            run(
+                "gwtf-rep",
+                &sc_rep,
+                &mut GwtfRouter::from_scenario(&sc_rep, FlowParams::default(), seed ^ 0xA),
+            );
+            run("swarm", &sc_obl, &mut swarm_router(&sc_obl, seed ^ 0xB));
+        }
+    }
+    let report = AdversaryReport {
+        reps: opts.reps,
+        iters_per_rep: opts.iters_per_rep,
+        cases: cases
+            .into_iter()
+            .map(|((fraction_pct, system), acc)| AdversaryCase {
+                fraction_pct,
+                system,
+                makespan_total_s: acc.makespan,
+                throughput_total: acc.throughput,
+                denies_total: acc.denies,
+            })
+            .collect(),
         crit_path: crit,
     };
     Ok((table, report))
@@ -1647,6 +1926,68 @@ mod tests {
         update_async_json(&path, "full", &report).unwrap();
         assert_eq!(read_async_profile(&path, "test_sized").unwrap(), report);
         assert_eq!(read_async_profile(&path, "full").unwrap(), report);
+    }
+
+    #[test]
+    fn adversary_sweep_shapes_table_and_report() {
+        // Shape only; the retention gates live in
+        // rust/tests/adversary_guard.rs (CI's dedicated guard step).
+        let opts = AdversaryOpts {
+            fractions: vec![0.0, 0.25],
+            reps: 1,
+            iters_per_rep: 2,
+            seed: 5,
+        };
+        let (t, report) = run_adversary(&opts).unwrap();
+        assert_eq!(t.cells.len(), 2 * 3, "2 fractions x 3 systems");
+        for ((row, col), acc) in &t.cells {
+            assert_eq!(acc.throughput.len(), 2, "{row}/{col}: 1 rep x 2 iterations");
+        }
+        assert_eq!(report.cases.len(), 6);
+        for sys in ["gwtf", "gwtf-rep", "swarm"] {
+            let clean = report.case(0, sys).expect("clean-fleet case");
+            assert!(clean.goodput() > 0.0, "{sys}");
+            assert!(report.case(25, sys).is_some(), "{sys}: f=25% case present");
+        }
+        // With no adversaries the reputation book never leaves its
+        // all-honest prior, so both GWTF arms measure identically.
+        let obl = report.case(0, "gwtf").unwrap();
+        let rep = report.case(0, "gwtf-rep").unwrap();
+        assert_eq!(obl.makespan_total_s.to_bits(), rep.makespan_total_s.to_bits());
+        assert_eq!(obl.throughput_total, rep.throughput_total);
+        // DENY storms must actually show up in the denies column.
+        let attacked = report.case(25, "gwtf").unwrap();
+        assert!(attacked.denies_total > 0.0, "storm relays must DENY");
+    }
+
+    #[test]
+    fn adversary_report_json_roundtrip_and_profile_update() {
+        let report = AdversaryReport {
+            reps: 2,
+            iters_per_rep: 4,
+            cases: vec![AdversaryCase {
+                fraction_pct: 25,
+                system: "gwtf-rep".into(),
+                makespan_total_s: 2100.25,
+                throughput_total: 58.0,
+                denies_total: 17.0,
+            }],
+            crit_path: CritProfile { compute_s: 1800.5, queue_s: 42.0, ..Default::default() },
+        };
+        let back = AdversaryReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+
+        let dir = std::env::temp_dir().join("gwtf_adversary_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_adversary.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_adversary_profile(&path, "test_sized").is_none(), "missing file");
+        update_adversary_json(&path, "test_sized", &report).unwrap();
+        assert_eq!(read_adversary_profile(&path, "test_sized").unwrap(), report);
+        assert!(read_adversary_profile(&path, "full").is_none(), "other profile null");
+        update_adversary_json(&path, "full", &report).unwrap();
+        assert_eq!(read_adversary_profile(&path, "test_sized").unwrap(), report);
+        assert_eq!(read_adversary_profile(&path, "full").unwrap(), report);
     }
 
     #[test]

@@ -24,11 +24,11 @@ use gwtf::coordinator::join::{utilization_query, JoinPolicy, Leader};
 use gwtf::coordinator::GwtfRouter;
 use gwtf::cost::NodeId;
 use gwtf::experiments::{
-    results_dir, run_async, run_congestion, run_fig5, run_fig6, run_fig7, run_link_jitter,
-    run_mid_agg_crash, run_plan_lag, run_poisson_churn, run_scale, run_table2, run_table3,
-    run_table6, update_async_json, update_congestion_json, update_plan_lag_json,
-    update_scale_json, AsyncOpts, CongestionOpts, Fig6Opts, PlanLagOpts, ScaleOpts, ScenarioOpts,
-    TableOpts,
+    results_dir, run_adversary, run_async, run_congestion, run_fig5, run_fig6, run_fig7,
+    run_link_jitter, run_mid_agg_crash, run_plan_lag, run_poisson_churn, run_scale, run_table2,
+    run_table3, run_table6, update_adversary_json, update_async_json, update_congestion_json,
+    update_plan_lag_json, update_scale_json, AdversaryOpts, AsyncOpts, CongestionOpts, Fig6Opts,
+    PlanLagOpts, ScaleOpts, ScenarioOpts, TableOpts,
 };
 use gwtf::flow::mcmf::mcmf_min_cost;
 use gwtf::flow::FlowParams;
@@ -43,7 +43,7 @@ use gwtf::util::Rng;
 /// text and the `gwtf bench` error message (they drifted apart once
 /// already — new targets go here and nowhere else).
 const BENCH_TARGETS: &str = "table2|table3|table6|fig5|fig6|fig7|midagg|jitter|poissonchurn|\
-                             scale|planlag|congestion|async|all";
+                             scale|planlag|congestion|async|adversary|all";
 
 fn usage() -> String {
     format!(
@@ -68,6 +68,9 @@ fn usage() -> String {
              over a fan-in hotspot, writes BENCH_congestion.json)
             (async: --staleness \"1,2,4\" --churn P — bounded-staleness
              sweep vs the synchronous barrier, writes BENCH_async.json)
+            (adversary: --fractions \"0,0.1,0.25\" — Byzantine-relay sweep,
+             oblivious vs reputation-aware GWTF vs SWARM, writes
+             BENCH_adversary.json)
   join-demo                      Fig. 3 walkthrough"
     )
 }
@@ -365,6 +368,24 @@ fn bench(args: &Args) -> Result<()> {
         emit(&t, "async")?;
         let json_path = gwtf::experiments::async_json_path();
         update_async_json(&json_path, "full", &report)?;
+        println!("-> {}", json_path.display());
+        ran = true;
+    }
+    if target == "adversary" || target == "all" {
+        let fractions: Vec<f64> = args
+            .str_or("fractions", "0,0.1,0.25")
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow!("--fractions expects numbers in [0, 1]"))
+            })
+            .collect::<Result<_>>()?;
+        let aopts = AdversaryOpts { fractions, reps: reps.min(5), iters_per_rep: iters, seed };
+        let (t, report) = run_adversary(&aopts)?;
+        emit(&t, "adversary")?;
+        let json_path = gwtf::experiments::adversary_json_path();
+        update_adversary_json(&json_path, "full", &report)?;
         println!("-> {}", json_path.display());
         ran = true;
     }

@@ -50,6 +50,9 @@ pub struct CellAccumulator {
     /// Microbatches deferred past t=0 by the staleness admission rule
     /// per iteration.
     pub deferred: Vec<f64>,
+    /// §V-D memory-overload DENYs per iteration (adversarial DENY
+    /// storms and phantom-capacity bounces land here too).
+    pub denies: Vec<f64>,
     /// Kernel events dispatched per makespan second — the engine's
     /// event throughput for the iteration.
     pub events_per_s: Vec<f64>,
@@ -147,6 +150,11 @@ pub const COLUMNS: &[Column] = &[
         samples: |a| &a.deferred,
     },
     Column {
+        key: "denies",
+        label: "Memory-overload DENYs (#/iteration)",
+        samples: |a| &a.denies,
+    },
+    Column {
         key: "events_per_s",
         label: "Kernel event throughput (events/sec)",
         samples: |a| &a.events_per_s,
@@ -209,6 +217,7 @@ impl CellAccumulator {
         self.nic_util_max.push(m.nic_util_max);
         self.staleness_mean.push(m.staleness_mean);
         self.deferred.push(m.deferred as f64);
+        self.denies.push(m.denies as f64);
         if m.makespan_s > 0.0 {
             self.events_per_s.push(m.events as f64 / m.makespan_s);
         }
@@ -411,6 +420,7 @@ mod tests {
             nic_util_max: 0.75,
             staleness_mean: 1.5,
             deferred: 3,
+            denies: 5,
             ..metric(4, 100.0)
         };
         t.cell("poisson 10%", "gwtf").push(&m);
@@ -423,6 +433,7 @@ mod tests {
         assert!(md.contains("Peak NIC load"), "{md}");
         assert!(md.contains("Weight staleness"), "{md}");
         assert!(md.contains("Deferred microbatches"), "{md}");
+        assert!(md.contains("Memory-overload DENYs"), "{md}");
         assert!(md.contains("1.50 ± 0.00"), "{md}");
         assert!(md.contains("0.75 ± 0.00"), "{md}");
         assert!(md.contains("2.00 ± 0.00"), "{md}");
@@ -437,6 +448,7 @@ mod tests {
         assert!(csv.contains("poisson 10%,gwtf,nic_util_max,0.75"), "{csv}");
         assert!(csv.contains("poisson 10%,gwtf,staleness_mean,1.5"), "{csv}");
         assert!(csv.contains("poisson 10%,gwtf,deferred,3.0"), "{csv}");
+        assert!(csv.contains("poisson 10%,gwtf,denies,5.0"), "{csv}");
     }
 
     #[test]
@@ -462,6 +474,7 @@ mod tests {
             nic_util_max,
             staleness_mean,
             deferred,
+            denies,
             events_per_s,
             crit_compute_min,
             crit_tx_min,
@@ -487,6 +500,7 @@ mod tests {
             nic_util_max,
             staleness_mean,
             deferred,
+            denies,
             events_per_s,
             crit_compute_min,
             crit_tx_min,

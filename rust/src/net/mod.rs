@@ -6,14 +6,18 @@
 //! Kademlia-style DHT for peer discovery, and a gossip-based partial-view
 //! overlay ([`overlay`]/[`gossip`]) that gives every relay a bounded
 //! neighbor list for neighbor-scoped flow planning
-//! (DESIGN.md §Substitutions).
+//! (DESIGN.md §Substitutions).  [`reputation`] layers a peer trust
+//! book on top: observed-vs-promised service scores published at the
+//! gossip cadence and fed into the planner's edge costs.
 
 pub mod dht;
 pub mod gossip;
 pub mod overlay;
+pub mod reputation;
 pub mod topology;
 
 pub use dht::Dht;
 pub use gossip::{DirectedView, GossipConfig, NodeViews};
 pub use overlay::Overlay;
+pub use reputation::{ReputationBook, REP_ALPHA, REP_PENALTY_WEIGHT};
 pub use topology::{CongestionCache, Topology, TopologyConfig};

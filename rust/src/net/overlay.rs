@@ -73,6 +73,14 @@ pub struct Overlay {
     rng: Rng,
     /// Gossip rounds run so far (drives the shuffle cadence).
     pub rounds: u64,
+    /// Eclipse attackers (set from the adversary roster via
+    /// [`Overlay::set_eclipse_liars`]); empty = the lie hook is inert
+    /// and [`Overlay::gossip_round`] is exactly the honest protocol.
+    eclipse_liars: Vec<NodeId>,
+    /// `(liar, victim)` pairs from the most recent gossip round.  The
+    /// overlay has no clock, so the router reads these back and emits
+    /// the `EclipseLie` trace instants with its own timestamp.
+    last_lies: Vec<(NodeId, NodeId)>,
 }
 
 impl Overlay {
@@ -107,6 +115,8 @@ impl Overlay {
             alive: vec![true; n_nodes],
             rng,
             rounds: 0,
+            eclipse_liars: Vec::new(),
+            last_lies: Vec::new(),
         };
         let all_alive = vec![true; n_nodes];
         for &r in &ov.relays.clone() {
@@ -257,6 +267,7 @@ impl Overlay {
     /// evictions, and periodically shuffle a slot for view diversity.
     pub fn gossip_round(&mut self, truth: &[bool]) {
         self.rounds += 1;
+        self.last_lies.clear();
         let shuffle = self.cfg.shuffle_every > 0 && self.rounds % self.cfg.shuffle_every == 0;
         for i in 0..self.relays.len() {
             let r = self.relays[i];
@@ -276,6 +287,66 @@ impl Overlay {
                     }
                 } else if dir.record_failure(probe, self.cfg.suspicion_rounds) {
                     dir.refill(self.cfg.fanout, truth);
+                }
+            }
+        }
+        if !self.eclipse_liars.is_empty() {
+            self.apply_eclipse_lies(truth);
+        }
+    }
+
+    /// Mark `liars` as eclipse attackers: after every honest gossip
+    /// round they overwrite one active-view slot of each adjacent-stage
+    /// victim with themselves (the shuffle-lie attack collapsed to its
+    /// steady-state effect — each lie displaces a legitimate peer into
+    /// the passive pool, so repeated rounds keep the liar resident in
+    /// every neighbor's planning view).
+    pub fn set_eclipse_liars(&mut self, liars: Vec<NodeId>) {
+        self.eclipse_liars = liars;
+    }
+
+    /// `(liar, victim)` pairs manipulated in the most recent round.
+    pub fn last_lies(&self) -> &[(NodeId, NodeId)] {
+        &self.last_lies
+    }
+
+    /// Post-process a gossip round with the eclipse attackers' shuffle
+    /// lies.  RNG-free and purely view-local: the honest protocol above
+    /// consumes exactly the same randomness whether or not this runs,
+    /// so attaching liars never perturbs other relays' probe draws.
+    fn apply_eclipse_lies(&mut self, truth: &[bool]) {
+        let passive_cap = self.cfg.passive_size;
+        let liars = self.eclipse_liars.clone();
+        for liar in liars {
+            if !truth.get(liar.0).copied().unwrap_or(false) {
+                continue;
+            }
+            let Some(&s) = self.stage_of.get(&liar) else { continue };
+            // Stage s-1 relays look *forward* at the liar's stage; stage
+            // s+1 relays look *backward* at it.
+            let prev: Vec<NodeId> =
+                if s > 0 { self.stages[s - 1].clone() } else { Vec::new() };
+            let next: Vec<NodeId> =
+                if s + 1 < self.stages.len() { self.stages[s + 1].clone() } else { Vec::new() };
+            for (victims, fwd_dir) in [(prev, true), (next, false)] {
+                for victim in victims {
+                    if !truth.get(victim.0).copied().unwrap_or(false) {
+                        continue;
+                    }
+                    let Some(v) = self.views.get_mut(&victim) else { continue };
+                    let dir = if fwd_dir { &mut v.fwd } else { &mut v.bwd };
+                    if dir.active.is_empty() || dir.active.contains(&liar) {
+                        continue;
+                    }
+                    // The lie: the liar claims the last active slot,
+                    // demoting the legitimate peer to the passive pool.
+                    let last = dir.active.len() - 1;
+                    let demoted = std::mem::replace(&mut dir.active[last], liar);
+                    dir.suspicion.remove(&demoted);
+                    dir.suspicion.remove(&liar);
+                    dir.passive.retain(|&m| m != liar);
+                    dir.insert_passive(demoted, passive_cap);
+                    self.last_lies.push((liar, victim));
                 }
             }
         }
@@ -374,6 +445,45 @@ mod tests {
     fn build(per_stage: usize, fanout: usize, seed: u64) -> (Overlay, usize) {
         let (g, n) = graph(2, per_stage, 4);
         (Overlay::build(&g, n, GossipConfig { fanout, ..Default::default() }, seed), n)
+    }
+
+    #[test]
+    fn eclipse_liar_claims_one_slot_in_every_adjacent_view() {
+        // 4 relays per stage, fanout 2: views are strict subsets, so
+        // the liar is not automatically everywhere.
+        let (mut ov, n) = build(4, 2, 5);
+        let truth = vec![true; n];
+        let liar = ov.stages[1][0];
+        ov.set_eclipse_liars(vec![liar]);
+        ov.gossip_round(&truth);
+        assert!(!ov.last_lies().is_empty(), "some view lacked the liar");
+        for &victim in &ov.stages[0].clone() {
+            let v = ov.views_of(victim).unwrap();
+            assert!(v.fwd.active.contains(&liar), "stage-0 fwd view eclipsed");
+            assert!(v.fwd.active.len() <= 2, "lies replace, never grow, the view");
+        }
+        for &victim in &ov.stages[2].clone() {
+            assert!(ov.views_of(victim).unwrap().bwd.active.contains(&liar));
+        }
+        // Once resident, further rounds stop reporting lies for those
+        // views (the replace is idempotent).
+        ov.gossip_round(&truth);
+        for &victim in &ov.stages[0].clone() {
+            let lied_again =
+                ov.last_lies().iter().any(|&(l, v)| l == liar && v == victim);
+            let v = ov.views_of(victim).unwrap();
+            assert!(v.fwd.active.contains(&liar));
+            // A shuffle may rotate the liar out; only then is it re-lied in.
+            assert!(!lied_again || v.fwd.active.contains(&liar));
+        }
+    }
+
+    #[test]
+    fn no_liars_means_no_lie_buffer_growth() {
+        let (mut ov, n) = build(4, 2, 5);
+        let truth = vec![true; n];
+        ov.gossip_round(&truth);
+        assert!(ov.last_lies().is_empty());
     }
 
     #[test]

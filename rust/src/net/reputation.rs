@@ -1,0 +1,220 @@
+//! Peer reputation book (ISSUE 9 tentpole, part 2).
+//!
+//! Tracks observed-vs-promised service per peer and feeds an Eq. 1
+//! penalty term into the planner's cost closure, so reputation-aware
+//! GWTF routes around liars the way congestion-aware GWTF routes around
+//! hotspots.
+//!
+//! **Observation sites** (the same handler sites the critical-path
+//! tiles instrument):
+//!
+//! - `TrainingSim::send` credits each *delivered hop* with a 1.0 sample
+//!   for the receiver;
+//! - `handle_relay_compute`'s DENY branch charges a 0.0 sample to the
+//!   refusing relay (covers both genuine overload and DENY storms —
+//!   from the observer's seat they are indistinguishable, which is the
+//!   point);
+//! - `handle_relay_compute`'s success branch charges the
+//!   promised/observed compute-time ratio, so deliberate stragglers
+//!   earn scores near `1/factor`.
+//!
+//! **Update rule**: samples accumulate lock-free between gossip rounds;
+//! at each round [`ReputationBook::publish`] folds the pending mean
+//! into a per-peer EWMA `r' = (1 - α) r + α · mean`, clamped to [0, 1].
+//! Publishing at gossip cadence is the piggyback: scores ride the
+//! existing shuffle tick (`GwtfRouter::on_gossip`), costing zero extra
+//! messages in the simulated network.
+//!
+//! **Eq. 1 penalty**: [`ReputationBook::penalty`] returns
+//! `1 + w · ((1 - rᵢ) + (1 - rⱼ))` and the router multiplies it into
+//! the edge cost.  At the all-honest prior (r ≡ 1) the penalty is
+//! exactly `1.0`, and `x * 1.0` is bit-for-bit `x` for finite IEEE-754
+//! `x` — plus `publish` skips the store when the folded value equals
+//! the prior — so enabling reputation on a clean fleet reproduces the
+//! oblivious arm bit for bit.
+//!
+//! The book shares the `CongestionCache` concurrency pattern: a shared
+//! `Arc`, `AtomicU64` cells holding `f64::to_bits`, `Relaxed` ordering
+//! (single-threaded engine; atomics are for interior mutability through
+//! `&self`, not cross-thread contention).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::cost::NodeId;
+use crate::trace::{self, TraceKind, TraceRecord};
+
+/// EWMA smoothing factor for published scores.
+pub const REP_ALPHA: f64 = 0.2;
+
+/// Eq. 1 penalty weight `w`: a peer at score 0 multiplies its incident
+/// edge costs by `1 + w` (both endpoints dishonest: `1 + 2w`).
+pub const REP_PENALTY_WEIGHT: f64 = 4.0;
+
+/// Lock-free per-peer reputation scores with deferred (gossip-cadence)
+/// EWMA publication.
+pub struct ReputationBook {
+    alpha: f64,
+    weight: f64,
+    /// Published scores, `f64::to_bits`, one per node, init 1.0.
+    score: Vec<AtomicU64>,
+    /// Pending sample sums since the last publish, `f64::to_bits`.
+    pend_sum: Vec<AtomicU64>,
+    /// Pending sample counts since the last publish.
+    pend_n: Vec<AtomicU64>,
+}
+
+impl ReputationBook {
+    /// Fresh book over `n` nodes: everyone starts fully trusted (1.0).
+    pub fn new(n: usize, alpha: f64, weight: f64) -> Self {
+        ReputationBook {
+            alpha,
+            weight,
+            score: (0..n).map(|_| AtomicU64::new(1.0f64.to_bits())).collect(),
+            pend_sum: (0..n).map(|_| AtomicU64::new(0.0f64.to_bits())).collect(),
+            pend_n: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Published score of node `n` in [0, 1] (1 = fully trusted).
+    pub fn score(&self, n: NodeId) -> f64 {
+        f64::from_bits(self.score[n.0].load(Ordering::Relaxed))
+    }
+
+    /// Eq. 1 multiplicative penalty for edge `(i, j)`:
+    /// `1 + w · ((1 - rᵢ) + (1 - rⱼ))`.  Exactly 1.0 at the all-honest
+    /// prior, so `base * penalty` is bitwise-transparent there.
+    pub fn penalty(&self, i: NodeId, j: NodeId) -> f64 {
+        1.0 + self.weight * ((1.0 - self.score(i)) + (1.0 - self.score(j)))
+    }
+
+    fn push_sample(&self, n: NodeId, s: f64) {
+        let _ = self.pend_sum[n.0].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + s).to_bits())
+        });
+        self.pend_n[n.0].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A peer refused a microbatch (§V-D DENY): worst sample.
+    pub fn observe_deny(&self, n: NodeId) {
+        self.push_sample(n, 0.0);
+    }
+
+    /// A peer finished a compute hop: charge the promised/observed
+    /// service-time ratio (1.0 when on schedule, `1/factor` for a
+    /// deliberate straggler).
+    pub fn observe_service(&self, n: NodeId, promised_s: f64, observed_s: f64) {
+        let ratio = if observed_s > 0.0 { (promised_s / observed_s).clamp(0.0, 1.0) } else { 1.0 };
+        self.push_sample(n, ratio);
+    }
+
+    /// A hop was delivered to `n` over the network: full credit.
+    pub fn observe_delivery(&self, n: NodeId) {
+        self.push_sample(n, 1.0);
+    }
+
+    /// Fold pending samples into the published EWMA scores.  Called
+    /// from `GwtfRouter::on_gossip` so publication rides the existing
+    /// shuffle cadence.  Skips nodes with no pending samples and skips
+    /// the store when the fold is a fixed point (keeps the all-honest
+    /// prior bitwise-stable).  Emits a [`TraceKind::RepUpdate`] instant
+    /// per changed score when tracing is armed.
+    pub fn publish(&self, t: f64) {
+        for i in 0..self.score.len() {
+            let k = self.pend_n[i].swap(0, Ordering::Relaxed);
+            if k == 0 {
+                continue;
+            }
+            let sum = f64::from_bits(self.pend_sum[i].swap(0.0f64.to_bits(), Ordering::Relaxed));
+            let mean = (sum / k as f64).clamp(0.0, 1.0);
+            let old = f64::from_bits(self.score[i].load(Ordering::Relaxed));
+            if mean == old {
+                continue;
+            }
+            let new = ((1.0 - self.alpha) * old + self.alpha * mean).clamp(0.0, 1.0);
+            self.score[i].store(new.to_bits(), Ordering::Relaxed);
+            trace::emit(|| {
+                TraceRecord::instant(
+                    t,
+                    Some(NodeId(i)),
+                    None,
+                    // Score in thousandths: 873 = 0.873.
+                    TraceKind::RepUpdate { score_milli: (new * 1000.0) as u32 },
+                )
+            });
+        }
+    }
+
+    /// Number of peers tracked.
+    pub fn len(&self) -> usize {
+        self.score.len()
+    }
+
+    /// True when the book tracks no peers.
+    pub fn is_empty(&self) -> bool {
+        self.score.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_is_fully_trusted_and_penalty_is_identity() {
+        let book = ReputationBook::new(4, REP_ALPHA, REP_PENALTY_WEIGHT);
+        for i in 0..4 {
+            assert_eq!(book.score(NodeId(i)).to_bits(), 1.0f64.to_bits());
+        }
+        assert_eq!(book.penalty(NodeId(0), NodeId(1)).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn all_good_samples_keep_the_prior_bitwise_stable() {
+        let book = ReputationBook::new(2, REP_ALPHA, REP_PENALTY_WEIGHT);
+        for _ in 0..7 {
+            book.observe_delivery(NodeId(0));
+            book.observe_service(NodeId(0), 3.0, 3.0);
+        }
+        book.publish(10.0);
+        // mean == old == 1.0 → fixed-point skip, no EWMA rounding drift.
+        assert_eq!(book.score(NodeId(0)).to_bits(), 1.0f64.to_bits());
+        assert_eq!(book.penalty(NodeId(0), NodeId(1)).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn denies_drag_the_score_down_and_raise_the_penalty() {
+        let book = ReputationBook::new(2, REP_ALPHA, REP_PENALTY_WEIGHT);
+        book.observe_deny(NodeId(1));
+        book.publish(1.0);
+        let s1 = book.score(NodeId(1));
+        assert!((s1 - 0.8).abs() < 1e-12, "one publish: (1-α)·1 + α·0 = 0.8");
+        assert!(book.penalty(NodeId(0), NodeId(1)) > 1.0);
+        book.observe_deny(NodeId(1));
+        book.publish(2.0);
+        assert!(book.score(NodeId(1)) < s1, "repeated denies keep decaying");
+    }
+
+    #[test]
+    fn straggler_ratio_converges_toward_inverse_factor() {
+        let book = ReputationBook::new(1, REP_ALPHA, REP_PENALTY_WEIGHT);
+        for round in 0..200 {
+            book.observe_service(NodeId(0), 1.0, 2.5);
+            book.publish(round as f64);
+        }
+        let s = book.score(NodeId(0));
+        assert!((s - 0.4).abs() < 1e-6, "EWMA limit is the 1/2.5 ratio, got {s}");
+    }
+
+    #[test]
+    fn scores_stay_in_unit_interval_under_mixed_samples() {
+        let book = ReputationBook::new(1, REP_ALPHA, REP_PENALTY_WEIGHT);
+        for round in 0..50 {
+            book.observe_deny(NodeId(0));
+            book.observe_delivery(NodeId(0));
+            book.observe_service(NodeId(0), 5.0, 1.0); // early: ratio clamps at 1
+            book.publish(round as f64);
+            let s = book.score(NodeId(0));
+            assert!((0.0..=1.0).contains(&s), "score escaped [0,1]: {s}");
+        }
+    }
+}

@@ -1,0 +1,344 @@
+//! Adversarial relay behavior models (ISSUE 9 tentpole, part 1).
+//!
+//! A scenario may attach an [`AdversaryRoster`] assigning a [`Behavior`]
+//! to a subset of relays.  Four behaviors model the misbehavior taxonomy
+//! from the decentralized-training robustness literature (PAPERS.md):
+//!
+//! - **Free-riders** advertise phantom capacity: the planner sees an
+//!   inflated microbatch capacity (`cap * phantom_cap_factor`) and
+//!   over-subscribes the relay, but at runtime the relay only honors its
+//!   *true* capacity, so the surplus admissions bounce as DENYs.
+//! - **DENY-storm** relays accept microbatches at planning time and then
+//!   refuse every arrival (§V-D DENY) regardless of actual occupancy,
+//!   forcing the router's replacement machinery on every hop.
+//! - **Deliberate stragglers** inflate their service time by a constant
+//!   factor, emitted as a persistent [`Slowdown`] through the normal
+//!   [`EventSource`] channel so the engine's compute-factor scan picks
+//!   it up without any hot-path branching.
+//! - **Eclipse attackers** lie during gossip shuffles: after every
+//!   shuffle round they overwrite one active-view slot of each adjacent
+//!   victim with themselves (see `Overlay::apply_eclipse_lies`),
+//!   monopolizing the victim's planning view.
+//!
+//! The roster is *assignment-deterministic*: given the same stage layout
+//! and config it always picks the same relays (round-robin across
+//! stages, from the back of each stage's member list) and cycles the
+//! four behaviors in a fixed order.  No RNG is consumed, so attaching a
+//! roster never perturbs the churn/jitter draws of the legacy engine.
+//!
+//! **Zero-overhead guarantee**: when no roster is configured the
+//! `TrainingSim` fields stay `None`, the handler sites reduce to the
+//! legacy predicates, and the engine's source list is unchanged — the
+//! parity tests in `rust/tests/adversary_guard.rs` pin this bit for
+//! bit.  The defense side lives in [`crate::net::reputation`].
+
+use std::sync::Arc;
+
+use super::engine::{EventSource, Slowdown, WorldSchedule};
+use super::events::Time;
+use super::sources::SPAN_FACTOR;
+use crate::cost::NodeId;
+use crate::trace::{self, TraceKind, TraceRecord};
+
+/// Per-relay misbehavior model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Behavior {
+    /// Advertises `advertised_cap` microbatch slots to the planner while
+    /// only honoring the true capacity at runtime.
+    FreeRider {
+        /// Capacity the planner is shown (strictly above the true cap).
+        advertised_cap: usize,
+    },
+    /// Accepts microbatches at planning time, refuses every arrival.
+    DenyStorm,
+    /// Inflates compute service time by `factor` (> 1).
+    Straggler {
+        /// Multiplier applied to the relay's compute time.
+        factor: f64,
+    },
+    /// Lies in gossip shuffles to monopolize neighbors' views.
+    Eclipse,
+}
+
+/// Knobs for building an [`AdversaryRoster`]; attach via
+/// `ScenarioConfig::adversaries`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdversaryConfig {
+    /// Fraction of relays that misbehave (rounded to a global count).
+    pub fraction: f64,
+    /// Service-time multiplier for `Straggler` relays.
+    pub straggler_factor: f64,
+    /// Capacity multiplier advertised by `FreeRider` relays.
+    pub phantom_cap_factor: usize,
+}
+
+impl AdversaryConfig {
+    /// Default behavior mix at malicious fraction `fraction`.
+    pub fn with_fraction(fraction: f64) -> Self {
+        AdversaryConfig { fraction, straggler_factor: 2.5, phantom_cap_factor: 3 }
+    }
+}
+
+/// Immutable per-relay behavior table, shared by the sim handlers, the
+/// engine's event sources, and the overlay's eclipse hook.
+#[derive(Clone, Debug)]
+pub struct AdversaryRoster {
+    /// `behavior[n.0]` for every node (None = honest).
+    behavior: Vec<Option<Behavior>>,
+    /// True (pre-inflation) capacities, indexed by node id.
+    true_cap: Vec<usize>,
+}
+
+/// Fixed behavior cycle used by [`AdversaryRoster::assign`].
+const BEHAVIOR_CYCLE: usize = 4;
+
+impl AdversaryRoster {
+    /// Deterministically assign behaviors to `round(fraction * n_relays)`
+    /// relays, distributed round-robin across `stages` (taking members
+    /// from the back of each stage list so stage heads — often the ones
+    /// exercised hardest by ring relinking — stay honest).  `cap` is the
+    /// honest capacity vector *before* phantom inflation; the roster
+    /// records it so the runtime can enforce true capacities.
+    pub fn assign(
+        n: usize,
+        stages: &[Vec<NodeId>],
+        cap: &[usize],
+        cfg: &AdversaryConfig,
+    ) -> AdversaryRoster {
+        let n_relays: usize = stages.iter().map(|s| s.len()).sum();
+        let total = ((cfg.fraction * n_relays as f64).round() as usize).min(n_relays);
+        let mut behavior = vec![None; n];
+        let mut taken = vec![0usize; stages.len()];
+        let mut assigned = 0usize;
+        let mut stage_idx = 0usize;
+        while assigned < total {
+            let s = stage_idx % stages.len();
+            stage_idx += 1;
+            let members = &stages[s];
+            if taken[s] >= members.len() {
+                continue;
+            }
+            let r = members[members.len() - 1 - taken[s]];
+            taken[s] += 1;
+            let b = match assigned % BEHAVIOR_CYCLE {
+                0 => Behavior::DenyStorm,
+                1 => Behavior::Straggler { factor: cfg.straggler_factor },
+                2 => Behavior::FreeRider {
+                    advertised_cap: (cap[r.0] * cfg.phantom_cap_factor).max(cap[r.0] + 1),
+                },
+                _ => Behavior::Eclipse,
+            };
+            behavior[r.0] = Some(b);
+            assigned += 1;
+        }
+        AdversaryRoster { behavior, true_cap: cap.to_vec() }
+    }
+
+    /// Behavior of node `n`, if any.
+    pub fn behavior(&self, n: NodeId) -> Option<Behavior> {
+        self.behavior.get(n.0).copied().flatten()
+    }
+
+    /// True when `n` refuses every microbatch arrival.
+    pub fn is_deny_storm(&self, n: NodeId) -> bool {
+        matches!(self.behavior(n), Some(Behavior::DenyStorm))
+    }
+
+    /// Runtime admission capacity for node `n`: free-riders honor their
+    /// *true* capacity regardless of what `planned` (the possibly
+    /// phantom-inflated planner cap) says; everyone else honors the
+    /// planner's view.
+    pub fn runtime_cap(&self, n: NodeId, planned: usize) -> usize {
+        match self.behavior(n) {
+            Some(Behavior::FreeRider { .. }) => self.true_cap[n.0],
+            _ => planned,
+        }
+    }
+
+    /// Capacity node `n` advertises to the planner, when it lies.
+    pub fn advertised_cap(&self, n: NodeId) -> Option<usize> {
+        match self.behavior(n) {
+            Some(Behavior::FreeRider { advertised_cap }) => Some(advertised_cap),
+            _ => None,
+        }
+    }
+
+    /// All free-rider nodes (phantom-capacity advertisers).
+    pub fn free_riders(&self) -> Vec<NodeId> {
+        self.collect(|b| matches!(b, Behavior::FreeRider { .. }))
+    }
+
+    /// All deliberate stragglers with their service-time factors.
+    pub fn stragglers(&self) -> Vec<(NodeId, f64)> {
+        self.behavior
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| match b {
+                Some(Behavior::Straggler { factor }) => Some((NodeId(i), *factor)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All eclipse attackers (gossip-shuffle liars).
+    pub fn eclipse_nodes(&self) -> Vec<NodeId> {
+        self.collect(|b| matches!(b, Behavior::Eclipse))
+    }
+
+    /// True when no relay misbehaves (fraction rounded to zero).
+    pub fn is_empty(&self) -> bool {
+        self.behavior.iter().all(|b| b.is_none())
+    }
+
+    fn collect(&self, pred: impl Fn(&Behavior) -> bool) -> Vec<NodeId> {
+        self.behavior
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| match b {
+                Some(b) if pred(b) => Some(NodeId(i)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// [`EventSource`] that injects the roster's *schedulable* misbehavior
+/// each iteration: persistent slowdowns for deliberate stragglers and
+/// phantom-capacity advert trace instants for free-riders.  DENY storms
+/// and runtime capacity enforcement are handler-side policies (consulted
+/// in `handle_relay_compute`), and eclipse lies live in the overlay —
+/// neither needs scheduling here.  The source is RNG-free and emits the
+/// same schedule every iteration, so it composes with churn/jitter
+/// sources without perturbing their draws.
+pub struct AdversarySource {
+    roster: Arc<AdversaryRoster>,
+}
+
+impl AdversarySource {
+    /// Wrap a shared roster as an engine event source.
+    pub fn new(roster: Arc<AdversaryRoster>) -> Self {
+        AdversarySource { roster }
+    }
+}
+
+impl EventSource for AdversarySource {
+    fn name(&self) -> &str {
+        "adversaries"
+    }
+
+    fn sample(&mut self, _iter: usize, horizon: Time) -> WorldSchedule {
+        let mut ws = WorldSchedule::default();
+        if trace::enabled() {
+            for r in self.roster.free_riders() {
+                let adv = self.roster.advertised_cap(r).unwrap_or(0);
+                trace::emit(|| {
+                    TraceRecord::instant(
+                        0.0,
+                        Some(r),
+                        None,
+                        TraceKind::PhantomAdvert { advertised: adv },
+                    )
+                });
+            }
+        }
+        for (node, factor) in self.roster.stragglers() {
+            ws.slowdowns.push(Slowdown {
+                node,
+                from: 0.0,
+                until: horizon * SPAN_FACTOR,
+                factor,
+            });
+        }
+        ws
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stages4x6() -> Vec<Vec<NodeId>> {
+        // 6 stages x 4 relays, node ids 2..26 (0/1 reserved for data).
+        (0..6).map(|s| (0..4).map(|k| NodeId(2 + s * 4 + k)).collect()).collect()
+    }
+
+    #[test]
+    fn fraction_zero_assigns_nobody() {
+        let stages = stages4x6();
+        let cap = vec![4usize; 26];
+        let roster =
+            AdversaryRoster::assign(26, &stages, &cap, &AdversaryConfig::with_fraction(0.0));
+        assert!(roster.is_empty());
+        assert!(roster.free_riders().is_empty());
+        assert!(roster.stragglers().is_empty());
+        assert!(roster.eclipse_nodes().is_empty());
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_counts_match_fraction() {
+        let stages = stages4x6();
+        let cap = vec![4usize; 26];
+        let cfg = AdversaryConfig::with_fraction(0.25);
+        let a = AdversaryRoster::assign(26, &stages, &cap, &cfg);
+        let b = AdversaryRoster::assign(26, &stages, &cap, &cfg);
+        let count =
+            |r: &AdversaryRoster| (0..26).filter(|&i| r.behavior(NodeId(i)).is_some()).count();
+        // 25% of 24 relays = 6 adversaries; byte-identical across builds.
+        assert_eq!(count(&a), 6);
+        for i in 0..26 {
+            assert_eq!(a.behavior(NodeId(i)), b.behavior(NodeId(i)));
+        }
+        // The fixed cycle covers all four behaviors at this count.
+        assert!(!a.free_riders().is_empty());
+        assert!(!a.stragglers().is_empty());
+        assert!(!a.eclipse_nodes().is_empty());
+        assert!((0..26).any(|i| a.is_deny_storm(NodeId(i))));
+        // Round-robin: no stage hosts more than its share (6 over 6
+        // stages = exactly one each).
+        for members in &stages {
+            let hit = members.iter().filter(|r| a.behavior(**r).is_some()).count();
+            assert_eq!(hit, 1);
+        }
+    }
+
+    #[test]
+    fn free_riders_honor_true_cap_at_runtime() {
+        let stages = stages4x6();
+        let cap = vec![4usize; 26];
+        let cfg = AdversaryConfig::with_fraction(0.25);
+        let roster = AdversaryRoster::assign(26, &stages, &cap, &cfg);
+        for r in roster.free_riders() {
+            let adv = roster.advertised_cap(r).unwrap();
+            assert_eq!(adv, 12, "cap 4 x phantom factor 3");
+            // Planner sees 12, runtime honors the true 4.
+            assert_eq!(roster.runtime_cap(r, adv), 4);
+        }
+        // Honest relays honor the planner's number verbatim.
+        let honest = (2..26).map(NodeId).find(|&n| roster.behavior(n).is_none()).unwrap();
+        assert_eq!(roster.runtime_cap(honest, 7), 7);
+    }
+
+    #[test]
+    fn source_emits_identical_slowdowns_every_iteration() {
+        let stages = stages4x6();
+        let cap = vec![4usize; 26];
+        let roster = Arc::new(AdversaryRoster::assign(
+            26,
+            &stages,
+            &cap,
+            &AdversaryConfig::with_fraction(0.25),
+        ));
+        let mut src = AdversarySource::new(roster.clone());
+        let a = src.sample(0, 100.0);
+        let b = src.sample(5, 100.0);
+        assert_eq!(a.slowdowns.len(), roster.stragglers().len());
+        assert_eq!(a.slowdowns.len(), b.slowdowns.len());
+        for (x, y) in a.slowdowns.iter().zip(&b.slowdowns) {
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.factor.to_bits(), y.factor.to_bits());
+            assert_eq!(x.until.to_bits(), y.until.to_bits());
+            assert!(x.factor > 1.0);
+        }
+        assert!(a.crashes.is_empty() && a.rejoins.is_empty() && a.joins.is_empty());
+    }
+}

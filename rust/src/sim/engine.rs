@@ -347,11 +347,19 @@ impl Engine {
     pub fn from_scenario(sc: &Scenario, seed: u64) -> Engine {
         let mut sim = TrainingSim::new(sc.topo.clone(), sc.sim_cfg);
         sim.set_cost_cache(sc.cost_cache.clone());
+        sim.set_adversary(sc.adversary.clone());
+        sim.set_reputation(sc.reputation.clone());
         let mut engine = Engine::new(sim, sc.churn.clone(), seed);
         if sc.cfg.overlay_fanout.is_some() {
             engine.add_source(Box::new(super::sources::GossipCadenceSource::new(
                 super::scenario::GOSSIP_PERIOD_S,
             )));
+        }
+        if let Some(roster) = &sc.adversary {
+            // Schedulable misbehavior (straggler slowdowns, phantom
+            // advert traces); roster-free scenarios grow no source, so
+            // the legacy bit-for-bit guarantees hold.
+            engine.add_source(Box::new(super::adversary::AdversarySource::new(roster.clone())));
         }
         if let Some(rtt_s) = sc.cfg.plan_round_rtt_s {
             engine.set_plan_round_rtt(rtt_s);

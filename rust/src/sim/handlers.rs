@@ -120,14 +120,27 @@ impl TrainingSim {
         let compute =
             if is_fwd { self.fwd_compute_s(node, t) } else { self.bwd_compute_s(node, t) };
 
+        // Adversary policies (None = every relay honest and both
+        // lookups fold to the legacy constants below).
+        let roster = self.adversary.as_deref();
+        let storm = roster.map_or(false, |a| a.is_deny_storm(node));
+        let node_cap = roster.map_or(prob.cap[node.0], |a| a.runtime_cap(node, prob.cap[node.0]));
+
         // Memory overload (§V-D DENY): a forward arrival at a node whose
         // residency budget is exhausted cannot be accepted — the upstream
         // node reroutes to a peer with spare memory or defers the batch.
         // Capacity-aware planning (GWTF) never trips this; SWARM's
-        // capacity-oblivious wiring does.
-        if is_fwd && self.is_up(node, t) && inflight[node.0] >= prob.cap[node.0] {
+        // capacity-oblivious wiring does.  A DENY-storm relay refuses
+        // every forward arrival regardless of occupancy, and a
+        // free-rider enforces its *true* capacity rather than the
+        // phantom one the planner saw.
+        if is_fwd && self.is_up(node, t) && (storm || inflight[node.0] >= node_cap) {
             metrics.denies += 1;
-            trace::emit(|| TraceRecord::instant(t, Some(node), Some(mi), TraceKind::Deny));
+            if let Some(book) = &self.reputation {
+                book.observe_deny(node);
+            }
+            let kind = if storm { TraceKind::DenyStorm } else { TraceKind::Deny };
+            trace::emit(|| TraceRecord::instant(t, Some(node), Some(mi), kind));
             mbs[mi].overload_reroutes += 1;
             mbs[mi].denied.push((hop, node));
             if mbs[mi].overload_reroutes > 4 * n_stages {
@@ -145,8 +158,15 @@ impl TrainingSim {
             // this stage whose peer has observable residency headroom
             // again drop out of the exclusion set — re-probing a peer
             // that freed up would succeed, and one that refilled would
-            // just DENY again and re-enter the set.
-            mbs[mi].denied.retain(|&(h, m)| h != hop || inflight[m.0] >= prob.cap[m.0]);
+            // just DENY again and re-enter the set.  DENY-storm peers
+            // never free up, and a free-rider's observable headroom is
+            // against its true capacity — so adversarial exclusions
+            // persist exactly as long as the misbehavior does.
+            mbs[mi].denied.retain(|&(h, m)| {
+                h != hop
+                    || roster.map_or(false, |a| a.is_deny_storm(m))
+                    || inflight[m.0] >= roster.map_or(prob.cap[m.0], |a| a.runtime_cap(m, prob.cap[m.0]))
+            });
             let denied = &mbs[mi].denied;
             let candidates: Vec<NodeId> = prob.graph.stages[hop]
                 .iter()
@@ -180,6 +200,15 @@ impl TrainingSim {
             if start < death && end <= death {
                 // Success: book the slot, forward the payload.
                 slots[node.0].book(start, end);
+                if let Some(book) = &self.reputation {
+                    // Charge the promised/observed compute-time ratio:
+                    // the promise is the profile the relay advertised
+                    // (un-slowed), the observation includes deliberate
+                    // straggling, so liars score near 1/factor.
+                    let promised = self.topo.profiles[node.0].compute_s
+                        * if is_fwd { 1.0 } else { self.cfg.bwd_factor };
+                    book.observe_service(node, promised, compute);
+                }
                 mbs[mi].compute_spent += compute;
                 mbs[mi].crit.queue_s += start - t;
                 mbs[mi].crit.compute_s += compute;

@@ -30,6 +30,9 @@
 //!   configuration, metrics, the physical model, and the
 //!   [`training::VersionedWeights`] store behind bounded-staleness
 //!   asynchronous aggregation.
+//! - [`adversary`] — misbehaving-relay models (free-riders, DENY
+//!   storms, deliberate stragglers, eclipse attackers) attached per
+//!   scenario; zero-overhead and bit-for-bit inert when unconfigured.
 //! - [`scenario`] — builders for the paper's experiment setups.
 //!
 //! Every layer also emits [`crate::trace`] records (spans for compute /
@@ -38,6 +41,7 @@
 //! emission closures are never evaluated and the simulation is
 //! bit-for-bit identical to a build without tracing.
 
+pub mod adversary;
 pub mod churn;
 pub mod churn_process;
 pub mod engine;
@@ -47,6 +51,7 @@ pub mod scenario;
 pub mod sources;
 pub mod training;
 
+pub use adversary::{AdversaryConfig, AdversaryRoster, AdversarySource, Behavior};
 pub use churn::{ChurnModel, ChurnProcess};
 pub use churn_process::PoissonChurn;
 pub use engine::{

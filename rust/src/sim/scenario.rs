@@ -10,9 +10,12 @@ use std::sync::Arc;
 
 use crate::cost::{ActivationProfile, LinkParams, NicConfig, NodeId, NodeProfile};
 use crate::flow::graph::{FlowProblem, StageGraph};
-use crate::net::{CongestionCache, Topology, TopologyConfig};
+use crate::net::{
+    CongestionCache, ReputationBook, Topology, TopologyConfig, REP_ALPHA, REP_PENALTY_WEIGHT,
+};
 use crate::util::Rng;
 
+use super::adversary::{AdversaryConfig, AdversaryRoster};
 use super::churn::{ChurnModel, ChurnProcess};
 use super::engine::Engine;
 use super::training::TrainingSimConfig;
@@ -88,6 +91,19 @@ pub struct ScenarioConfig {
     /// the global §V-E barrier with rolling per-stage aggregation events;
     /// `None`/`Some(0)` keep the synchronous simulator bit for bit.
     pub staleness_bound: Option<usize>,
+    /// Misbehaving-relay models ([`crate::sim::adversary`]):
+    /// `Some(cfg)` assigns the fixed behavior mix (DENY storm /
+    /// straggler / free-rider / eclipse) to `round(fraction x
+    /// n_relays)` relays at build time.  `None` (the default) keeps
+    /// every relay honest — no roster, no extra engine source,
+    /// bit-for-bit the legacy simulator.
+    pub adversaries: Option<AdversaryConfig>,
+    /// Reputation-aware routing ([`crate::net::reputation`]): service
+    /// observations charged at the handler sites, scores published at
+    /// the gossip cadence, and an Eq. 1 penalty folded into the
+    /// planner's cost closure.  Off by default; on a clean fleet the
+    /// all-honest prior keeps the closure bitwise-transparent.
+    pub reputation: bool,
     pub seed: u64,
 }
 
@@ -113,6 +129,8 @@ impl ScenarioConfig {
             deadline_factor: None,
             iter_estimate_s: None,
             staleness_bound: None,
+            adversaries: None,
+            reputation: false,
             seed,
         }
     }
@@ -194,6 +212,25 @@ impl ScenarioConfig {
             ..Self::table2(true, 0.0, seed)
         }
     }
+
+    /// Adversarial setting (`gwtf bench adversary`): Table II's
+    /// homogeneous shape widened to 24 relays over 6 stages (4 per
+    /// stage, cap 4 each — demand 8/stage leaves honest headroom even
+    /// at f = 25%), the gossip overlay attached (eclipse lies need
+    /// views to poison), no churn, and `fraction` of the relays
+    /// running the fixed behavior mix.  `reputation` toggles the
+    /// defense: oblivious GWTF replans into the same liars every
+    /// iteration; the reputation-aware arm prices them out after the
+    /// first gossip publish.
+    pub fn adversary(fraction: f64, reputation: bool, seed: u64) -> Self {
+        ScenarioConfig {
+            n_relays: 24,
+            overlay_fanout: Some(DEFAULT_OVERLAY_FANOUT),
+            adversaries: Some(AdversaryConfig::with_fraction(fraction)),
+            reputation,
+            ..Self::table2(true, 0.0, seed)
+        }
+    }
 }
 
 /// Default gossip-overlay view size per adjacent stage (`k`).
@@ -217,6 +254,13 @@ pub struct Scenario {
     /// `congestion_aware_planning` is set (None otherwise); the engine
     /// hands it to the simulator so the booking path can invalidate.
     pub cost_cache: Option<Arc<CongestionCache>>,
+    /// Misbehaving-relay roster shared by the simulator, the engine's
+    /// adversary source and the overlay's eclipse hook (None = all
+    /// honest — the legacy engine, bit for bit).
+    pub adversary: Option<Arc<AdversaryRoster>>,
+    /// Shared reputation book when reputation-aware routing is on
+    /// (None = oblivious planning; no observation code runs).
+    pub reputation: Option<Arc<ReputationBook>>,
     pub relays: Vec<NodeId>,
     pub data_nodes: Vec<NodeId>,
 }
@@ -304,6 +348,32 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
         }
     }
 
+    // Adversarial roster: deterministic assignment over the final stage
+    // layout and honest capacities.  Free-riders advertise phantom
+    // capacity, so the *planner's* cap vector is inflated here while
+    // the roster keeps the true values for runtime enforcement in
+    // `handle_relay_compute`.  A fraction that rounds to zero leaves
+    // the scenario roster-free (the legacy engine, bit for bit).
+    let adversary = match &cfg.adversaries {
+        Some(acfg) if acfg.fraction > 0.0 => {
+            let roster = AdversaryRoster::assign(n, &stages, &cap, acfg);
+            if roster.is_empty() {
+                None
+            } else {
+                for r in roster.free_riders() {
+                    if let Some(adv) = roster.advertised_cap(r) {
+                        cap[r.0] = adv;
+                    }
+                }
+                Some(Arc::new(roster))
+            }
+        }
+        _ => None,
+    };
+    let reputation = cfg
+        .reputation
+        .then(|| Arc::new(ReputationBook::new(n, REP_ALPHA, REP_PENALTY_WEIGHT)));
+
     // Activation payload (GPT ships more bytes — paper §VI).
     let act = match cfg.family {
         Family::Llama => ActivationProfile::paper_llama(),
@@ -354,7 +424,18 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
         staleness_bound: cfg.staleness_bound,
     };
 
-    Scenario { cfg: cfg.clone(), topo, prob, churn, sim_cfg, cost_cache, relays, data_nodes }
+    Scenario {
+        cfg: cfg.clone(),
+        topo,
+        prob,
+        churn,
+        sim_cfg,
+        cost_cache,
+        adversary,
+        reputation,
+        relays,
+        data_nodes,
+    }
 }
 
 #[cfg(test)]
@@ -521,6 +602,50 @@ mod tests {
             unlimited.prob.cost(data, hub).to_bits(),
             blind.prob.cost(data, hub).to_bits()
         );
+    }
+
+    #[test]
+    fn adversary_scenario_assigns_roster_and_inflates_phantom_caps() {
+        let sc = build(&ScenarioConfig::adversary(0.25, true, 13));
+        assert_eq!(sc.relays.len(), 24);
+        let roster = sc.adversary.as_ref().expect("roster attached at f=25%");
+        let book = sc.reputation.as_ref().expect("reputation book on");
+        assert_eq!(book.len(), sc.topo.n());
+        let flagged =
+            sc.relays.iter().filter(|&&r| roster.behavior(r).is_some()).count();
+        assert_eq!(flagged, 6, "round(0.25 * 24)");
+        // Planner sees the phantom caps; the roster keeps the truth.
+        for r in roster.free_riders() {
+            let adv = roster.advertised_cap(r).unwrap();
+            assert_eq!(sc.prob.cap[r.0], adv);
+            assert!(roster.runtime_cap(r, adv) < adv);
+        }
+        // Data nodes never misbehave.
+        for &d in &sc.data_nodes {
+            assert!(roster.behavior(d).is_none());
+        }
+    }
+
+    #[test]
+    fn adversary_fraction_zero_keeps_the_legacy_build() {
+        let clean = build(&ScenarioConfig::adversary(0.0, false, 13));
+        assert!(clean.adversary.is_none(), "fraction 0 rounds to no roster");
+        assert!(clean.reputation.is_none());
+        // Identical caps/topology to the same config without the knob.
+        let mut cfg = ScenarioConfig::adversary(0.0, false, 13);
+        cfg.adversaries = None;
+        let plain = build(&cfg);
+        assert_eq!(clean.prob.cap, plain.prob.cap);
+        assert_eq!(clean.topo.region, plain.topo.region);
+    }
+
+    #[test]
+    fn reputation_without_adversaries_is_allowed() {
+        let mut cfg = ScenarioConfig::table2(true, 0.0, 5);
+        cfg.reputation = true;
+        let sc = build(&cfg);
+        assert!(sc.adversary.is_none());
+        assert!(sc.reputation.is_some());
     }
 
     #[test]

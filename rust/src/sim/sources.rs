@@ -21,7 +21,9 @@ use super::events::Time;
 
 /// How far past the iteration estimate a source's windows must reach so
 /// straggling microbatches (deadline factor <= 4x) stay covered.
-const SPAN_FACTOR: f64 = 4.0;
+/// `pub(crate)` so the adversary layer's persistent slowdowns cover the
+/// same span as the built-in straggler source.
+pub(crate) const SPAN_FACTOR: f64 = 4.0;
 
 /// Piecewise-constant global link-latency jitter: every `window_s` of
 /// virtual time a fresh delay multiplier is drawn from

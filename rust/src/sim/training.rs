@@ -72,10 +72,11 @@ use std::sync::Arc;
 
 use crate::cost::NodeId;
 use crate::flow::graph::{FlowPath, FlowProblem};
-use crate::net::{CongestionCache, Topology};
+use crate::net::{CongestionCache, ReputationBook, Topology};
 use crate::trace::{self, TraceKind, TraceRecord};
 use crate::util::Rng;
 
+use super::adversary::AdversaryRoster;
 use super::churn::{ChurnEvents, ChurnProcess};
 use super::engine::{JitterWindow, Slowdown, WorldSchedule};
 use super::events::{NicQueues, Time};
@@ -497,6 +498,13 @@ pub struct TrainingSim {
     /// Planner-side congestion memo to invalidate from the booking path
     /// (None when the scenario plans contention-blind).
     cost_cache: Option<Arc<CongestionCache>>,
+    /// Misbehaving-relay roster consulted by the admission predicate in
+    /// `handle_relay_compute` (None = every relay honest; the predicate
+    /// reduces to the legacy form).
+    pub(crate) adversary: Option<Arc<AdversaryRoster>>,
+    /// Peer reputation book charged at the handler observation sites
+    /// (None = reputation off; no observation code runs).
+    pub(crate) reputation: Option<Arc<ReputationBook>>,
     /// Virtual availability window per node: usable while
     /// `birth_at <= t < death_at`.  A node alive at iteration start has
     /// `birth_at = 0`; one joining mid-iteration gets its join instant;
@@ -598,6 +606,8 @@ impl TrainingSim {
             topo,
             cfg,
             cost_cache: None,
+            adversary: None,
+            reputation: None,
             death_at: vec![f64::INFINITY; n],
             birth_at: vec![0.0; n],
             jitter: Vec::new(),
@@ -611,6 +621,18 @@ impl TrainingSim {
     /// invalidate the (endpoint, link-class) generations it dirties.
     pub fn set_cost_cache(&mut self, cache: Option<Arc<CongestionCache>>) {
         self.cost_cache = cache;
+    }
+
+    /// Attach the scenario's misbehaving-relay roster (None = all
+    /// honest; the handler predicates reduce to their legacy forms).
+    pub fn set_adversary(&mut self, roster: Option<Arc<AdversaryRoster>>) {
+        self.adversary = roster;
+    }
+
+    /// Attach the shared reputation book so the handler sites charge
+    /// delivery / DENY / service-ratio observations.
+    pub fn set_reputation(&mut self, book: Option<Arc<ReputationBook>>) {
+        self.reputation = book;
     }
 
     /// The running iteration-length estimate (the crash-instant and
@@ -701,6 +723,11 @@ impl TrainingSim {
                 cache.invalidate(from, same);
                 cache.invalidate(to, same);
             }
+        }
+        if let Some(book) = &self.reputation {
+            // Delivered hop: full credit for the receiving peer (the
+            // EWMA denominator that keeps honest busy relays near 1.0).
+            book.observe_delivery(to);
         }
         metrics.comm_s += dt;
         metrics.queue_s += start - t;

@@ -82,6 +82,18 @@ pub enum TraceKind {
     Deny,
     /// Microbatch dropped (deadline or no candidate; instant).
     Drop,
+    /// Free-rider advertised phantom capacity to the planner (instant;
+    /// `advertised` = the lied slot count).
+    PhantomAdvert { advertised: usize },
+    /// DENY-storm relay refused a microbatch it had accepted at
+    /// planning time (instant; the adversarial flavor of [`Deny`]).
+    DenyStorm,
+    /// Reputation book published a changed peer score (instant;
+    /// `score_milli` = the new score in thousandths).
+    RepUpdate { score_milli: u32 },
+    /// Eclipse attacker overwrote a victim's gossip view slot (instant;
+    /// `node` = the liar, `mb` = the victim's node id).
+    EclipseLie,
 }
 
 impl TraceKind {
@@ -111,6 +123,10 @@ impl TraceKind {
             TraceKind::RecoveryWait => "recovery_wait",
             TraceKind::Deny => "deny",
             TraceKind::Drop => "drop",
+            TraceKind::PhantomAdvert { .. } => "phantom_advert",
+            TraceKind::DenyStorm => "deny_storm",
+            TraceKind::RepUpdate { .. } => "rep_update",
+            TraceKind::EclipseLie => "eclipse_lie",
         }
     }
 }

@@ -1,0 +1,179 @@
+//! Test-sized adversarial-relay sweep + acceptance gate (ISSUE 9).
+//!
+//! Runs the adversary sweep (Table II shape, deterministic Byzantine
+//! roster: free-riders, DENY storms, deliberate stragglers, eclipse
+//! liars) with tiny rep/iteration counts, asserts the tentpole's
+//! acceptance properties —
+//!
+//! - **transparency at f = 0**: with no adversaries the reputation book
+//!   never leaves its all-honest prior and the Eq. 1 penalty is exactly
+//!   1.0, so the oblivious and reputation-aware arms measure bit for
+//!   bit the same numbers,
+//! - **retention under attack**: at f = 25% the reputation-aware arm
+//!   keeps at least 70% of its clean-fleet goodput (re-plans price
+//!   liars out of the chains), while the oblivious arm — which keeps
+//!   planning into phantom capacity and straggler compute — retains
+//!   strictly less, and
+//! - **monotone damage**: goodput is non-increasing in the adversarial
+//!   fraction for both GWTF arms (adversaries only ever remove service)
+//!
+//! — and maintains the `test_sized` profile of `BENCH_adversary.json`
+//! at the repo root (capture on first run / `GWTF_UPDATE_ADVERSARY=1`,
+//! then a 2x regression gate on the oblivious clean-fleet makespan).
+//! The full-size sweep is `gwtf bench adversary`, which fills the
+//! `full` profile of the same file.  CI runs this test in the guard
+//! step and the `arm-baselines` job commits the captured profile on
+//! `main`.
+
+use gwtf::coordinator::GwtfRouter;
+use gwtf::experiments::{
+    adversary_json_path, read_adversary_profile, run_adversary, update_adversary_json,
+    AdversaryOpts,
+};
+use gwtf::flow::FlowParams;
+use gwtf::sim::scenario::{build, ScenarioConfig};
+use gwtf::sim::AdversaryConfig;
+
+fn opts() -> AdversaryOpts {
+    AdversaryOpts { fractions: vec![0.0, 0.10, 0.25], reps: 2, iters_per_rep: 4, seed: 7 }
+}
+
+/// The transparency pin the whole subsystem hangs off: switching the
+/// knobs on with nothing to observe (`fraction: 0.0` assigns nobody,
+/// the reputation book never leaves its all-honest prior) must
+/// reproduce the legacy engine bit for bit — same event order, same
+/// float ops, same metrics words.
+#[test]
+fn no_adversaries_plus_reputation_knob_is_bit_for_bit_legacy() {
+    let seed = 11;
+    let legacy = build(&ScenarioConfig::table2(true, 0.2, seed));
+    let mut knobbed_cfg = ScenarioConfig::table2(true, 0.2, seed);
+    knobbed_cfg.adversaries = Some(AdversaryConfig::with_fraction(0.0));
+    knobbed_cfg.reputation = true;
+    let knobbed = build(&knobbed_cfg);
+    assert!(knobbed.adversary.is_none(), "fraction 0.0 must assign nobody");
+    assert!(knobbed.reputation.is_some(), "the book exists, at its prior");
+
+    let mut legacy_router = GwtfRouter::from_scenario(&legacy, FlowParams::default(), seed ^ 0xA);
+    let mut knobbed_router =
+        GwtfRouter::from_scenario(&knobbed, FlowParams::default(), seed ^ 0xA);
+    let mut legacy_engine = legacy.engine(seed ^ 0x1);
+    let mut knobbed_engine = knobbed.engine(seed ^ 0x1);
+    for i in 0..3 {
+        let a = legacy_engine.step(&legacy.prob, &mut legacy_router);
+        let b = knobbed_engine.step(&knobbed.prob, &mut knobbed_router);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "iter {i}: makespan");
+        assert_eq!(a.comm_s.to_bits(), b.comm_s.to_bits(), "iter {i}: comm");
+        assert_eq!(a.completed, b.completed, "iter {i}: completed");
+        assert_eq!(a.denies, b.denies, "iter {i}: denies");
+        assert_eq!(a.events, b.events, "iter {i}: kernel events");
+    }
+}
+
+#[test]
+fn reputation_routing_survives_adversaries_where_oblivious_bleeds() {
+    // Keep a bounded event ring armed: if any gate below fails, the tail
+    // of the simulated timeline lands on stderr + bench_results/.
+    let _flight = gwtf::trace::flight::arm_flight_recorder("adversary_guard", 4096);
+    let (table, report) = run_adversary(&opts()).unwrap();
+
+    // Every (fraction, system) cell produced samples and completed work.
+    assert_eq!(table.cells.len(), 3 * 3, "3 fractions x 3 systems");
+    for ((row, col), acc) in &table.cells {
+        assert_eq!(acc.throughput.len(), 2 * 4, "{row}/{col}: 2 reps x 4 iterations");
+        assert!(acc.throughput.iter().sum::<f64>() > 0.0, "{row}/{col} completed nothing");
+    }
+
+    // Acceptance 0 (transparency): with no adversaries the reputation
+    // book stays at its all-honest prior, its publish is a fixed-point
+    // skip and the penalty multiplies every edge by exactly 1.0 — the
+    // two GWTF arms must agree bit for bit, not just approximately.
+    let obl_clean = report.case(0, "gwtf").expect("oblivious clean-fleet case");
+    let rep_clean = report.case(0, "gwtf-rep").expect("reputation clean-fleet case");
+    assert_eq!(
+        obl_clean.makespan_total_s.to_bits(),
+        rep_clean.makespan_total_s.to_bits(),
+        "reputation must be bitwise-transparent on a clean fleet"
+    );
+    assert_eq!(obl_clean.throughput_total, rep_clean.throughput_total);
+    assert_eq!(obl_clean.denies_total, rep_clean.denies_total);
+
+    // Acceptance 1 (retention): at f = 25% the reputation-aware arm
+    // keeps >= 70% of its clean-fleet goodput, and the oblivious arm
+    // retains strictly less — the whole point of charging observed
+    // service into the Eq. 1 penalty.
+    let rep_attacked = report.case(25, "gwtf-rep").expect("reputation f=25% case");
+    let obl_attacked = report.case(25, "gwtf").expect("oblivious f=25% case");
+    let rep_retention = rep_attacked.goodput() / rep_clean.goodput();
+    let obl_retention = obl_attacked.goodput() / obl_clean.goodput();
+    assert!(
+        rep_retention >= 0.70,
+        "reputation-aware GWTF must retain >= 70% of clean goodput at f=25%: \
+         retained {:.1}% ({} vs {})",
+        rep_retention * 100.0,
+        rep_attacked.goodput(),
+        rep_clean.goodput()
+    );
+    assert!(
+        obl_retention < rep_retention,
+        "oblivious GWTF must bleed strictly more goodput than the reputation-aware \
+         arm at f=25%: oblivious retained {:.1}%, reputation {:.1}%",
+        obl_retention * 100.0,
+        rep_retention * 100.0
+    );
+
+    // The attack is visible in the DENY column: storm relays refuse
+    // unconditionally and phantom capacity bounces admissions.
+    assert!(obl_attacked.denies_total > 0.0, "f=25% must show DENY traffic");
+
+    // Acceptance 2 (monotone damage): adversaries only ever remove
+    // service, so goodput must not rise with f for either GWTF arm.
+    // The 2% slack covers scheduling anomalies when re-routes shift
+    // event order between fractions.
+    for sys in ["gwtf", "gwtf-rep"] {
+        let arms: Vec<_> =
+            [0, 10, 25].iter().map(|&p| report.case(p, sys).expect("arm")).collect();
+        for w in arms.windows(2) {
+            assert!(
+                w[1].goodput() <= w[0].goodput() / 0.98,
+                "{sys}: goodput rose with the adversarial fraction: {} @ {}% vs {} @ {}%",
+                w[0].goodput(),
+                w[0].fraction_pct,
+                w[1].goodput(),
+                w[1].fraction_pct
+            );
+        }
+    }
+
+    // Baseline: capture when null/missing (or on explicit request),
+    // otherwise gate the oblivious clean-fleet total makespan at 2x
+    // (deterministic per seed; the headroom covers libm-level drift
+    // across machines).
+    let path = adversary_json_path();
+    let update = std::env::var("GWTF_UPDATE_ADVERSARY").is_ok();
+    match (update, read_adversary_profile(&path, "test_sized")) {
+        (false, Some(baseline)) => {
+            let base = baseline.case(0, "gwtf").expect("baseline clean-fleet arm");
+            assert!(
+                obl_clean.makespan_total_s <= 2.0 * base.makespan_total_s,
+                "clean-fleet makespan regressed >2x: {} vs baseline {} \
+                 (GWTF_UPDATE_ADVERSARY=1 to re-baseline intentionally)",
+                obl_clean.makespan_total_s,
+                base.makespan_total_s
+            );
+        }
+        (update, _) => {
+            update_adversary_json(&path, "test_sized", &report).unwrap();
+            eprintln!(
+                "adversary test_sized profile {} at {} — commit BENCH_adversary.json to \
+                 arm the regression gate",
+                if update {
+                    "re-captured (GWTF_UPDATE_ADVERSARY)"
+                } else {
+                    "was null/missing; captured"
+                },
+                path.display()
+            );
+        }
+    }
+}

@@ -584,3 +584,109 @@ fn prop_nic_unlimited_is_identity_and_ample_caps_never_queue() {
         },
     );
 }
+
+#[test]
+fn prop_reputation_scores_stay_in_unit_interval() {
+    // Arbitrary interleavings of deny/service/delivery observations and
+    // publishes must keep every score inside [0, 1] — the EWMA folds
+    // clamped means through a clamped update, so no sample sequence can
+    // push a score out of the unit interval (and the Eq. 1 penalty
+    // stays within [1, 1 + 2w]).
+    use gwtf::net::{ReputationBook, REP_ALPHA, REP_PENALTY_WEIGHT};
+
+    forall_res(
+        "reputation-unit-interval",
+        40,
+        |rng: &mut Rng| {
+            let n = 2 + rng.index(6);
+            let ops: Vec<(usize, u8, f64, f64)> = (0..64)
+                .map(|_| {
+                    (
+                        rng.index(n),
+                        (rng.index(4)) as u8,
+                        rng.uniform(0.0, 100.0),
+                        rng.uniform(0.01, 100.0),
+                    )
+                })
+                .collect();
+            (n, ops)
+        },
+        |(n, ops)| {
+            let book = ReputationBook::new(*n, REP_ALPHA, REP_PENALTY_WEIGHT);
+            for (step, &(node, op, a, b)) in ops.iter().enumerate() {
+                let node = NodeId(node);
+                match op {
+                    0 => book.observe_deny(node),
+                    1 => book.observe_service(node, a, b),
+                    2 => book.observe_delivery(node),
+                    _ => book.publish(step as f64),
+                }
+                for i in 0..*n {
+                    let s = book.score(NodeId(i));
+                    if !(0.0..=1.0).contains(&s) {
+                        return Err(format!("score[{i}] = {s} left [0,1] at step {step}"));
+                    }
+                    for j in 0..*n {
+                        let p = book.penalty(NodeId(i), NodeId(j));
+                        if p < 1.0 || p > 1.0 + 2.0 * REP_PENALTY_WEIGHT {
+                            return Err(format!("penalty({i},{j}) = {p} out of range"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reputation_convergence_is_deterministic_per_seed() {
+    // Two books fed the identical observation sequence agree bitwise
+    // after every publish — the property that makes the adversary sweep
+    // reproducible per seed (no wall clock, no map iteration order, no
+    // atomics-race sensitivity in the single-threaded engine).
+    use gwtf::net::{ReputationBook, REP_ALPHA, REP_PENALTY_WEIGHT};
+
+    forall_res(
+        "reputation-deterministic",
+        30,
+        |rng: &mut Rng| {
+            let n = 2 + rng.index(6);
+            let ops: Vec<(usize, u8, f64, f64)> = (0..96)
+                .map(|_| {
+                    (
+                        rng.index(n),
+                        (rng.index(4)) as u8,
+                        rng.uniform(0.0, 100.0),
+                        rng.uniform(0.01, 100.0),
+                    )
+                })
+                .collect();
+            (n, ops)
+        },
+        |(n, ops)| {
+            let a = ReputationBook::new(*n, REP_ALPHA, REP_PENALTY_WEIGHT);
+            let b = ReputationBook::new(*n, REP_ALPHA, REP_PENALTY_WEIGHT);
+            for (step, &(node, op, x, y)) in ops.iter().enumerate() {
+                let node = NodeId(node);
+                for book in [&a, &b] {
+                    match op {
+                        0 => book.observe_deny(node),
+                        1 => book.observe_service(node, x, y),
+                        2 => book.observe_delivery(node),
+                        _ => book.publish(step as f64),
+                    }
+                }
+                for i in 0..*n {
+                    let (sa, sb) = (a.score(NodeId(i)), b.score(NodeId(i)));
+                    if sa.to_bits() != sb.to_bits() {
+                        return Err(format!(
+                            "score[{i}] diverged at step {step}: {sa} vs {sb}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
