@@ -52,7 +52,8 @@ fn main() {
     for c in &report.cases {
         println!(
             "{:>5} relays {:<6} plans {:>3}  rounds {:>5} (cold {:>4})  wall {:>9.1} ms  \
-             completed {:>6}  events {:>8} ({:>9.0} ev/s)",
+             completed {:>6}  events {:>8} ({:>9.0} ev/s)  links {:>8}  edges {:>8}  \
+             rss {:>7.1} MiB",
             c.relays,
             c.system,
             c.plan_calls,
@@ -62,6 +63,9 @@ fn main() {
             c.throughput_total,
             c.events_total,
             c.events_per_sec(),
+            c.resident_link_entries,
+            c.resident_cache_entries,
+            c.peak_rss_mib,
         );
     }
     let path = scale_json_path();

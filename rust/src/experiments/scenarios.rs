@@ -345,6 +345,20 @@ pub struct ScaleCase {
     /// iterations, milliseconds, planning included (machine-dependent;
     /// informational — the events/sec numerator's denominator).
     pub engine_wall_ms: f64,
+    /// Peak resident set of the whole bench process after this case's
+    /// iterations, MiB ([`crate::util::mem::peak_rss_mib`]; machine-
+    /// dependent and monotone across the sweep — informational, never
+    /// gated; 0 where the platform hides `/proc`).
+    pub peak_rss_mib: f64,
+    /// Resident `LinkParams` entries in the case's topology: n² on the
+    /// Dense arm, regions² on the Procedural arm — the O(regions²)
+    /// acceptance telemetry for the sparse substrate.
+    pub resident_link_entries: usize,
+    /// Resident congestion-cache entries at the end of the case's
+    /// iterations: whole-matrix (2·n²) on the dense arm, touched edges
+    /// only on the sparse arm; 0 when the scenario plans without the
+    /// cache.
+    pub resident_cache_entries: usize,
 }
 
 impl ScaleCase {
@@ -372,6 +386,10 @@ pub struct ScaleReport {
     pub cases: Vec<ScaleCase>,
     /// Where the sweep's virtual time went ([`CritProfile`]).
     pub crit_path: CritProfile,
+    /// Peak resident set of the bench process when the sweep finished,
+    /// MiB (machine-dependent; informational, never gated; 0 where the
+    /// platform hides `/proc` — see [`crate::util::mem::peak_rss_mib`]).
+    pub peak_rss_mib: f64,
 }
 
 impl ScaleReport {
@@ -395,6 +413,15 @@ impl ScaleReport {
                 "events_per_sec".into(),
                 Json::Num(c.events_per_sec().round()), // derived; not parsed back
             );
+            o.insert("peak_rss_mib".into(), Json::Num((c.peak_rss_mib * 1e3).round() / 1e3));
+            o.insert(
+                "resident_link_entries".into(),
+                Json::Num(c.resident_link_entries as f64),
+            );
+            o.insert(
+                "resident_cache_entries".into(),
+                Json::Num(c.resident_cache_entries as f64),
+            );
             Json::Obj(o)
         };
         let mut root = BTreeMap::new();
@@ -405,6 +432,7 @@ impl ScaleReport {
         root.insert("planner_threads".into(), Json::Num(self.planner_threads as f64));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
         root.insert("crit_path".into(), self.crit_path.to_json());
+        root.insert("peak_rss_mib".into(), Json::Num((self.peak_rss_mib * 1e3).round() / 1e3));
         Json::Obj(root)
     }
 
@@ -427,6 +455,13 @@ impl ScaleReport {
                         // parses (the gate treats 0 as "no baseline").
                         events_total: num(c, "events_total").unwrap_or(0.0) as usize,
                         engine_wall_ms: num(c, "engine_wall_ms").unwrap_or(0.0),
+                        // Leniently absent in pre-sparse-substrate
+                        // baselines (same rationale).
+                        peak_rss_mib: num(c, "peak_rss_mib").unwrap_or(0.0),
+                        resident_link_entries: num(c, "resident_link_entries")
+                            .unwrap_or(0.0) as usize,
+                        resident_cache_entries: num(c, "resident_cache_entries")
+                            .unwrap_or(0.0) as usize,
                     })
                 })
                 .collect::<Option<Vec<_>>>()?,
@@ -440,6 +475,8 @@ impl ScaleReport {
             planner_threads: num(j, "planner_threads").map_or(1, |t| t as usize),
             cases,
             crit_path: CritProfile::from_json(j.get("crit_path")),
+            // Leniently absent in pre-sparse-substrate baselines.
+            peak_rss_mib: num(j, "peak_rss_mib").unwrap_or(0.0),
         })
     }
 }
@@ -576,7 +613,10 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
             let cell = self.table.cell(&format!("scale {}", self.relays), system);
             let t0 = Instant::now();
             for _ in 0..self.iters {
-                let m = engine.step(&self.sc.prob, &mut router);
+                let mut m = engine.step(&self.sc.prob, &mut router);
+                // After the step, never inside the engine (see
+                // `IterationMetrics::peak_rss_mib`).
+                m.peak_rss_mib = crate::util::mem::peak_rss_mib();
                 throughput += m.completed as f64;
                 events += m.events;
                 self.crit.add(&m);
@@ -598,6 +638,12 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
             c.throughput_total += throughput;
             c.events_total += events;
             c.engine_wall_ms += engine_wall_ms;
+            c.peak_rss_mib = c.peak_rss_mib.max(crate::util::mem::peak_rss_mib());
+            c.resident_link_entries =
+                c.resident_link_entries.max(self.sc.topo.resident_link_entries());
+            c.resident_cache_entries = c
+                .resident_cache_entries
+                .max(self.sc.cost_cache.as_ref().map_or(0, |cache| cache.resident_entries()));
         }
     }
 
@@ -656,6 +702,7 @@ pub fn run_scale(opts: &ScaleOpts) -> Result<(MetricsTable, ScaleReport)> {
         planner_threads: opts.planner_threads.max(1),
         cases: cases.into_values().collect(),
         crit_path: crit,
+        peak_rss_mib: crate::util::mem::peak_rss_mib(),
     };
     Ok((table, report))
 }
@@ -713,6 +760,9 @@ pub struct PlanLagReport {
     pub cases: Vec<PlanLagCase>,
     /// Where the sweep's virtual time went ([`CritProfile`]).
     pub crit_path: CritProfile,
+    /// Peak resident set when the sweep finished, MiB (informational,
+    /// never gated; 0 where `/proc` is hidden).
+    pub peak_rss_mib: f64,
 }
 
 impl PlanLagReport {
@@ -737,6 +787,7 @@ impl PlanLagReport {
         root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
         root.insert("crit_path".into(), self.crit_path.to_json());
+        root.insert("peak_rss_mib".into(), Json::Num((self.peak_rss_mib * 1e3).round() / 1e3));
         Json::Obj(root)
     }
 
@@ -764,6 +815,7 @@ impl PlanLagReport {
             iters_per_rep: num(j, "iters_per_rep")? as usize,
             cases,
             crit_path: CritProfile::from_json(j.get("crit_path")),
+            peak_rss_mib: num(j, "peak_rss_mib").unwrap_or(0.0),
         })
     }
 }
@@ -822,7 +874,11 @@ fn measure_arm(
     engine.warm_replan = warm_replan;
     let cell = table.cell(row, system);
     for _ in 0..iters {
-        let m = engine.step(&sc.prob, router);
+        let mut m = engine.step(&sc.prob, router);
+        // Stamped here, after the step returns — never inside the engine,
+        // where the monotone probe would differ between otherwise
+        // bit-identical runs (see `IterationMetrics::peak_rss_mib`).
+        m.peak_rss_mib = crate::util::mem::peak_rss_mib();
         crit.add(&m);
         cell.push(&m);
         on_iter(&m);
@@ -877,6 +933,9 @@ pub struct CongestionReport {
     pub cases: Vec<CongestionCase>,
     /// Where the sweep's virtual time went ([`CritProfile`]).
     pub crit_path: CritProfile,
+    /// Peak resident set when the sweep finished, MiB (informational,
+    /// never gated; 0 where `/proc` is hidden).
+    pub peak_rss_mib: f64,
 }
 
 impl CongestionReport {
@@ -901,6 +960,7 @@ impl CongestionReport {
         root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
         root.insert("crit_path".into(), self.crit_path.to_json());
+        root.insert("peak_rss_mib".into(), Json::Num((self.peak_rss_mib * 1e3).round() / 1e3));
         Json::Obj(root)
     }
 
@@ -928,6 +988,7 @@ impl CongestionReport {
             iters_per_rep: num(j, "iters_per_rep")? as usize,
             cases,
             crit_path: CritProfile::from_json(j.get("crit_path")),
+            peak_rss_mib: num(j, "peak_rss_mib").unwrap_or(0.0),
         })
     }
 }
@@ -1067,6 +1128,7 @@ pub fn run_congestion(opts: &CongestionOpts) -> Result<(MetricsTable, Congestion
             })
             .collect(),
         crit_path: crit,
+        peak_rss_mib: crate::util::mem::peak_rss_mib(),
     };
     Ok((table, report))
 }
@@ -1130,6 +1192,9 @@ pub struct AsyncReport {
     pub cases: Vec<AsyncCase>,
     /// Where the sweep's virtual time went ([`CritProfile`]).
     pub crit_path: CritProfile,
+    /// Peak resident set when the sweep finished, MiB (informational,
+    /// never gated; 0 where `/proc` is hidden).
+    pub peak_rss_mib: f64,
 }
 
 impl AsyncReport {
@@ -1156,6 +1221,7 @@ impl AsyncReport {
         root.insert("churn_p".into(), Json::Num(self.churn_p));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
         root.insert("crit_path".into(), self.crit_path.to_json());
+        root.insert("peak_rss_mib".into(), Json::Num((self.peak_rss_mib * 1e3).round() / 1e3));
         Json::Obj(root)
     }
 
@@ -1183,6 +1249,7 @@ impl AsyncReport {
             churn_p: num(j, "churn_p")?,
             cases,
             crit_path: CritProfile::from_json(j.get("crit_path")),
+            peak_rss_mib: num(j, "peak_rss_mib").unwrap_or(0.0),
         })
     }
 }
@@ -1287,6 +1354,7 @@ pub fn run_async(opts: &AsyncOpts) -> Result<(MetricsTable, AsyncReport)> {
         churn_p: opts.churn_p,
         cases,
         crit_path: crit,
+        peak_rss_mib: crate::util::mem::peak_rss_mib(),
     };
     Ok((table, report))
 }
@@ -1347,6 +1415,9 @@ pub struct AdversaryReport {
     pub cases: Vec<AdversaryCase>,
     /// Where the sweep's virtual time went ([`CritProfile`]).
     pub crit_path: CritProfile,
+    /// Peak resident set when the sweep finished, MiB (informational,
+    /// never gated; 0 where `/proc` is hidden).
+    pub peak_rss_mib: f64,
 }
 
 impl AdversaryReport {
@@ -1371,6 +1442,7 @@ impl AdversaryReport {
         root.insert("iters_per_rep".into(), Json::Num(self.iters_per_rep as f64));
         root.insert("cases".into(), Json::Arr(self.cases.iter().map(case_json).collect()));
         root.insert("crit_path".into(), self.crit_path.to_json());
+        root.insert("peak_rss_mib".into(), Json::Num((self.peak_rss_mib * 1e3).round() / 1e3));
         Json::Obj(root)
     }
 
@@ -1396,6 +1468,7 @@ impl AdversaryReport {
             iters_per_rep: num(j, "iters_per_rep")? as usize,
             cases,
             crit_path: CritProfile::from_json(j.get("crit_path")),
+            peak_rss_mib: num(j, "peak_rss_mib").unwrap_or(0.0),
         })
     }
 }
@@ -1513,6 +1586,7 @@ pub fn run_adversary(opts: &AdversaryOpts) -> Result<(MetricsTable, AdversaryRep
             })
             .collect(),
         crit_path: crit,
+        peak_rss_mib: crate::util::mem::peak_rss_mib(),
     };
     Ok((table, report))
 }
@@ -1590,6 +1664,7 @@ pub fn run_plan_lag(opts: &PlanLagOpts) -> Result<(MetricsTable, PlanLagReport)>
         iters_per_rep: opts.iters_per_rep,
         cases,
         crit_path: crit,
+        peak_rss_mib: crate::util::mem::peak_rss_mib(),
     };
     Ok((table, report))
 }
@@ -1661,6 +1736,10 @@ mod tests {
         assert!(gwtf.throughput_total > 0.0, "overlay planning must route work");
         assert!(gwtf.events_total > 0, "kernel events counted");
         assert!(gwtf.engine_wall_ms > 0.0 && gwtf.events_per_sec() > 0.0);
+        // Below PROCEDURAL_MIN_NODES the scale scenario keeps the legacy
+        // Dense substrate: n² resident link entries, no congestion cache.
+        assert_eq!(gwtf.resident_link_entries, 60 * 60, "dense arm is n²");
+        assert_eq!(gwtf.resident_cache_entries, 0, "no cache below the threshold");
         assert!(report.case(60, "swarm").is_some() && report.case(60, "dtfm").is_some());
         // The gwtf-only size runs GWTF and skips both baselines.
         assert!(report.case(72, "gwtf").is_some(), "gwtf-only size measured");
@@ -1686,6 +1765,9 @@ mod tests {
                 throughput_total: 30.0,
                 events_total: 4096,
                 engine_wall_ms: 250.125,
+                peak_rss_mib: 41.25,
+                resident_link_entries: 100,
+                resident_cache_entries: 37,
             }],
             crit_path: CritProfile {
                 compute_s: 10.5,
@@ -1697,6 +1779,7 @@ mod tests {
                 stale_s: 0.5,
                 makespan_s: 19.75,
             },
+            peak_rss_mib: 96.5,
         };
         let back = ScaleReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);
@@ -1706,12 +1789,16 @@ mod tests {
         if let Json::Obj(root) = &mut legacy {
             root.remove("planner_threads");
             root.remove("crit_path");
+            root.remove("peak_rss_mib");
             if let Some(Json::Arr(cases)) = root.get_mut("cases") {
                 for c in cases {
                     if let Json::Obj(o) = c {
                         o.remove("events_total");
                         o.remove("engine_wall_ms");
                         o.remove("events_per_sec");
+                        o.remove("peak_rss_mib");
+                        o.remove("resident_link_entries");
+                        o.remove("resident_cache_entries");
                     }
                 }
             }
@@ -1720,6 +1807,10 @@ mod tests {
         assert_eq!(old.planner_threads, 1);
         assert_eq!(old.cases[0].events_total, 0);
         assert_eq!(old.cases[0].engine_wall_ms, 0.0);
+        assert_eq!(old.cases[0].peak_rss_mib, 0.0);
+        assert_eq!(old.cases[0].resident_link_entries, 0);
+        assert_eq!(old.cases[0].resident_cache_entries, 0);
+        assert_eq!(old.peak_rss_mib, 0.0, "pre-RSS baselines parse as unmeasured");
         assert_eq!(old.crit_path, CritProfile::default(), "missing block is all-zero");
 
         let dir = std::env::temp_dir().join("gwtf_scale_json_test");
@@ -1795,6 +1886,7 @@ mod tests {
                 throughput_total: 32.0,
             }],
             crit_path: CritProfile { compute_s: 400.5, plan_s: 3.5, ..Default::default() },
+            peak_rss_mib: 52.5,
         };
         let back = PlanLagReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);
@@ -1855,6 +1947,7 @@ mod tests {
                 throughput_total: 48.0,
             }],
             crit_path: CritProfile { tx_s: 320.25, queue_s: 113.5, ..Default::default() },
+            peak_rss_mib: 64.25,
         };
         let back = CongestionReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);
@@ -1911,6 +2004,7 @@ mod tests {
                 throughput_total: 60.0,
             }],
             crit_path: CritProfile { agg_s: 57.0, stale_s: 6.5, ..Default::default() },
+            peak_rss_mib: 71.125,
         };
         let back = AsyncReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);
@@ -1973,6 +2067,7 @@ mod tests {
                 denies_total: 17.0,
             }],
             crit_path: CritProfile { compute_s: 1800.5, queue_s: 42.0, ..Default::default() },
+            peak_rss_mib: 88.75,
         };
         let back = AdversaryReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);

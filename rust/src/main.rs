@@ -58,9 +58,11 @@ fn usage() -> String {
              a Chrome/Perfetto trace-event JSON: one track per node, spans
              per compute/transfer/wait, instants for churn + plan events;
              open in chrome://tracing or ui.perfetto.dev)
-            (scale: --relays \"100,200\" --gwtf-relays \"1000\" --churn P
+            (scale: --relays \"100,200\" --gwtf-relays \"1000,10000\" --churn P
              --threads T — overlay GWTF vs baselines (the --gwtf-relays
-             sizes run GWTF only, T planner worker threads), writes
+             sizes run GWTF only, T planner worker threads; sizes >= 1000
+             take the procedural link store + sparse congestion cache, so
+             10000 relays fits the same footprint), writes
              BENCH_scale.json at the repo root)
             (planlag: --rtts \"0,0.5,2,8,30,120\" --churn P — plan-lifecycle
              round-RTT sweep, writes BENCH_planlag.json at the repo root)

@@ -56,6 +56,13 @@ pub struct CellAccumulator {
     /// Kernel events dispatched per makespan second — the engine's
     /// event throughput for the iteration.
     pub events_per_s: Vec<f64>,
+    /// Peak resident set of the measuring process, MiB
+    /// (`util::mem::peak_rss_mib`).  Stamped by the bench drivers only —
+    /// the engine itself never sets it (the probe is monotone within a
+    /// process, which would break bit-parity comparisons between runs);
+    /// 0 values (engine-only cells, platforms without `/proc`) are
+    /// skipped.
+    pub peak_rss_mib: Vec<f64>,
     /// Critical-path attribution (minutes): where the makespan went,
     /// bucket by bucket ([`crate::sim::CritPath`]; the seven buckets sum
     /// to the makespan).
@@ -160,6 +167,11 @@ pub const COLUMNS: &[Column] = &[
         samples: |a| &a.events_per_s,
     },
     Column {
+        key: "peak_rss_mib",
+        label: "Peak RSS (MiB)",
+        samples: |a| &a.peak_rss_mib,
+    },
+    Column {
         key: "crit_compute_min",
         label: "Critical path: compute (min)",
         samples: |a| &a.crit_compute_min,
@@ -220,6 +232,9 @@ impl CellAccumulator {
         self.denies.push(m.denies as f64);
         if m.makespan_s > 0.0 {
             self.events_per_s.push(m.events as f64 / m.makespan_s);
+        }
+        if m.peak_rss_mib > 0.0 {
+            self.peak_rss_mib.push(m.peak_rss_mib);
         }
         self.crit_compute_min.push(m.crit_path.compute_s / 60.0);
         self.crit_tx_min.push(m.crit_path.tx_s / 60.0);
@@ -476,6 +491,7 @@ mod tests {
             deferred,
             denies,
             events_per_s,
+            peak_rss_mib,
             crit_compute_min,
             crit_tx_min,
             crit_prop_min,
@@ -502,6 +518,7 @@ mod tests {
             deferred,
             denies,
             events_per_s,
+            peak_rss_mib,
             crit_compute_min,
             crit_tx_min,
             crit_prop_min,

@@ -20,4 +20,7 @@ pub use dht::Dht;
 pub use gossip::{DirectedView, GossipConfig, NodeViews};
 pub use overlay::Overlay;
 pub use reputation::{ReputationBook, REP_ALPHA, REP_PENALTY_WEIGHT};
-pub use topology::{CongestionCache, Topology, TopologyConfig};
+pub use topology::{
+    CongestionCache, LinkGen, LinkStore, ProceduralLinks, Topology, TopologyConfig,
+    DENSE_CACHE_MAX_NODES, PROCEDURAL_MIN_NODES,
+};

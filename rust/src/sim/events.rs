@@ -7,6 +7,12 @@
 //! comparison against NaN is "equal"), so [`EventQueue::schedule`]
 //! rejects non-finite times outright and the key comparator uses IEEE
 //! `total_cmp`, which cannot lie even if a NaN slipped through.
+//!
+//! Event bodies live in a free-list slab indexed by the heap key's slot
+//! (not a side map): `pop` is a heap pop plus one slab index, with no
+//! per-event hash or tree removal.  The slab never shrinks during a run;
+//! its high-water mark is the maximum number of in-flight events, so
+//! the queue's resident memory tracks concurrency, not event count.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -16,10 +22,15 @@ use crate::cost::{NicConfig, NodeId};
 /// Virtual timestamp in seconds.
 pub type Time = f64;
 
+/// Heap key: time-then-sequence ordering plus the slab slot holding the
+/// event body.  `seq` is unique per scheduled event, so the ordering is
+/// fully decided before `slot` is ever compared — the slot rides along
+/// only to make `pop` an O(1) slab index.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct Key {
     t: Time,
     seq: u64,
+    slot: u32,
 }
 
 impl Eq for Key {}
@@ -33,32 +44,23 @@ impl Ord for Key {
         // `total_cmp` is a total order over all f64 values (unlike
         // `partial_cmp`, whose NaN case previously collapsed to Equal and
         // silently broke heap ordering).
-        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+        self.t
+            .total_cmp(&other.t)
+            .then(self.seq.cmp(&other.seq))
+            .then(self.slot.cmp(&other.slot))
     }
 }
 
 /// Min-heap event queue over an arbitrary payload type.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Reverse<(KeyWrap, u64)>>,
-    items: std::collections::HashMap<u64, (Time, E)>,
+    heap: BinaryHeap<Reverse<Key>>,
+    /// Event bodies, indexed by `Key::slot`; `None` = free.
+    slab: Vec<Option<E>>,
+    /// Indices of free slab entries, reused LIFO.
+    free: Vec<u32>,
     seq: u64,
     pub now: Time,
-}
-
-// BinaryHeap needs Ord; wrap Key.
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct KeyWrap(Key);
-impl Eq for KeyWrap {}
-impl PartialOrd for KeyWrap {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.0.cmp(&other.0))
-    }
-}
-impl Ord for KeyWrap {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.cmp(&other.0)
-    }
 }
 
 impl<E> Default for EventQueue<E> {
@@ -69,7 +71,7 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), items: Default::default(), seq: 0, now: 0.0 }
+        EventQueue { heap: BinaryHeap::new(), slab: Vec::new(), free: Vec::new(), seq: 0, now: 0.0 }
     }
 
     /// Schedule `ev` at absolute time `t` (must be finite and >= now).
@@ -83,8 +85,18 @@ impl<E> EventQueue<E> {
         debug_assert!(t >= self.now - 1e-9, "schedule into the past: {t} < {}", self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.items.insert(seq, (t, ev));
-        self.heap.push(Reverse((KeyWrap(Key { t, seq }), seq)));
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s as usize] = Some(ev);
+                s
+            }
+            None => {
+                assert!(self.slab.len() < u32::MAX as usize, "event slab exhausted");
+                self.slab.push(Some(ev));
+                (self.slab.len() - 1) as u32
+            }
+        };
+        self.heap.push(Reverse(Key { t, seq, slot }));
     }
 
     /// Schedule after a delay.
@@ -94,8 +106,9 @@ impl<E> EventQueue<E> {
 
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<(Time, E)> {
-        let Reverse((_, seq)) = self.heap.pop()?;
-        let (t, ev) = self.items.remove(&seq).expect("event body");
+        let Reverse(Key { t, slot, .. }) = self.heap.pop()?;
+        let ev = self.slab[slot as usize].take().expect("event body");
+        self.free.push(slot);
         self.now = t;
         Some((t, ev))
     }
@@ -106,6 +119,12 @@ impl<E> EventQueue<E> {
 
     pub fn len(&self) -> usize {
         self.heap.len()
+    }
+
+    /// Slab high-water mark: the maximum number of events that were ever
+    /// simultaneously in flight (telemetry for the scale guard).
+    pub fn slab_capacity(&self) -> usize {
+        self.slab.len()
     }
 }
 
@@ -245,6 +264,10 @@ pub struct NicQueues {
     pub busy_up_s: Vec<f64>,
     /// Per-node downlink transmission-busy seconds (see `busy_up_s`).
     pub busy_down_s: Vec<f64>,
+    /// Retained candidate-start scratch for [`NicQueues::acquire`] —
+    /// reused across calls so the booking hot path allocates nothing
+    /// (mirrors the allocation-free [`Slots::earliest_start`] fix).
+    scratch: Vec<Time>,
 }
 
 impl NicQueues {
@@ -264,6 +287,7 @@ impl NicQueues {
             region,
             busy_up_s: vec![0.0; n],
             busy_down_s: vec![0.0; n],
+            scratch: Vec::new(),
         }
     }
 
@@ -291,6 +315,9 @@ impl NicQueues {
         if self.cfg.cap(same_region).is_none() {
             return ready;
         }
+        // Take the retained scratch out first: `up`/`down` below borrow
+        // other fields of `self` mutably.
+        let mut scratch = std::mem::take(&mut self.scratch);
         let (up, down) = if same_region {
             (&mut self.up_lan, &mut self.down_lan)
         } else {
@@ -300,25 +327,46 @@ impl NicQueues {
         // window.  Candidate starts: the ready instant and every booked
         // end after it on either interface — overlap only ever falls at
         // ends, and past the last end everything is free, so the scan
-        // always terminates with a fit.
+        // always terminates with a fit.  Candidates are tried in
+        // ascending order by successive-minimum selection over the
+        // unsorted scratch (find the smallest end strictly above the
+        // last attempt) rather than a full sort: the fit almost always
+        // lands within the first few candidates, and revisiting a
+        // duplicate end would only re-test an identical fit, so the
+        // chosen start is bit-identical to the sorted scan's.
         let start = {
             let (u, d) = (&up[from.0], &down[to.0]);
-            let mut candidates: Vec<Time> = vec![ready];
-            candidates.extend(
+            scratch.clear();
+            scratch.extend(
                 u.bookings
                     .iter()
                     .chain(d.bookings.iter())
                     .map(|&(_, e)| e)
                     .filter(|&e| e > ready),
             );
-            candidates.sort_by(|a, b| a.total_cmp(b));
-            candidates
-                .into_iter()
-                .find(|&t| u.window_fits(t, tx_s) && d.window_fits(t, tx_s))
-                .expect("a start past the last booked end always fits")
+            let mut cur = ready;
+            loop {
+                if u.window_fits(cur, tx_s) && d.window_fits(cur, tx_s) {
+                    break cur;
+                }
+                let mut next = f64::INFINITY;
+                for &e in &scratch {
+                    if e.total_cmp(&cur) == std::cmp::Ordering::Greater
+                        && e.total_cmp(&next) == std::cmp::Ordering::Less
+                    {
+                        next = e;
+                    }
+                }
+                assert!(
+                    next.is_finite(),
+                    "a start past the last booked end always fits"
+                );
+                cur = next;
+            }
         };
         up[from.0].book(start, start + tx_s);
         down[to.0].book(start, start + tx_s);
+        self.scratch = scratch;
         start
     }
 
@@ -477,6 +525,76 @@ mod tests {
         nq.acquire(NodeId(0), NodeId(1), 0.0, 6.0);
         let t = nq.acquire(NodeId(2), NodeId(1), 2.0, 3.0);
         assert_eq!(t, 6.0);
+    }
+
+    /// The pre-slab booking algorithm: collect every candidate start
+    /// into a fresh `Vec`, full-sort, first fit.  Kept here as the
+    /// reference the retained-scratch selection scan must match bit for
+    /// bit.
+    fn sorted_reference(u: &NicSlots, d: &NicSlots, ready: Time, tx_s: f64) -> Time {
+        let mut candidates: Vec<Time> = vec![ready];
+        candidates.extend(
+            u.bookings
+                .iter()
+                .chain(d.bookings.iter())
+                .map(|&(_, e)| e)
+                .filter(|&e| e > ready),
+        );
+        candidates.sort_by(|a, b| a.total_cmp(b));
+        candidates
+            .into_iter()
+            .find(|&t| u.window_fits(t, tx_s) && d.window_fits(t, tx_s))
+            .expect("a start past the last booked end always fits")
+    }
+
+    #[test]
+    fn nic_acquire_selection_scan_matches_sorted_reference_bits() {
+        // Drive a contended mixed-class NIC substrate with a pseudo-random
+        // transfer stream; before every booking, compute the start the
+        // old sort-based algorithm would choose from the same state and
+        // pin the selection scan to it bitwise.
+        let region = vec![0usize, 0, 1, 1, 2, 2];
+        let nic = NicConfig { wan_concurrency: Some(2), lan_concurrency: Some(1) };
+        let mut nq = NicQueues::new(nic, region.clone());
+        let mut rng = crate::util::Rng::new(0xB00C);
+        let mut clock = 0.0;
+        for step in 0..400 {
+            let from = rng.index(region.len());
+            let to = (from + 1 + rng.index(region.len() - 1)) % region.len();
+            clock += rng.uniform(0.0, 0.4);
+            let ready = clock;
+            let tx = rng.uniform(0.05, 2.0);
+            let same = region[from] == region[to];
+            let want = {
+                let (u, d) = if same {
+                    (&nq.up_lan[from], &nq.down_lan[to])
+                } else {
+                    (&nq.up_wan[from], &nq.down_wan[to])
+                };
+                sorted_reference(u, d, ready, tx)
+            };
+            let got = nq.acquire(NodeId(from), NodeId(to), ready, tx);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "step {step}: scan chose {got}, sorted reference chose {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn event_slab_reuses_slots() {
+        // Interleaved schedule/pop traffic must recycle slab slots: the
+        // high-water mark tracks in-flight events, not total scheduled.
+        let mut q = EventQueue::new();
+        for round in 0..50 {
+            q.schedule(round as f64, round);
+            q.schedule(round as f64 + 0.5, round + 1000);
+            let (_, a) = q.pop().unwrap();
+            let (_, b) = q.pop().unwrap();
+            assert_eq!((a, b), (round, round + 1000));
+        }
+        assert!(q.slab_capacity() <= 2, "slab grew past peak concurrency");
     }
 
     #[test]

@@ -11,7 +11,8 @@ use std::sync::Arc;
 use crate::cost::{ActivationProfile, LinkParams, NicConfig, NodeId, NodeProfile};
 use crate::flow::graph::{FlowProblem, StageGraph};
 use crate::net::{
-    CongestionCache, ReputationBook, Topology, TopologyConfig, REP_ALPHA, REP_PENALTY_WEIGHT,
+    CongestionCache, LinkGen, ReputationBook, Topology, TopologyConfig, PROCEDURAL_MIN_NODES,
+    REP_ALPHA, REP_PENALTY_WEIGHT,
 };
 use crate::util::Rng;
 
@@ -104,6 +105,11 @@ pub struct ScenarioConfig {
     /// planner's cost closure.  Off by default; on a clean fleet the
     /// all-honest prior keeps the closure bitwise-transparent.
     pub reputation: bool,
+    /// Link generation/storage arm ([`LinkGen`]).  `Dense` (the
+    /// default) is the legacy materialized matrix, bit for bit; `Auto`
+    /// lets the scale scenario switch to the O(regions²) procedural
+    /// substrate at [`PROCEDURAL_MIN_NODES`]+ nodes.
+    pub link_gen: LinkGen,
     pub seed: u64,
 }
 
@@ -131,6 +137,7 @@ impl ScenarioConfig {
             staleness_bound: None,
             adversaries: None,
             reputation: false,
+            link_gen: LinkGen::Dense,
             seed,
         }
     }
@@ -179,6 +186,16 @@ impl ScenarioConfig {
             microbatches_per_data: 8,
             churn_model: ChurnModel::Poisson,
             overlay_fanout: Some(DEFAULT_OVERLAY_FANOUT),
+            // At PROCEDURAL_MIN_NODES+ relays the sparse substrate takes
+            // over: Auto selects the O(regions²) procedural link store,
+            // and the planner closure goes through the (sharded, lazy)
+            // congestion-cost memo.  Under the scale scenario's
+            // unlimited NICs `congestion_cost` IS `cost` bit for bit, so
+            // the knob exercises the sparse cache without moving a
+            // single plan; below the threshold both knobs stay in their
+            // legacy bit-stable positions.
+            link_gen: LinkGen::Auto,
+            congestion_aware_planning: n_relays >= PROCEDURAL_MIN_NODES,
             ..Self::table2(true, churn_p, seed)
         }
     }
@@ -285,6 +302,7 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
             n_regions: 10,
             inter_bw_mbps: cfg.wan_bw_mbps.unwrap_or(topo_defaults.inter_bw_mbps),
             nic: cfg.nic,
+            link_gen: cfg.link_gen,
             ..topo_defaults
         },
         &mut rng,
@@ -339,10 +357,11 @@ pub fn build(cfg: &ScenarioConfig) -> Scenario {
                 cap[r.0] = 2;
                 topo.set_profile(r, NodeProfile::new(cfg.base_compute_s, 2));
             }
+            let links = topo.links_mut();
             for x in 0..n {
                 if x != hub.0 {
-                    topo.links[x][hub.0] = hub_link;
-                    topo.links[hub.0][x] = hub_link;
+                    links[x][hub.0] = hub_link;
+                    links[hub.0][x] = hub_link;
                 }
             }
         }
@@ -527,6 +546,35 @@ mod tests {
     }
 
     #[test]
+    fn scale_scenario_selects_sparse_substrate_at_1k() {
+        // Below the threshold: legacy dense links, contention-blind
+        // closure — the historical bit-stable configuration.
+        let small = build(&ScenarioConfig::scale(100, 0.2, 8));
+        assert!(!small.topo.is_procedural());
+        assert!(!small.cfg.congestion_aware_planning);
+        assert!(small.cost_cache.is_none());
+        // At PROCEDURAL_MIN_NODES relays: O(regions²) procedural links
+        // plus the lazily-populated congestion memo behind the closure.
+        let big = build(&ScenarioConfig::scale(PROCEDURAL_MIN_NODES, 0.2, 8));
+        assert!(big.topo.is_procedural());
+        assert!(big.cfg.congestion_aware_planning);
+        let cache = big.cost_cache.as_ref().expect("memo behind the closure");
+        assert_eq!(
+            big.topo.resident_link_entries(),
+            100,
+            "10 regions -> 100 resident range entries, not n²"
+        );
+        // Unlimited NICs: the memoized congestion closure is plain Eq. 1
+        // bit for bit, and only touched edges become resident.
+        let (d, r) = (big.data_nodes[0], big.relays[7]);
+        assert_eq!(
+            big.prob.cost(d, r).to_bits(),
+            big.topo.cost(d, r, big.sim_cfg.payload_bytes).to_bits()
+        );
+        assert_eq!(cache.resident_entries(), 1, "exactly the touched edge resides");
+    }
+
+    #[test]
     fn plan_round_rtt_knob_wires_the_lifecycle() {
         use super::super::engine::PlanLifecycle;
         let mut cfg = ScenarioConfig::table2(true, 0.0, 11);
@@ -555,7 +603,7 @@ mod tests {
                 assert_eq!(sc.prob.cap[r.0], 2, "non-hub peers are lean");
             }
             // The hub's links beat the starved 20-60 Mb/s WAN per transfer.
-            let bw = sc.topo.links[0][hub.0].bandwidth_bps * 8.0 / 1e6;
+            let bw = sc.topo.link(0, hub.0).bandwidth_bps * 8.0 / 1e6;
             assert!((bw - 80.0).abs() < 1e-9, "{bw}");
         }
         // Starved WAN on non-hub inter-region links.
@@ -569,7 +617,7 @@ mod tests {
                 {
                     continue;
                 }
-                let mbps = sc.topo.links[i][j].bandwidth_bps * 8.0 / 1e6;
+                let mbps = sc.topo.link(i, j).bandwidth_bps * 8.0 / 1e6;
                 assert!((20.0..=60.0).contains(&mbps), "{mbps}");
             }
         }

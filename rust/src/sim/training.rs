@@ -424,6 +424,13 @@ pub struct IterationMetrics {
     /// stage's weights lagged beyond the staleness bound and had to
     /// replay missed exchanges first.
     pub deferred: usize,
+    /// Peak resident set of the measuring process, MiB.  Stamped by the
+    /// bench drivers (`experiments::scenarios`) *after* `Engine::step`
+    /// returns — never by the engine itself: the probe is monotone
+    /// within a process, so an engine-side stamp would differ between
+    /// two otherwise bit-identical runs and break every metric-parity
+    /// test.  0 = not measured.
+    pub peak_rss_mib: f64,
     /// Critical-path attribution: where the makespan went, bucket by
     /// bucket (see [`CritPath`]).  The buckets sum to `makespan_s`
     /// within float rounding (guarded at 1e-6 relative by
@@ -839,9 +846,9 @@ impl TrainingSim {
                 }
                 let k = (self.topo.region[a.0] == self.topo.region[b.0]) as usize;
                 let tx_out =
-                    self.cfg.stage_param_bytes / self.topo.links[a.0][b.0].bandwidth_bps;
+                    self.cfg.stage_param_bytes / self.topo.link(a.0, b.0).bandwidth_bps;
                 let tx_in =
-                    self.cfg.stage_param_bytes / self.topo.links[b.0][a.0].bandwidth_bps;
+                    self.cfg.stage_param_bytes / self.topo.link(b.0, a.0).bandwidth_bps;
                 out[k].0 += tx_out;
                 out[k].1 = out[k].1.max(tx_out);
                 inn[k].0 += tx_in;
@@ -1402,7 +1409,7 @@ mod tests {
         let base =
             TrainingSim::new(topo.clone(), small_cfg()).aggregation_time(&prob, &churn, &[]).0;
         let mut slowed_topo = topo;
-        slowed_topo.links[1][0] = crate::cost::LinkParams::new(30.0, 1e9);
+        slowed_topo.links_mut()[1][0] = crate::cost::LinkParams::new(30.0, 1e9);
         let slowed =
             TrainingSim::new(slowed_topo, small_cfg()).aggregation_time(&prob, &churn, &[]).0;
         assert!(
@@ -1431,8 +1438,8 @@ mod tests {
         let base =
             TrainingSim::new(topo.clone(), small_cfg()).aggregation_time(&prob, &churn, &[]).0;
         let mut slowed_topo = topo;
-        slowed_topo.links[1][2] = crate::cost::LinkParams::new(30.0, 1e9);
-        slowed_topo.links[1][3] = crate::cost::LinkParams::new(30.0, 1e9);
+        slowed_topo.links_mut()[1][2] = crate::cost::LinkParams::new(30.0, 1e9);
+        slowed_topo.links_mut()[1][3] = crate::cost::LinkParams::new(30.0, 1e9);
         let slowed =
             TrainingSim::new(slowed_topo, small_cfg()).aggregation_time(&prob, &churn, &[]).0;
         assert!(
@@ -1452,7 +1459,7 @@ mod tests {
         let (mut topo, _, _) = setup();
         // Slow 0 -> 2: the rerouted mb1 reaches node 2 only after mb0
         // has freed node 1 (~25 s round trip vs a 60 s control link).
-        topo.links[0][2] = crate::cost::LinkParams::new(60.0, 1e9);
+        topo.links_mut()[0][2] = crate::cost::LinkParams::new(60.0, 1e9);
         // Node 4 is glacial, so mb2 stays resident at node 2 throughout.
         topo.set_profile(NodeId(4), NodeProfile::new(200.0, 2));
         let graph = std::sync::Arc::new(StageGraph {

@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod bitset;
 pub mod json;
+pub mod mem;
 pub mod prop;
 pub mod rng;
 pub mod stats;

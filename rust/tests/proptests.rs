@@ -640,6 +640,100 @@ fn prop_reputation_scores_stay_in_unit_interval() {
 }
 
 #[test]
+fn prop_procedural_links_match_materialized_keyed_bits() {
+    // Sparse-substrate parity (ISSUE 10): the recompute-on-demand
+    // Procedural arm and the MaterializedKeyed dense matrix must agree
+    // bitwise on every directed pair at 100 and 200 relays, for any
+    // seed, and leave the shared generator on the same stream (so every
+    // downstream draw — churn, profiles — is arm-independent).
+    use gwtf::net::{LinkGen, Topology, TopologyConfig};
+    forall_res(
+        "procedural-link-parity",
+        10,
+        |r| (if r.chance(0.5) { 100 } else { 200 }, r.next_u64()),
+        |&(n, seed)| {
+            let cfg = |link_gen| TopologyConfig {
+                n_nodes: n,
+                link_gen,
+                ..TopologyConfig::default()
+            };
+            let mut rng_m = Rng::new(seed);
+            let mut rng_p = Rng::new(seed);
+            let tm = Topology::generate(&cfg(LinkGen::MaterializedKeyed), &mut rng_m);
+            let tp = Topology::generate(&cfg(LinkGen::Procedural), &mut rng_p);
+            if tm.is_procedural() || !tp.is_procedural() {
+                return Err("arms landed on the wrong stores".into());
+            }
+            if tm.region != tp.region {
+                return Err("region assignment diverged between keyed arms".into());
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    let (a, b) = (tm.link(i, j), tp.link(i, j));
+                    if a.latency_s.to_bits() != b.latency_s.to_bits()
+                        || a.bandwidth_bps.to_bits() != b.bandwidth_bps.to_bits()
+                    {
+                        return Err(format!("link {i}->{j} diverged: {a:?} vs {b:?}"));
+                    }
+                }
+            }
+            if rng_m.next_u64() != rng_p.next_u64() {
+                return Err("keyed arms consumed different generator draws".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_metrics_bit_identical_under_keyed_link_arms() {
+    // End-to-end arm transparency (ISSUE 10): a scale scenario run under
+    // MaterializedKeyed and under Procedural — same seed, same churn —
+    // must produce bitwise-identical engine metrics: the only difference
+    // between the arms is *where* link params live, never what they are
+    // or what anything downstream draws.
+    use gwtf::coordinator::GwtfRouter;
+    use gwtf::net::LinkGen;
+    use gwtf::sim::scenario::{build, ScenarioConfig};
+    forall_res(
+        "keyed-arm-engine-parity",
+        4,
+        |r| (if r.chance(0.5) { 100 } else { 200 }, r.next_u64()),
+        |&(n, seed)| {
+            let run = |link_gen| {
+                let mut cfg = ScenarioConfig::scale(n, 0.2, seed);
+                cfg.link_gen = link_gen;
+                let sc = build(&cfg);
+                let mut router = GwtfRouter::from_scenario(&sc, FlowParams::default(), seed ^ 0xA);
+                let mut engine = sc.engine(seed ^ 0x1);
+                engine.warm_replan = true;
+                (0..2)
+                    .map(|_| engine.step(&sc.prob, &mut router))
+                    .map(|m| {
+                        (
+                            m.completed,
+                            m.dropped,
+                            m.events,
+                            m.makespan_s.to_bits(),
+                            m.comm_s.to_bits(),
+                            m.agg_s.to_bits(),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            };
+            let a = run(LinkGen::MaterializedKeyed);
+            let b = run(LinkGen::Procedural);
+            if a != b {
+                return Err(format!(
+                    "engine metrics diverged between keyed arms at n={n}:\n{a:?}\nvs\n{b:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_reputation_convergence_is_deterministic_per_seed() {
     // Two books fed the identical observation sequence agree bitwise
     // after every publish — the property that makes the adversary sweep
